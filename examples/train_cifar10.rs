@@ -1,0 +1,80 @@
+//! End-to-end driver (deliverable (b) / DESIGN.md §5): train the 3c3d
+//! network (895,210 parameters) on synthetic CIFAR-10 with a
+//! second-order optimizer built on BackPACK quantities, for a few
+//! hundred steps, logging the loss curve -- proving all three layers
+//! compose: Pallas kernels inside the JAX graph, lowered to HLO,
+//! executed and consumed by the Rust coordinator's KFAC-preconditioned
+//! update.
+//!
+//! Run: `cargo run --release --example train_cifar10 -- [steps] [opt]`
+
+use anyhow::Result;
+use backpack_rs::coordinator::metrics::write_csv;
+use backpack_rs::coordinator::{problems, train, TrainConfig};
+use backpack_rs::optim::Hyper;
+use backpack_rs::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize =
+        args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let opt = args.get(2).cloned().unwrap_or_else(|| "kfac".to_string());
+
+    let rt = Runtime::open_default()?;
+    let problem = problems::by_name("cifar10_3c3d")?;
+    let cfg = TrainConfig {
+        problem: problem.codename.into(),
+        optimizer: opt.clone(),
+        // Grid-search winner for KFAC on this problem (results/logs/
+        // fig7a.log): α = λ = 1e-2.
+        hyper: Hyper { lr: 0.01, damping: 0.01, l2: 0.0 },
+        steps,
+        seed: 0,
+        eval_every: 25,
+        inv_every: 1,
+        log_every: 5,
+        verbose: true,
+    };
+    println!(
+        "training 3c3d (895,210 params) on synthetic CIFAR-10 with \
+         {opt} for {steps} steps..."
+    );
+    let log = train::train(&rt, problem, &cfg)?;
+
+    println!("\nloss curve:");
+    for (s, l) in &log.train_loss {
+        println!("  step {s:4}  loss {l:.4}");
+    }
+    for e in &log.evals {
+        println!(
+            "  eval @ {:4}: test loss {:.4}, test acc {:.3}",
+            e.step, e.test_loss, e.test_accuracy
+        );
+    }
+    println!(
+        "\n{:.1}s total, {:.1}ms/step artifact execution",
+        log.wall_time_s,
+        log.step_time_s * 1e3
+    );
+
+    let rows: Vec<Vec<String>> = log
+        .train_loss
+        .iter()
+        .map(|(s, l)| vec![s.to_string(), l.to_string()])
+        .collect();
+    write_csv(
+        std::path::Path::new("results/e2e_train_cifar10.csv"),
+        "step,train_loss",
+        &rows,
+    )?;
+    println!("wrote results/e2e_train_cifar10.csv");
+
+    let first = log.train_loss.first().map(|x| x.1).unwrap_or(f32::NAN);
+    let last = log.final_train_loss();
+    anyhow::ensure!(
+        !log.diverged && last < first,
+        "training must reduce the loss (got {first} -> {last})"
+    );
+    println!("e2e training OK: loss {first:.3} -> {last:.3}");
+    Ok(())
+}

@@ -1,0 +1,268 @@
+"""AOT pipeline: lower every (problem x extension-set) graph to HLO text.
+
+``python -m compile.aot --out-dir ../artifacts`` writes one
+``<name>.hlo.txt`` per artifact plus ``manifest.json`` describing, for
+each artifact, the exact input order (parameters in layer order, then
+``x``, ``y`` and -- for Monte-Carlo extensions -- a ``key`` of raw
+threefry key data), the output order (sorted quantity names), shapes,
+dtypes and parameter-initialization metadata, so the Rust runtime is
+fully self-describing.
+
+This is the ONLY place Python runs: once, at build time. The build is
+incremental -- a content hash over the compile/ sources and the artifact
+spec table is stored in the manifest and the build is skipped when it
+matches (``--force`` overrides; ``--only REGEX`` restricts to matching
+artifact names).
+
+Artifact inventory (see DESIGN.md §5 for the per-figure mapping):
+
+* training graphs for the four DeepOBS problems of Table 3, one per
+  curvature (grad-only / DiagGGN / DiagGGN-MC / KFAC / KFLR / KFRA);
+* evaluation graphs (loss + accuracy at larger batches);
+* overhead-benchmark graphs for Fig. 3 (batch-size sweep incl. the
+  batch-1 for-loop baseline), Fig. 6 (one artifact per extension),
+  Fig. 8 (exact-matrix propagation on the C=100 net) and Fig. 9
+  (Hessian diagonal with a sigmoid);
+* a combined first-order artifact (quickstart / gradient-noise example).
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from . import models as M
+from .extensions import evaluation, extended_backward
+from .hlo_util import lower_to_hlo_text
+from .layers import Conv2d, Linear
+
+_COMPILE_DIR = pathlib.Path(__file__).parent
+
+
+# ---------------------------------------------------------------------------
+# Artifact specification table
+# ---------------------------------------------------------------------------
+
+
+def _mk_model(model_name: str, side: int):
+    if model_name == "allcnnc":
+        return M.allcnnc(side=side)
+    return M.MODELS[model_name]()
+
+
+def spec_table():
+    """[(name, model_name, side, batch, extensions, kind)]"""
+    specs = []
+
+    def add(model, side, n, exts, kind="train"):
+        sig = "grad" if not exts else "+".join(exts)
+        if kind == "eval":
+            sig = "eval"
+        name = f"{model}{side if model == 'allcnnc' else ''}_{sig}_n{n}"
+        row = (name, model, side, n, tuple(exts), kind)
+        if row not in specs:
+            specs.append(row)
+
+    # -- training graphs (Figs. 7, 10, 11; Table 4) --------------------------
+    for ext in ([], ["diag_ggn"], ["diag_ggn_mc"], ["kfac"], ["kflr"],
+                ["kfra"]):
+        add("logreg", 0, 64, ext)
+    for model, n in (("2c2d", 32), ("3c3d", 32)):
+        for ext in ([], ["diag_ggn"], ["diag_ggn_mc"], ["kfac"], ["kflr"]):
+            add(model, 0, n, ext)
+    for ext in ([], ["diag_ggn_mc"], ["kfac"]):
+        add("allcnnc", 16, 16, ext)
+
+    # -- evaluation graphs ----------------------------------------------------
+    add("logreg", 0, 256, [], kind="eval")
+    add("2c2d", 0, 128, [], kind="eval")
+    add("3c3d", 0, 128, [], kind="eval")
+    add("allcnnc", 16, 64, [], kind="eval")
+
+    # -- Fig. 6: per-extension overhead, N=64 (3c3d) / N=16 (allcnnc 32x32) --
+    for ext in (["batch_grad"], ["batch_l2"], ["sq_moment"], ["variance"],
+                ["diag_ggn"], ["diag_ggn_mc"], ["kfac"], ["kflr"], []):
+        add("3c3d", 0, 64, ext)
+    for ext in (["batch_grad"], ["batch_l2"], ["sq_moment"], ["variance"],
+                ["diag_ggn_mc"], ["kfac"], []):
+        add("allcnnc", 32, 16, ext)
+
+    # -- Fig. 3: individual gradients, batch-size sweep ----------------------
+    for n in (1, 4, 16, 32):
+        add("3c3d", 0, n, [])
+    for n in (4, 16, 32):
+        add("3c3d", 0, n, ["batch_grad"])
+
+    # -- Fig. 8: full-matrix propagation on the C=100 output -----------------
+    for ext in (["kflr"], ["diag_ggn"], ["kfac"], ["diag_ggn_mc"], []):
+        add("allcnnc", 32, 8, ext)
+
+    # -- Fig. 9: Hessian diagonal vs GGN diagonal with one sigmoid -----------
+    for ext in (["diag_h"], ["diag_ggn"], []):
+        add("3c3d_sigmoid", 0, 8, ext)
+
+    # -- combined first-order artifacts (quickstart, noise-scale example) ----
+    add("logreg", 0, 64, ["batch_grad", "batch_l2", "sq_moment",
+                          "variance"])
+    add("3c3d", 0, 32, ["batch_l2", "variance"])
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+_DTYPES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32",
+           jnp.uint32.dtype: "u32"}
+
+
+def _param_entries(model, params):
+    """Manifest input records for parameters, with init metadata."""
+    entries = []
+    for i, (layer, p) in enumerate(zip(model.layers, params)):
+        for pname in layer.param_names:
+            arr = p[pname]
+            if pname == "b":
+                init = {"kind": "zeros"}
+            elif isinstance(layer, Linear):
+                init = {"kind": "uniform", "bound":
+                        1.0 / layer.in_features ** 0.5}
+            elif isinstance(layer, Conv2d):
+                init = {"kind": "uniform", "bound":
+                        1.0 / (layer.cin * layer.k * layer.k) ** 0.5}
+            else:
+                raise AssertionError(type(layer))
+            entries.append({
+                "name": f"param/{i}/{pname}",
+                "shape": list(arr.shape),
+                "dtype": "f32",
+                "init": init,
+            })
+    return entries
+
+
+def build_artifact(name, model_name, side, n, exts, kind, out_dir):
+    model = _mk_model(model_name, side)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    flat_names = [(i, pn) for i, l in enumerate(model.layers)
+                  for pn in l.param_names]
+    has_key = any(e in ("diag_ggn_mc", "kfac") for e in exts)
+
+    x_spec = jax.ShapeDtypeStruct((n,) + model.in_shape, jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((n,), jnp.int32)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    p_specs = [jax.ShapeDtypeStruct(params[i][pn].shape, jnp.float32)
+               for i, pn in flat_names]
+
+    def unflatten(args):
+        ps = [dict() for _ in model.layers]
+        for (i, pn), a in zip(flat_names, args):
+            ps[i][pn] = a
+        return ps
+
+    def fn_dict(*args):
+        ps = unflatten(args[:len(flat_names)])
+        x, y = args[len(flat_names)], args[len(flat_names) + 1]
+        if kind == "eval":
+            return evaluation(model, ps, x, y)
+        key = (jax.random.wrap_key_data(args[-1]) if has_key else None)
+        return extended_backward(model, ps, x, y, exts, key=key)
+
+    example = tuple(p_specs) + (x_spec, y_spec) + (
+        (key_spec,) if has_key else ())
+    out_shapes = jax.eval_shape(fn_dict, *example)
+    out_names = sorted(out_shapes.keys())
+
+    def fn_tuple(*args):
+        d = fn_dict(*args)
+        return tuple(d[k] for k in out_names)
+
+    text = lower_to_hlo_text(fn_tuple, example)
+    (out_dir / f"{name}.hlo.txt").write_text(text)
+
+    inputs = _param_entries(model, params)
+    inputs.append({"name": "x", "shape": list(x_spec.shape),
+                   "dtype": "f32"})
+    inputs.append({"name": "y", "shape": list(y_spec.shape),
+                   "dtype": "i32"})
+    if has_key:
+        inputs.append({"name": "key", "shape": [2], "dtype": "u32"})
+    outputs = [{"name": k, "shape": list(out_shapes[k].shape),
+                "dtype": _DTYPES[out_shapes[k].dtype]}
+               for k in out_names]
+    return {
+        "file": f"{name}.hlo.txt",
+        "model": model_name, "side": side, "batch_size": n,
+        "extensions": list(exts), "kind": kind, "has_key": has_key,
+        "num_classes": model.num_classes,
+        "in_shape": list(model.in_shape),
+        "inputs": inputs, "outputs": outputs,
+    }
+
+
+def source_hash() -> str:
+    h = hashlib.sha256()
+    for f in sorted(_COMPILE_DIR.rglob("*.py")):
+        h.update(f.read_bytes())
+    h.update(repr(spec_table()).encode())
+    return h.hexdigest()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex restricting artifact names to rebuild")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="print the artifact table and exit")
+    args = ap.parse_args(argv)
+
+    specs = spec_table()
+    if args.list:
+        for row in specs:
+            print(row[0])
+        return
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    shash = source_hash()
+
+    manifest = {"artifacts": {}, "source_hash": None}
+    if manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+    up_to_date = (
+        manifest.get("source_hash") == shash
+        and all((out_dir / a["file"]).exists()
+                for a in manifest["artifacts"].values())
+        and set(manifest["artifacts"]) == {s[0] for s in specs})
+    if up_to_date and not args.force and not args.only:
+        print(f"artifacts up to date ({len(specs)} graphs), skipping")
+        return
+
+    pat = re.compile(args.only) if args.only else None
+    for name, model_name, side, n, exts, kind in specs:
+        if pat and not pat.search(name):
+            continue
+        reuse = (not args.force and manifest.get("source_hash") == shash
+                 and name in manifest["artifacts"]
+                 and (out_dir / f"{name}.hlo.txt").exists())
+        if reuse:
+            print(f"  [cached] {name}")
+            continue
+        print(f"  [lower]  {name} ...", flush=True)
+        manifest["artifacts"][name] = build_artifact(
+            name, model_name, side, n, exts, kind, out_dir)
+    manifest["source_hash"] = shash
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

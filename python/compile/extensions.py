@@ -1,0 +1,255 @@
+"""The BackPACK extension engine: generalized modular backpropagation.
+
+``extended_backward`` runs ONE forward pass storing module inputs, then
+walks the layer list backwards twice:
+
+1. **first-order pass** (Fig. 4): propagates the per-sample output
+   gradients ``g [N, *feat]`` (Eq. 3) and extracts, at every
+   parameterized module, the averaged gradient plus any requested
+   first-order quantity (individual gradients, their L2 norms, 2nd
+   moment, variance -- Table 1 / Appendix A.1);
+
+2. **second-order pass** (Fig. 5): propagates the symmetric loss-Hessian
+   factorization ``S [N, *feat, C]`` (Eq. 18) -- exact (DiagGGN, KFLR),
+   Monte-Carlo (DiagGGN-MC, KFAC) -- and/or the KFRA batch-averaged
+   curvature ``Ḡ [h, h]`` (Eq. 24), and/or the Hessian-diagonal quantity
+   list with the positive/negative residual factorizations of
+   Appendix A.3.
+
+All quantities follow Table 1's scaling conventions (the loss is the
+*mean* over the batch):
+
+====================  =====================================================
+individual gradients  ``(1/N) ∇ℓ_n``
+batch variance        ``1/N Σ [∇ℓ_n]² − [∇L]²``
+2nd moment            ``1/N Σ [∇ℓ_n]²``
+indiv. grad L2 norm   ``‖(1/N) ∇ℓ_n‖²``
+DiagGGN(-MC)          ``diag(G(θ))``, ``G = 1/N Σ Jᵀ (∇²_f ℓ_n) J``
+Hessian diagonal      ``diag(∇²_θ L)``
+KFAC/KFLR/KFRA        ``G(θ^(i)) ≈ A^(i) ⊗ B^(i)``  (1/N inside factors)
+====================  =====================================================
+
+Everything here is pure JAX tracing code: it runs once, inside
+``aot.py``, to produce the HLO artifacts the Rust runtime executes.
+"""
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ops
+from .layers import _flat2
+
+#: Extensions that reuse the standard backward pass (cheap, Fig. 4).
+FIRST_ORDER = ("batch_grad", "batch_l2", "sq_moment", "variance")
+#: Extensions that propagate extra information (Fig. 5).
+SECOND_ORDER = ("diag_ggn", "diag_ggn_mc", "diag_h", "kfac", "kflr", "kfra")
+ALL_EXTENSIONS = FIRST_ORDER + SECOND_ORDER
+
+
+def _diag_embed_flat(r):
+    """r [N, *feat] -> diagonal factor matrix [N, *feat, h] with
+    h = prod(feat): the square root of diag(r) (r must be >= 0)."""
+    n = r.shape[0]
+    rf = _flat2(r)
+    h = rf.shape[1]
+    mat = jnp.sqrt(rf)[:, :, None] * jnp.eye(h, dtype=r.dtype)[None]
+    return mat.reshape(r.shape + (h,))
+
+
+def extended_backward(
+    model,
+    params: List[Dict],
+    x,
+    y,
+    extensions: Sequence[str] = (),
+    key=None,
+    mc_samples: int = 1,
+) -> Dict[str, jnp.ndarray]:
+    """Run the generalized backward pass; returns {quantity_name: array}.
+
+    Output keys: ``loss``, ``grad/{layer}/{param}``, and
+    ``{extension}/{layer}/{param-or-factor}`` for each requested
+    extension (see module docstring for conventions).
+    """
+    extensions = tuple(extensions)
+    unknown = set(extensions) - set(ALL_EXTENSIONS)
+    if unknown:
+        raise ValueError(f"unknown extensions: {sorted(unknown)}")
+    needs_mc = any(e in extensions for e in ("diag_ggn_mc", "kfac"))
+    if needs_mc and key is None:
+        raise ValueError("MC extensions require a PRNG key input")
+
+    n = x.shape[0]
+    out: Dict[str, jnp.ndarray] = {}
+
+    # ---- forward pass, storing every module input (Fig. 2) ----------------
+    acts = [x]
+    h = x
+    for layer, p in zip(model.layers, params):
+        h = layer.forward(p, h)
+        acts.append(h)
+    logits = acts[-1]
+    out["loss"] = model.loss.value(logits, y)
+
+    # ---- first-order backward pass (Eq. 3 + Fig. 4) ------------------------
+    g = model.loss.grad(logits, y)  # ∇_f ℓ_n, [N, C]
+    grads_out = [None] * len(model.layers)  # ∇_{z^(i)} ℓ_n per layer
+    for i in range(len(model.layers) - 1, -1, -1):
+        layer, p, inp = model.layers[i], params[i], acts[i]
+        grads_out[i] = g
+        if layer.has_params:
+            # The averaged gradient is always produced (optimizers need
+            # it); per-sample gradients are materialized only when an
+            # extension requires them anyway.
+            bg = None
+            if "batch_grad" in extensions:
+                bg = layer.batch_grad(p, inp, g)
+                for k, v in bg.items():
+                    out[f"batch_grad/{i}/{k}"] = v / n
+            if bg is not None:
+                for k, v in bg.items():
+                    out[f"grad/{i}/{k}"] = jnp.sum(v, axis=0) / n
+            else:
+                for k, v in _grad_param(layer, p, inp, g).items():
+                    out[f"grad/{i}/{k}"] = v / n
+            if "batch_l2" in extensions:
+                for k, v in layer.batch_l2(p, inp, g).items():
+                    out[f"batch_l2/{i}/{k}"] = v / (n * n)
+            if "sq_moment" in extensions or "variance" in extensions:
+                sq = {k: v / n for k, v in
+                      layer.sq_moment(p, inp, g).items()}
+                if "sq_moment" in extensions:
+                    for k, v in sq.items():
+                        out[f"sq_moment/{i}/{k}"] = v
+                if "variance" in extensions:
+                    for k, v in sq.items():
+                        out[f"variance/{i}/{k}"] = v - out[f"grad/{i}/{k}"] ** 2
+        if i > 0:
+            g = layer.vjp_input(p, inp, g)
+
+    # ---- second-order backward passes (Eq. 18 / Fig. 5) --------------------
+    for ext, exact in (("diag_ggn", True), ("diag_ggn_mc", False)):
+        if ext in extensions:
+            s = _init_sqrt(model, logits, y, exact, key, mc_samples)
+            _propagate_diag(model, params, acts, s, out, ext, n)
+
+    for ext, exact in (("kflr", True), ("kfac", False)):
+        if ext in extensions:
+            s = _init_sqrt(model, logits, y, exact, key, mc_samples)
+            _propagate_kron(model, params, acts, s, out, ext)
+
+    if "kfra" in extensions:
+        _propagate_kfra(model, params, acts, y, out)
+
+    if "diag_h" in extensions:
+        s = model.loss.sqrt_hessian(logits, y)
+        _propagate_diag_h(model, params, acts, grads_out, s, out, n)
+
+    return out
+
+
+def _grad_param(layer, p, inp, g):
+    """Averaged parameter gradient WITHOUT materializing per-sample
+    gradients (sum over the batch; caller divides by N)."""
+    from .layers import Conv2d, Linear
+
+    if isinstance(layer, Linear):
+        return {"w": ops.matmul_tn(g, inp), "b": jnp.sum(g, axis=0)}
+    if isinstance(layer, Conv2d):
+        pt = layer._patches(inp)                       # [N, I, T]
+        g2 = g.reshape(g.shape[0], layer.cout, -1)     # [N, O, T]
+        nt = pt.shape[0] * pt.shape[2]
+        p2 = jnp.transpose(pt, (0, 2, 1)).reshape(nt, -1)
+        g3 = jnp.transpose(g2, (0, 2, 1)).reshape(nt, -1)
+        gw = ops.matmul_tn(g3, p2).reshape(p["w"].shape)
+        return {"w": gw, "b": jnp.sum(g2, axis=(0, 2))}
+    # fallback: per-sample then sum
+    return {k: jnp.sum(v, axis=0)
+            for k, v in layer.batch_grad(p, inp, g).items()}
+
+
+def _init_sqrt(model, logits, y, exact: bool, key, mc_samples: int):
+    if exact:
+        return model.loss.sqrt_hessian(logits, y)          # [N, C, C]
+    return model.loss.sqrt_hessian_mc(logits, y, key, mc_samples)
+
+
+def _propagate_diag(model, params, acts, s, out, name, n):
+    """DiagGGN / DiagGGN-MC: Eq. 18 propagation + Eq. 19 extraction."""
+    for i in range(len(model.layers) - 1, -1, -1):
+        layer, p, inp = model.layers[i], params[i], acts[i]
+        if layer.has_params:
+            for k, v in layer.diag_ggn(p, inp, s).items():
+                out[f"{name}/{i}/{k}"] = v / n
+        if i > 0:
+            s = layer.mat_vjp_input(p, inp, s)
+
+
+def _propagate_kron(model, params, acts, s, out, name):
+    """KFAC / KFLR: same propagation, Kronecker-factor extraction."""
+    for i in range(len(model.layers) - 1, -1, -1):
+        layer, p, inp = model.layers[i], params[i], acts[i]
+        if layer.has_params:
+            for k, v in layer.kron_factors(p, inp, s).items():
+                out[f"{name}/{i}/{k}"] = v
+        if i > 0:
+            s = layer.mat_vjp_input(p, inp, s)
+
+
+def _propagate_kfra(model, params, acts, y, out):
+    """KFRA: batch-averaged curvature propagation (Eq. 24).
+
+    Only modules implementing ``avg_mat_vjp_input`` participate (Linear,
+    activations, Flatten) -- matching the paper's own scope (footnote 5:
+    KFRA's averaged backward does not scale to large convolutions)."""
+    logits = acts[-1]
+    gbar = model.loss.hessian_mean(logits, y)
+    for i in range(len(model.layers) - 1, -1, -1):
+        layer, p, inp = model.layers[i], params[i], acts[i]
+        if layer.has_params:
+            if not hasattr(layer, "kfra_factors"):
+                raise NotImplementedError(
+                    f"KFRA unsupported for {type(layer).__name__} "
+                    "(paper footnote 5)")
+            for k, v in layer.kfra_factors(p, inp, gbar).items():
+                out[f"kfra/{i}/{k}"] = v
+        if i > 0:
+            gbar = layer.avg_mat_vjp_input(p, inp, gbar)
+
+
+def _propagate_diag_h(model, params, acts, grads_out, s, out, n):
+    """Exact Hessian diagonal (Appendix A.3).
+
+    Propagates a LIST of signed square-root factors: the GGN part S plus,
+    for every activation with non-vanishing second derivative, the
+    positive/negative eigenspace factorizations P/N of the residual
+    R = diag(σ''(x) ⊙ δ) (Eq. 25-26). The growth of this list -- and of
+    the factor widths -- is exactly the cost explosion Fig. 9 measures."""
+    quantities = [(s, 1.0)]  # (factor [N, *feat, K], sign)
+    for i in range(len(model.layers) - 1, -1, -1):
+        layer, p, inp = model.layers[i], params[i], acts[i]
+        if layer.has_params:
+            for mat, sign in quantities:
+                for k, v in layer.diag_ggn(p, inp, mat).items():
+                    key = f"diag_h/{i}/{k}"
+                    out[key] = out.get(key, 0.0) + sign * v / n
+        if i > 0:
+            quantities = [(layer.mat_vjp_input(p, inp, mat), sign)
+                          for mat, sign in quantities]
+            r = layer.residual_diag(p, inp, grads_out[i])
+            if r is not None:
+                rpos, rneg = jnp.maximum(r, 0.0), jnp.maximum(-r, 0.0)
+                quantities.append((_diag_embed_flat(rpos), 1.0))
+                quantities.append((_diag_embed_flat(rneg), -1.0))
+    return out
+
+
+def evaluation(model, params, x, y):
+    """Eval-graph payload: (mean loss, accuracy)."""
+    logits = model.forward(params, x)
+    return {
+        "loss": model.loss.value(logits, y),
+        "accuracy": model.loss.accuracy(logits, y),
+    }

@@ -1,0 +1,25 @@
+"""Lowering helpers: jitted jax function -> HLO *text*.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``).
+The text parser on the Rust side reassigns ids, so text round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, example_args) -> str:
+    """Lower ``fn`` at the given abstract args and return HLO text.
+
+    The computation is built with ``return_tuple=True`` so the Rust side
+    always unwraps a tuple (uniform handling of multi-output graphs).
+    """
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()

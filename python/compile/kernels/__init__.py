@@ -1,0 +1,61 @@
+"""Layer-1 Pallas extraction kernels for BackPACK quantities.
+
+The extraction hot spots of every BackPACK extension reduce to four
+batched primitives (see DESIGN.md §2 and §6):
+
+- :func:`outer_batch`      -- per-sample outer products  ``nb,na->nba``
+                              (individual gradients of linear/unfolded-conv
+                              layers, Eq. 5 / Fig. 4 of the paper);
+- :func:`matmul_tn`        -- batch-reduced contraction  ``nb,na->ba``
+                              (2nd moment, GGN diagonals, Kronecker
+                              factors: all are squared/matmul reductions
+                              over the batch, Appendix A.1/A.2);
+- :func:`batch_l2`         -- fused per-sample squared-row-norm product
+                              (individual-gradient L2 norms, Appendix A.1);
+- :func:`sq_reduce`        -- fused square+sum over the factorization
+                              columns of the backpropagated ``S`` matrices
+                              (diagonal extraction, Eq. 19).
+
+Each primitive has a Pallas implementation (``interpret=True`` -- the CPU
+PJRT plugin cannot run Mosaic custom-calls) and a pure-jnp oracle in
+:mod:`ref`. ``KERNEL_BACKEND`` selects which one is traced into the AOT
+artifacts; block shapes come from ``pallas_impl.block_plan`` and depend on
+the ``KERNEL_TARGET``:
+
+- ``tpu``: MXU-shaped 128-aligned tiles sized for a 16 MB VMEM budget
+  (the deployment plan documented in DESIGN.md §7);
+- ``cpu``: maximal blocks to minimize interpret-mode grid steps (the
+  benchmarking configuration used on this testbed).
+"""
+
+import os
+
+from . import ref  # noqa: F401
+
+#: "pallas" or "jnp" -- which implementation `ops.py` traces into graphs.
+KERNEL_BACKEND = os.environ.get("BACKPACK_KERNELS", "pallas")
+
+#: "cpu" (interpret-friendly maximal blocks) or "tpu" (VMEM-tile plan).
+KERNEL_TARGET = os.environ.get("BACKPACK_KERNEL_TARGET", "cpu")
+
+
+def use_pallas() -> bool:
+    return KERNEL_BACKEND == "pallas"
+
+
+from .pallas_impl import (  # noqa: E402,F401
+    batch_l2_pallas,
+    matmul_tn_pallas,
+    outer_batch_pallas,
+    sq_reduce_pallas,
+)
+from .ops import (  # noqa: E402,F401
+    batch_l2,
+    diag_ggn_from_sqrt,
+    kron_factor_A,
+    kron_factor_B,
+    matmul_tn,
+    outer_batch,
+    sq_moment,
+    sq_reduce,
+)

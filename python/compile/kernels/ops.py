@@ -1,0 +1,74 @@
+"""Backend-dispatching extraction ops used by the extension engine (L2).
+
+Every BackPACK quantity's inner loop funnels through these functions;
+``BACKPACK_KERNELS`` selects Pallas vs. pure-jnp (see package docstring).
+The higher-level compositions (2nd moment, GGN diagonal, Kronecker
+factors) live here so both backends share one algebra.
+"""
+
+import jax.numpy as jnp
+
+from . import KERNEL_TARGET, ref, use_pallas
+from . import pallas_impl as pk
+
+
+def matmul_tn(p, q):
+    """``einsum('nb,na->ba')`` -- batch-reduced contraction."""
+    if use_pallas():
+        return pk.matmul_tn_pallas(p, q, target=KERNEL_TARGET)
+    return ref.matmul_tn_ref(p, q)
+
+
+def outer_batch(g, x):
+    """``einsum('nb,na->nba')`` -- per-sample weight gradients (Eq. 5)."""
+    if use_pallas():
+        return pk.outer_batch_pallas(g, x, target=KERNEL_TARGET)
+    return ref.outer_batch_ref(g, x)
+
+
+def batch_l2(g, x):
+    """Per-sample squared L2 norms of linear-layer gradients (Appx A.1)."""
+    if use_pallas():
+        return pk.batch_l2_pallas(g, x, target=KERNEL_TARGET)
+    return ref.batch_l2_ref(g, x)
+
+
+def sq_reduce(s):
+    """``sum_c S[n, b, c]^2`` -- diagonal extraction step (Eq. 19)."""
+    if use_pallas():
+        return pk.sq_reduce_pallas(s, target=KERNEL_TARGET)
+    return ref.sq_reduce_ref(s)
+
+
+# -- compositions ------------------------------------------------------------
+
+
+def sq_moment(g, x):
+    """2nd moment of a linear layer's weight gradient (Appx A.1).
+
+    ``out[b, a] = sum_n (g[n,b] x[n,a])^2 = (g^2)^T (x^2)``.
+    """
+    return matmul_tn(g * g, x * x)
+
+
+def diag_ggn_from_sqrt(s, x):
+    """GGN diagonal of a linear layer's weight from the backpropagated
+    factorization ``S [N, B, C]`` and layer input ``x [N, A]`` (Eq. 19):
+
+    ``diag[b, a] = sum_n x[n,a]^2 * sum_c S[n,b,c]^2``.
+    """
+    return matmul_tn(sq_reduce(s), x * x)
+
+
+def kron_factor_A(x):
+    """First Kronecker factor ``A = 1/N sum_n x_n x_n^T`` (Eq. 23)."""
+    n = x.shape[0]
+    return matmul_tn(x, x) / n
+
+
+def kron_factor_B(s):
+    """Second Kronecker factor ``B = 1/N sum_n S_n S_n^T`` from
+    ``S [N, B, C]`` (KFAC/KFLR, Appx A.2.2)."""
+    n, b, c = s.shape
+    s2d = jnp.transpose(s, (0, 2, 1)).reshape(n * c, b)
+    return matmul_tn(s2d, s2d) / n

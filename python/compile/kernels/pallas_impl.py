@@ -1,0 +1,217 @@
+"""Pallas implementations of the four extraction primitives.
+
+All kernels are written for TPU tiling discipline (MXU-shaped blocks,
+reduction as the innermost sequential grid dimension, accumulation into
+the output block) but executed with ``interpret=True`` so the CPU PJRT
+backend can run the lowered HLO (see /opt/xla-example README: real TPU
+lowering emits Mosaic custom-calls the CPU plugin rejects).
+
+Block-shape policy (:func:`block_plan`):
+
+- ``tpu``  -- 128-aligned tiles; the working set of the matmul kernel is
+  ``bn*bb + bn*ba + bb*ba`` f32 which with (512, 128, 128) is ~0.6 MB,
+  comfortably double-bufferable in 16 MB VMEM.
+- ``cpu``  -- blocks grow to the (padded) full dimension, capped so a
+  block stays under ~32 MB; fewer grid steps = less interpret overhead.
+
+Inputs whose dimensions are not multiples of the block size are
+zero-padded by the wrappers here; zero padding is exact for every kernel
+(all are polynomial contractions with additive identity 0) and padded
+output rows/cols are sliced away.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128  # MXU/VPU lane width
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def block_plan(dim: int, target: str, tpu_tile: int, cpu_cap: int) -> int:
+    """Pick a block size for one dimension.
+
+    ``tpu``: fixed MXU-aligned tile (clamped to the padded dim).
+    ``cpu``: the whole dimension when it fits the cap -- grid collapses
+    to one step and NO padding is introduced. (Perf iteration #1,
+    EXPERIMENTS.md §Perf: the earlier plan rounded every dimension up
+    to the 128 lane width, which pads a batch of 32 to 128 = 4x wasted
+    work; interpret-mode copies made `outer_batch` 12x slower than
+    necessary.)
+    """
+    if target == "tpu":
+        return min(tpu_tile, _round_up(dim, _LANE))
+    if dim <= cpu_cap:
+        return dim
+    # Near-even split: smallest grid whose block fits the cap, sized so
+    # padding stays < one block (perf iteration #2: a hard cap padded
+    # 1152 -> 2048 at 3c3d's fc1, 1.8x wasted work).
+    steps = -(-dim // cpu_cap)
+    return -(-dim // steps)
+
+
+def _pad_axis(x, axis: int, to: int):
+    pad = to - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# matmul_tn: out[b, a] = sum_n p[n, b] * q[n, a]
+# ---------------------------------------------------------------------------
+
+
+def _matmul_tn_kernel(p_ref, q_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        p_ref[...].T, q_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_tn_pallas(p, q, *, target: str = "cpu"):
+    """``einsum('nb,na->ba', p, q)`` as a tiled, batch-reduced matmul.
+
+    The reduction over the batch axis is the innermost grid dimension so
+    the output tile accumulates in place (VMEM-resident on TPU).
+    """
+    n, b = p.shape
+    n2, a = q.shape
+    assert n == n2, (p.shape, q.shape)
+    # cpu: one grid step for all reduction sizes we meet (perf iter #3:
+    # 4 accumulation steps at the conv-patch reduction cost 5x vs one
+    # fused dot; block memory at the cap is ~100 MB, well within RAM).
+    bn = block_plan(n, target, 512, 262_144)
+    bb = block_plan(b, target, _LANE, 4096)
+    ba = block_plan(a, target, _LANE, 4096)
+    np_, bp_ = _round_up(n, bn), _round_up(b, bb)
+    ap_ = _round_up(a, ba)
+    p = _pad_axis(_pad_axis(p, 0, np_), 1, bp_)
+    q = _pad_axis(_pad_axis(q, 0, np_), 1, ap_)
+    out = pl.pallas_call(
+        _matmul_tn_kernel,
+        grid=(bp_ // bb, ap_ // ba, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bb), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bn, ba), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, ba), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp_, ap_), jnp.float32),
+        interpret=True,
+    )(p, q)
+    return out[:b, :a]
+
+
+# ---------------------------------------------------------------------------
+# outer_batch: out[n, b, a] = g[n, b] * x[n, a]   (per-sample gradients)
+# ---------------------------------------------------------------------------
+
+
+def _outer_batch_kernel(g_ref, x_ref, o_ref):
+    o_ref[...] = g_ref[...][:, :, None] * x_ref[...][:, None, :]
+
+
+def outer_batch_pallas(g, x, *, target: str = "cpu"):
+    """``einsum('nb,na->nba', g, x)``: per-sample weight gradients.
+
+    N leads the grid so every output tile is written exactly once -- the
+    TPU-shaped replacement for the atomic-add scheme a CUDA port would
+    use (DESIGN.md §Hardware-Adaptation).
+    """
+    n, b = g.shape
+    n2, a = x.shape
+    assert n == n2
+    bn = block_plan(n, target, 8, 256)
+    bb = block_plan(b, target, _LANE, 4096)
+    ba = block_plan(a, target, _LANE, 4096)
+    np_, bp_, ap_ = _round_up(n, bn), _round_up(b, bb), _round_up(a, ba)
+    g = _pad_axis(_pad_axis(g, 0, np_), 1, bp_)
+    x = _pad_axis(_pad_axis(x, 0, np_), 1, ap_)
+    out = pl.pallas_call(
+        _outer_batch_kernel,
+        grid=(np_ // bn, bp_ // bb, ap_ // ba),
+        in_specs=[
+            pl.BlockSpec((bn, bb), lambda nn, i, j: (nn, i)),
+            pl.BlockSpec((bn, ba), lambda nn, i, j: (nn, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bb, ba), lambda nn, i, j: (nn, i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, bp_, ap_), jnp.float32),
+        interpret=True,
+    )(g, x)
+    return out[:n, :b, :a]
+
+
+# ---------------------------------------------------------------------------
+# batch_l2: out[n] = (sum_a x[n,a]^2) * (sum_b g[n,b]^2)
+# ---------------------------------------------------------------------------
+
+
+def _batch_l2_kernel(g_ref, x_ref, o_ref):
+    gsq = jnp.sum(g_ref[...] * g_ref[...], axis=1)
+    xsq = jnp.sum(x_ref[...] * x_ref[...], axis=1)
+    o_ref[...] = gsq * xsq
+
+
+def batch_l2_pallas(g, x, *, target: str = "cpu"):
+    """Fused individual-gradient L2 norms for a linear layer (Appx A.1).
+
+    Exploits ``|g_n x_n^T|_F^2 = |g_n|^2 |x_n|^2`` -- never materializes
+    the [N, B, A] per-sample gradients.
+    """
+    n, b = g.shape
+    n2, a = x.shape
+    assert n == n2
+    bn = block_plan(n, target, 8, 256)
+    np_ = _round_up(n, bn)
+    g = _pad_axis(g, 0, np_)
+    x = _pad_axis(x, 0, np_)
+    out = pl.pallas_call(
+        _batch_l2_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, b), lambda i: (i, 0)),
+            pl.BlockSpec((bn, a), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(g, x)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# sq_reduce: out[n, b] = sum_c s[n, b, c]^2   (diagonal extraction, Eq. 19)
+# ---------------------------------------------------------------------------
+
+
+def _sq_reduce_kernel(s_ref, o_ref):
+    s = s_ref[...]
+    o_ref[...] = jnp.sum(s * s, axis=2)
+
+
+def sq_reduce_pallas(s, *, target: str = "cpu"):
+    """Square-and-sum over the factorization columns of S [N, B, C]."""
+    n, b, c = s.shape
+    bn = block_plan(n, target, 8, 256)
+    bb = block_plan(b, target, _LANE, 4096)
+    np_, bp_ = _round_up(n, bn), _round_up(b, bb)
+    s = _pad_axis(_pad_axis(s, 0, np_), 1, bp_)
+    out = pl.pallas_call(
+        _sq_reduce_kernel,
+        grid=(np_ // bn, bp_ // bb),
+        in_specs=[pl.BlockSpec((bn, bb, c), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((bn, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, bp_), jnp.float32),
+        interpret=True,
+    )(s)
+    return out[:n, :b]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas extraction kernels.
+
+These are the correctness ground truth: every Pallas kernel is checked
+against its oracle by pytest/hypothesis sweeps (python/tests/
+test_kernels.py). They are also a selectable backend
+(``BACKPACK_KERNELS=jnp``) used by the kernel-backend ablation bench.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_tn_ref(p, q):
+    """``out[b, a] = sum_n p[n, b] q[n, a]``."""
+    return jnp.einsum("nb,na->ba", p, q)
+
+
+def outer_batch_ref(g, x):
+    """``out[n, b, a] = g[n, b] x[n, a]`` (per-sample gradients)."""
+    return jnp.einsum("nb,na->nba", g, x)
+
+
+def batch_l2_ref(g, x):
+    """``out[n] = |g_n|^2 |x_n|^2`` (squared Frobenius norm of g_n x_n^T)."""
+    return jnp.sum(g * g, axis=1) * jnp.sum(x * x, axis=1)
+
+
+def sq_reduce_ref(s):
+    """``out[n, b] = sum_c s[n, b, c]^2``."""
+    return jnp.sum(s * s, axis=2)

@@ -1,0 +1,436 @@
+"""Layer-2 modular feed-forward framework (the paper's Sec. 2 setting).
+
+Every layer is a module ``T^(i)`` that knows how to
+
+* run its forward transformation (Eq. 2),
+* apply its **transposed Jacobians** -- w.r.t. the input (``vjp_input``,
+  the backprop recursion of Eq. 3) and w.r.t. its parameters
+  (``batch_grad`` & friends, Eq. 5), always keeping the batch axis, and
+* propagate **matrix-shaped** quantities: the symmetric GGN
+  factorization ``S [N, *out, C]`` (``mat_vjp_input``, Eq. 18) and the
+  KFRA batch-averaged curvature ``Ḡ [h, h]`` (``avg_mat_vjp_input``,
+  Eq. 24a).
+
+This is the "generalized backpropagation" the paper builds: the engine in
+:mod:`extensions` walks the layer list backwards and calls these hooks.
+``jax.grad`` is never used on the model -- only inside ``Conv2d``/pooling
+modules, module-locally, as the Jacobian application of that single
+transformation (a module "knows how to multiply with its Jacobian").
+
+Extraction hot spots call the L1 Pallas kernels (:mod:`kernels.ops`).
+
+Shape conventions: activations are ``[N, features]`` or ``[N, C, H, W]``;
+parameters follow PyTorch (``Linear: w [out, in], b [out]``;
+``Conv2d: w [cout, cin, kh, kw], b [cout]``); weight and bias are separate
+parameters/blocks (paper footnote 7).
+"""
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import ops
+
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _flat2(x):
+    """[N, ...] -> [N, prod(...)]."""
+    return x.reshape(x.shape[0], -1)
+
+
+def _smat(s):
+    """S [N, *feat, C] -> [N, prod(feat), C]."""
+    return s.reshape(s.shape[0], -1, s.shape[-1])
+
+
+class Module:
+    """Base module. Stateless; parameters travel as dicts of arrays."""
+
+    #: parameter names in canonical order ("w", "b") or () for none.
+    param_names: Tuple[str, ...] = ()
+
+    def init(self, key, in_shape):
+        """Return (params, out_shape). ``in_shape`` excludes the batch dim."""
+        raise NotImplementedError
+
+    def forward(self, params: Params, x):
+        raise NotImplementedError
+
+    # -- first-order hooks ---------------------------------------------------
+    def vjp_input(self, params: Params, x, g):
+        """Apply (J_x z)^T per sample: g [N, *out] -> [N, *in] (Eq. 3)."""
+        raise NotImplementedError
+
+    def batch_grad(self, params: Params, x, g) -> Params:
+        """Per-sample parameter gradients {name: [N, *pshape]} (Eq. 5)."""
+        raise NotImplementedError
+
+    def batch_l2(self, params: Params, x, g) -> Params:
+        """Per-sample squared L2 norms {name: [N]} without materializing
+        the individual gradients where the Jacobian structure allows
+        (Appx A.1)."""
+        bg = self.batch_grad(params, x, g)
+        return {k: jnp.sum(_flat2(v) ** 2, axis=1) for k, v in bg.items()}
+
+    def sq_moment(self, params: Params, x, g) -> Params:
+        """Sum over the batch of squared per-sample gradients
+        {name: [*pshape]} (Appx A.1; caller applies the 1/N)."""
+        bg = self.batch_grad(params, x, g)
+        return {k: jnp.sum(v**2, axis=0) for k, v in bg.items()}
+
+    # -- second-order hooks --------------------------------------------------
+    def mat_vjp_input(self, params: Params, x, s):
+        """Apply (J_x z)^T columnwise: S [N, *out, C] -> [N, *in, C]
+        (Eq. 18). Default: vmap the vjp over the factorization columns."""
+        def vjp_one(col):
+            return self.vjp_input(params, x, col)
+        return jax.vmap(vjp_one, in_axes=-1, out_axes=-1)(s)
+
+    def diag_ggn(self, params: Params, x, s) -> Params:
+        """Sum over batch of diag([J_θ z]^T S S^T [J_θ z]) per parameter
+        (Eq. 19; caller applies the 1/N)."""
+        raise NotImplementedError
+
+    def kron_factors(self, params: Params, x, s):
+        """Kronecker factors for this layer (Eq. 23): returns a dict with
+        'A' [a, a], 'B' [b, b] (weight block ≈ A ⊗ B) and 'bias_ggn'
+        [b, b] (the bias block's full GGN, paper footnote 7/8)."""
+        raise NotImplementedError
+
+    def avg_mat_vjp_input(self, params: Params, x, gbar):
+        """KFRA averaged propagation (Eq. 24a): Ḡ [h_out, h_out] ->
+        [h_in, h_in]."""
+        raise NotImplementedError
+
+    def residual_diag(self, params: Params, x, g) -> Optional[jnp.ndarray]:
+        """Diagonal residual r [N, *in] of Eq. 25b (second derivative of
+        the transformation times incoming gradient). None when zero."""
+        return None
+
+    @property
+    def has_params(self) -> bool:
+        return bool(self.param_names)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+
+class Linear(Module):
+    """Affine map ``z = x W^T + b`` with W [out, in], b [out]."""
+
+    param_names = ("w", "b")
+
+    def __init__(self, in_features: int, out_features: int):
+        self.in_features = in_features
+        self.out_features = out_features
+
+    def init(self, key, in_shape):
+        assert in_shape == (self.in_features,), in_shape
+        kw, _ = jax.random.split(key)
+        bound = 1.0 / math.sqrt(self.in_features)
+        w = jax.random.uniform(
+            kw, (self.out_features, self.in_features), jnp.float32,
+            -bound, bound)
+        b = jnp.zeros((self.out_features,), jnp.float32)
+        return {"w": w, "b": b}, (self.out_features,)
+
+    def forward(self, params, x):
+        return x @ params["w"].T + params["b"]
+
+    def vjp_input(self, params, x, g):
+        return g @ params["w"]
+
+    def batch_grad(self, params, x, g):
+        return {"w": ops.outer_batch(g, x), "b": g}
+
+    def batch_l2(self, params, x, g):
+        return {"w": ops.batch_l2(g, x), "b": jnp.sum(g**2, axis=1)}
+
+    def sq_moment(self, params, x, g):
+        return {"w": ops.sq_moment(g, x), "b": jnp.sum(g**2, axis=0)}
+
+    def mat_vjp_input(self, params, x, s):
+        # [N, out, C] x [out, in] -> [N, in, C]
+        return jnp.einsum("noc,oi->nic", s, params["w"])
+
+    def diag_ggn(self, params, x, s):
+        return {
+            "w": ops.diag_ggn_from_sqrt(s, x),
+            "b": jnp.sum(ops.sq_reduce(s), axis=0),
+        }
+
+    def kron_factors(self, params, x, s):
+        bias_ggn = ops.kron_factor_B(s)  # 1/N sum_n S S^T  [out, out]
+        return {
+            "A": ops.kron_factor_A(x),  # 1/N sum_n x x^T  [in, in]
+            "B": bias_ggn,
+            "bias_ggn": bias_ggn,
+        }
+
+    def avg_mat_vjp_input(self, params, x, gbar):
+        w = params["w"]
+        return w.T @ gbar @ w
+
+    def kfra_factors(self, params, x, gbar):
+        return {"A": ops.kron_factor_A(x), "B": gbar, "bias_ggn": gbar}
+
+
+# ---------------------------------------------------------------------------
+# Conv2d (reduced to the linear case by patch extraction / im2col,
+# following Grosse & Martens 2016 -- see DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+_DN = ("NCHW", "OIHW", "NCHW")
+
+
+class Conv2d(Module):
+    """2-D convolution, NCHW, weight [cout, cin, kh, kw], bias [cout]."""
+
+    param_names = ("w", "b")
+
+    def __init__(self, cin, cout, ksize, stride=1, padding="SAME"):
+        self.cin, self.cout, self.k = cin, cout, ksize
+        self.stride = stride
+        self.padding = padding  # "SAME" | "VALID"
+
+    def init(self, key, in_shape):
+        c, h, w = in_shape
+        assert c == self.cin, (in_shape, self.cin)
+        fan_in = self.cin * self.k * self.k
+        bound = 1.0 / math.sqrt(fan_in)
+        kw, _ = jax.random.split(key)
+        weight = jax.random.uniform(
+            kw, (self.cout, self.cin, self.k, self.k), jnp.float32,
+            -bound, bound)
+        bias = jnp.zeros((self.cout,), jnp.float32)
+        out_shape = jax.eval_shape(
+            lambda t: self._conv(t, weight),
+            jax.ShapeDtypeStruct((1, c, h, w), jnp.float32)).shape[1:]
+        return {"w": weight, "b": bias}, out_shape
+
+    def _conv(self, x, w):
+        return lax.conv_general_dilated(
+            x, w, (self.stride, self.stride), self.padding,
+            dimension_numbers=_DN)
+
+    def forward(self, params, x):
+        return self._conv(x, params["w"]) + params["b"][None, :, None, None]
+
+    def _patches(self, x):
+        """Unfolded input [N, cin*k*k, T] with T = H'·W'; feature ordering
+        matches ``w.reshape(cout, cin*k*k)`` (verified by tests)."""
+        p = lax.conv_general_dilated_patches(
+            x, (self.k, self.k), (self.stride, self.stride), self.padding)
+        return p.reshape(p.shape[0], p.shape[1], -1)
+
+    def vjp_input(self, params, x, g):
+        # Module-local Jacobian application via the conv transpose rule.
+        _, vjp = jax.vjp(lambda t: self._conv(t, params["w"]), x)
+        return vjp(g)[0]
+
+    def batch_grad(self, params, x, g):
+        p = self._patches(x)                         # [N, I, T]
+        g2 = _flat2(g).reshape(g.shape[0], self.cout, -1)  # [N, O, T]
+        gw = jnp.einsum("not,nit->noi", g2, p)
+        return {
+            "w": gw.reshape(g.shape[0], *params["w"].shape),
+            "b": jnp.sum(g2, axis=2),
+        }
+
+    def sq_moment(self, params, x, g):
+        bg = self.batch_grad(params, x, g)
+        return {k: jnp.sum(v**2, axis=0) for k, v in bg.items()}
+
+    def mat_vjp_input(self, params, x, s):
+        def vjp_one(col):
+            return self.vjp_input(params, x, col)
+        return jax.vmap(vjp_one, in_axes=-1, out_axes=-1)(s)
+
+    def diag_ggn(self, params, x, s):
+        # s [N, cout, H', W', C];  J_w z = patches:
+        # diag_w[o,i] = sum_{n,c} (sum_t p[n,i,t] s[n,o,t,c])^2
+        n = s.shape[0]
+        p = self._patches(x)                                  # [N, I, T]
+        sm = s.reshape(n, self.cout, -1, s.shape[-1])         # [N, O, T, C]
+        js = jnp.einsum("nit,notc->noic", p, sm)              # [N, O, I, C]
+        dw = jnp.sum(js**2, axis=(0, 3))
+        sb = jnp.sum(sm, axis=2)                              # [N, O, C]
+        db = jnp.sum(ops.sq_reduce(sb), axis=0)
+        return {"w": dw.reshape(params["w"].shape), "b": db}
+
+    def kron_factors(self, params, x, s):
+        # Grosse & Martens (2016) convolution factors; see DESIGN.md §6.
+        n = s.shape[0]
+        p = self._patches(x)                                  # [N, I, T]
+        t = p.shape[-1]
+        p2 = jnp.transpose(p, (0, 2, 1)).reshape(n * t, -1)   # [(N T), I]
+        a = ops.matmul_tn(p2, p2) / n                         # sum over t
+        sm = s.reshape(n, self.cout, -1, s.shape[-1])         # [N, O, T, C]
+        s2 = jnp.transpose(sm, (0, 2, 3, 1)).reshape(-1, self.cout)
+        b = ops.matmul_tn(s2, s2) / (n * t)
+        sb = jnp.sum(sm, axis=2)                              # [N, O, C]
+        bias_ggn = ops.kron_factor_B(sb)
+        return {"A": a, "B": b, "bias_ggn": bias_ggn}
+
+
+# ---------------------------------------------------------------------------
+# Elementwise activations
+# ---------------------------------------------------------------------------
+
+
+class Activation(Module):
+    """Elementwise activation; subclasses define σ, σ', σ''."""
+
+    def act(self, x):
+        raise NotImplementedError
+
+    def d_act(self, x):
+        raise NotImplementedError
+
+    def d2_act(self, x):
+        raise NotImplementedError
+
+    def init(self, key, in_shape):
+        return {}, in_shape
+
+    def forward(self, params, x):
+        return self.act(x)
+
+    def vjp_input(self, params, x, g):
+        return self.d_act(x) * g
+
+    def mat_vjp_input(self, params, x, s):
+        return self.d_act(x)[..., None] * s
+
+    def avg_mat_vjp_input(self, params, x, gbar):
+        # Ḡ' = 1/N Σ diag(m_n) Ḡ diag(m_n) = Ḡ ∘ (1/N Σ m_n m_nᵀ)
+        m = _flat2(self.d_act(x))
+        return gbar * (ops.matmul_tn(m, m) / m.shape[0])
+
+    def residual_diag(self, params, x, g):
+        """r = σ''(x) ⊙ δ_out (Appx A.3); None for piecewise-linear σ."""
+        d2 = self.d2_act(x)
+        return d2 * g
+
+
+class ReLU(Activation):
+    def act(self, x):
+        return jnp.maximum(x, 0.0)
+
+    def d_act(self, x):
+        return (x > 0).astype(x.dtype)
+
+    def d2_act(self, x):
+        return jnp.zeros_like(x)
+
+    def residual_diag(self, params, x, g):
+        return None  # piecewise linear: exactly zero a.e.
+
+
+class Sigmoid(Activation):
+    def act(self, x):
+        return jax.nn.sigmoid(x)
+
+    def d_act(self, x):
+        s = jax.nn.sigmoid(x)
+        return s * (1 - s)
+
+    def d2_act(self, x):
+        s = jax.nn.sigmoid(x)
+        return s * (1 - s) * (1 - 2 * s)
+
+
+class Tanh(Activation):
+    def act(self, x):
+        return jnp.tanh(x)
+
+    def d_act(self, x):
+        return 1 - jnp.tanh(x) ** 2
+
+    def d2_act(self, x):
+        t = jnp.tanh(x)
+        return -2 * t * (1 - t**2)
+
+
+# ---------------------------------------------------------------------------
+# Shape / pooling layers (parameter-free)
+# ---------------------------------------------------------------------------
+
+
+class Flatten(Module):
+    def init(self, key, in_shape):
+        self._in_shape = in_shape
+        return {}, (math.prod(in_shape),)
+
+    def forward(self, params, x):
+        return _flat2(x)
+
+    def vjp_input(self, params, x, g):
+        return g.reshape(x.shape)
+
+    def mat_vjp_input(self, params, x, s):
+        return s.reshape(x.shape + (s.shape[-1],))
+
+    def avg_mat_vjp_input(self, params, x, gbar):
+        return gbar
+
+    def residual_diag(self, params, x, g):
+        return None
+
+
+class MaxPool2d(Module):
+    def __init__(self, ksize, stride, padding="SAME"):
+        self.k, self.stride, self.padding = ksize, stride, padding
+
+    def init(self, key, in_shape):
+        out = jax.eval_shape(
+            lambda t: self.forward({}, t),
+            jax.ShapeDtypeStruct((1,) + tuple(in_shape), jnp.float32))
+        return {}, out.shape[1:]
+
+    def forward(self, params, x):
+        return lax.reduce_window(
+            x, -jnp.inf, lax.max,
+            (1, 1, self.k, self.k), (1, 1, self.stride, self.stride),
+            self.padding)
+
+    def vjp_input(self, params, x, g):
+        # Module-local Jacobian application: routes g to the argmax
+        # positions (the max-pool Jacobian is a 0/1 selection matrix).
+        _, vjp = jax.vjp(lambda t: self.forward({}, t), x)
+        return vjp(g)[0]
+
+    def residual_diag(self, params, x, g):
+        return None  # piecewise linear
+
+
+class GlobalAvgPool2d(Module):
+    """[N, C, H, W] -> [N, C] mean over spatial positions (All-CNN-C)."""
+
+    def init(self, key, in_shape):
+        c, h, w = in_shape
+        self._hw = h * w
+        return {}, (c,)
+
+    def forward(self, params, x):
+        return jnp.mean(x, axis=(2, 3))
+
+    def vjp_input(self, params, x, g):
+        n, c, h, w = x.shape
+        return jnp.broadcast_to(
+            g[:, :, None, None] / (h * w), x.shape)
+
+    def mat_vjp_input(self, params, x, s):
+        n, c, h, w = x.shape
+        return jnp.broadcast_to(
+            s[:, :, None, None, :] / (h * w), (n, c, h, w, s.shape[-1]))
+
+    def residual_diag(self, params, x, g):
+        return None

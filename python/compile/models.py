@@ -1,0 +1,178 @@
+"""Model zoo: the DeepOBS test problems of Table 3, exactly.
+
+Parameter counts are the paper's own checksums and are asserted by
+``python/tests/test_models.py``:
+
+========  ==================================  =============  ===========
+codename  description                         dataset        # params
+========  ==================================  =============  ===========
+logreg    linear model                        MNIST          7,850
+2c2d      2 conv + 2 dense                    Fashion-MNIST  3,274,634
+3c3d      3 conv + 3 dense                    CIFAR-10       895,210
+allcnnc   9 conv (Springenberg et al., 2015)  CIFAR-100      1,387,108
+========  ==================================  =============  ===========
+
+`3c3d_sigmoid` inserts a single sigmoid before the last classification
+layer -- the Fig. 9 configuration ("we modify the smaller network used in
+our benchmarks to include a single sigmoid activation function before the
+last classification layer").
+
+All-CNN-C is fully convolutional: its parameter count is invariant to the
+input's spatial size, which lets the CPU-scaled training runs use 16×16
+inputs (DESIGN.md §3) while keeping 1,387,108 parameters.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (Conv2d, Flatten, GlobalAvgPool2d, Linear, MaxPool2d,
+                     Module, ReLU, Sigmoid, Tanh)
+from .losses import CrossEntropyLoss, MSELoss
+
+
+class SequentialModel:
+    """A sequence of modules + a loss (the paper's Eq. 2 setting)."""
+
+    def __init__(self, name: str, layers: List[Module], loss,
+                 in_shape: Tuple[int, ...], num_classes: int):
+        self.name = name
+        self.layers = layers
+        self.loss = loss
+        self.in_shape = tuple(in_shape)
+        self.num_classes = num_classes
+
+    def init(self, key):
+        """Returns the list of per-layer param dicts (possibly empty)."""
+        params = []
+        shape = self.in_shape
+        for layer in self.layers:
+            key, sub = jax.random.split(key)
+            p, shape = layer.init(sub, shape)
+            params.append(p)
+        assert shape == (self.num_classes,), (self.name, shape)
+        return params
+
+    def forward(self, params, x):
+        for layer, p in zip(self.layers, params):
+            x = layer.forward(p, x)
+        return x
+
+    def num_params(self, params) -> int:
+        return sum(int(v.size) for p in params for v in p.values())
+
+    def param_layer_indices(self):
+        return [i for i, l in enumerate(self.layers) if l.has_params]
+
+
+def logreg(in_dim: int = 784, classes: int = 10) -> SequentialModel:
+    """Linear model on flattened MNIST (7,850 parameters)."""
+    return SequentialModel(
+        "logreg", [Linear(in_dim, classes)], CrossEntropyLoss(),
+        (in_dim,), classes)
+
+
+def two_c2d(side: int = 28, classes: int = 10) -> SequentialModel:
+    """DeepOBS fmnist_2c2d (3,274,634 parameters)."""
+    flat = (side // 4) ** 2 * 64
+    return SequentialModel(
+        "2c2d",
+        [
+            Conv2d(1, 32, 5, padding="SAME"), ReLU(),
+            MaxPool2d(2, 2, "VALID"),
+            Conv2d(32, 64, 5, padding="SAME"), ReLU(),
+            MaxPool2d(2, 2, "VALID"),
+            Flatten(),
+            Linear(flat, 1024), ReLU(),
+            Linear(1024, classes),
+        ],
+        CrossEntropyLoss(), (1, side, side), classes)
+
+
+def _three_c3d_layers(last_act: Module):
+    return [
+        Conv2d(3, 64, 5, padding="VALID"), ReLU(),
+        MaxPool2d(3, 2, "SAME"),
+        Conv2d(64, 96, 3, padding="VALID"), ReLU(),
+        MaxPool2d(3, 2, "SAME"),
+        Conv2d(96, 128, 3, padding="SAME"), ReLU(),
+        MaxPool2d(3, 2, "SAME"),
+        Flatten(),
+        Linear(1152, 512), ReLU(),
+        Linear(512, 256), last_act,
+        Linear(256, 10),
+    ]
+
+
+def three_c3d() -> SequentialModel:
+    """DeepOBS cifar10_3c3d (895,210 parameters)."""
+    return SequentialModel(
+        "3c3d", _three_c3d_layers(ReLU()), CrossEntropyLoss(),
+        (3, 32, 32), 10)
+
+
+def three_c3d_sigmoid() -> SequentialModel:
+    """Fig. 9 variant: one sigmoid before the last classification layer."""
+    return SequentialModel(
+        "3c3d_sigmoid", _three_c3d_layers(Sigmoid()), CrossEntropyLoss(),
+        (3, 32, 32), 10)
+
+
+def allcnnc(side: int = 32, classes: int = 100) -> SequentialModel:
+    """All-CNN-C (Springenberg et al., 2015): 1,387,108 parameters,
+    independent of ``side`` (fully convolutional)."""
+    return SequentialModel(
+        "allcnnc",
+        [
+            Conv2d(3, 96, 3, padding="SAME"), ReLU(),
+            Conv2d(96, 96, 3, padding="SAME"), ReLU(),
+            Conv2d(96, 96, 3, stride=2, padding="SAME"), ReLU(),
+            Conv2d(96, 192, 3, padding="SAME"), ReLU(),
+            Conv2d(192, 192, 3, padding="SAME"), ReLU(),
+            Conv2d(192, 192, 3, stride=2, padding="SAME"), ReLU(),
+            Conv2d(192, 192, 3, padding="VALID"), ReLU(),
+            Conv2d(192, 192, 1, padding="VALID"), ReLU(),
+            Conv2d(192, classes, 1, padding="VALID"), ReLU(),
+            GlobalAvgPool2d(),
+        ],
+        CrossEntropyLoss(), (3, side, side), classes)
+
+
+def mlp_tanh(in_dim=16, hidden=(12, 8), classes=4) -> SequentialModel:
+    """Small tanh MLP used by tests (non-vanishing activation curvature
+    exercises the Hessian-diagonal residual path)."""
+    layers, d = [], in_dim
+    for h in hidden:
+        layers += [Linear(d, h), Tanh()]
+        d = h
+    layers += [Linear(d, classes)]
+    return SequentialModel("mlp_tanh", layers, CrossEntropyLoss(),
+                           (in_dim,), classes)
+
+
+def mlp_sigmoid(in_dim=10, hidden=(8,), classes=3) -> SequentialModel:
+    layers, d = [], in_dim
+    for h in hidden:
+        layers += [Linear(d, h), Sigmoid()]
+        d = h
+    layers += [Linear(d, classes)]
+    return SequentialModel("mlp_sigmoid", layers, CrossEntropyLoss(),
+                           (in_dim,), classes)
+
+
+MODELS = {
+    "logreg": logreg,
+    "2c2d": two_c2d,
+    "3c3d": three_c3d,
+    "3c3d_sigmoid": three_c3d_sigmoid,
+    "allcnnc": allcnnc,
+}
+
+#: Paper Table 3 parameter counts (the reproduction checksums).
+PAPER_PARAM_COUNTS = {
+    "logreg": 7_850,
+    "2c2d": 3_274_634,
+    "3c3d": 895_210,
+    "allcnnc": 1_387_108,
+}

@@ -1,0 +1,298 @@
+"""Extension engine vs autodiff oracles.
+
+The engine never uses jax.grad; these tests do, establishing that the
+generalized backward pass reproduces:
+
+* averaged gradient        == jax.grad of the mean loss
+* individual gradients     == jax.vmap(jax.grad) (Goodfellow 2015 oracle)
+* variance / 2nd moment / L2 == moments of the individual gradients
+* DiagGGN                  == explicit J^T H J diagonal via jax.vjp
+* Hessian diagonal         == jax.hessian of the loss (tanh/sigmoid MLPs)
+* KFLR on a single linear layer (N=1) == exact GGN block (A ⊗ B exact)
+* KFAC (MC)                ->  KFLR factors in expectation
+* KFRA on logreg           == averaged loss Hessian (Eq. 24b)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models
+from compile.extensions import extended_backward
+from compile.losses import CrossEntropyLoss
+
+
+def _data(model, n, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n,) + model.in_shape, jnp.float32)
+    y = jax.random.randint(ky, (n,), 0, model.num_classes)
+    return x, y
+
+
+def _tiny_conv_net():
+    from compile.layers import Conv2d, Flatten, Linear, MaxPool2d, ReLU
+    from compile.models import SequentialModel
+    return SequentialModel(
+        "tiny_conv",
+        [Conv2d(2, 3, 3, padding="SAME"), ReLU(),
+         MaxPool2d(2, 2, "VALID"),
+         Flatten(), Linear(3 * 3 * 3, 4)],
+        CrossEntropyLoss(), (2, 6, 6), 4)
+
+
+MODELS = {
+    "mlp_tanh": lambda: models.mlp_tanh(),
+    "tiny_conv": _tiny_conv_net,
+    "logreg": lambda: models.logreg(in_dim=12, classes=4),
+}
+
+
+def _loss_fn(model):
+    def f(params, x, y):
+        return model.loss.value(model.forward(params, x), y)
+    return f
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_grad_matches_jax_grad(name):
+    model = MODELS[name]()
+    params = model.init(jax.random.PRNGKey(1))
+    x, y = _data(model, 6)
+    out = extended_backward(model, params, x, y)
+    want = jax.grad(_loss_fn(model))(params, x, y)
+    for i in model.param_layer_indices():
+        for k in ("w", "b"):
+            np.testing.assert_allclose(
+                out[f"grad/{i}/{k}"], want[i][k], rtol=1e-4, atol=1e-5,
+                err_msg=f"{name} grad/{i}/{k}")
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_batch_grad_matches_vmap_grad(name):
+    model = MODELS[name]()
+    params = model.init(jax.random.PRNGKey(2))
+    n = 5
+    x, y = _data(model, n)
+    out = extended_backward(model, params, x, y, ["batch_grad"])
+
+    def single(params, xn, yn):
+        return model.loss.value(model.forward(params, xn[None]),
+                                yn[None])
+
+    want = jax.vmap(jax.grad(single), in_axes=(None, 0, 0))(params, x, y)
+    for i in model.param_layer_indices():
+        for k in ("w", "b"):
+            np.testing.assert_allclose(
+                out[f"batch_grad/{i}/{k}"], want[i][k] / n,
+                rtol=1e-4, atol=1e-5, err_msg=f"{name} {i}/{k}")
+
+
+def test_first_order_moments_consistent():
+    """variance/2nd-moment/L2 are exactly the moments of batch_grad."""
+    model = MODELS["tiny_conv"]()
+    params = model.init(jax.random.PRNGKey(3))
+    n = 7
+    x, y = _data(model, n)
+    out = extended_backward(
+        model, params, x, y,
+        ["batch_grad", "batch_l2", "sq_moment", "variance"])
+    for i in model.param_layer_indices():
+        for k in ("w", "b"):
+            ig = out[f"batch_grad/{i}/{k}"]          # (1/N) ∇ℓ_n
+            grad = out[f"grad/{i}/{k}"]
+            np.testing.assert_allclose(
+                out[f"batch_l2/{i}/{k}"],
+                jnp.sum(ig.reshape(n, -1) ** 2, axis=1),
+                rtol=1e-4, atol=1e-6)
+            sq = jnp.sum((ig * n) ** 2, axis=0) / n   # Table 1
+            np.testing.assert_allclose(out[f"sq_moment/{i}/{k}"], sq,
+                                       rtol=1e-4, atol=1e-6)
+            np.testing.assert_allclose(out[f"variance/{i}/{k}"],
+                                       sq - grad**2, rtol=1e-4, atol=1e-5)
+
+
+def _diag_ggn_oracle(model, params, x, y):
+    """Explicit GGN diagonal: 1/N Σ_n Σ_c [J^T S(:,c)]² via jax.vjp."""
+    logits = model.forward(params, x)
+    s = model.loss.sqrt_hessian(logits, y)  # [N, C, C]
+    n, c = s.shape[0], s.shape[2]
+    total = jax.tree.map(jnp.zeros_like, params)
+    for i in range(n):
+        _, vjp = jax.vjp(
+            lambda p: model.forward(p, x[i:i + 1])[0], params)
+        for j in range(c):
+            g = vjp(s[i, :, j])[0]
+            total = jax.tree.map(lambda t, v: t + v**2, total, g)
+    return jax.tree.map(lambda t: t / n, total)
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_diag_ggn_matches_explicit(name):
+    model = MODELS[name]()
+    params = model.init(jax.random.PRNGKey(4))
+    x, y = _data(model, 4)
+    out = extended_backward(model, params, x, y, ["diag_ggn"])
+    want = _diag_ggn_oracle(model, params, x, y)
+    for i in model.param_layer_indices():
+        for k in ("w", "b"):
+            np.testing.assert_allclose(
+                out[f"diag_ggn/{i}/{k}"], want[i][k],
+                rtol=1e-3, atol=1e-5, err_msg=f"{name} {i}/{k}")
+
+
+def test_sqrt_hessian_factorizes_loss_hessian():
+    """S Sᵀ == ∇²_f ℓ_n from jax.hessian, per sample."""
+    loss = CrossEntropyLoss()
+    logits = jax.random.normal(jax.random.PRNGKey(5), (3, 6))
+    y = jnp.array([0, 3, 5])
+    s = loss.sqrt_hessian(logits, y)
+    for i in range(3):
+        want = jax.hessian(
+            lambda f: loss.value(f[None], y[i:i + 1]))(logits[i])
+        np.testing.assert_allclose(s[i] @ s[i].T, want,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_mc_sqrt_hessian_unbiased():
+    loss = CrossEntropyLoss()
+    logits = jax.random.normal(jax.random.PRNGKey(6), (2, 4))
+    y = jnp.array([1, 2])
+    s = loss.sqrt_hessian_mc(logits, y, jax.random.PRNGKey(7),
+                             samples=4000)
+    approx = jnp.einsum("ncm,ndm->ncd", s, s)
+    exact = loss.sqrt_hessian(logits, y)
+    exact = jnp.einsum("ncm,ndm->ncd", exact, exact)
+    np.testing.assert_allclose(approx, exact, atol=0.03)
+
+
+@pytest.mark.parametrize("name", ["mlp_tanh", "mlp_sigmoid"])
+def test_diag_h_matches_jax_hessian(name):
+    """Exact Hessian diagonal with non-piecewise-linear activations
+    (the Appendix A.3 residual machinery) vs brute-force jax.hessian."""
+    model = (models.mlp_tanh(in_dim=6, hidden=(5, 4), classes=3)
+             if name == "mlp_tanh"
+             else models.mlp_sigmoid(in_dim=6, hidden=(5,), classes=3))
+    params = model.init(jax.random.PRNGKey(8))
+    x, y = _data(model, 3)
+    out = extended_backward(model, params, x, y, ["diag_h"])
+    hess = jax.hessian(_loss_fn(model))(params, x, y)
+    for i in model.param_layer_indices():
+        for k in ("w", "b"):
+            block = hess[i][k][i][k]
+            d = int(np.prod(params[i][k].shape))
+            want = jnp.diag(block.reshape(d, d)).reshape(
+                params[i][k].shape)
+            np.testing.assert_allclose(
+                out[f"diag_h/{i}/{k}"], want, rtol=1e-3, atol=1e-4,
+                err_msg=f"{name} {i}/{k}")
+
+
+def test_diag_h_equals_diag_ggn_for_relu_net():
+    """Piecewise-linear nets: Hessian diag == GGN diag (Appendix B)."""
+    model = MODELS["tiny_conv"]()
+    params = model.init(jax.random.PRNGKey(9))
+    x, y = _data(model, 4)
+    out = extended_backward(model, params, x, y, ["diag_ggn", "diag_h"])
+    for i in model.param_layer_indices():
+        for k in ("w", "b"):
+            np.testing.assert_allclose(
+                out[f"diag_h/{i}/{k}"], out[f"diag_ggn/{i}/{k}"],
+                rtol=1e-4, atol=1e-6)
+
+
+def test_kflr_exact_on_single_linear_layer_batch1():
+    """N=1, one linear layer: G = A ⊗ B exactly."""
+    model = models.logreg(in_dim=5, classes=3)
+    params = model.init(jax.random.PRNGKey(10))
+    x, y = _data(model, 1)
+    out = extended_backward(model, params, x, y, ["kflr", "diag_ggn"])
+    a, b = out["kflr/0/A"], out["kflr/0/B"]
+    # check the diagonal of A ⊗ B against DiagGGN (w block: [out, in])
+    want = out["diag_ggn/0/w"]
+    got = jnp.outer(jnp.diag(b), jnp.diag(a))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+    # bias block is the full GGN of the bias
+    np.testing.assert_allclose(jnp.diag(out["kflr/0/bias_ggn"]),
+                               out["diag_ggn/0/b"], rtol=1e-4, atol=1e-6)
+
+
+def test_kfac_converges_to_kflr_in_expectation():
+    model = models.logreg(in_dim=6, classes=4)
+    params = model.init(jax.random.PRNGKey(11))
+    x, y = _data(model, 4)
+    out = extended_backward(model, params, x, y, ["kfac", "kflr"],
+                            key=jax.random.PRNGKey(12), mc_samples=3000)
+    np.testing.assert_allclose(out["kfac/0/A"], out["kflr/0/A"],
+                               rtol=1e-5, atol=1e-6)  # A is MC-free
+    np.testing.assert_allclose(out["kfac/0/B"], out["kflr/0/B"],
+                               atol=0.02)
+
+
+def test_kfra_on_logreg_is_mean_loss_hessian():
+    model = models.logreg(in_dim=7, classes=5)
+    params = model.init(jax.random.PRNGKey(13))
+    x, y = _data(model, 6)
+    out = extended_backward(model, params, x, y, ["kfra"])
+    logits = model.forward(params, x)
+    want = model.loss.hessian_mean(logits, y)
+    np.testing.assert_allclose(out["kfra/0/B"], want, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_kfra_propagation_through_linear_mlp():
+    """For a deep LINEAR network the averaged propagation is exact:
+    B_KFRA at layer 0 == mean_n W₁ᵀ H_n W₁."""
+    from compile.layers import Linear
+    from compile.models import SequentialModel
+    model = SequentialModel(
+        "deep_linear", [Linear(5, 4), Linear(4, 3)],
+        CrossEntropyLoss(), (5,), 3)
+    params = model.init(jax.random.PRNGKey(14))
+    x, y = _data(model, 5)
+    out = extended_backward(model, params, x, y, ["kfra"])
+    logits = model.forward(params, x)
+    h = model.loss.hessian_mean(logits, y)
+    w1 = params[1]["w"]
+    np.testing.assert_allclose(out["kfra/0/B"], w1.T @ h @ w1,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_conv_kron_factors_shapes_and_psd():
+    model = MODELS["tiny_conv"]()
+    params = model.init(jax.random.PRNGKey(15))
+    x, y = _data(model, 4)
+    out = extended_backward(model, params, x, y, ["kfac"],
+                            key=jax.random.PRNGKey(16))
+    a, b = out["kfac/0/A"], out["kfac/0/B"]
+    assert a.shape == (2 * 9, 2 * 9) and b.shape == (3, 3)
+    for m in (a, b):
+        eig = np.linalg.eigvalsh(np.asarray(m))
+        assert eig.min() > -1e-5, "Kronecker factor must be PSD"
+
+
+def test_diag_ggn_mc_close_with_many_samples():
+    model = models.logreg(in_dim=6, classes=3)
+    params = model.init(jax.random.PRNGKey(17))
+    x, y = _data(model, 4)
+    out = extended_backward(
+        model, params, x, y, ["diag_ggn", "diag_ggn_mc"],
+        key=jax.random.PRNGKey(18), mc_samples=4000)
+    np.testing.assert_allclose(out["diag_ggn_mc/0/w"],
+                               out["diag_ggn/0/w"], atol=0.02)
+
+
+def test_mc_extension_without_key_raises():
+    model = models.logreg(in_dim=4, classes=3)
+    params = model.init(jax.random.PRNGKey(19))
+    x, y = _data(model, 2)
+    with pytest.raises(ValueError, match="PRNG key"):
+        extended_backward(model, params, x, y, ["kfac"])
+
+
+def test_unknown_extension_raises():
+    model = models.logreg(in_dim=4, classes=3)
+    params = model.init(jax.random.PRNGKey(20))
+    x, y = _data(model, 2)
+    with pytest.raises(ValueError, match="unknown"):
+        extended_backward(model, params, x, y, ["bogus"])

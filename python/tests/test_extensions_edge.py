@@ -1,0 +1,134 @@
+"""Edge cases and failure-injection for the extension engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models
+from compile.extensions import extended_backward
+from compile.layers import Conv2d, Flatten, GlobalAvgPool2d, Linear, ReLU
+from compile.losses import CrossEntropyLoss
+from compile.models import SequentialModel
+
+
+def _data(model, n, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n,) + model.in_shape, jnp.float32)
+    y = jax.random.randint(ky, (n,), 0, model.num_classes)
+    return x, y
+
+
+def test_no_extensions_yields_only_loss_and_grads():
+    model = models.logreg(in_dim=6, classes=3)
+    params = model.init(jax.random.PRNGKey(0))
+    x, y = _data(model, 4)
+    out = extended_backward(model, params, x, y)
+    assert sorted(out) == ["grad/0/b", "grad/0/w", "loss"]
+
+
+def test_batch_size_one():
+    """N=1: variance must be exactly zero (single sample = its mean)."""
+    model = models.logreg(in_dim=5, classes=3)
+    params = model.init(jax.random.PRNGKey(1))
+    x, y = _data(model, 1)
+    out = extended_backward(model, params, x, y, ["variance"])
+    np.testing.assert_allclose(out["variance/0/w"], 0.0, atol=1e-7)
+
+
+def test_strided_conv_net_extensions():
+    """Stride-2 convs (the All-CNN-C pattern) through the whole stack."""
+    model = SequentialModel(
+        "strided",
+        [Conv2d(2, 4, 3, stride=2, padding="SAME"), ReLU(),
+         Conv2d(4, 3, 1, padding="VALID"), ReLU(),
+         GlobalAvgPool2d()],
+        CrossEntropyLoss(), (2, 8, 8), 3)
+    params = model.init(jax.random.PRNGKey(2))
+    x, y = _data(model, 3)
+    out = extended_backward(
+        model, params, x, y, ["batch_grad", "diag_ggn"])
+
+    def single(params, xn, yn):
+        return model.loss.value(model.forward(params, xn[None]),
+                                yn[None])
+
+    want = jax.vmap(jax.grad(single), in_axes=(None, 0, 0))(params, x, y)
+    for i in model.param_layer_indices():
+        np.testing.assert_allclose(
+            out[f"batch_grad/{i}/w"], want[i]["w"] / 3,
+            rtol=1e-4, atol=1e-5)
+    # GGN diag of a ReLU net is also the Hessian diag: must be >= 0.
+    for i in model.param_layer_indices():
+        assert float(out[f"diag_ggn/{i}/w"].min()) >= -1e-7
+
+
+def test_global_avg_pool_ggn_vs_oracle():
+    model = SequentialModel(
+        "gap", [Conv2d(1, 3, 3, padding="SAME"), GlobalAvgPool2d()],
+        CrossEntropyLoss(), (1, 5, 5), 3)
+    params = model.init(jax.random.PRNGKey(3))
+    x, y = _data(model, 2)
+    out = extended_backward(model, params, x, y, ["diag_ggn"])
+    logits = model.forward(params, x)
+    s = model.loss.sqrt_hessian(logits, y)
+    total = jax.tree.map(jnp.zeros_like, params)
+    for i in range(2):
+        _, vjp = jax.vjp(lambda p: model.forward(p, x[i:i + 1])[0],
+                         params)
+        for c in range(3):
+            g = vjp(s[i, :, c])[0]
+            total = jax.tree.map(lambda t, v: t + v**2, total, g)
+    np.testing.assert_allclose(
+        out["diag_ggn/0/w"], total[0]["w"] / 2, rtol=1e-3, atol=1e-6)
+
+
+def test_kfra_raises_on_conv_models():
+    """Paper footnote 5: KFRA's averaged backward does not extend to
+    large convolutions; the engine refuses rather than silently
+    approximating."""
+    model = SequentialModel(
+        "conv", [Conv2d(1, 2, 3, padding="SAME"), Flatten(),
+                 Linear(2 * 4 * 4, 3)],
+        CrossEntropyLoss(), (1, 4, 4), 3)
+    params = model.init(jax.random.PRNGKey(4))
+    x, y = _data(model, 2)
+    with pytest.raises(NotImplementedError, match="footnote 5"):
+        extended_backward(model, params, x, y, ["kfra"])
+
+
+def test_multiple_extensions_in_one_pass_are_consistent():
+    """Requesting everything at once must match separate passes."""
+    model = models.mlp_tanh(in_dim=8, hidden=(6,), classes=4)
+    params = model.init(jax.random.PRNGKey(5))
+    x, y = _data(model, 5)
+    key = jax.random.PRNGKey(6)
+    combined = extended_backward(
+        model, params, x, y,
+        ["batch_grad", "variance", "diag_ggn", "diag_h", "kflr"],
+        key=key)
+    for ext in ["batch_grad", "variance", "diag_ggn", "diag_h", "kflr"]:
+        alone = extended_backward(model, params, x, y, [ext], key=key)
+        for k, v in alone.items():
+            np.testing.assert_allclose(
+                combined[k], v, rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+def test_mc_samples_parameter_shapes():
+    model = models.logreg(in_dim=5, classes=3)
+    params = model.init(jax.random.PRNGKey(7))
+    x, y = _data(model, 4)
+    out = extended_backward(model, params, x, y, ["diag_ggn_mc"],
+                            key=jax.random.PRNGKey(8), mc_samples=7)
+    assert out["diag_ggn_mc/0/w"].shape == (3, 5)
+
+
+def test_extension_outputs_all_finite():
+    model = models.two_c2d(side=12, classes=4)  # small variant
+    params = model.init(jax.random.PRNGKey(9))
+    x, y = _data(model, 2)
+    out = extended_backward(
+        model, params, x, y,
+        ["batch_l2", "sq_moment", "variance", "diag_ggn"])
+    for k, v in out.items():
+        assert bool(jnp.all(jnp.isfinite(v))), k

@@ -1,0 +1,148 @@
+"""Per-module Jacobian applications vs jax.vjp (the AD oracle).
+
+Each module claims to know how to multiply with its (transposed)
+Jacobians (Sec. 2.1); here jax's AD verifies every claim, per layer type,
+including the matrix-shaped propagation used by second-order extensions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+
+
+def _vjp_oracle(fwd, x, g):
+    _, vjp = jax.vjp(fwd, x)
+    return vjp(g)[0]
+
+
+def _check_vjp(layer, params, x, atol=1e-5):
+    rng = np.random.default_rng(0)
+    out = layer.forward(params, x)
+    g = jnp.asarray(rng.standard_normal(out.shape), jnp.float32)
+    got = layer.vjp_input(params, x, g)
+    want = _vjp_oracle(lambda t: layer.forward(params, t), x, g)
+    np.testing.assert_allclose(got, want, atol=atol, rtol=1e-4)
+    # matrix propagation == columnwise vjp
+    c = 3
+    s = jnp.asarray(rng.standard_normal(out.shape + (c,)), jnp.float32)
+    got_m = layer.mat_vjp_input(params, x, s)
+    for j in range(c):
+        np.testing.assert_allclose(
+            got_m[..., j],
+            _vjp_oracle(lambda t: layer.forward(params, t), x, s[..., j]),
+            atol=atol, rtol=1e-4)
+
+
+def _check_param_grad(layer, params, x):
+    """batch_grad summed over N must equal jax.grad of sum-loss."""
+    rng = np.random.default_rng(1)
+    out = layer.forward(params, x)
+    g = jnp.asarray(rng.standard_normal(out.shape), jnp.float32)
+
+    def scalar(p):
+        return jnp.sum(layer.forward(p, x) * g)
+
+    want = jax.grad(scalar)(params)
+    got = layer.batch_grad(params, x, g)
+    for k in params:
+        np.testing.assert_allclose(
+            jnp.sum(got[k], axis=0), want[k], atol=1e-4, rtol=1e-4)
+    # per-sample grads: sample n of batch_grad == grad on the 1-batch
+    for n in (0, x.shape[0] - 1):
+        def scalar_n(p):
+            return jnp.sum(layer.forward(p, x[n:n + 1]) * g[n:n + 1])
+        want_n = jax.grad(scalar_n)(params)
+        for k in params:
+            np.testing.assert_allclose(
+                got[k][n], want_n[k], atol=1e-4, rtol=1e-4)
+
+
+def _mk(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_linear():
+    layer = L.Linear(7, 5)
+    params, out_shape = layer.init(jax.random.PRNGKey(0), (7,))
+    assert out_shape == (5,)
+    x = _mk(1, 4, 7)
+    _check_vjp(layer, params, x)
+    _check_param_grad(layer, params, x)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (1, "VALID"),
+                                            (2, "SAME")])
+def test_conv2d(stride, padding):
+    layer = L.Conv2d(3, 4, 3, stride=stride, padding=padding)
+    params, out_shape = layer.init(jax.random.PRNGKey(0), (3, 8, 8))
+    x = _mk(2, 2, 3, 8, 8)
+    assert layer.forward(params, x).shape == (2, 4) + out_shape[1:]
+    _check_vjp(layer, params, x)
+    _check_param_grad(layer, params, x)
+
+
+@pytest.mark.parametrize("act", [L.ReLU(), L.Sigmoid(), L.Tanh()])
+def test_activations(act):
+    params, _ = act.init(jax.random.PRNGKey(0), (6,))
+    x = _mk(3, 5, 6)
+    _check_vjp(act, params, x)
+
+
+@pytest.mark.parametrize("act", [L.Sigmoid(), L.Tanh()])
+def test_activation_second_derivative(act):
+    """σ'' via finite differences of σ'."""
+    x = jnp.linspace(-3, 3, 41)
+    eps = 1e-3
+    fd = (act.d_act(x + eps) - act.d_act(x - eps)) / (2 * eps)
+    np.testing.assert_allclose(act.d2_act(x), fd, atol=1e-3)  # f32 FD noise
+
+
+def test_maxpool():
+    layer = L.MaxPool2d(3, 2, "SAME")
+    params, out_shape = layer.init(jax.random.PRNGKey(0), (2, 9, 9))
+    x = _mk(4, 3, 2, 9, 9)
+    assert layer.forward(params, x).shape == (3,) + tuple(out_shape)
+    _check_vjp(layer, params, x)
+
+
+def test_flatten():
+    layer = L.Flatten()
+    params, out_shape = layer.init(jax.random.PRNGKey(0), (2, 3, 4))
+    assert out_shape == (24,)
+    x = _mk(5, 3, 2, 3, 4)
+    _check_vjp(layer, params, x)
+
+
+def test_global_avg_pool():
+    layer = L.GlobalAvgPool2d()
+    params, out_shape = layer.init(jax.random.PRNGKey(0), (5, 4, 4))
+    assert out_shape == (5,)
+    x = _mk(6, 3, 5, 4, 4)
+    _check_vjp(layer, params, x)
+
+
+def test_linear_batch_l2_and_sq_moment_vs_batch_grad():
+    layer = L.Linear(6, 4)
+    params, _ = layer.init(jax.random.PRNGKey(0), (6,))
+    x, g = _mk(7, 5, 6), _mk(8, 5, 4)
+    bg = layer.batch_grad(params, x, g)
+    l2 = layer.batch_l2(params, x, g)
+    sq = layer.sq_moment(params, x, g)
+    for k in ("w", "b"):
+        flat = bg[k].reshape(5, -1)
+        np.testing.assert_allclose(l2[k], jnp.sum(flat**2, 1),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(sq[k], jnp.sum(bg[k] ** 2, 0),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_conv_batch_grad_bias_is_spatial_sum():
+    layer = L.Conv2d(2, 3, 3)
+    params, _ = layer.init(jax.random.PRNGKey(0), (2, 6, 6))
+    x, g = _mk(9, 4, 2, 6, 6), _mk(10, 4, 3, 6, 6)
+    bg = layer.batch_grad(params, x, g)
+    np.testing.assert_allclose(bg["b"], jnp.sum(g, axis=(2, 3)),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,104 @@
+"""Loss-function derivative interfaces vs autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.losses import CrossEntropyLoss, MSELoss
+
+
+def test_ce_value_and_grad_match_jax():
+    loss = CrossEntropyLoss()
+    logits = jax.random.normal(jax.random.PRNGKey(0), (5, 7))
+    y = jnp.array([0, 1, 2, 3, 6])
+    got = loss.grad(logits, y)
+    # grad of the PER-SAMPLE loss (no 1/N)
+    for i in range(5):
+        want = jax.grad(
+            lambda f: loss.value(f[None], y[i:i + 1]))(logits[i])
+        np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-6)
+
+
+def test_ce_per_sample_mean_is_value():
+    loss = CrossEntropyLoss()
+    logits = jax.random.normal(jax.random.PRNGKey(1), (6, 4))
+    y = jnp.array([0, 1, 2, 3, 0, 1])
+    np.testing.assert_allclose(
+        jnp.mean(loss.per_sample(logits, y)), loss.value(logits, y),
+        rtol=1e-6)
+
+
+def test_ce_hessian_mean_matches_average_of_hessians():
+    loss = CrossEntropyLoss()
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 5))
+    y = jnp.array([0, 1, 2, 3])
+    want = jnp.mean(
+        jnp.stack([
+            jax.hessian(lambda f: loss.value(f[None], y[i:i + 1]))(
+                logits[i])
+            for i in range(4)
+        ]),
+        axis=0,
+    )
+    np.testing.assert_allclose(loss.hessian_mean(logits, y), want,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_ce_accuracy():
+    loss = CrossEntropyLoss()
+    logits = jnp.array([[2.0, 0.0], [0.0, 2.0], [2.0, 0.0]])
+    y = jnp.array([0, 1, 1])
+    assert float(loss.accuracy(logits, y)) == pytest.approx(2 / 3)
+
+
+def test_mse_sqrt_hessian_factorizes():
+    loss = MSELoss()
+    logits = jax.random.normal(jax.random.PRNGKey(3), (3, 4))
+    y = jax.random.normal(jax.random.PRNGKey(4), (3, 4))
+    s = loss.sqrt_hessian(logits, y)
+    for i in range(3):
+        want = jax.hessian(
+            lambda f: loss.value(f[None], y[i:i + 1]))(logits[i])
+        np.testing.assert_allclose(s[i] @ s[i].T, want, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_mse_grad_matches_jax():
+    loss = MSELoss()
+    logits = jax.random.normal(jax.random.PRNGKey(5), (4, 3))
+    y = jax.random.normal(jax.random.PRNGKey(6), (4, 3))
+    got = loss.grad(logits, y)
+    for i in range(4):
+        want = jax.grad(
+            lambda f: loss.value(f[None], y[i:i + 1]))(logits[i])
+        np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-6)
+
+
+def test_mse_mc_sqrt_hessian_unbiased():
+    loss = MSELoss()
+    logits = jnp.zeros((2, 3))
+    y = jnp.zeros((2, 3))
+    s = loss.sqrt_hessian_mc(logits, y, jax.random.PRNGKey(7),
+                             samples=4000)
+    approx = jnp.einsum("ncm,ndm->ncd", s, s)
+    want = 2.0 * jnp.broadcast_to(jnp.eye(3), (2, 3, 3))
+    np.testing.assert_allclose(approx, want, atol=0.15)
+
+
+def test_ce_mc_multi_sample_reduces_variance():
+    loss = CrossEntropyLoss()
+    logits = jax.random.normal(jax.random.PRNGKey(8), (4, 6))
+    y = jnp.array([0, 1, 2, 3])
+    exact = loss.sqrt_hessian(logits, y)
+    exact = jnp.einsum("ncm,ndm->ncd", exact, exact)
+
+    def mc_err(samples, key):
+        s = loss.sqrt_hessian_mc(logits, y, key, samples=samples)
+        approx = jnp.einsum("ncm,ndm->ncd", s, s)
+        return float(jnp.mean((approx - exact) ** 2))
+
+    keys = [jax.random.PRNGKey(k) for k in range(10, 20)]
+    err1 = np.mean([mc_err(1, k) for k in keys])
+    err32 = np.mean([mc_err(32, k) for k in keys])
+    assert err32 < err1 / 4, (err1, err32)

@@ -1,0 +1,56 @@
+"""Model zoo checks: Table 3 parameter counts are the paper's checksums."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models
+
+
+@pytest.mark.parametrize("name,count", sorted(
+    models.PAPER_PARAM_COUNTS.items()))
+def test_param_counts_match_paper_table3(name, count):
+    model = models.MODELS[name]()
+    params = model.init(jax.random.PRNGKey(0))
+    assert model.num_params(params) == count
+
+
+def test_allcnnc_param_count_invariant_to_spatial_size():
+    """Fully convolutional => the 16x16 CPU-scaled training variant keeps
+    the paper's parameter count (DESIGN.md §3)."""
+    for side in (16, 32):
+        model = models.allcnnc(side=side)
+        params = model.init(jax.random.PRNGKey(0))
+        assert model.num_params(params) == 1_387_108
+
+
+def test_sigmoid_variant_same_count_as_3c3d():
+    m = models.three_c3d_sigmoid()
+    p = m.init(jax.random.PRNGKey(0))
+    assert m.num_params(p) == 895_210
+
+
+@pytest.mark.parametrize("name", ["logreg", "2c2d", "3c3d"])
+def test_forward_shapes(name):
+    model = models.MODELS[name]()
+    params = model.init(jax.random.PRNGKey(1))
+    n = 4
+    x = jnp.zeros((n,) + model.in_shape, jnp.float32)
+    logits = model.forward(params, x)
+    assert logits.shape == (n, model.num_classes)
+
+
+def test_allcnnc_forward_16():
+    model = models.allcnnc(side=16)
+    params = model.init(jax.random.PRNGKey(1))
+    x = jnp.zeros((2, 3, 16, 16), jnp.float32)
+    assert model.forward(params, x).shape == (2, 100)
+
+
+def test_forward_finite_on_random_input():
+    model = models.three_c3d()
+    params = model.init(jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 32, 32))
+    out = model.forward(params, x)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,89 @@
+//! Ablation bench (DESIGN.md §7): cost of the Kronecker-factor
+//! inversion (paper Eq. 28) in the Rust coordinator, and the effect of
+//! amortizing it over `inv_every` steps.
+//!
+//! Measures (a) raw Cholesky + solve cost at the paper networks' factor
+//! sizes, (b) end-to-end KFAC step time on mnist_logreg at
+//! inv_every ∈ {1, 5, 20}.
+//!
+//! Run: `cargo bench --bench ablation_kron_inverse`
+
+use std::time::Duration;
+
+use backpack_rs::bench::bench;
+use backpack_rs::coordinator::{problems, train, TrainConfig};
+use backpack_rs::data::Rng;
+use backpack_rs::linalg::{Cholesky, SymMat};
+use backpack_rs::optim::Hyper;
+use backpack_rs::runtime::Runtime;
+
+fn random_spd(n: usize, seed: u64) -> SymMat {
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0.0f32; n * n];
+    // diagonally dominant: SPD without forming G Gᵀ (cheap to build)
+    for i in 0..n {
+        for j in 0..i {
+            let v = rng.normal() * 0.01;
+            a[i * n + j] = v;
+            a[j * n + i] = v;
+        }
+        a[i * n + i] = 1.0 + rng.uniform();
+    }
+    SymMat::new(n, a)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== ablation: Kronecker inversion cost (Eq. 28) ==");
+    // Factor sizes of the paper's networks: logreg A=784, 3c3d fc1
+    // A=1152, All-CNN-C largest A=1728.
+    for n in [784usize, 1152, 1728] {
+        let m = random_spd(n, n as u64);
+        bench(
+            &format!("cholesky factor {n}x{n}"),
+            1,
+            10,
+            Duration::from_secs(20),
+            || {
+                let _ = Cholesky::factor(&m).unwrap();
+            },
+        );
+        let ch = Cholesky::factor(&m)?;
+        let mut rhs = vec![0.5f32; n * 64];
+        bench(
+            &format!("solve [{n}x{n}] x 64 rhs"),
+            1,
+            10,
+            Duration::from_secs(10),
+            || {
+                ch.solve_mat_left(&mut rhs, 64);
+            },
+        );
+    }
+
+    println!("\n== ablation: KFAC step time vs inv_every (logreg) ==");
+    let rt = Runtime::open_default()?;
+    let problem = problems::by_name("mnist_logreg")?;
+    for inv_every in [1usize, 5, 20] {
+        let cfg = TrainConfig {
+            problem: problem.codename.into(),
+            optimizer: "kfac".into(),
+            hyper: Hyper { lr: 0.01, damping: 0.01, l2: 0.0 },
+            steps: 40,
+            seed: 0,
+            eval_every: 1000,
+            inv_every,
+            log_every: 40,
+            verbose: false,
+        };
+        let start = std::time::Instant::now();
+        let log = train::train(&rt, problem, &cfg)?;
+        println!(
+            "inv_every={inv_every:2}  total {:6.2}s  \
+             ({:.1}ms/step exec)  final loss {:.4}",
+            start.elapsed().as_secs_f64(),
+            log.step_time_s * 1e3,
+            log.final_train_loss()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Bench: paper Fig. 3 -- individual-gradient computation, for-loop vs
+//! vectorized (BackPACK) vs plain gradient, 3c3d on CIFAR-10 shapes.
+//! Run: `cargo bench --bench fig3_individual_gradients`
+use backpack_rs::figures::timing;
+use backpack_rs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    let iters = std::env::var("BENCH_ITERS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    timing::fig3(&rt, iters, std::path::Path::new("results"))
+}

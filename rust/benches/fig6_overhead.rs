@@ -1,0 +1,12 @@
+//! Bench: paper Fig. 6 -- per-extension overhead vs the gradient on
+//! 3c3d/CIFAR-10 (N=64) and All-CNN-C/CIFAR-100 (N=16, 32x32).
+//! Run: `cargo bench --bench fig6_overhead`
+use backpack_rs::figures::timing;
+use backpack_rs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    let iters = std::env::var("BENCH_ITERS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    timing::fig6(&rt, iters, std::path::Path::new("results"))
+}

@@ -1,0 +1,12 @@
+//! Bench: paper Fig. 8 -- KFLR/DiagGGN (exact C=100 propagation) vs
+//! KFAC/DiagGGN-MC (rank-1 MC) on All-CNN-C; expect ~two orders of
+//! magnitude. Run: `cargo bench --bench fig8_large_output`
+use backpack_rs::figures::timing;
+use backpack_rs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    let iters = std::env::var("BENCH_ITERS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    timing::fig8(&rt, iters, std::path::Path::new("results"))
+}

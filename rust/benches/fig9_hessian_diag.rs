@@ -1,0 +1,12 @@
+//! Bench: paper Fig. 9 -- exact Hessian diagonal vs GGN diagonal when
+//! the network contains a single sigmoid (residual-factor propagation,
+//! Appendix A.3). Run: `cargo bench --bench fig9_hessian_diag`
+use backpack_rs::figures::timing;
+use backpack_rs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    let iters = std::env::var("BENCH_ITERS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    timing::fig9(&rt, iters, std::path::Path::new("results"))
+}

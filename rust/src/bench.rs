@@ -1,0 +1,133 @@
+//! Micro-benchmark harness (substrate; criterion is unavailable
+//! offline). Warmup + fixed-count sampling, robust summary statistics,
+//! criterion-like console output, and CSV export for the figure
+//! regenerators.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over the sampled iteration times.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut s: Vec<f64>) -> Stats {
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len() as f64;
+        let mean = s.iter().sum::<f64>() / n;
+        let var =
+            s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let pct = |q: f64| -> f64 {
+            let pos = q * (s.len() - 1) as f64;
+            let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+            if lo == hi {
+                s[lo]
+            } else {
+                s[lo] * (hi as f64 - pos) + s[hi] * (pos - lo as f64)
+            }
+        };
+        Stats {
+            name: name.to_string(),
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p50: pct(0.5),
+            p95: pct(0.95),
+            samples: s,
+        }
+    }
+
+    pub fn print_line(&self) {
+        println!(
+            "{:42} mean {:>10}  p50 {:>10}  p95 {:>10}  (±{:>8}, n={})",
+            self.name,
+            fmt_time(self.mean),
+            fmt_time(self.p50),
+            fmt_time(self.p95),
+            fmt_time(self.std),
+            self.samples.len()
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then up to `iters`
+/// measured runs, but stop early once `budget` wall-clock is spent
+/// (long-running artifacts get fewer samples, never zero).
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    budget: Duration,
+    mut f: F,
+) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if start.elapsed() > budget && !samples.is_empty() {
+            break;
+        }
+    }
+    let s = Stats::from_samples(name, samples);
+    s.print_line();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_summary() {
+        let s = Stats::from_samples(
+            "t",
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        );
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_and_respects_budget() {
+        let mut count = 0;
+        let s = bench("noop", 1, 1000, Duration::from_millis(20), || {
+            count += 1;
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(!s.samples.is_empty());
+        assert!(count < 1000, "budget should stop early");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-5).ends_with("µs"));
+        assert!(fmt_time(2e-2).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

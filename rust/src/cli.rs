@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (substrate; clap is unavailable offline).
+//!
+//! Grammar: `binary SUBCOMMAND [--flag value] [--switch] [positional]`.
+//! Values may also be attached as `--flag=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Flags that never take a value (needed to disambiguate
+/// `--verbose positional` without clap-style per-command schemas).
+const BOOL_SWITCHES: &[&str] = &["verbose", "help", "force", "quiet"];
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = iter.next().unwrap();
+            }
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if BOOL_SWITCHES.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: bad float {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: bad int {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: bad int {v:?}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+            || self.flags.contains_key(name)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.flag(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse(
+            "train --problem mnist_logreg --lr 0.01 --verbose pos1",
+        );
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.flag("problem"), Some("mnist_logreg"));
+        assert_eq!(a.get_f32("lr", 0.0).unwrap(), 0.01);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("x --steps=40");
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 40);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --lr abc");
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 7);
+        assert!(a.get_f32("lr", 0.0).is_err());
+        assert!(a.require("missing").is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! DeepOBS tuning protocol (paper Appendix C.1/C.2):
+//!
+//! 1. grid-search (α, λ) with a single seed,
+//! 2. select the run with the best final validation accuracy,
+//! 3. rerun the winner with several seeds,
+//! 4. report median + quartiles.
+//!
+//! The grid is Appendix C.2's; `GridPreset::Small` trims it for the
+//! single-core budget (DESIGN.md §3).
+
+use anyhow::Result;
+
+use super::problems::Problem;
+use super::train::{train, TrainConfig};
+use crate::coordinator::metrics::RunLog;
+use crate::optim::Hyper;
+use crate::runtime::Runtime;
+
+/// Appendix C.2 grids.
+pub const PAPER_ALPHAS: &[f32] = &[1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+pub const PAPER_LAMBDAS: &[f32] = &[1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0];
+
+/// Trimmed grids for expensive problems.
+pub const SMALL_ALPHAS: &[f32] = &[1e-3, 1e-2, 1e-1];
+pub const SMALL_LAMBDAS: &[f32] = &[1e-3, 1e-2, 1e-1];
+
+/// Minimal grids for the CPU-heaviest problems (conv nets, 1 core).
+pub const TINY_ALPHAS: &[f32] = &[1e-2, 1e-1];
+pub const TINY_LAMBDAS: &[f32] = &[1e-2, 1e-1];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridPreset {
+    Paper,
+    Small,
+    Tiny,
+}
+
+impl GridPreset {
+    pub fn alphas(&self) -> &'static [f32] {
+        match self {
+            GridPreset::Paper => PAPER_ALPHAS,
+            GridPreset::Small => SMALL_ALPHAS,
+            GridPreset::Tiny => TINY_ALPHAS,
+        }
+    }
+
+    pub fn lambdas(&self, uses_damping: bool) -> Vec<f32> {
+        if !uses_damping {
+            return vec![0.0]; // baselines: only α is tuned
+        }
+        match self {
+            GridPreset::Paper => PAPER_LAMBDAS.to_vec(),
+            GridPreset::Small => SMALL_LAMBDAS.to_vec(),
+            GridPreset::Tiny => TINY_LAMBDAS.to_vec(),
+        }
+    }
+}
+
+/// One grid point's outcome.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub lr: f32,
+    pub damping: f32,
+    pub final_accuracy: f32,
+    pub final_train_loss: f32,
+    pub diverged: bool,
+}
+
+/// Grid-search result: all points + the winner + its interior flag
+/// (paper Table 4 marks whether the best setting is an interior point).
+#[derive(Debug, Clone)]
+pub struct GridResult {
+    pub optimizer: String,
+    pub points: Vec<GridPoint>,
+    pub best: GridPoint,
+    pub interior: bool,
+    /// Seed reruns of the winner.
+    pub reruns: Vec<RunLog>,
+}
+
+fn uses_damping(optimizer: &str) -> bool {
+    !matches!(optimizer, "sgd" | "momentum" | "adam")
+}
+
+/// Run the full protocol for one (problem, optimizer).
+#[allow(clippy::too_many_arguments)]
+pub fn run_protocol(
+    rt: &Runtime,
+    problem: &Problem,
+    optimizer: &str,
+    preset: GridPreset,
+    search_steps: usize,
+    final_steps: usize,
+    seeds: usize,
+    inv_every: usize,
+    verbose: bool,
+) -> Result<GridResult> {
+    let damped = uses_damping(optimizer);
+    let mut points = Vec::new();
+    for &lr in preset.alphas() {
+        for &damping in &preset.lambdas(damped) {
+            let cfg = TrainConfig {
+                problem: problem.codename.into(),
+                optimizer: optimizer.into(),
+                hyper: Hyper { lr, damping, l2: 0.0 },
+                steps: search_steps,
+                seed: 0,
+                eval_every: search_steps.max(1),
+                log_every: (search_steps / 4).max(1),
+                inv_every,
+                ..Default::default()
+            };
+            // An optimizer failure at one grid point (e.g. a curvature
+            // factor collapsing under an unstable (α, λ)) counts as a
+            // diverged run, not a failed figure.
+            let pt = match train(rt, problem, &cfg) {
+                Ok(log) => GridPoint {
+                    lr,
+                    damping,
+                    final_accuracy: if log.diverged {
+                        0.0
+                    } else {
+                        log.final_accuracy()
+                    },
+                    final_train_loss: log.final_train_loss(),
+                    diverged: log.diverged,
+                },
+                Err(e) => {
+                    if verbose {
+                        eprintln!("  grid {optimizer} lr={lr:.0e} \
+                                   λ={damping:.0e} failed: {e}");
+                    }
+                    GridPoint {
+                        lr,
+                        damping,
+                        final_accuracy: 0.0,
+                        final_train_loss: f32::NAN,
+                        diverged: true,
+                    }
+                }
+            };
+            if verbose {
+                eprintln!(
+                    "  grid {optimizer} lr={lr:.0e} λ={damping:.0e} \
+                     acc={:.3}{}",
+                    pt.final_accuracy,
+                    if pt.diverged { " (diverged)" } else { "" }
+                );
+            }
+            points.push(pt);
+        }
+    }
+    let best = points
+        .iter()
+        .cloned()
+        .max_by(|a, b| {
+            a.final_accuracy.partial_cmp(&b.final_accuracy).unwrap()
+        })
+        .expect("non-empty grid");
+    let alphas = preset.alphas();
+    let lambdas = preset.lambdas(damped);
+    let interior = interior_point(&best, alphas, &lambdas, damped);
+
+    let mut reruns = Vec::new();
+    for seed in 0..seeds as u64 {
+        let cfg = TrainConfig {
+            problem: problem.codename.into(),
+            optimizer: optimizer.into(),
+            hyper: Hyper { lr: best.lr, damping: best.damping, l2: 0.0 },
+            steps: final_steps,
+            seed,
+            eval_every: (final_steps / 8).max(1),
+            log_every: (final_steps / 40).max(1),
+            ..Default::default()
+        };
+        reruns.push(train(rt, problem, &cfg)?);
+    }
+    Ok(GridResult {
+        optimizer: optimizer.into(),
+        points,
+        best,
+        interior,
+        reruns,
+    })
+}
+
+fn interior_point(
+    best: &GridPoint,
+    alphas: &[f32],
+    lambdas: &[f32],
+    damped: bool,
+) -> bool {
+    let a_in = best.lr > alphas[0] && best.lr < alphas[alphas.len() - 1];
+    if !damped {
+        return a_in;
+    }
+    let l_in = best.damping > lambdas[0]
+        && best.damping < lambdas[lambdas.len() - 1];
+    a_in && l_in
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(lr: f32, damping: f32) -> GridPoint {
+        GridPoint {
+            lr,
+            damping,
+            final_accuracy: 0.0,
+            final_train_loss: 0.0,
+            diverged: false,
+        }
+    }
+
+    #[test]
+    fn interior_detection() {
+        let a = &[0.1f32, 0.2, 0.3];
+        let l = &[1.0f32, 2.0, 3.0];
+        assert!(interior_point(&pt(0.2, 2.0), a, l, true));
+        assert!(!interior_point(&pt(0.1, 2.0), a, l, true));
+        assert!(!interior_point(&pt(0.2, 3.0), a, l, true));
+        assert!(interior_point(&pt(0.2, 3.0), a, l, false));
+    }
+
+    #[test]
+    fn baselines_skip_damping_axis() {
+        assert_eq!(GridPreset::Small.lambdas(false), vec![0.0]);
+        assert_eq!(GridPreset::Small.lambdas(true).len(), 3);
+    }
+}

@@ -1,0 +1,175 @@
+//! Run logs, cross-seed aggregation (median + quartiles, the paper's
+//! Fig. 7 presentation) and CSV/markdown writers.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One evaluation point during training.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub test_loss: f32,
+    pub test_accuracy: f32,
+}
+
+/// Metrics of a single training run (one seed).
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    /// (step, mini-batch training loss)
+    pub train_loss: Vec<(usize, f32)>,
+    pub evals: Vec<EvalPoint>,
+    pub diverged: bool,
+    pub wall_time_s: f64,
+    /// Mean per-step execute time (seconds).
+    pub step_time_s: f64,
+}
+
+impl RunLog {
+    pub fn final_accuracy(&self) -> f32 {
+        self.evals.last().map(|e| e.test_accuracy).unwrap_or(0.0)
+    }
+
+    pub fn final_train_loss(&self) -> f32 {
+        self.train_loss.last().map(|(_, l)| *l).unwrap_or(f32::NAN)
+    }
+}
+
+/// Percentile of a (small) slice; linear interpolation, q in [0,1].
+pub fn percentile(values: &mut [f32], q: f32) -> f32 {
+    assert!(!values.is_empty());
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (values.len() - 1) as f32;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        values[lo]
+    } else {
+        let w = pos - lo as f32;
+        values[lo] * (1.0 - w) + values[hi] * w
+    }
+}
+
+/// Median + quartiles of per-seed series, aligned by position
+/// (all seeds log at identical steps).
+#[derive(Debug, Clone)]
+pub struct Quartiles {
+    pub steps: Vec<usize>,
+    pub q25: Vec<f32>,
+    pub q50: Vec<f32>,
+    pub q75: Vec<f32>,
+}
+
+pub fn aggregate<F>(runs: &[RunLog], extract: F) -> Quartiles
+where
+    F: Fn(&RunLog) -> Vec<(usize, f32)>,
+{
+    let series: Vec<Vec<(usize, f32)>> =
+        runs.iter().map(&extract).collect();
+    let len = series.iter().map(|s| s.len()).min().unwrap_or(0);
+    let mut out = Quartiles {
+        steps: Vec::new(),
+        q25: Vec::new(),
+        q50: Vec::new(),
+        q75: Vec::new(),
+    };
+    for i in 0..len {
+        let mut vals: Vec<f32> =
+            series.iter().map(|s| s[i].1).collect();
+        out.steps.push(series[0][i].0);
+        out.q25.push(percentile(&mut vals, 0.25));
+        out.q50.push(percentile(&mut vals, 0.50));
+        out.q75.push(percentile(&mut vals, 0.75));
+    }
+    out
+}
+
+/// Write a CSV file, creating parent directories.
+pub fn write_csv(path: &Path, header: &str, rows: &[Vec<String>])
+    -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    writeln!(f, "{header}")?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Render an aligned markdown table (printed to stdout by runners).
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> =
+        headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        let padded: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+            .collect();
+        format!("| {} |", padded.join(" | "))
+    };
+    let mut out = fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+    );
+    out.push('\n');
+    out.push_str(&format!(
+        "|{}|",
+        widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("|")
+    ));
+    for row in rows {
+        out.push('\n');
+        out.push_str(&fmt_row(row));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let mut v = vec![3.0, 1.0, 2.0];
+        assert_eq!(percentile(&mut v, 0.5), 2.0);
+        assert_eq!(percentile(&mut v.clone(), 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 1.0), 3.0);
+    }
+
+    #[test]
+    fn aggregate_median() {
+        let mk = |l: f32| RunLog {
+            train_loss: vec![(0, l), (10, l / 2.0)],
+            ..Default::default()
+        };
+        let runs = vec![mk(1.0), mk(2.0), mk(3.0)];
+        let q = aggregate(&runs, |r| r.train_loss.clone());
+        assert_eq!(q.steps, vec![0, 10]);
+        assert_eq!(q.q50, vec![2.0, 1.0]);
+        assert_eq!(q.q25, vec![1.5, 0.75]);
+    }
+
+    #[test]
+    fn markdown_renders() {
+        let t = markdown_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()]],
+        );
+        assert!(t.contains("| a | bb |"));
+        assert!(t.lines().count() == 3);
+    }
+}

@@ -1,0 +1,11 @@
+//! Layer-3 coordination: problem registry, training loop, DeepOBS-style
+//! tuning protocol, metrics aggregation.
+pub mod gridsearch;
+pub mod metrics;
+pub mod problems;
+pub mod train;
+
+pub use gridsearch::{GridPreset, GridResult};
+pub use metrics::{EvalPoint, Quartiles, RunLog};
+pub use problems::{by_name, Problem, PROBLEMS};
+pub use train::{train, TrainConfig};

@@ -1,0 +1,116 @@
+//! DeepOBS-style test-problem registry (paper Table 3).
+//!
+//! Each problem binds a model, a synthetic dataset, the training batch
+//! size and the evaluation artifact. Batch sizes are the CPU-scaled
+//! values documented in DESIGN.md §3 (paper: 128, 256 for CIFAR-100).
+
+use anyhow::{bail, Result};
+
+use crate::data::{DatasetSpec, Synthetic};
+
+/// One benchmark problem.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    /// DeepOBS codename, e.g. "cifar10_3c3d".
+    pub codename: &'static str,
+    /// Model key in the manifest ("logreg", "2c2d", "3c3d", "allcnnc").
+    pub model: &'static str,
+    /// Input side for side-parameterized models (0 otherwise).
+    pub side: usize,
+    pub dataset: &'static str,
+    pub train_batch: usize,
+    pub eval_artifact: &'static str,
+    /// Optimizers that can run on this problem (paper Table 4: "-"
+    /// entries are genuinely absent -- memory/scaling limits).
+    pub optimizers: &'static [&'static str],
+}
+
+pub const PROBLEMS: &[Problem] = &[
+    Problem {
+        codename: "mnist_logreg",
+        model: "logreg",
+        side: 0,
+        dataset: "mnist",
+        train_batch: 64,
+        eval_artifact: "logreg_eval_n256",
+        optimizers: &["momentum", "adam", "diag_ggn", "diag_ggn_mc",
+                      "kfac", "kflr", "kfra"],
+    },
+    Problem {
+        codename: "fmnist_2c2d",
+        model: "2c2d",
+        side: 0,
+        dataset: "fmnist",
+        train_batch: 32,
+        eval_artifact: "2c2d_eval_n128",
+        optimizers: &["momentum", "adam", "diag_ggn", "diag_ggn_mc",
+                      "kfac", "kflr"],
+    },
+    Problem {
+        codename: "cifar10_3c3d",
+        model: "3c3d",
+        side: 0,
+        dataset: "cifar10",
+        train_batch: 32,
+        eval_artifact: "3c3d_eval_n128",
+        optimizers: &["momentum", "adam", "diag_ggn", "diag_ggn_mc",
+                      "kfac", "kflr"],
+    },
+    Problem {
+        codename: "cifar100_allcnnc",
+        model: "allcnnc",
+        side: 16,
+        dataset: "cifar100",
+        train_batch: 16,
+        eval_artifact: "allcnnc16_eval_n64",
+        optimizers: &["momentum", "adam", "diag_ggn_mc", "kfac"],
+    },
+];
+
+pub fn by_name(codename: &str) -> Result<&'static Problem> {
+    for p in PROBLEMS {
+        if p.codename == codename {
+            return Ok(p);
+        }
+    }
+    bail!(
+        "unknown problem {codename:?}; available: {:?}",
+        PROBLEMS.iter().map(|p| p.codename).collect::<Vec<_>>()
+    )
+}
+
+impl Problem {
+    pub fn make_dataset(&self, seed: u64) -> Result<Synthetic> {
+        let spec = DatasetSpec::by_name(self.dataset)
+            .ok_or_else(|| anyhow::anyhow!("no dataset {}", self.dataset))?;
+        Ok(Synthetic::new(spec, seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves() {
+        assert!(by_name("mnist_logreg").is_ok());
+        assert!(by_name("cifar10_3c3d").is_ok());
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn kfra_only_on_logreg() {
+        // Paper Table 4: KFRA column is "-" except mnist_logreg.
+        for p in PROBLEMS {
+            let has = p.optimizers.contains(&"kfra");
+            assert_eq!(has, p.codename == "mnist_logreg", "{}", p.codename);
+        }
+    }
+
+    #[test]
+    fn datasets_exist() {
+        for p in PROBLEMS {
+            assert!(p.make_dataset(0).is_ok(), "{}", p.codename);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! The training loop: parameters live host-side; every step executes
+//! one AOT artifact (gradient + the optimizer's curvature quantities)
+//! and applies the update in Rust. Python is never on this path.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::metrics::{EvalPoint, RunLog};
+use super::problems::Problem;
+use crate::data::{Batcher, Rng};
+use crate::optim::{self, Hyper, NamedParam};
+use crate::runtime::{ArtifactSpec, Init, Runtime, Tensor};
+
+/// Configuration of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub problem: String,
+    pub optimizer: String,
+    pub hyper: Hyper,
+    pub steps: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// Recompute Kronecker inverses every k steps (1 = paper-faithful).
+    pub inv_every: usize,
+    /// Log the training loss every k steps.
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            problem: "mnist_logreg".into(),
+            optimizer: "sgd".into(),
+            hyper: Hyper::default(),
+            steps: 200,
+            seed: 0,
+            eval_every: 25,
+            inv_every: 1,
+            log_every: 5,
+            verbose: false,
+        }
+    }
+}
+
+/// Initialize parameters per the manifest's recorded init rules
+/// (uniform fan-in bounds for weights, zeros for biases), seeded.
+pub fn init_params(spec: &ArtifactSpec, seed: u64) -> Vec<NamedParam> {
+    let mut rng = Rng::new(seed ^ 0x1417);
+    spec.param_inputs()
+        .iter()
+        .map(|t| {
+            let n: usize = t.shape.iter().product();
+            let data = match t.init.as_ref().expect("param init") {
+                Init::Zeros => vec![0.0; n],
+                Init::Uniform { bound } => (0..n)
+                    .map(|_| rng.uniform_in(-bound, *bound))
+                    .collect(),
+            };
+            NamedParam {
+                name: t.name.clone(),
+                tensor: Tensor::from_f32(&t.shape, data),
+            }
+        })
+        .collect()
+}
+
+/// Assemble the artifact input vector: params, x, y, [key].
+pub fn build_inputs(
+    params: &[NamedParam],
+    x: Tensor,
+    y: Tensor,
+    key: Option<[u32; 2]>,
+) -> Vec<Tensor> {
+    let mut inputs: Vec<Tensor> =
+        params.iter().map(|p| p.tensor.clone()).collect();
+    inputs.push(x);
+    inputs.push(y);
+    if let Some(k) = key {
+        inputs.push(Tensor::from_u32(&[2], vec![k[0], k[1]]));
+    }
+    inputs
+}
+
+/// Run one training configuration; returns the metric log.
+pub fn train(rt: &Runtime, problem: &Problem, cfg: &TrainConfig)
+    -> Result<RunLog> {
+    let mut opt = optim::build(&cfg.optimizer, cfg.hyper, cfg.inv_every)?;
+    let spec = rt.manifest.find_train(
+        problem.model,
+        problem.side,
+        opt.ext_signature(),
+        problem.train_batch,
+    )?;
+    let exe = rt.load(&spec.name)?;
+    let eval_exe = rt.load(problem.eval_artifact)?;
+    let has_key = spec.has_key;
+
+    let mut params = init_params(&exe.spec, cfg.seed);
+    let dataset = problem.make_dataset(0xDA7A5E_u64)?;
+    let mut batcher =
+        Batcher::new(dataset, problem.train_batch, cfg.seed);
+
+    let mut log = RunLog::default();
+    let start = Instant::now();
+    let mut exec_total = 0.0f64;
+
+    for step in 0..cfg.steps {
+        let (x, y) = batcher.next_batch();
+        let key = has_key
+            .then(|| [cfg.seed as u32 ^ 0x5EED, step as u32]);
+        let inputs = build_inputs(&params, x, y, key);
+        let out = exe.run(&inputs).context("train step")?;
+        exec_total += out.exec_time.as_secs_f64();
+        let loss = out.loss()?;
+        if !loss.is_finite() {
+            log.diverged = true;
+            if cfg.verbose {
+                eprintln!("  diverged at step {step} (loss={loss})");
+            }
+            break;
+        }
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            log.train_loss.push((step, loss));
+        }
+        if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
+            let ev = evaluate(&eval_exe, &params, &mut batcher, step)?;
+            if cfg.verbose {
+                eprintln!(
+                    "  step {step:4} loss {loss:.4} \
+                     test_loss {:.4} test_acc {:.3}",
+                    ev.test_loss, ev.test_accuracy
+                );
+            }
+            log.evals.push(ev);
+        }
+        opt.step(&mut params, &out)?;
+    }
+    log.wall_time_s = start.elapsed().as_secs_f64();
+    log.step_time_s = exec_total / cfg.steps.max(1) as f64;
+    Ok(log)
+}
+
+/// Held-out evaluation: average the eval artifact over two windows of
+/// the test split.
+pub fn evaluate(
+    eval_exe: &crate::runtime::Executable,
+    params: &[NamedParam],
+    batcher: &mut Batcher,
+    step: usize,
+) -> Result<EvalPoint> {
+    let n = eval_exe.spec.batch_size;
+    let mut loss = 0.0;
+    let mut acc = 0.0;
+    let windows = 2;
+    for w in 0..windows {
+        let (x, y) = batcher.eval_batch(n, w * n);
+        let inputs = build_inputs(params, x, y, None);
+        let out = eval_exe.run(&inputs)?;
+        loss += out.get("loss")?.item_f32()?;
+        acc += out.get("accuracy")?.item_f32()?;
+    }
+    Ok(EvalPoint {
+        step,
+        test_loss: loss / windows as f32,
+        test_accuracy: acc / windows as f32,
+    })
+}

@@ -1,0 +1,124 @@
+//! Epoch-shuffling mini-batch iterator over a synthetic dataset.
+
+use super::rng::Rng;
+use super::synthetic::Synthetic;
+use crate::runtime::Tensor;
+
+/// Yields training batches as (x, y) host tensors shaped for a model
+/// (flat [N, D] or image [N, C, H, W] per the dataset spec).
+pub struct Batcher {
+    data: Synthetic,
+    batch_size: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch_rng: Rng,
+    pub epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(data: Synthetic, batch_size: usize, seed: u64) -> Batcher {
+        let order: Vec<usize> = (0..data.spec.train_size).collect();
+        let mut b = Batcher {
+            data,
+            batch_size,
+            order,
+            cursor: 0,
+            epoch_rng: Rng::new(seed ^ 0xBA7C4),
+            epoch: 0,
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = self.epoch_rng.fork(self.epoch as u64);
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    fn x_shape(&self, n: usize) -> Vec<usize> {
+        let s = &self.data.spec;
+        if s.flat {
+            vec![n, s.sample_dim()]
+        } else {
+            vec![n, s.channels, s.height, s.width]
+        }
+    }
+
+    /// Next training batch; wraps (and reshuffles) at epoch boundaries.
+    pub fn next_batch(&mut self) -> (Tensor, Tensor) {
+        let n = self.batch_size;
+        if self.cursor + n > self.order.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let idx = &self.order[self.cursor..self.cursor + n];
+        self.cursor += n;
+        let (x, y) = self.data.batch(0, idx);
+        (
+            Tensor::from_f32(&self.x_shape(n), x),
+            Tensor::from_i32(&[n], y),
+        )
+    }
+
+    /// A fixed evaluation batch from the test split (deterministic).
+    pub fn eval_batch(&self, n: usize, offset: usize) -> (Tensor, Tensor) {
+        let idx: Vec<usize> = (0..n)
+            .map(|i| (offset + i) % self.data.spec.test_size)
+            .collect();
+        let (x, y) = self.data.batch(1, &idx);
+        (
+            Tensor::from_f32(&self.x_shape(n), x),
+            Tensor::from_i32(&[n], y),
+        )
+    }
+
+    pub fn spec(&self) -> &super::synthetic::DatasetSpec {
+        &self.data.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::DatasetSpec;
+
+    fn mk() -> Batcher {
+        let spec = DatasetSpec {
+            name: "t", channels: 1, height: 4, width: 4, classes: 3,
+            train_size: 10, test_size: 6, flat: false,
+        };
+        Batcher::new(Synthetic::new(spec, 1), 4, 7)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut b = mk();
+        let (x, y) = b.next_batch();
+        assert_eq!(x.shape, vec![4, 1, 4, 4]);
+        assert_eq!(y.shape, vec![4]);
+    }
+
+    #[test]
+    fn epoch_advances_and_reshuffles() {
+        let mut b = mk();
+        let first: Vec<_> = (0..2).map(|_| b.next_batch().1).collect();
+        assert_eq!(b.epoch, 0);
+        let _ = b.next_batch(); // 12 > 10 -> wraps
+        assert_eq!(b.epoch, 1);
+        // With a different permutation the next epoch's first labels
+        // will (almost surely) differ from epoch 0's.
+        let second = b.next_batch().1;
+        assert!(first.iter().any(|t| t != &second));
+    }
+
+    #[test]
+    fn eval_batch_deterministic() {
+        let b = mk();
+        let (x1, _) = b.eval_batch(3, 0);
+        let (x2, _) = b.eval_batch(3, 0);
+        assert_eq!(x1, x2);
+        let (x3, _) = b.eval_batch(3, 3);
+        assert_ne!(x1, x3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dataset substrate: deterministic PRNG, synthetic datasets with the
+//! paper's shapes/class counts, and an epoch-shuffling batcher.
+pub mod batcher;
+pub mod rng;
+pub mod synthetic;
+
+pub use batcher::Batcher;
+pub use rng::{splitmix64, Rng};
+pub use synthetic::{DatasetSpec, Synthetic};

@@ -1,0 +1,274 @@
+//! Synthetic dataset substrate (DESIGN.md §3).
+//!
+//! The paper evaluates on MNIST / Fashion-MNIST / CIFAR-10 / CIFAR-100,
+//! which are not available here; we substitute deterministic synthetic
+//! datasets with the same shapes and class counts. Each class owns a
+//! smooth "prototype" field (a sum of random low-frequency 2-D
+//! sinusoids -- convnets must exploit spatial structure to separate
+//! them) and each sample is `prototype + per-sample deformation +
+//! pixel noise`, making the task learnable but not trivial: the
+//! optimizer comparisons (Figs. 7, 10, 11) exercise the same
+//! loss-geometry code paths, and the cost benchmarks (Figs. 3, 6, 8, 9)
+//! are data-independent.
+//!
+//! Every sample is a pure function of (dataset seed, split, index).
+
+use super::rng::{splitmix64, Rng};
+
+/// Shape and size description of a synthetic dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Channels, height, width; flat datasets use (1, 1, dim).
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub classes: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    /// True when the model consumes flat vectors ([N, dim]).
+    pub flat: bool,
+}
+
+impl DatasetSpec {
+    pub fn sample_dim(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+
+    /// The four evaluation datasets (paper Table 3), by DeepOBS name.
+    pub fn by_name(name: &str) -> Option<DatasetSpec> {
+        Some(match name {
+            "mnist" => DatasetSpec {
+                name: "mnist", channels: 1, height: 28, width: 28,
+                classes: 10, train_size: 4096, test_size: 1024,
+                flat: true,
+            },
+            "fmnist" => DatasetSpec {
+                name: "fmnist", channels: 1, height: 28, width: 28,
+                classes: 10, train_size: 4096, test_size: 1024,
+                flat: false,
+            },
+            "cifar10" => DatasetSpec {
+                name: "cifar10", channels: 3, height: 32, width: 32,
+                classes: 10, train_size: 4096, test_size: 1024,
+                flat: false,
+            },
+            // CPU-scaled CIFAR-100 substitute: 16x16 (All-CNN-C's
+            // parameter count is spatial-size-invariant; DESIGN.md §3).
+            "cifar100" => DatasetSpec {
+                name: "cifar100", channels: 3, height: 16, width: 16,
+                classes: 100, train_size: 4096, test_size: 1024,
+                flat: false,
+            },
+            // Full-size CIFAR-100 for the overhead benches.
+            "cifar100_32" => DatasetSpec {
+                name: "cifar100_32", channels: 3, height: 32, width: 32,
+                classes: 100, train_size: 512, test_size: 128,
+                flat: false,
+            },
+            _ => return None,
+        })
+    }
+}
+
+/// Number of sinusoidal components per class prototype.
+const WAVES: usize = 6;
+/// Amplitude of the class signal relative to unit pixel noise.
+const SIGNAL: f32 = 1.2;
+/// Per-sample smooth deformation amplitude (within-class variability).
+const DEFORM: f32 = 0.55;
+
+/// One low-frequency sinusoid: amplitude, frequencies, phase.
+#[derive(Debug, Clone, Copy)]
+struct Wave {
+    amp: f32,
+    fx: f32,
+    fy: f32,
+    phase: f32,
+}
+
+impl Wave {
+    fn sample(rng: &mut Rng, amp: f32) -> Wave {
+        Wave {
+            amp: amp * rng.uniform_in(0.5, 1.0),
+            fx: rng.uniform_in(0.5, 3.0),
+            fy: rng.uniform_in(0.5, 3.0),
+            phase: rng.uniform_in(0.0, 2.0 * std::f32::consts::PI),
+        }
+    }
+
+    #[inline]
+    fn eval(&self, u: f32, v: f32) -> f32 {
+        self.amp
+            * (2.0 * std::f32::consts::PI * (self.fx * u + self.fy * v)
+                + self.phase)
+                .sin()
+    }
+}
+
+/// Deterministic synthetic classification dataset.
+pub struct Synthetic {
+    pub spec: DatasetSpec,
+    seed: u64,
+    /// [classes][channels][WAVES] prototype fields.
+    prototypes: Vec<Vec<Vec<Wave>>>,
+}
+
+impl Synthetic {
+    pub fn new(spec: DatasetSpec, seed: u64) -> Synthetic {
+        let mut prototypes = Vec::with_capacity(spec.classes);
+        for c in 0..spec.classes {
+            let mut per_channel = Vec::with_capacity(spec.channels);
+            for ch in 0..spec.channels {
+                let mut rng =
+                    Rng::new(seed).fork(0xC1A55 ^ (c as u64) << 16)
+                        .fork(ch as u64);
+                per_channel.push(
+                    (0..WAVES)
+                        .map(|_| Wave::sample(&mut rng, SIGNAL))
+                        .collect(),
+                );
+            }
+            prototypes.push(per_channel);
+        }
+        Synthetic { spec, seed, prototypes }
+    }
+
+    /// Label of sample `index` in `split` (0=train, 1=test): balanced,
+    /// deterministic assignment.
+    pub fn label(&self, split: u32, index: usize) -> usize {
+        let h = splitmix64(
+            self.seed ^ splitmix64((split as u64) << 32 | index as u64),
+        );
+        (h % self.spec.classes as u64) as usize
+    }
+
+    /// Write sample `index` of `split` into `out` (sample_dim() floats).
+    pub fn fill_sample(&self, split: u32, index: usize, out: &mut [f32]) {
+        let spec = &self.spec;
+        assert_eq!(out.len(), spec.sample_dim());
+        let label = self.label(split, index);
+        let key = splitmix64(
+            self.seed
+                ^ splitmix64(0xDA7A ^ (split as u64) << 40
+                    | index as u64),
+        );
+        let mut rng = Rng::new(key);
+        // Smooth per-sample deformation: shifts + its own weak field.
+        let du = rng.uniform_in(-0.15, 0.15);
+        let dv = rng.uniform_in(-0.15, 0.15);
+        let deform: Vec<Wave> = (0..3)
+            .map(|_| Wave::sample(&mut rng, DEFORM))
+            .collect();
+        let (h, w) = (spec.height, spec.width);
+        for ch in 0..spec.channels {
+            let waves = &self.prototypes[label][ch];
+            for yy in 0..h {
+                let v = yy as f32 / h as f32 + dv;
+                for xx in 0..w {
+                    let u = xx as f32 / w as f32 + du;
+                    let mut val = 0.0;
+                    for wv in waves {
+                        val += wv.eval(u, v);
+                    }
+                    for wv in &deform {
+                        val += wv.eval(u, v);
+                    }
+                    val += rng.normal() * 0.6; // pixel noise
+                    out[(ch * h + yy) * w + xx] = val * 0.5;
+                }
+            }
+        }
+    }
+
+    /// Materialize a batch of samples: (x [n * dim], y [n]).
+    pub fn batch(&self, split: u32, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let dim = self.spec.sample_dim();
+        let mut x = vec![0.0f32; indices.len() * dim];
+        let mut y = Vec::with_capacity(indices.len());
+        for (i, &idx) in indices.iter().enumerate() {
+            self.fill_sample(split, idx, &mut x[i * dim..(i + 1) * dim]);
+            y.push(self.label(split, idx) as i32);
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Synthetic {
+        let spec = DatasetSpec {
+            name: "t", channels: 2, height: 8, width: 8, classes: 4,
+            train_size: 64, test_size: 16, flat: false,
+        };
+        Synthetic::new(spec, 42)
+    }
+
+    #[test]
+    fn deterministic_samples() {
+        let d = tiny();
+        let mut a = vec![0.0; d.spec.sample_dim()];
+        let mut b = vec![0.0; d.spec.sample_dim()];
+        d.fill_sample(0, 3, &mut a);
+        d.fill_sample(0, 3, &mut b);
+        assert_eq!(a, b);
+        d.fill_sample(0, 4, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let d = tiny();
+        let mut a = vec![0.0; d.spec.sample_dim()];
+        let mut b = vec![0.0; d.spec.sample_dim()];
+        d.fill_sample(0, 3, &mut a);
+        d.fill_sample(1, 3, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let d = tiny();
+        let mut counts = vec![0usize; 4];
+        for i in 0..1000 {
+            counts[d.label(0, i)] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 150, "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn same_class_closer_than_cross_class() {
+        // The class signal must dominate the noise on average:
+        // intra-class distance < inter-class distance.
+        let d = tiny();
+        let dim = d.spec.sample_dim();
+        let mut by_class: Vec<Vec<Vec<f32>>> = vec![vec![]; 4];
+        for i in 0..200 {
+            let mut s = vec![0.0; dim];
+            d.fill_sample(0, i, &mut s);
+            by_class[d.label(0, i)].push(s);
+        }
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+        };
+        let intra = dist(&by_class[0][0], &by_class[0][1]);
+        let inter = dist(&by_class[0][0], &by_class[1][0]);
+        assert!(
+            intra < inter,
+            "class structure too weak: intra {intra} inter {inter}"
+        );
+    }
+
+    #[test]
+    fn known_specs_exist() {
+        for name in ["mnist", "fmnist", "cifar10", "cifar100",
+                     "cifar100_32"] {
+            assert!(DatasetSpec::by_name(name).is_some(), "{name}");
+        }
+        assert!(DatasetSpec::by_name("imagenet").is_none());
+    }
+}

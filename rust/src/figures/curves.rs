@@ -1,0 +1,142 @@
+//! Optimizer-comparison figures (Figs. 7a, 7b, 10, 11): the DeepOBS
+//! protocol -- grid-search, best-by-validation-accuracy, seed reruns,
+//! median + quartiles -- per optimizer, on each test problem.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::gridsearch::{run_protocol, GridPreset};
+use crate::coordinator::metrics::{
+    aggregate, markdown_table, write_csv,
+};
+use crate::coordinator::problems;
+use crate::runtime::Runtime;
+
+/// Budget knobs for a curves figure (CPU-scaled; DESIGN.md §3).
+#[derive(Debug, Clone, Copy)]
+pub struct CurveBudget {
+    pub preset: GridPreset,
+    pub search_steps: usize,
+    pub final_steps: usize,
+    pub seeds: usize,
+    /// Kronecker-inverse refresh interval (1 = paper-faithful; conv
+    /// problems amortize on this testbed, see EXPERIMENTS.md §Perf).
+    pub inv_every: usize,
+}
+
+/// Run one problem's optimizer comparison; writes
+/// `results/<figure>_<optimizer>.csv` (training-loss and test-accuracy
+/// quartile series) plus a summary table.
+pub fn run_curves(
+    rt: &Runtime,
+    figure: &str,
+    problem_name: &str,
+    optimizers: &[&str],
+    budget: CurveBudget,
+    out_dir: &Path,
+    verbose: bool,
+) -> Result<()> {
+    let problem = problems::by_name(problem_name)?;
+    println!(
+        "== {figure}: {problem_name} (grid {:?}, search {} steps, \
+         final {} steps, {} seeds) ==",
+        budget.preset, budget.search_steps, budget.final_steps,
+        budget.seeds
+    );
+    let mut summary = Vec::new();
+    for opt in optimizers {
+        if !problem.optimizers.contains(opt) {
+            println!("  {opt}: skipped (unsupported on this problem, \
+                      paper Table 4 '-')");
+            continue;
+        }
+        let res = run_protocol(
+            rt, problem, opt, budget.preset, budget.search_steps,
+            budget.final_steps, budget.seeds, budget.inv_every, verbose,
+        )?;
+        // quartile series over seeds
+        let loss_q = aggregate(&res.reruns, |r| r.train_loss.clone());
+        let acc_q = aggregate(&res.reruns, |r| {
+            r.evals
+                .iter()
+                .map(|e| (e.step, e.test_accuracy))
+                .collect()
+        });
+        let mut rows = Vec::new();
+        for i in 0..loss_q.steps.len() {
+            rows.push(vec![
+                loss_q.steps[i].to_string(),
+                "train_loss".into(),
+                format!("{:.6}", loss_q.q25[i]),
+                format!("{:.6}", loss_q.q50[i]),
+                format!("{:.6}", loss_q.q75[i]),
+            ]);
+        }
+        for i in 0..acc_q.steps.len() {
+            rows.push(vec![
+                acc_q.steps[i].to_string(),
+                "test_accuracy".into(),
+                format!("{:.6}", acc_q.q25[i]),
+                format!("{:.6}", acc_q.q50[i]),
+                format!("{:.6}", acc_q.q75[i]),
+            ]);
+        }
+        write_csv(
+            &out_dir.join(format!("{figure}_{opt}.csv")),
+            "step,metric,q25,q50,q75",
+            &rows,
+        )?;
+        let med_step = res
+            .reruns
+            .iter()
+            .map(|r| r.step_time_s)
+            .sum::<f64>()
+            / res.reruns.len().max(1) as f64;
+        summary.push(vec![
+            opt.to_string(),
+            format!("{:.0e}", res.best.lr),
+            format!("{:.0e}", res.best.damping),
+            if res.interior { "yes" } else { "no" }.into(),
+            format!(
+                "{:.4}",
+                loss_q.q50.last().copied().unwrap_or(f32::NAN)
+            ),
+            format!(
+                "{:.3}",
+                acc_q.q50.last().copied().unwrap_or(f32::NAN)
+            ),
+            format!("{:.0}ms", med_step * 1e3),
+        ]);
+    }
+    let headers = [
+        "optimizer", "best α", "best λ", "interior", "final train loss",
+        "final test acc", "step time",
+    ];
+    println!("{}", markdown_table(&headers, &summary));
+    write_csv(
+        &out_dir.join(format!("{figure}_summary.csv")),
+        &headers.join(","),
+        &summary,
+    )?;
+    Ok(())
+}
+
+/// The per-figure optimizer lists (paper legends).
+pub fn figure_spec(figure: &str) -> Option<(&'static str,
+                                            &'static [&'static str])> {
+    Some(match figure {
+        "fig7a" => ("cifar10_3c3d",
+                    &["momentum", "adam", "diag_ggn", "diag_ggn_mc",
+                      "kfac", "kflr"][..]),
+        "fig7b" => ("cifar100_allcnnc",
+                    &["momentum", "adam", "diag_ggn_mc", "kfac"][..]),
+        "fig10" => ("mnist_logreg",
+                    &["momentum", "adam", "diag_ggn", "diag_ggn_mc",
+                      "kfac", "kflr", "kfra"][..]),
+        "fig11" => ("fmnist_2c2d",
+                    &["momentum", "adam", "diag_ggn", "diag_ggn_mc",
+                      "kfac", "kflr"][..]),
+        _ => return None,
+    })
+}

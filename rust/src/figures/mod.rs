@@ -1,0 +1,8 @@
+//! Per-figure/table regenerators (paper evaluation section).
+//!
+//! Each runner produces the console table (same rows/series the paper
+//! reports) and a CSV under `results/`. The mapping figure -> runner is
+//! indexed in DESIGN.md §5.
+pub mod curves;
+pub mod tables;
+pub mod timing;

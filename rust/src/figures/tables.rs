@@ -1,0 +1,100 @@
+//! Table regenerators: Table 3 (problem zoo + parameter counts, the
+//! paper's checksums) and Table 4 (best hyperparameters per
+//! optimizer x problem with interior-point flags).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::gridsearch::{run_protocol, GridPreset};
+use crate::coordinator::metrics::{markdown_table, write_csv};
+use crate::coordinator::problems::{self, PROBLEMS};
+use crate::runtime::{numel, Runtime};
+
+/// Paper Table 3 parameter counts (reproduction checksums).
+pub const PAPER_COUNTS: &[(&str, usize)] = &[
+    ("mnist_logreg", 7_850),
+    ("fmnist_2c2d", 3_274_634),
+    ("cifar10_3c3d", 895_210),
+    ("cifar100_allcnnc", 1_387_108),
+];
+
+/// Table 3: datasets, models, parameter counts -- verified against the
+/// paper's numbers from the manifest alone.
+pub fn table3(rt: &Runtime, out_dir: &Path) -> Result<()> {
+    println!("== Table 3: test problems ==");
+    let mut rows = Vec::new();
+    for p in PROBLEMS {
+        let spec = rt.manifest.find_train(
+            p.model, p.side, "grad", p.train_batch)?;
+        let count: usize = spec
+            .param_inputs()
+            .iter()
+            .map(|t| numel(&t.shape))
+            .sum();
+        let paper = PAPER_COUNTS
+            .iter()
+            .find(|(n, _)| *n == p.codename)
+            .map(|(_, c)| *c)
+            .unwrap_or(0);
+        rows.push(vec![
+            p.codename.to_string(),
+            p.model.to_string(),
+            p.dataset.to_string(),
+            count.to_string(),
+            paper.to_string(),
+            if count == paper { "OK" } else { "MISMATCH" }.into(),
+        ]);
+    }
+    let headers = ["codename", "model", "dataset", "# params",
+                   "paper", "check"];
+    println!("{}", markdown_table(&headers, &rows));
+    write_csv(&out_dir.join("table3_problems.csv"),
+              &headers.join(","), &rows)?;
+    Ok(())
+}
+
+/// Table 4: grid-search the requested problem and report the best
+/// (α, λ) per optimizer with the interior flag.
+#[allow(clippy::too_many_arguments)]
+pub fn table4(
+    rt: &Runtime,
+    problem_name: &str,
+    preset: GridPreset,
+    search_steps: usize,
+    final_steps: usize,
+    seeds: usize,
+    inv_every: usize,
+    out_dir: &Path,
+    verbose: bool,
+) -> Result<()> {
+    let problem = problems::by_name(problem_name)?;
+    println!("== Table 4: best hyperparameters, {problem_name} ==");
+    let mut rows = Vec::new();
+    for opt in problem.optimizers {
+        let res = run_protocol(
+            rt, problem, opt, preset, search_steps, final_steps, seeds,
+            inv_every, verbose,
+        )?;
+        rows.push(vec![
+            opt.to_string(),
+            format!("{:.0e}", res.best.lr),
+            format!("{:.0e}", res.best.damping),
+            if res.interior { "interior" } else { "boundary" }.into(),
+            format!("{:.3}", res.best.final_accuracy),
+            res.reruns
+                .first()
+                .map(|r| format!("{:.3}", r.final_accuracy()))
+                .unwrap_or_default(),
+        ]);
+    }
+    let headers = ["optimizer", "α", "λ", "grid position",
+                   "search acc", "rerun acc"];
+    println!("{}", markdown_table(&headers, &rows));
+    write_csv(
+        &out_dir.join(format!("table4_{problem_name}.csv")),
+        &headers.join(","),
+        &rows,
+    )?;
+    Ok(())
+}

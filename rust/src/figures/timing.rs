@@ -1,0 +1,223 @@
+//! Timing figures: Fig. 3 (individual gradients), Fig. 6 (extension
+//! overhead), Fig. 8 (exact-matrix propagation at C=100), Fig. 9
+//! (Hessian diagonal vs GGN diagonal).
+//!
+//! The paper's claims are *relative* costs (extension time / gradient
+//! time); we report the same ratios on this testbed.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bench::{bench, fmt_time, Stats};
+use crate::coordinator::metrics::{markdown_table, write_csv};
+use crate::coordinator::train::{build_inputs, init_params};
+use crate::data::{DatasetSpec, Synthetic};
+use crate::runtime::{Runtime, Tensor};
+
+/// Time one artifact on a fixed synthetic batch; returns stats.
+pub fn time_artifact(
+    rt: &Runtime,
+    name: &str,
+    dataset: &str,
+    iters: usize,
+    budget_s: f64,
+) -> Result<Stats> {
+    let exe = rt.load(name)?;
+    let spec = &exe.spec;
+    let n = spec.batch_size;
+    let ds = Synthetic::new(
+        DatasetSpec::by_name(dataset)
+            .ok_or_else(|| anyhow::anyhow!("dataset {dataset}"))?,
+        7,
+    );
+    let idx: Vec<usize> = (0..n).collect();
+    let (xv, yv) = ds.batch(0, &idx);
+    let x_shape: Vec<usize> = spec
+        .inputs
+        .iter()
+        .find(|t| t.name == "x")
+        .unwrap()
+        .shape
+        .clone();
+    let x = Tensor::from_f32(&x_shape, xv);
+    let y = Tensor::from_i32(&[n], yv);
+    let params = init_params(spec, 0);
+    let key = spec.has_key.then_some([1u32, 2u32]);
+    let inputs = build_inputs(&params, x, y, key);
+    // compile+first-run outside the measurement
+    exe.run(&inputs)?;
+    Ok(bench(
+        name,
+        1,
+        iters,
+        Duration::from_secs_f64(budget_s),
+        || {
+            exe.run(&inputs).expect("execute");
+        },
+    ))
+}
+
+/// Fig. 3: computing individual gradients -- for-loop (N separate
+/// batch-1 passes) vs vectorized BatchGrad vs plain gradient.
+pub fn fig3(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
+    println!("== Fig. 3: individual gradients, 3c3d/CIFAR-10 ==");
+    let loop1 = time_artifact(rt, "3c3d_grad_n1", "cifar10", iters, 20.0)?;
+    let mut rows = Vec::new();
+    for n in [4usize, 16, 32] {
+        let grad = time_artifact(
+            rt, &format!("3c3d_grad_n{n}"), "cifar10", iters, 20.0)?;
+        let bg = time_artifact(
+            rt, &format!("3c3d_batch_grad_n{n}"), "cifar10", iters, 30.0)?;
+        let forloop = loop1.p50 * n as f64;
+        rows.push(vec![
+            n.to_string(),
+            fmt_time(grad.p50),
+            fmt_time(bg.p50),
+            fmt_time(forloop),
+            format!("{:.2}", bg.p50 / grad.p50),
+            format!("{:.2}", forloop / grad.p50),
+            format!("{:.1}", forloop / bg.p50),
+        ]);
+    }
+    let headers = [
+        "N", "gradient", "BackPACK indiv", "for-loop indiv",
+        "indiv/grad", "loop/grad", "speedup",
+    ];
+    println!("{}", markdown_table(&headers, &rows));
+    write_csv(
+        &out_dir.join("fig3_individual_gradients.csv"),
+        &headers.join(","),
+        &rows,
+    )?;
+    Ok(())
+}
+
+const FIG6_3C3D: &[(&str, &str)] = &[
+    ("grad", "3c3d_grad_n64"),
+    ("batch_grad", "3c3d_batch_grad_n64"),
+    ("batch_l2", "3c3d_batch_l2_n64"),
+    ("sq_moment", "3c3d_sq_moment_n64"),
+    ("variance", "3c3d_variance_n64"),
+    ("diag_ggn_mc", "3c3d_diag_ggn_mc_n64"),
+    ("diag_ggn", "3c3d_diag_ggn_n64"),
+    ("kfac", "3c3d_kfac_n64"),
+    ("kflr", "3c3d_kflr_n64"),
+];
+
+const FIG6_ALLCNNC: &[(&str, &str)] = &[
+    ("grad", "allcnnc32_grad_n16"),
+    ("batch_grad", "allcnnc32_batch_grad_n16"),
+    ("batch_l2", "allcnnc32_batch_l2_n16"),
+    ("sq_moment", "allcnnc32_sq_moment_n16"),
+    ("variance", "allcnnc32_variance_n16"),
+    ("diag_ggn_mc", "allcnnc32_diag_ggn_mc_n16"),
+    ("kfac", "allcnnc32_kfac_n16"),
+];
+
+/// Fig. 6: overhead of gradient + extension vs gradient alone.
+pub fn fig6(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
+    for (title, dataset, table) in [
+        ("3c3d / CIFAR-10 (N=64)", "cifar10", FIG6_3C3D),
+        ("All-CNN-C / CIFAR-100 32x32 (N=16)", "cifar100_32",
+         FIG6_ALLCNNC),
+    ] {
+        println!("== Fig. 6: overhead, {title} ==");
+        let mut rows = Vec::new();
+        let mut grad_time = None;
+        for (label, artifact) in table {
+            let s = time_artifact(rt, artifact, dataset, iters, 45.0)?;
+            let g = *grad_time.get_or_insert(s.p50);
+            rows.push(vec![
+                label.to_string(),
+                fmt_time(s.p50),
+                format!("{:.2}", s.p50 / g),
+            ]);
+        }
+        let headers = ["extension", "p50 time", "overhead vs grad"];
+        println!("{}", markdown_table(&headers, &rows));
+        let fname = format!(
+            "fig6_overhead_{}.csv",
+            title.split(' ').next().unwrap().to_lowercase()
+        );
+        write_csv(&out_dir.join(fname), &headers.join(","), &rows)?;
+    }
+    Ok(())
+}
+
+/// Fig. 8: KFLR / DiagGGN propagate C=100x more information than
+/// KFAC / DiagGGN-MC on CIFAR-100 -- expect ~two orders of magnitude.
+pub fn fig8(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
+    println!("== Fig. 8: exact vs MC propagation, All-CNN-C C=100 (N=8) ==");
+    let table = [
+        ("grad", "allcnnc32_grad_n8"),
+        ("diag_ggn_mc", "allcnnc32_diag_ggn_mc_n8"),
+        ("kfac", "allcnnc32_kfac_n8"),
+        ("diag_ggn", "allcnnc32_diag_ggn_n8"),
+        ("kflr", "allcnnc32_kflr_n8"),
+    ];
+    let mut rows = Vec::new();
+    let mut grad_time = None;
+    let mut mc: Option<(String, f64)> = None;
+    for (label, artifact) in table {
+        let s = time_artifact(rt, artifact, "cifar100_32", iters, 120.0)?;
+        let g = *grad_time.get_or_insert(s.p50);
+        let vs_mc = match (label, &mc) {
+            ("diag_ggn", Some((_, t))) | ("kflr", Some((_, t))) => {
+                format!("{:.0}x", s.p50 / t)
+            }
+            _ => "-".to_string(),
+        };
+        if label == "diag_ggn_mc" || label == "kfac" {
+            mc = Some((label.to_string(), s.p50));
+        }
+        rows.push(vec![
+            label.to_string(),
+            fmt_time(s.p50),
+            format!("{:.1}", s.p50 / g),
+            vs_mc,
+        ]);
+    }
+    let headers = ["method", "p50 time", "vs grad", "exact vs MC"];
+    println!("{}", markdown_table(&headers, &rows));
+    write_csv(&out_dir.join("fig8_large_output.csv"),
+              &headers.join(","), &rows)?;
+    Ok(())
+}
+
+/// Fig. 9: Hessian diagonal vs GGN diagonal when the network has one
+/// sigmoid (residual propagation makes DiagH much more expensive).
+pub fn fig9(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
+    println!("== Fig. 9: DiagH vs DiagGGN, 3c3d+sigmoid (N=8) ==");
+    let table = [
+        ("grad", "3c3d_sigmoid_grad_n8"),
+        ("diag_ggn", "3c3d_sigmoid_diag_ggn_n8"),
+        ("diag_h", "3c3d_sigmoid_diag_h_n8"),
+    ];
+    let mut rows = Vec::new();
+    let mut grad_time = None;
+    let mut ggn_time = None;
+    for (label, artifact) in table {
+        let s = time_artifact(rt, artifact, "cifar10", iters, 120.0)?;
+        let g = *grad_time.get_or_insert(s.p50);
+        if label == "diag_ggn" {
+            ggn_time = Some(s.p50);
+        }
+        let vs_ggn = match (label, ggn_time) {
+            ("diag_h", Some(t)) => format!("{:.1}x", s.p50 / t),
+            _ => "-".to_string(),
+        };
+        rows.push(vec![
+            label.to_string(),
+            fmt_time(s.p50),
+            format!("{:.1}", s.p50 / g),
+            vs_ggn,
+        ]);
+    }
+    let headers = ["method", "p50 time", "vs grad", "DiagH vs DiagGGN"];
+    println!("{}", markdown_table(&headers, &rows));
+    write_csv(&out_dir.join("fig9_hessian_diag.csv"),
+              &headers.join(","), &rows)?;
+    Ok(())
+}

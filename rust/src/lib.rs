@@ -1,0 +1,16 @@
+//! backpack-rs: reproduction of "BackPACK: Packing more into Backprop"
+//! (Dangel, Kunstner & Hennig, ICLR 2020) on a Rust + JAX + Pallas stack.
+//!
+//! Layer 3 of the three-layer architecture (see DESIGN.md): a training
+//! and benchmarking coordinator that executes AOT-lowered HLO artifacts
+//! (produced once by `python/compile/aot.py`) through the PJRT C API.
+//! Python never runs on the training path.
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod linalg;
+pub mod optim;
+pub mod runtime;
+pub mod figures;

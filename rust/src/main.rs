@@ -1,0 +1,153 @@
+//! `backpack` -- the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   list                         show available AOT artifacts
+//!   train    --problem P --opt O train one configuration
+//!   fig3|fig6|fig8|fig9          timing figure regenerators
+//!   fig7a|fig7b|fig10|fig11      optimizer-comparison figures
+//!   table3                       problem zoo + parameter checksums
+//!   table4   --problem P         grid-search best hyperparameters
+//!
+//! Everything executes AOT artifacts from `artifacts/` (see `make
+//! artifacts`); results land in `results/*.csv`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use backpack_rs::cli::Args;
+use backpack_rs::coordinator::gridsearch::GridPreset;
+use backpack_rs::coordinator::metrics::write_csv;
+use backpack_rs::coordinator::{problems, train, TrainConfig};
+use backpack_rs::figures::{curves, tables, timing};
+use backpack_rs::optim::Hyper;
+use backpack_rs::runtime::Runtime;
+
+const USAGE: &str = "\
+usage: backpack SUBCOMMAND [flags]
+  list
+  train  --problem mnist_logreg --opt kfac [--lr 0.01] [--damping 0.01]
+         [--steps 200] [--seed 0] [--eval-every 25] [--inv-every 1]
+         [--verbose]
+  fig3 | fig6 | fig8 | fig9      [--iters 10]
+  fig7a | fig7b | fig10 | fig11  [--grid small|paper]
+         [--search-steps N] [--steps N] [--seeds K] [--verbose]
+  table3
+  table4 --problem mnist_logreg  [--grid paper|small] [...]
+";
+
+fn grid_preset(args: &Args) -> Result<GridPreset> {
+    Ok(match args.get_or("grid", "small") {
+        "paper" => GridPreset::Paper,
+        "small" => GridPreset::Small,
+        "tiny" => GridPreset::Tiny,
+        other => {
+            anyhow::bail!("--grid must be tiny|small|paper, got {other}")
+        }
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let out_dir = Path::new("results");
+    if args.subcommand.is_empty() || args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let rt = Runtime::open_default()?;
+    match args.subcommand.as_str() {
+        "list" => {
+            for name in rt.artifact_names() {
+                let a = rt.manifest.get(&name)?;
+                println!(
+                    "{name:48} kind={:5} n={:3} outputs={}",
+                    a.kind, a.batch_size, a.outputs.len()
+                );
+            }
+        }
+        "train" => {
+            let problem = problems::by_name(
+                args.get_or("problem", "mnist_logreg"))?;
+            let cfg = TrainConfig {
+                problem: problem.codename.into(),
+                optimizer: args.get_or("opt", "sgd").into(),
+                hyper: Hyper {
+                    lr: args.get_f32("lr", 0.01)?,
+                    damping: args.get_f32("damping", 0.01)?,
+                    l2: args.get_f32("l2", 0.0)?,
+                },
+                steps: args.get_usize("steps", 200)?,
+                seed: args.get_u64("seed", 0)?,
+                eval_every: args.get_usize("eval-every", 25)?,
+                inv_every: args.get_usize("inv-every", 1)?,
+                log_every: args.get_usize("log-every", 5)?,
+                verbose: args.has("verbose"),
+            };
+            let log = train::train(&rt, problem, &cfg)?;
+            println!(
+                "final train loss {:.4}, test acc {:.3}, \
+                 {:.1}s total, {:.1}ms/step exec{}",
+                log.final_train_loss(),
+                log.final_accuracy(),
+                log.wall_time_s,
+                log.step_time_s * 1e3,
+                if log.diverged { " [DIVERGED]" } else { "" },
+            );
+            let rows: Vec<Vec<String>> = log
+                .train_loss
+                .iter()
+                .map(|(s, l)| vec![s.to_string(), l.to_string()])
+                .collect();
+            let path = out_dir.join(format!(
+                "train_{}_{}_seed{}.csv",
+                cfg.problem, cfg.optimizer, cfg.seed
+            ));
+            write_csv(&path, "step,train_loss", &rows)?;
+            println!("wrote {}", path.display());
+        }
+        "fig3" => timing::fig3(
+            &rt, args.get_usize("iters", 10)?, out_dir)?,
+        "fig6" => timing::fig6(
+            &rt, args.get_usize("iters", 10)?, out_dir)?,
+        "fig8" => timing::fig8(
+            &rt, args.get_usize("iters", 5)?, out_dir)?,
+        "fig9" => timing::fig9(
+            &rt, args.get_usize("iters", 5)?, out_dir)?,
+        fig @ ("fig7a" | "fig7b" | "fig10" | "fig11") => {
+            let (problem, opts) = curves::figure_spec(fig).unwrap();
+            let heavy = fig == "fig7b";
+            let budget = curves::CurveBudget {
+                preset: grid_preset(&args)?,
+                search_steps: args.get_usize(
+                    "search-steps", if heavy { 30 } else { 60 })?,
+                final_steps: args.get_usize(
+                    "steps", if heavy { 120 } else { 250 })?,
+                seeds: args.get_usize("seeds", if heavy { 2 } else { 3 })?,
+                inv_every: args.get_usize(
+                    "inv-every", if fig == "fig10" { 1 } else { 10 })?,
+            };
+            curves::run_curves(&rt, fig, problem, opts, budget, out_dir,
+                               args.has("verbose"))?;
+        }
+        "table3" => tables::table3(&rt, out_dir)?,
+        "table4" => {
+            let problem = args.get_or("problem", "mnist_logreg");
+            tables::table4(
+                &rt,
+                problem,
+                grid_preset(&args)?,
+                args.get_usize("search-steps", 80)?,
+                args.get_usize("steps", 250)?,
+                args.get_usize("seeds", 3)?,
+                args.get_usize("inv-every", 1)?,
+                out_dir,
+                args.has("verbose"),
+            )?;
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! First-order baselines: SGD, momentum SGD, Adam (the DeepOBS
+//! baselines of Figs. 7, 10, 11).
+
+use anyhow::Result;
+
+use super::{Hyper, NamedParam, Optimizer};
+use crate::runtime::Outputs;
+
+/// Plain SGD: θ ← θ − α(∇L + ηθ).
+pub struct Sgd {
+    h: Hyper,
+}
+
+impl Sgd {
+    pub fn new(h: Hyper) -> Sgd {
+        Sgd { h }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [NamedParam], out: &Outputs)
+        -> Result<()> {
+        for p in params.iter_mut() {
+            let g = out.get(&p.under("grad"))?.f32s()?.to_vec();
+            let t = p.tensor.f32s_mut()?;
+            for (w, gi) in t.iter_mut().zip(&g) {
+                *w -= self.h.lr * (gi + self.h.l2 * *w);
+            }
+        }
+        Ok(())
+    }
+
+    fn ext_signature(&self) -> &'static str {
+        "grad"
+    }
+
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+}
+
+/// Heavy-ball momentum (DeepOBS baseline, ρ = 0.9).
+pub struct Momentum {
+    h: Hyper,
+    rho: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Momentum {
+    pub fn new(h: Hyper, rho: f32) -> Momentum {
+        Momentum { h, rho, velocity: Vec::new() }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, params: &mut [NamedParam], out: &Outputs)
+        -> Result<()> {
+        if self.velocity.is_empty() {
+            self.velocity = params
+                .iter()
+                .map(|p| vec![0.0; p.tensor.numel()])
+                .collect();
+        }
+        for (p, v) in params.iter_mut().zip(&mut self.velocity) {
+            let g = out.get(&p.under("grad"))?.f32s()?.to_vec();
+            let t = p.tensor.f32s_mut()?;
+            for i in 0..t.len() {
+                v[i] = self.rho * v[i] + g[i] + self.h.l2 * t[i];
+                t[i] -= self.h.lr * v[i];
+            }
+        }
+        Ok(())
+    }
+
+    fn ext_signature(&self) -> &'static str {
+        "grad"
+    }
+
+    fn name(&self) -> String {
+        "momentum".into()
+    }
+}
+
+/// Adam (Kingma & Ba, 2015) with the DeepOBS default
+/// (β₁, β₂) = (0.9, 0.999), ε = 1e-8.
+pub struct Adam {
+    h: Hyper,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(h: Hyper) -> Adam {
+        Adam {
+            h,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [NamedParam], out: &Outputs)
+        -> Result<()> {
+        if self.m.is_empty() {
+            self.m = params
+                .iter()
+                .map(|p| vec![0.0; p.tensor.numel()])
+                .collect();
+            self.v = self.m.clone();
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for (pi, p) in params.iter_mut().enumerate() {
+            let g = out.get(&p.under("grad"))?.f32s()?.to_vec();
+            let t = p.tensor.f32s_mut()?;
+            let (m, v) = (&mut self.m[pi], &mut self.v[pi]);
+            for i in 0..t.len() {
+                let gi = g[i] + self.h.l2 * t[i];
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                t[i] -= self.h.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+        Ok(())
+    }
+
+    fn ext_signature(&self) -> &'static str {
+        "grad"
+    }
+
+    fn name(&self) -> String {
+        "adam".into()
+    }
+}

@@ -1,0 +1,89 @@
+//! Optimizers consuming BackPACK quantities (paper Sec. 4, Appx C.3).
+//!
+//! Baselines (momentum SGD, Adam) use only the averaged gradient; the
+//! preconditioned optimizers implement the paper's naive damped update
+//! (Eq. 27) with diagonal curvature (DiagGGN / DiagGGN-MC) or
+//! Kronecker-factored curvature (KFAC / KFLR / KFRA) inverted with the
+//! Martens-Grosse π-split damping (Eq. 28-29).
+pub mod first_order;
+pub mod kron;
+pub mod precond;
+
+use anyhow::Result;
+
+use crate::runtime::{Outputs, Tensor};
+
+/// A model parameter: manifest name ("param/{layer}/{w|b}") + value.
+#[derive(Debug, Clone)]
+pub struct NamedParam {
+    pub name: String,
+    pub tensor: Tensor,
+}
+
+impl NamedParam {
+    /// "param/3/w" -> ("3", "w")
+    pub fn layer_and_kind(&self) -> (&str, &str) {
+        let mut it = self.name.splitn(3, '/');
+        let _ = it.next();
+        (it.next().unwrap_or(""), it.next().unwrap_or(""))
+    }
+
+    /// Matching output name under another prefix, e.g. "grad".
+    pub fn under(&self, prefix: &str) -> String {
+        let (layer, kind) = self.layer_and_kind();
+        format!("{prefix}/{layer}/{kind}")
+    }
+}
+
+/// Common interface: consume one step's outputs, update parameters.
+pub trait Optimizer {
+    fn step(&mut self, params: &mut [NamedParam], out: &Outputs)
+        -> Result<()>;
+
+    /// Extension signature of the training artifact this optimizer
+    /// needs ("grad", "diag_ggn", "kfac", ...).
+    fn ext_signature(&self) -> &'static str;
+
+    fn name(&self) -> String;
+}
+
+/// Shared hyperparameters (paper Appx C.2 grid tunes lr and damping).
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub lr: f32,
+    pub damping: f32,
+    /// L2 regularization strength η (Eq. 27); 0 in our runs.
+    pub l2: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { lr: 0.01, damping: 0.01, l2: 0.0 }
+    }
+}
+
+/// Construct an optimizer by DeepOBS-style name.
+pub fn build(name: &str, hyper: Hyper, inv_every: usize)
+    -> Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "sgd" => Box::new(first_order::Sgd::new(hyper)),
+        "momentum" => Box::new(first_order::Momentum::new(hyper, 0.9)),
+        "adam" => Box::new(first_order::Adam::new(hyper)),
+        "diag_ggn" => Box::new(precond::DiagPrecond::new(
+            hyper, "diag_ggn")),
+        "diag_ggn_mc" => Box::new(precond::DiagPrecond::new(
+            hyper, "diag_ggn_mc")),
+        "kfac" => Box::new(kron::KronPrecond::new(hyper, "kfac",
+                                                  inv_every)),
+        "kflr" => Box::new(kron::KronPrecond::new(hyper, "kflr",
+                                                  inv_every)),
+        "kfra" => Box::new(kron::KronPrecond::new(hyper, "kfra",
+                                                  inv_every)),
+        other => anyhow::bail!("unknown optimizer {other:?}"),
+    })
+}
+
+/// All optimizer names, baselines first (Fig. 7 legend order).
+pub const ALL_OPTIMIZERS: &[&str] = &[
+    "momentum", "adam", "diag_ggn", "diag_ggn_mc", "kfac", "kflr", "kfra",
+];

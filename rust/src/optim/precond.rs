@@ -1,0 +1,49 @@
+//! Diagonal-curvature preconditioned gradient descent (paper Eq. 7):
+//!
+//!   θ ← θ − α (diag(G) + (λ+η) I)⁻¹ (∇L + ηθ)
+//!
+//! with diag(G) either the exact GGN diagonal (DiagGGN) or its
+//! Monte-Carlo estimate (DiagGGN-MC) -- the elementwise inversion the
+//! paper calls "straightforward for the diagonal curvature".
+
+use anyhow::Result;
+
+use super::{Hyper, NamedParam, Optimizer};
+use crate::runtime::Outputs;
+
+pub struct DiagPrecond {
+    h: Hyper,
+    curvature: &'static str,
+}
+
+impl DiagPrecond {
+    pub fn new(h: Hyper, curvature: &'static str) -> DiagPrecond {
+        DiagPrecond { h, curvature }
+    }
+}
+
+impl Optimizer for DiagPrecond {
+    fn step(&mut self, params: &mut [NamedParam], out: &Outputs)
+        -> Result<()> {
+        let damp = self.h.damping + self.h.l2;
+        for p in params.iter_mut() {
+            let g = out.get(&p.under("grad"))?.f32s()?.to_vec();
+            let c = out.get(&p.under(self.curvature))?.f32s()?.to_vec();
+            let t = p.tensor.f32s_mut()?;
+            for i in 0..t.len() {
+                let step = (g[i] + self.h.l2 * t[i])
+                    / (c[i].max(0.0) + damp);
+                t[i] -= self.h.lr * step;
+            }
+        }
+        Ok(())
+    }
+
+    fn ext_signature(&self) -> &'static str {
+        self.curvature
+    }
+
+    fn name(&self) -> String {
+        self.curvature.into()
+    }
+}

@@ -1,0 +1,157 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! Compiled executables are cached per artifact name for the process
+//! lifetime; artifacts are compiled lazily on first use.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+/// Named outputs of one artifact execution.
+#[derive(Debug)]
+pub struct Outputs {
+    map: BTreeMap<String, Tensor>,
+    /// Device wall-clock of the execute call (excludes literal upload).
+    pub exec_time: Duration,
+}
+
+impl Outputs {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .with_context(|| format!("no output {name:?}"))
+    }
+
+    pub fn loss(&self) -> Result<f32> {
+        self.get("loss")?.item_f32()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// All outputs under a `prefix/` (e.g. "grad", "kfac"), keyed by the
+    /// remainder of the name.
+    pub fn with_prefix(&self, prefix: &str) -> BTreeMap<&str, &Tensor> {
+        let pat = format!("{prefix}/");
+        self.map
+            .iter()
+            .filter(|(k, _)| k.starts_with(&pat))
+            .map(|(k, v)| (&k[pat.len()..], v))
+            .collect()
+    }
+}
+
+/// A compiled artifact bound to its spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with inputs in manifest order; returns named outputs.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Outputs> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: got {} inputs, expected {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != spec.shape {
+                bail!(
+                    "artifact {} input {}: shape {:?} != expected {:?}",
+                    self.spec.name, spec.name, t.shape, spec.shape
+                );
+            }
+            lits.push(t.to_literal()?);
+        }
+        let start = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let root = result[0][0].to_literal_sync()?;
+        let exec_time = start.elapsed();
+        // aot.py lowers with return_tuple=True: always a tuple root.
+        let parts = root.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: got {} outputs, expected {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut map = BTreeMap::new();
+        for (lit, spec) in parts.iter().zip(&self.spec.outputs) {
+            map.insert(
+                spec.name.clone(),
+                Tensor::from_literal(lit, &spec.shape, &spec.dtype)?,
+            );
+        }
+        Ok(Outputs { map, exec_time })
+    }
+}
+
+/// The process-wide runtime: PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default: `artifacts/` next to the
+    /// workspace root, overridable with `BACKPACK_ARTIFACTS`).
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("BACKPACK_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let executable = Rc::new(Executable { spec, exe });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+}

@@ -1,0 +1,239 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! this runtime. Parsed with the in-repo JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+
+/// How a parameter tensor is initialized (mirrors the layer init rules
+/// recorded by aot.py so any seed can be materialized Rust-side).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    Zeros,
+    /// Uniform(-bound, bound) -- PyTorch-style fan-in scaling.
+    Uniform { bound: f32 },
+}
+
+/// One input or output tensor of an artifact graph.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub init: Option<Init>,
+}
+
+/// One AOT-compiled computation (a `<name>.hlo.txt` file).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub side: usize,
+    pub batch_size: usize,
+    pub extensions: Vec<String>,
+    pub kind: String,
+    pub has_key: bool,
+    pub num_classes: usize,
+    pub in_shape: Vec<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Input specs that are model parameters (name starts with "param/").
+    pub fn param_inputs(&self) -> Vec<&TensorSpec> {
+        self.inputs
+            .iter()
+            .filter(|t| t.name.starts_with("param/"))
+            .collect()
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .with_context(|| {
+                format!("artifact {} has no output {name:?}", self.name)
+            })
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub source_hash: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} -- run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in root.get("artifacts")?.as_obj()? {
+            artifacts.insert(name.clone(), parse_artifact(name, spec)?);
+        }
+        Ok(Manifest {
+            artifacts,
+            source_hash: root.get("source_hash")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!("no artifact {name:?} (run `make artifacts`?)")
+        })
+    }
+
+    /// Find the training artifact for (model, input side, extension
+    /// signature, batch size). `side` disambiguates the 16x16 vs 32x32
+    /// All-CNN-C graphs; it is 0 for models with a fixed input size.
+    pub fn find_train(
+        &self,
+        model: &str,
+        side: usize,
+        ext_sig: &str,
+        batch: usize,
+    ) -> Result<&ArtifactSpec> {
+        for a in self.artifacts.values() {
+            let sig = if a.extensions.is_empty() {
+                "grad".to_string()
+            } else {
+                a.extensions.join("+")
+            };
+            if a.model == model
+                && a.side == side
+                && a.kind == "train"
+                && sig == ext_sig
+                && a.batch_size == batch
+            {
+                return Ok(a);
+            }
+        }
+        bail!(
+            "no train artifact for model={model} side={side} \
+             ext={ext_sig} n={batch}"
+        )
+    }
+}
+
+fn parse_tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    let init = match j.opt("init") {
+        None => None,
+        Some(spec) => Some(match spec.get("kind")?.as_str()? {
+            "zeros" => Init::Zeros,
+            "uniform" => Init::Uniform {
+                bound: spec.get("bound")?.as_f64()? as f32,
+            },
+            other => bail!("unknown init kind {other:?}"),
+        }),
+    };
+    Ok(TensorSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape,
+        dtype: j.get("dtype")?.as_str()?.to_string(),
+        init,
+    })
+}
+
+fn parse_artifact(name: &str, j: &Json) -> Result<ArtifactSpec> {
+    Ok(ArtifactSpec {
+        name: name.to_string(),
+        file: j.get("file")?.as_str()?.to_string(),
+        model: j.get("model")?.as_str()?.to_string(),
+        side: j.get("side")?.as_usize()?,
+        batch_size: j.get("batch_size")?.as_usize()?,
+        extensions: j
+            .get("extensions")?
+            .as_arr()?
+            .iter()
+            .map(|e| Ok(e.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?,
+        kind: j.get("kind")?.as_str()?.to_string(),
+        has_key: j.get("has_key")?.as_bool()?,
+        num_classes: j.get("num_classes")?.as_usize()?,
+        in_shape: j
+            .get("in_shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        inputs: j
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(parse_tensor_spec)
+            .collect::<Result<Vec<_>>>()?,
+        outputs: j
+            .get("outputs")?
+            .as_arr()?
+            .iter()
+            .map(parse_tensor_spec)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "toy_grad_n4": {
+          "file": "toy_grad_n4.hlo.txt", "model": "toy", "side": 0,
+          "batch_size": 4, "extensions": [], "kind": "train",
+          "has_key": false, "num_classes": 3, "in_shape": [5],
+          "inputs": [
+            {"name": "param/0/w", "shape": [3, 5], "dtype": "f32",
+             "init": {"kind": "uniform", "bound": 0.4}},
+            {"name": "param/0/b", "shape": [3], "dtype": "f32",
+             "init": {"kind": "zeros"}},
+            {"name": "x", "shape": [4, 5], "dtype": "f32"},
+            {"name": "y", "shape": [4], "dtype": "i32"}
+          ],
+          "outputs": [
+            {"name": "grad/0/w", "shape": [3, 5], "dtype": "f32"},
+            {"name": "loss", "shape": [], "dtype": "f32"}
+          ]
+        }
+      },
+      "source_hash": "abc"
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.get("toy_grad_n4").unwrap();
+        assert_eq!(a.batch_size, 4);
+        assert_eq!(a.param_inputs().len(), 2);
+        assert_eq!(
+            a.param_inputs()[0].init,
+            Some(Init::Uniform { bound: 0.4 })
+        );
+        assert_eq!(a.output_index("loss").unwrap(), 1);
+        assert!(a.output_index("nope").is_err());
+        assert!(m.find_train("toy", 0, "grad", 4).is_ok());
+        assert!(m.find_train("toy", 0, "kfac", 4).is_err());
+        assert!(m.find_train("toy", 16, "grad", 4).is_err());
+    }
+}

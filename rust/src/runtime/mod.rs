@@ -1,0 +1,9 @@
+//! PJRT runtime layer: manifest-described AOT artifacts, compiled once,
+//! executed from the training/benchmark hot path.
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Executable, Outputs, Runtime};
+pub use manifest::{ArtifactSpec, Init, Manifest, TensorSpec};
+pub use tensor::{numel, Tensor, TensorData};

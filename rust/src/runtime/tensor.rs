@@ -1,0 +1,135 @@
+//! Host-side tensors and conversion to/from PJRT literals.
+//!
+//! The coordinator keeps model parameters and batches as plain
+//! row-major buffers; these cross into XLA as `xla::Literal`s at every
+//! `execute` call (the copy is inherent to the PJRT C API on CPU).
+
+use anyhow::{bail, Result};
+
+/// Element payload of a host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// A host tensor: shape + row-major data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: TensorData::F32(vec![0.0; numel(shape)]),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(numel(shape), data.len());
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn from_u32(shape: &[usize], data: Vec<u32>) -> Tensor {
+        assert_eq!(numel(shape), data.len());
+        Tensor { shape: shape.to_vec(), data: TensorData::U32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(&[], vec![v])
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {other:?}"),
+        }
+    }
+
+    /// Scalar convenience (0-d or 1-element tensors).
+    pub fn item_f32(&self) -> Result<f32> {
+        let v = self.f32s()?;
+        if v.len() != 1 {
+            bail!("item_f32 on tensor with {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// Convert to an XLA literal of matching element type and shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+            TensorData::U32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize],
+                        dtype: &str) -> Result<Tensor> {
+        Ok(match dtype {
+            "f32" => Tensor::from_f32(shape, lit.to_vec::<f32>()?),
+            "i32" => Tensor::from_i32(shape, lit.to_vec::<i32>()?),
+            "u32" => Tensor::from_u32(shape, lit.to_vec::<u32>()?),
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_accessors() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.f32s().unwrap().len(), 6);
+        assert!(t.i32s().is_err());
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar_f32(2.5).item_f32().unwrap(), 2.5);
+        assert!(Tensor::zeros(&[3]).item_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn mismatched_shape_panics() {
+        Tensor::from_f32(&[2, 2], vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,282 @@
+//! Integration tests over the real artifacts + PJRT runtime.
+//!
+//! These require `make artifacts` to have run (CI order: pytest ->
+//! cargo test). They exercise the full Rust path: manifest parse ->
+//! HLO compile -> execute -> quantity extraction -> optimizer update.
+
+use backpack_rs::coordinator::train::{build_inputs, init_params};
+use backpack_rs::coordinator::{problems, train, TrainConfig};
+use backpack_rs::data::{DatasetSpec, Synthetic};
+use backpack_rs::optim::Hyper;
+use backpack_rs::runtime::{Runtime, Tensor};
+
+fn runtime() -> Runtime {
+    // Tests run from the workspace root.
+    Runtime::open(std::path::Path::new("artifacts")).expect("runtime")
+}
+
+fn logreg_batch(n: usize, seed: u64) -> (Tensor, Tensor) {
+    let ds = Synthetic::new(DatasetSpec::by_name("mnist").unwrap(), seed);
+    let idx: Vec<usize> = (0..n).collect();
+    let (x, y) = ds.batch(0, &idx);
+    (Tensor::from_f32(&[n, 784], x), Tensor::from_i32(&[n], y))
+}
+
+#[test]
+fn manifest_covers_all_problem_artifacts() {
+    let rt = runtime();
+    for p in problems::PROBLEMS {
+        assert!(rt.manifest.get(p.eval_artifact).is_ok(), "{}",
+                p.eval_artifact);
+        for opt in p.optimizers {
+            let sig = match *opt {
+                "momentum" | "adam" | "sgd" => "grad",
+                other => other,
+            };
+            rt.manifest
+                .find_train(p.model, p.side, sig, p.train_batch)
+                .unwrap_or_else(|e| panic!("{}/{opt}: {e}", p.codename));
+        }
+    }
+}
+
+#[test]
+fn gradient_artifact_runs_and_loss_is_sane() {
+    let rt = runtime();
+    let exe = rt.load("logreg_grad_n64").unwrap();
+    let params = init_params(&exe.spec, 0);
+    let (x, y) = logreg_batch(64, 0);
+    let out = exe.run(&build_inputs(&params, x, y, None)).unwrap();
+    let loss = out.loss().unwrap();
+    // Random init on 10 classes: loss near ln(10) ~ 2.30.
+    assert!((1.8..3.2).contains(&loss), "loss {loss}");
+    let grad = out.get("grad/0/w").unwrap();
+    assert_eq!(grad.shape, vec![10, 784]);
+    assert!(grad.f32s().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn variance_and_moments_consistent_through_runtime() {
+    // Table 1 identity: variance = 2nd moment - grad², elementwise,
+    // checked on real artifact outputs (not the Python tests' oracles).
+    let rt = runtime();
+    let exe = rt
+        .load("logreg_batch_grad+batch_l2+sq_moment+variance_n64")
+        .unwrap();
+    let params = init_params(&exe.spec, 1);
+    let (x, y) = logreg_batch(64, 1);
+    let out = exe.run(&build_inputs(&params, x, y, None)).unwrap();
+    let g = out.get("grad/0/w").unwrap().f32s().unwrap();
+    let sq = out.get("sq_moment/0/w").unwrap().f32s().unwrap();
+    let var = out.get("variance/0/w").unwrap().f32s().unwrap();
+    for i in 0..g.len() {
+        let want = sq[i] - g[i] * g[i];
+        assert!(
+            (var[i] - want).abs() <= 1e-5 + 1e-3 * want.abs(),
+            "var[{i}]={} want {want}",
+            var[i]
+        );
+        assert!(var[i] >= -1e-6, "variance must be >= 0");
+    }
+    // batch_grad sums back to grad (both already 1/N-scaled).
+    let bg = out.get("batch_grad/0/w").unwrap();
+    assert_eq!(bg.shape, vec![64, 10, 784]);
+    let bgv = bg.f32s().unwrap();
+    let d = 10 * 784;
+    for i in (0..d).step_by(997) {
+        let sum: f32 = (0..64).map(|n| bgv[n * d + i]).sum();
+        assert!(
+            (sum - g[i]).abs() <= 1e-5 + 1e-3 * g[i].abs(),
+            "sum of indiv grads {sum} != grad {}",
+            g[i]
+        );
+    }
+}
+
+#[test]
+fn mc_key_changes_mc_quantities_only() {
+    let rt = runtime();
+    let exe = rt.load("logreg_diag_ggn_mc_n64").unwrap();
+    let params = init_params(&exe.spec, 2);
+    let (x, y) = logreg_batch(64, 2);
+    let out1 = exe
+        .run(&build_inputs(&params, x.clone(), y.clone(), Some([1, 1])))
+        .unwrap();
+    let out2 = exe
+        .run(&build_inputs(&params, x, y, Some([2, 2])))
+        .unwrap();
+    // Gradient is deterministic...
+    assert_eq!(
+        out1.get("grad/0/w").unwrap(),
+        out2.get("grad/0/w").unwrap()
+    );
+    // ...the MC curvature estimate is not.
+    assert_ne!(
+        out1.get("diag_ggn_mc/0/w").unwrap(),
+        out2.get("diag_ggn_mc/0/w").unwrap()
+    );
+}
+
+#[test]
+fn diag_ggn_mc_is_nonnegative_and_tracks_exact() {
+    let rt = runtime();
+    let exact_exe = rt.load("logreg_diag_ggn_n64").unwrap();
+    let mc_exe = rt.load("logreg_diag_ggn_mc_n64").unwrap();
+    let params = init_params(&exact_exe.spec, 3);
+    let (x, y) = logreg_batch(64, 3);
+    let exact = exact_exe
+        .run(&build_inputs(&params, x.clone(), y.clone(), None))
+        .unwrap();
+    // Average a few MC draws to reduce noise.
+    let mut acc = vec![0.0f64; 10 * 784];
+    let draws = 8;
+    for k in 0..draws {
+        let out = mc_exe
+            .run(&build_inputs(&params, x.clone(), y.clone(),
+                               Some([k, 0])))
+            .unwrap();
+        for (a, v) in acc
+            .iter_mut()
+            .zip(out.get("diag_ggn_mc/0/w").unwrap().f32s().unwrap())
+        {
+            assert!(*v >= -1e-7, "MC diag must be >= 0");
+            *a += *v as f64 / draws as f64;
+        }
+    }
+    let ex = exact.get("diag_ggn/0/w").unwrap().f32s().unwrap();
+    // Correlation between averaged MC and exact diagonal.
+    let n = ex.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut syy, mut sxy) =
+        (0.0, 0.0, 0.0, 0.0, 0.0);
+    for i in 0..ex.len() {
+        let (xv, yv) = (ex[i] as f64, acc[i]);
+        sx += xv;
+        sy += yv;
+        sxx += xv * xv;
+        syy += yv * yv;
+        sxy += xv * yv;
+    }
+    let corr = (n * sxy - sx * sy)
+        / ((n * sxx - sx * sx).sqrt() * (n * syy - sy * sy).sqrt());
+    assert!(corr > 0.8, "MC/exact correlation too low: {corr}");
+}
+
+#[test]
+fn eval_artifact_reports_chance_accuracy_at_init() {
+    let rt = runtime();
+    let problem = problems::by_name("mnist_logreg").unwrap();
+    let exe = rt.load(problem.eval_artifact).unwrap();
+    let train_spec = rt.load("logreg_grad_n64").unwrap();
+    let params = init_params(&train_spec.spec, 4);
+    let ds = problem.make_dataset(0xDA7A5E_u64).unwrap();
+    let idx: Vec<usize> = (0..256).collect();
+    let (x, y) = ds.batch(1, &idx);
+    let out = exe
+        .run(&build_inputs(
+            &params,
+            Tensor::from_f32(&[256, 784], x),
+            Tensor::from_i32(&[256], y),
+            None,
+        ))
+        .unwrap();
+    let acc = out.get("accuracy").unwrap().item_f32().unwrap();
+    assert!((0.0..0.35).contains(&acc), "chance-ish at init, got {acc}");
+}
+
+#[test]
+fn training_reduces_loss_for_every_optimizer_on_logreg() {
+    let rt = runtime();
+    let problem = problems::by_name("mnist_logreg").unwrap();
+    for (opt, lr, damping) in [
+        ("sgd", 0.1, 0.0),
+        ("momentum", 0.02, 0.0),
+        ("adam", 0.003, 0.0),
+        ("diag_ggn", 0.01, 0.01),
+        ("diag_ggn_mc", 0.01, 0.01),
+        ("kfac", 0.01, 0.01),
+        ("kflr", 0.01, 0.01),
+        ("kfra", 0.01, 0.01),
+    ] {
+        let cfg = TrainConfig {
+            problem: problem.codename.into(),
+            optimizer: opt.into(),
+            hyper: Hyper { lr, damping, l2: 0.0 },
+            steps: 30,
+            seed: 0,
+            eval_every: 29,
+            inv_every: 1,
+            log_every: 29,
+            verbose: false,
+        };
+        let log = train::train(&rt, problem, &cfg).unwrap();
+        assert!(!log.diverged, "{opt} diverged");
+        let first = log.train_loss.first().unwrap().1;
+        let last = log.final_train_loss();
+        assert!(
+            last < first,
+            "{opt}: loss did not decrease ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn seeds_are_reproducible() {
+    let rt = runtime();
+    let problem = problems::by_name("mnist_logreg").unwrap();
+    let cfg = TrainConfig {
+        problem: problem.codename.into(),
+        optimizer: "diag_ggn".into(),
+        hyper: Hyper { lr: 0.01, damping: 0.01, l2: 0.0 },
+        steps: 10,
+        seed: 7,
+        eval_every: 9,
+        inv_every: 1,
+        log_every: 1,
+        verbose: false,
+    };
+    let a = train::train(&rt, problem, &cfg).unwrap();
+    let b = train::train(&rt, problem, &cfg).unwrap();
+    assert_eq!(a.train_loss, b.train_loss, "same seed, same curve");
+    let mut cfg2 = cfg.clone();
+    cfg2.seed = 8;
+    let c = train::train(&rt, problem, &cfg2).unwrap();
+    assert_ne!(a.train_loss, c.train_loss, "different seed differs");
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let rt = runtime();
+    let exe = rt.load("logreg_grad_n64").unwrap();
+    let params = init_params(&exe.spec, 0);
+    let (x, y) = logreg_batch(32, 0); // wrong batch size
+    assert!(exe.run(&build_inputs(&params, x, y, None)).is_err());
+}
+
+#[test]
+fn wrong_input_count_is_rejected() {
+    let rt = runtime();
+    let exe = rt.load("logreg_grad_n64").unwrap();
+    let params = init_params(&exe.spec, 0);
+    let inputs: Vec<Tensor> =
+        params.iter().map(|p| p.tensor.clone()).collect();
+    assert!(exe.run(&inputs).is_err());
+}
+
+#[test]
+fn kfac_factors_have_matching_dimensions() {
+    let rt = runtime();
+    let exe = rt.load("logreg_kfac_n64").unwrap();
+    let params = init_params(&exe.spec, 5);
+    let (x, y) = logreg_batch(64, 5);
+    let out = exe
+        .run(&build_inputs(&params, x, y, Some([3, 4])))
+        .unwrap();
+    let a = out.get("kfac/0/A").unwrap();
+    let b = out.get("kfac/0/B").unwrap();
+    assert_eq!(a.shape, vec![784, 784]);
+    assert_eq!(b.shape, vec![10, 10]);
+    // PSD spot-check: diagonals non-negative.
+    for i in 0..784 {
+        assert!(a.f32s().unwrap()[i * 784 + i] >= -1e-6);
+    }
+}

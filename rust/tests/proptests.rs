@@ -1,0 +1,216 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The proptest crate is unavailable offline, so this file includes a
+//! small seeded property-testing driver (`check`) that generates many
+//! random cases per property and reports the failing seed -- same
+//! discipline, in-repo.
+
+use backpack_rs::coordinator::metrics::{aggregate, percentile, RunLog};
+use backpack_rs::data::{Batcher, DatasetSpec, Rng, Synthetic};
+use backpack_rs::json::Json;
+use backpack_rs::linalg::{matmul, Cholesky, SymMat};
+
+/// Run `prop` for `cases` seeded cases; panic with the seed on failure.
+fn check<F: Fn(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xBACC ^ seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+fn random_spd(rng: &mut Rng, n: usize, jitter: f32) -> SymMat {
+    let g: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+    let mut a = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += g[i * n + k] * g[j * n + k];
+            }
+            a[i * n + j] = s / n as f32;
+        }
+    }
+    for i in 0..n {
+        a[i * n + i] += jitter;
+    }
+    SymMat::new(n, a)
+}
+
+#[test]
+fn prop_cholesky_solve_inverts_matvec() {
+    check("cholesky_solve", 60, |rng| {
+        let n = 1 + rng.below(24);
+        let a = random_spd(rng, n, 0.4);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0f32; n];
+        for i in 0..n {
+            for j in 0..n {
+                b[i] += a.at(i, j) * x[j];
+            }
+        }
+        let ch = Cholesky::factor(&a).map_err(|e| e.to_string())?;
+        ch.solve_vec(&mut b);
+        for i in 0..n {
+            let err = (b[i] - x[i]).abs();
+            if err > 1e-2 * (1.0 + x[i].abs()) {
+                return Err(format!("x[{i}]: {} vs {}", b[i], x[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solve_mat_left_right_compose_to_kron_solve() {
+    // (B⁻¹ G A⁻¹) reconstructs G after B · ... · A.
+    check("kron_solve", 30, |rng| {
+        let (db, da) = (1 + rng.below(8), 1 + rng.below(8));
+        let a = random_spd(rng, da, 0.5);
+        let b = random_spd(rng, db, 0.5);
+        let g: Vec<f32> = (0..db * da).map(|_| rng.normal()).collect();
+        let mut v = g.clone();
+        let cb = Cholesky::factor(&b).map_err(|e| e.to_string())?;
+        let ca = Cholesky::factor(&a).map_err(|e| e.to_string())?;
+        cb.solve_mat_left(&mut v, da);
+        ca.solve_mat_right(&mut v, db);
+        // reconstruct: B V A =? G
+        let bv = matmul(&b.a, &v, db, db, da);
+        let bva = matmul(&bv, &a.a, db, da, da);
+        for i in 0..g.len() {
+            if (bva[i] - g[i]).abs() > 2e-2 * (1.0 + g[i].abs()) {
+                return Err(format!("[{i}]: {} vs {}", bva[i], g[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_percentile_monotone_and_bounded() {
+    check("percentile", 100, |rng| {
+        let n = 1 + rng.below(50);
+        let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let lo = percentile(&mut v.clone(), 0.0);
+        let q1 = percentile(&mut v.clone(), 0.25);
+        let q2 = percentile(&mut v.clone(), 0.5);
+        let q3 = percentile(&mut v.clone(), 0.75);
+        let hi = percentile(&mut v.clone(), 1.0);
+        if !(lo <= q1 && q1 <= q2 && q2 <= q3 && q3 <= hi) {
+            return Err(format!("not monotone: {lo} {q1} {q2} {q3} {hi}"));
+        }
+        let min = v.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if lo != min || hi != max {
+            return Err("extremes mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregate_median_between_extremes() {
+    check("aggregate", 50, |rng| {
+        let seeds = 1 + rng.below(6);
+        let len = 1 + rng.below(10);
+        let runs: Vec<RunLog> = (0..seeds)
+            .map(|_| RunLog {
+                train_loss: (0..len)
+                    .map(|s| (s, rng.normal().abs()))
+                    .collect(),
+                ..Default::default()
+            })
+            .collect();
+        let q = aggregate(&runs, |r| r.train_loss.clone());
+        for i in 0..len {
+            if !(q.q25[i] <= q.q50[i] && q.q50[i] <= q.q75[i]) {
+                return Err(format!("quartiles out of order at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_covers_every_sample_each_epoch() {
+    check("batcher_coverage", 20, |rng| {
+        let train = 8 + rng.below(40);
+        let bs = 1 + rng.below(train.min(9));
+        let spec = DatasetSpec {
+            name: "t", channels: 1, height: 2, width: 2,
+            classes: 3, train_size: train, test_size: 4, flat: false,
+        };
+        let ds = Synthetic::new(spec, rng.next_u64());
+        let mut b = Batcher::new(ds, bs, rng.next_u64());
+        // One epoch = floor(train/bs) full batches before wrap.
+        let mut seen = std::collections::HashSet::new();
+        let full = train / bs;
+        let mut labels = Vec::new();
+        for _ in 0..full {
+            let (x, y) = b.next_batch();
+            if x.shape[0] != bs {
+                return Err("bad batch size".into());
+            }
+            labels.extend(y.i32s().unwrap().to_vec());
+            for v in x.f32s().unwrap() {
+                if !v.is_finite() {
+                    return Err("non-finite sample".into());
+                }
+            }
+            seen.insert(format!("{:?}", y.i32s().unwrap()));
+        }
+        if labels.iter().any(|l| *l < 0 || *l >= 3) {
+            return Err("label out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64),
+            3 => Json::Str(format!("s{}\"\\n{}", rng.below(10),
+                                   rng.below(10))),
+            4 => Json::Arr(
+                (0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect()),
+        }
+    }
+    check("json_roundtrip", 200, |rng| {
+        let v = gen(rng, 3);
+        let text = v.to_string_json();
+        let back = Json::parse(&text)
+            .map_err(|e| format!("{e} on {text}"))?;
+        if back != v {
+            return Err(format!("{text} reparsed differently"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_uniform_in_bounds() {
+    check("uniform_in", 50, |rng| {
+        let lo = rng.normal();
+        let hi = lo + rng.uniform() + 1e-3;
+        for _ in 0..100 {
+            let u = rng.uniform_in(lo, hi);
+            if !(lo..=hi).contains(&u) {
+                return Err(format!("{u} outside [{lo}, {hi}]"));
+            }
+        }
+        Ok(())
+    });
+}

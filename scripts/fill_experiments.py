@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Fill EXPERIMENTS.md placeholders from the campaign logs.
+
+Extracts the markdown tables printed by the figure regenerators
+(results/logs/*.log) and splices them into EXPERIMENTS.md at the
+<!-- MARKER --> comments. Idempotent: markers are kept.
+"""
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+LOGS = ROOT / "results" / "logs"
+
+
+def tables_in(log_name: str) -> str:
+    """All markdown tables (and their '== section ==' headers)."""
+    path = LOGS / log_name
+    if not path.exists():
+        return f"*(pending: {log_name} not yet produced)*"
+    out, keep = [], False
+    for line in path.read_text().splitlines():
+        if line.startswith("== "):
+            out.append(f"**{line.strip('= ')}**\n")
+            keep = False
+        elif line.startswith("|"):
+            out.append(line)
+            keep = True
+        elif keep and not line.startswith("|"):
+            out.append("")
+            keep = False
+    return "\n".join(out).strip() or f"*(no tables in {log_name})*"
+
+
+def e2e_summary() -> str:
+    csv = ROOT / "results" / "e2e_train_cifar10.csv"
+    if not csv.exists():
+        return "*(pending: run `cargo run --release --example " \
+               "train_cifar10`)*"
+    rows = csv.read_text().splitlines()[1:]
+    first = rows[0].split(",")
+    last = rows[-1].split(",")
+    every = max(1, len(rows) // 12)
+    curve = "\n".join(
+        f"| {r.split(',')[0]} | {float(r.split(',')[1]):.4f} |"
+        for r in rows[::every])
+    return (
+        f"Loss {float(first[1]):.3f} (step {first[0]}) → "
+        f"{float(last[1]):.3f} (step {last[0]}).\n\n"
+        f"| step | train loss |\n|---|---|\n{curve}"
+    )
+
+
+MARKERS = {
+    "FIG3_RESULTS": lambda: tables_in("fig3.log"),
+    "FIG6_RESULTS": lambda: tables_in("fig6.log"),
+    "FIG8_RESULTS": lambda: tables_in("fig8.log"),
+    "FIG9_RESULTS": lambda: tables_in("fig9.log"),
+    "CURVES_RESULTS": lambda: "\n\n".join(
+        tables_in(f"{f}.log")
+        for f in ["fig10", "fig11", "fig7a", "fig7b"]),
+    "TABLE4_RESULTS": lambda: tables_in("table4.log"),
+    "PERF_L3_RESULTS": lambda: tables_in("ablation.log"),
+    "E2E_RESULTS": e2e_summary,
+}
+
+
+def main():
+    path = ROOT / "EXPERIMENTS.md"
+    text = path.read_text()
+    for marker, fn in MARKERS.items():
+        pat = re.compile(
+            rf"<!-- {marker} -->.*?(?=\n## |\n### |\Z)", re.S)
+        if f"<!-- {marker} -->" in text:
+            replacement = f"<!-- {marker} -->\n\n{fn()}\n"
+            text = pat.sub(lambda _: replacement, text, count=1)
+            print(f"filled {marker}")
+        else:
+            print(f"marker {marker} missing", file=sys.stderr)
+    path.write_text(text)
+
+
+if __name__ == "__main__":
+    main()
