@@ -4,18 +4,19 @@
 //!
 //! Measures (a) raw Cholesky + solve cost at the paper networks' factor
 //! sizes, (b) end-to-end KFAC step time on mnist_logreg at
-//! inv_every ∈ {1, 5, 20}.
+//! inv_every ∈ {1, 5, 20}, through the native backend (runs on the
+//! default feature set, no AOT artifacts needed).
 //!
 //! Run: `cargo bench --bench ablation_kron_inverse`
 
 use std::time::Duration;
 
+use backpack_rs::backend;
 use backpack_rs::bench::bench;
 use backpack_rs::coordinator::{problems, train, TrainConfig};
 use backpack_rs::data::Rng;
 use backpack_rs::linalg::{Cholesky, SymMat};
 use backpack_rs::optim::Hyper;
-use backpack_rs::runtime::Runtime;
 
 fn random_spd(n: usize, seed: u64) -> SymMat {
     let mut rng = Rng::new(seed);
@@ -61,7 +62,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\n== ablation: KFAC step time vs inv_every (logreg) ==");
-    let rt = Runtime::open_default()?;
+    let be = backend::open("native")?;
     let problem = problems::by_name("mnist_logreg")?;
     for inv_every in [1usize, 5, 20] {
         let cfg = TrainConfig {
@@ -76,7 +77,7 @@ fn main() -> anyhow::Result<()> {
             verbose: false,
         };
         let start = std::time::Instant::now();
-        let log = train::train(&rt, problem, &cfg)?;
+        let log = train::train(be.as_ref(), problem, &cfg)?;
         println!(
             "inv_every={inv_every:2}  total {:6.2}s  \
              ({:.1}ms/step exec)  final loss {:.4}",

@@ -1,0 +1,114 @@
+//! Native layer set (paper Sec. 2's modular feed-forward setting).
+//!
+//! The native backend covers the fully-connected slice of the paper's
+//! model zoo: affine maps plus elementwise activations, the layers for
+//! which every BackPACK quantity has a closed-form extraction rule
+//! (Table 1 / Eq. 19 / Eq. 23). Convolutions stay on the PJRT backend.
+//!
+//! Activations here are stateless; the engine in `model.rs` owns the
+//! stored forward activations and calls back into these rules, exactly
+//! like the Python layer framework (`python/compile/layers.py`) whose
+//! conventions this mirrors: activations `[N, features]` row-major,
+//! `Linear: w [out, in], b [out]`, weight and bias as separate blocks
+//! (paper footnote 7).
+
+use anyhow::{ensure, Result};
+
+/// One module of a native sequential model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layer {
+    /// `z = x Wᵀ + b` with `w [out, in]`, `b [out]`.
+    Linear { in_dim: usize, out_dim: usize },
+    Relu,
+    Sigmoid,
+}
+
+impl Layer {
+    pub fn has_params(&self) -> bool {
+        matches!(self, Layer::Linear { .. })
+    }
+
+    /// Output feature dimension given the input dimension; checks the
+    /// chain for `Linear`.
+    pub fn out_dim(&self, in_dim: usize) -> Result<usize> {
+        match *self {
+            Layer::Linear { in_dim: d, out_dim } => {
+                ensure!(
+                    d == in_dim,
+                    "Linear expects {d} input features, got {in_dim}"
+                );
+                Ok(out_dim)
+            }
+            Layer::Relu | Layer::Sigmoid => Ok(in_dim),
+        }
+    }
+
+    /// Elementwise activation σ(x); `Linear` is handled by the engine.
+    pub fn act(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            Layer::Relu => x.iter().map(|&v| v.max(0.0)).collect(),
+            Layer::Sigmoid => x.iter().map(|&v| sigmoid(v)).collect(),
+            Layer::Linear { .. } => {
+                unreachable!("Linear forward lives in the engine")
+            }
+        }
+    }
+
+    /// Elementwise derivative σ'(x) at the layer *input*.
+    pub fn d_act(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            Layer::Relu => x
+                .iter()
+                .map(|&v| if v > 0.0 { 1.0 } else { 0.0 })
+                .collect(),
+            Layer::Sigmoid => x
+                .iter()
+                .map(|&v| {
+                    let s = sigmoid(v);
+                    s * (1.0 - s)
+                })
+                .collect(),
+            Layer::Linear { .. } => {
+                unreachable!("Linear has no activation derivative")
+            }
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_chain() {
+        let l = Layer::Linear { in_dim: 4, out_dim: 3 };
+        assert_eq!(l.out_dim(4).unwrap(), 3);
+        assert!(l.out_dim(5).is_err());
+        assert_eq!(Layer::Relu.out_dim(7).unwrap(), 7);
+    }
+
+    #[test]
+    fn relu_act_and_derivative() {
+        let x = [-1.0, 0.0, 2.0];
+        assert_eq!(Layer::Relu.act(&x), vec![0.0, 0.0, 2.0]);
+        assert_eq!(Layer::Relu.d_act(&x), vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn sigmoid_matches_finite_difference() {
+        let x = [-2.0f32, -0.3, 0.0, 1.7];
+        let s = Layer::Sigmoid.act(&x);
+        let d = Layer::Sigmoid.d_act(&x);
+        let eps = 1e-3f32;
+        for (i, &v) in x.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&s[i]));
+            let fd = (sigmoid(v + eps) - sigmoid(v - eps)) / (2.0 * eps);
+            assert!((d[i] - fd).abs() < 1e-4, "σ'({v}): {} vs {fd}", d[i]);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Softmax cross-entropy with the derivative interfaces BackPACK needs
+//! (mirror of `python/compile/losses.py`, same conventions).
+//!
+//! Per sample n (batch axis kept; the engine applies Table 1's 1/N):
+//!
+//! * `value`           -- mean loss over the batch (Eq. 1),
+//! * `grad`            -- ∇_f ℓ_n = p − e_y (unnormalized),
+//! * `sqrt_hessian`    -- exact S [N, C, C] with S Sᵀ = ∇²_f ℓ_n:
+//!                        `S = diag(√p) − p √pᵀ` (Eq. 15),
+//! * `sqrt_hessian_mc` -- rank-M Monte-Carlo S̃ [N, C, M] with
+//!                        E[S̃ S̃ᵀ] = ∇²_f ℓ_n: ŷ ~ Cat(p),
+//!                        s̃ = (p − e_ŷ)/√M (Eq. 20-21),
+//! * `hessian_mean`    -- 1/N Σ_n ∇²_f ℓ_n (Eq. 24b, KFRA's Ḡ^(L)).
+
+use crate::data::{splitmix64, Rng};
+
+/// Softmax cross-entropy over logits `[N, C]`, labels `[N]`.
+pub struct CrossEntropy;
+
+impl CrossEntropy {
+    /// Softmax probabilities p [N, C] (max-subtracted, stable).
+    pub fn probs(&self, logits: &[f32], n: usize, c: usize) -> Vec<f32> {
+        let mut p = vec![0.0f32; n * c];
+        for s in 0..n {
+            let row = &logits[s * c..(s + 1) * c];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for (j, &v) in row.iter().enumerate() {
+                let e = (v - m).exp();
+                p[s * c + j] = e;
+                z += e;
+            }
+            for j in 0..c {
+                p[s * c + j] /= z;
+            }
+        }
+        p
+    }
+
+    /// Mean negative log-likelihood over the batch.
+    pub fn value(&self, logits: &[f32], y: &[i32], n: usize, c: usize)
+        -> f32 {
+        let mut total = 0.0f64;
+        for s in 0..n {
+            let row = &logits[s * c..(s + 1) * c];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = row.iter().map(|&v| (v - m).exp()).sum();
+            let lse = m + lse.ln();
+            total += (lse - row[y[s] as usize]) as f64;
+        }
+        (total / n as f64) as f32
+    }
+
+    /// Per-sample output gradient ∇_f ℓ_n = p − e_y, [N, C].
+    pub fn grad(&self, logits: &[f32], y: &[i32], n: usize, c: usize)
+        -> Vec<f32> {
+        let mut g = self.probs(logits, n, c);
+        for s in 0..n {
+            g[s * c + y[s] as usize] -= 1.0;
+        }
+        g
+    }
+
+    /// Exact symmetric Hessian factorization S [N, C, C] (row-major
+    /// `[n, a, b]`): `S[a,b] = δ_ab √p_b − p_a √p_b`.
+    pub fn sqrt_hessian(&self, logits: &[f32], n: usize, c: usize)
+        -> Vec<f32> {
+        let p = self.probs(logits, n, c);
+        let mut s = vec![0.0f32; n * c * c];
+        for i in 0..n {
+            let pr = &p[i * c..(i + 1) * c];
+            for a in 0..c {
+                for b in 0..c {
+                    let sq = pr[b].max(0.0).sqrt();
+                    let mut v = -pr[a] * sq;
+                    if a == b {
+                        v += sq;
+                    }
+                    s[(i * c + a) * c + b] = v;
+                }
+            }
+        }
+        s
+    }
+
+    /// Monte-Carlo factorization S̃ [N, C, M]: ŷ ~ Cat(p) per column,
+    /// `s̃ = (p − e_ŷ)/√M`. Deterministic in `key`.
+    pub fn sqrt_hessian_mc(
+        &self,
+        logits: &[f32],
+        n: usize,
+        c: usize,
+        key: [u32; 2],
+        samples: usize,
+    ) -> Vec<f32> {
+        let p = self.probs(logits, n, c);
+        let mut rng = Rng::new(splitmix64(
+            ((key[0] as u64) << 32) | key[1] as u64,
+        ));
+        let scale = 1.0 / (samples as f32).sqrt();
+        let mut s = vec![0.0f32; n * c * samples];
+        for i in 0..n {
+            let pr = &p[i * c..(i + 1) * c];
+            for m in 0..samples {
+                let u = rng.uniform();
+                let mut cum = 0.0f32;
+                let mut yhat = c - 1;
+                for (j, &pj) in pr.iter().enumerate() {
+                    cum += pj;
+                    if u < cum {
+                        yhat = j;
+                        break;
+                    }
+                }
+                for a in 0..c {
+                    let mut v = pr[a];
+                    if a == yhat {
+                        v -= 1.0;
+                    }
+                    s[(i * c + a) * samples + m] = v * scale;
+                }
+            }
+        }
+        s
+    }
+
+    /// Batch-averaged output Hessian Ḡ^(L) [C, C] (Eq. 24b):
+    /// `1/N Σ_n diag(p_n) − p_n p_nᵀ`.
+    pub fn hessian_mean(&self, logits: &[f32], n: usize, c: usize)
+        -> Vec<f32> {
+        let p = self.probs(logits, n, c);
+        let mut h = vec![0.0f32; c * c];
+        for i in 0..n {
+            let pr = &p[i * c..(i + 1) * c];
+            for a in 0..c {
+                for b in 0..c {
+                    let mut v = -pr[a] * pr[b];
+                    if a == b {
+                        v += pr[a];
+                    }
+                    h[a * c + b] += v;
+                }
+            }
+        }
+        let nf = n as f32;
+        for v in &mut h {
+            *v /= nf;
+        }
+        h
+    }
+
+    /// Top-1 accuracy.
+    pub fn accuracy(&self, logits: &[f32], y: &[i32], n: usize, c: usize)
+        -> f32 {
+        let mut hits = 0usize;
+        for s in 0..n {
+            let row = &logits[s * c..(s + 1) * c];
+            let mut best = 0usize;
+            for j in 1..c {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            if best == y[s] as usize {
+                hits += 1;
+            }
+        }
+        hits as f32 / n as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LOGITS: [f32; 6] = [0.5, -1.0, 2.0, 0.0, 0.0, 0.0];
+    const Y: [i32; 2] = [2, 0];
+
+    #[test]
+    fn probs_normalize_and_grad_rows_sum_to_zero() {
+        let ce = CrossEntropy;
+        let p = ce.probs(&LOGITS, 2, 3);
+        for s in 0..2 {
+            let sum: f32 = p[s * 3..(s + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        let g = ce.grad(&LOGITS, &Y, 2, 3);
+        for s in 0..2 {
+            let sum: f32 = g[s * 3..(s + 1) * 3].iter().sum();
+            assert!(sum.abs() < 1e-6, "grad row {s} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn value_matches_uniform_logits() {
+        let ce = CrossEntropy;
+        // Sample 1 has uniform logits: nll = ln(3).
+        let v = ce.value(&LOGITS[3..], &Y[1..], 1, 3);
+        assert!((v - 3.0f32.ln()).abs() < 1e-5, "{v}");
+    }
+
+    #[test]
+    fn sqrt_hessian_reconstructs_softmax_hessian() {
+        // S Sᵀ must equal diag(p) − p pᵀ per sample.
+        let ce = CrossEntropy;
+        let (n, c) = (2, 3);
+        let p = ce.probs(&LOGITS, n, c);
+        let s = ce.sqrt_hessian(&LOGITS, n, c);
+        for i in 0..n {
+            for a in 0..c {
+                for b in 0..c {
+                    let mut got = 0.0f32;
+                    for k in 0..c {
+                        got += s[(i * c + a) * c + k]
+                            * s[(i * c + b) * c + k];
+                    }
+                    let pa = p[i * c + a];
+                    let pb = p[i * c + b];
+                    let want =
+                        if a == b { pa - pa * pb } else { -pa * pb };
+                    assert!(
+                        (got - want).abs() < 1e-5,
+                        "H[{i}][{a}{b}] {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mc_factor_is_deterministic_per_key_and_key_sensitive() {
+        let ce = CrossEntropy;
+        let a = ce.sqrt_hessian_mc(&LOGITS, 2, 3, [1, 1], 1);
+        let b = ce.sqrt_hessian_mc(&LOGITS, 2, 3, [1, 1], 1);
+        assert_eq!(a, b);
+        // Many samples: astronomically unlikely to draw identically.
+        let big: Vec<f32> = (0..300).map(|i| (i % 7) as f32 * 0.3).collect();
+        let y = ce.sqrt_hessian_mc(&big, 100, 3, [2, 2], 1);
+        let z = ce.sqrt_hessian_mc(&big, 100, 3, [3, 3], 1);
+        assert_ne!(y, z);
+    }
+
+    #[test]
+    fn mc_factor_is_unbiased_for_the_hessian() {
+        // Average S̃ S̃ᵀ over many keys ≈ diag(p) − p pᵀ.
+        let ce = CrossEntropy;
+        let logits = [1.0f32, 0.0, -0.5];
+        let p = ce.probs(&logits, 1, 3);
+        let draws: u32 = 4000;
+        let mut acc = vec![0.0f64; 9];
+        for k in 0..draws {
+            let s = ce.sqrt_hessian_mc(&logits, 1, 3, [k, 7], 1);
+            for a in 0..3 {
+                for b in 0..3 {
+                    acc[a * 3 + b] +=
+                        (s[a] * s[b]) as f64 / draws as f64;
+                }
+            }
+        }
+        for a in 0..3 {
+            for b in 0..3 {
+                let want = if a == b {
+                    p[a] - p[a] * p[b]
+                } else {
+                    -p[a] * p[b]
+                };
+                let want = want as f64;
+                assert!(
+                    (acc[a * 3 + b] - want).abs() < 0.03,
+                    "E[SSᵀ][{a}{b}] {} vs {want}",
+                    acc[a * 3 + b]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let ce = CrossEntropy;
+        // Argmaxes are class 2 (sample 0) and class 0 (uniform ties
+        // break to the first index, sample 1).
+        assert_eq!(ce.accuracy(&LOGITS, &[2, 0], 2, 3), 1.0);
+        assert_eq!(ce.accuracy(&LOGITS, &[0, 2], 2, 3), 0.0);
+        assert_eq!(ce.accuracy(&LOGITS, &[2, 1], 2, 3), 0.5);
+    }
+}

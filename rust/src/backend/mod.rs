@@ -1,0 +1,186 @@
+//! Pluggable execution backends.
+//!
+//! A *backend* resolves artifact names (the manifest naming scheme the
+//! whole coordinator speaks: `{model}_{ext-signature}_n{batch}` for
+//! training graphs, `{model}_eval_n{batch}` for evaluation graphs) to
+//! runnable computations. Two implementations exist:
+//!
+//! * [`native::NativeBackend`] -- forward + generalized backward pass
+//!   (paper Figs. 4-5) in pure Rust on the host [`Tensor`] type, for
+//!   the paper's fully-connected layer set. Zero external dependencies;
+//!   the default.
+//! * `runtime::Runtime` (behind the `pjrt` cargo feature) -- executes
+//!   AOT-lowered HLO artifacts through the PJRT C API, covering the
+//!   convolutional models.
+//!
+//! Both return the same named [`Outputs`]: `loss`, `grad/*`, and the
+//! extension quantities (`batch_grad/*`, `sq_moment/*`, `variance/*`,
+//! `diag_ggn/*`, `kfac/*`, ...) the optimizers in `crate::optim`
+//! consume, so everything above this layer (training loop, grid
+//! search, figures, CLI) is backend-agnostic.
+
+pub mod layers;
+pub mod loss;
+pub mod model;
+pub mod native;
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{ArtifactSpec, Tensor};
+
+/// Named outputs of one computation execution.
+#[derive(Debug)]
+pub struct Outputs {
+    map: BTreeMap<String, Tensor>,
+    /// Wall-clock of the execute call (excludes input staging).
+    pub exec_time: Duration,
+}
+
+impl Outputs {
+    pub fn new(map: BTreeMap<String, Tensor>, exec_time: Duration)
+        -> Outputs {
+        Outputs { map, exec_time }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .with_context(|| format!("no output {name:?}"))
+    }
+
+    pub fn loss(&self) -> Result<f32> {
+        self.get("loss")?.item_f32()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// All outputs under a `prefix/` (e.g. "grad", "kfac"), keyed by the
+    /// remainder of the name.
+    pub fn with_prefix(&self, prefix: &str) -> BTreeMap<&str, &Tensor> {
+        let pat = format!("{prefix}/");
+        self.map
+            .iter()
+            .filter(|(k, _)| k.starts_with(&pat))
+            .map(|(k, v)| (&k[pat.len()..], v))
+            .collect()
+    }
+}
+
+/// One loaded computation: a training or evaluation graph bound to its
+/// spec, executable on host tensors.
+pub trait Exec {
+    fn spec(&self) -> &ArtifactSpec;
+
+    /// Execute with inputs in spec order; returns named outputs.
+    fn run(&self, inputs: &[Tensor]) -> Result<Outputs>;
+}
+
+/// An execution backend: resolves artifact names to computations.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Describe an artifact without loading/compiling it.
+    fn spec(&self, artifact: &str) -> Result<ArtifactSpec>;
+
+    /// Load (or fetch from cache) a runnable computation by name.
+    fn load(&self, artifact: &str) -> Result<Rc<dyn Exec>>;
+
+    /// Resolve the training artifact *name* for (model, input side,
+    /// extension signature, batch size). The signature is the
+    /// optimizer's `ext_signature()` ("grad", "diag_ggn", "kfac",
+    /// ...). Pass the name to `load` / `spec`.
+    fn find_train(
+        &self,
+        model: &str,
+        side: usize,
+        ext_sig: &str,
+        batch: usize,
+    ) -> Result<String>;
+
+    /// Artifact names this backend can serve (representative set for
+    /// backends that synthesize graphs on demand).
+    fn artifact_names(&self) -> Vec<String>;
+}
+
+/// Validate an input vector against a spec (count + per-input shape);
+/// the shared front door of every `Exec::run` implementation.
+pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[Tensor])
+    -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "artifact {}: got {} inputs, expected {}",
+            spec.name,
+            inputs.len(),
+            spec.inputs.len()
+        );
+    }
+    for (t, ts) in inputs.iter().zip(&spec.inputs) {
+        if t.shape != ts.shape {
+            bail!(
+                "artifact {} input {}: shape {:?} != expected {:?}",
+                spec.name, ts.name, t.shape, ts.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Construct a backend by CLI name (`--backend native|pjrt`).
+pub fn open(kind: &str) -> Result<Box<dyn Backend>> {
+    match kind {
+        "native" => Ok(Box::new(native::NativeBackend::new())),
+        "pjrt" => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Box::new(crate::runtime::Runtime::open_default()?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                bail!(
+                    "the pjrt backend is not compiled in; rebuild with \
+                     `cargo build --features pjrt` (needs AOT artifacts \
+                     from `make artifacts`)"
+                )
+            }
+        }
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_lookup_and_prefix() {
+        let mut map = BTreeMap::new();
+        map.insert("loss".to_string(), Tensor::scalar_f32(1.5));
+        map.insert("grad/0/w".to_string(), Tensor::zeros(&[2, 3]));
+        map.insert("grad/0/b".to_string(), Tensor::zeros(&[2]));
+        let out = Outputs::new(map, Duration::from_millis(1));
+        assert_eq!(out.loss().unwrap(), 1.5);
+        assert!(out.get("nope").is_err());
+        let grads = out.with_prefix("grad");
+        assert_eq!(grads.len(), 2);
+        assert!(grads.contains_key("0/w"));
+    }
+
+    #[test]
+    fn open_native_works_and_unknown_fails() {
+        assert!(open("native").is_ok());
+        assert!(open("tpu").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn open_pjrt_errors_without_feature() {
+        let err = open("pjrt").unwrap_err().to_string();
+        assert!(err.contains("--features pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,936 @@
+//! Native sequential models + the generalized backward pass.
+//!
+//! `extended_backward` is the Rust twin of the Python extension engine
+//! (`python/compile/extensions.py`): ONE forward pass storing module
+//! inputs, then
+//!
+//! 1. a **first-order** backward walk (paper Fig. 4) propagating the
+//!    per-sample output gradients `g [N, F]` (Eq. 3) and extracting,
+//!    at every `Linear`, the averaged gradient plus any requested
+//!    first-order quantity (individual gradients, L2 norms, 2nd
+//!    moment, variance -- Table 1 / Appendix A.1);
+//! 2. **second-order** backward walks (Fig. 5) propagating the
+//!    symmetric loss-Hessian factorization `S [N, F, C]` (Eq. 18) --
+//!    exact (DiagGGN, KFLR) or Monte-Carlo (DiagGGN-MC, KFAC) -- and
+//!    the KFRA batch-averaged curvature `Ḡ [h, h]` (Eq. 24).
+//!
+//! All quantities follow Table 1's scaling conventions (the loss is
+//! the *mean* over the batch); the Rust integration tests assert the
+//! same identities the Python test-suite checks against autodiff.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use super::layers::Layer;
+use super::loss::CrossEntropy;
+use crate::linalg::{matmul, matmul_nt, matmul_tn};
+use crate::runtime::{Init, Tensor, TensorSpec};
+
+/// Monte-Carlo rank of the DiagGGN-MC / KFAC factorization (paper: 1).
+pub const MC_SAMPLES: usize = 1;
+
+/// Extensions the native engine implements (`diag_h` stays PJRT-only:
+/// its signed residual-factor lists only pay off on the conv nets the
+/// native layer set excludes).
+pub const NATIVE_EXTENSIONS: &[&str] = &[
+    "batch_grad", "batch_l2", "sq_moment", "variance",
+    "diag_ggn", "diag_ggn_mc", "kfac", "kflr", "kfra",
+];
+
+/// A sequential fully-connected model with a cross-entropy loss.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub in_dim: usize,
+    pub classes: usize,
+    pub layers: Vec<Layer>,
+}
+
+/// Weight/bias views of one `Linear` layer, bound from input tensors.
+struct Lin<'a> {
+    din: usize,
+    dout: usize,
+    w: &'a [f32],
+    b: &'a [f32],
+}
+
+impl Model {
+    /// Build and validate a model (feature dims must chain; the last
+    /// layer's output dimension is the class count).
+    pub fn new(name: &str, in_dim: usize, layers: Vec<Layer>)
+        -> Result<Model> {
+        ensure!(!layers.is_empty(), "model {name} has no layers");
+        let mut d = in_dim;
+        for layer in &layers {
+            d = layer.out_dim(d)?;
+        }
+        Ok(Model {
+            name: name.to_string(),
+            in_dim,
+            classes: d,
+            layers,
+        })
+    }
+
+    /// The paper's linear model: `Linear(784, 10)` (7,850 parameters).
+    pub fn logreg() -> Model {
+        Model::new(
+            "logreg",
+            784,
+            vec![Layer::Linear { in_dim: 784, out_dim: 10 }],
+        )
+        .expect("static model")
+    }
+
+    /// A ReLU+sigmoid MLP on MNIST shapes: exercises the full native
+    /// layer set in end-to-end training (109,386 parameters).
+    pub fn mlp() -> Model {
+        Model::new(
+            "mlp",
+            784,
+            vec![
+                Layer::Linear { in_dim: 784, out_dim: 128 },
+                Layer::Relu,
+                Layer::Linear { in_dim: 128, out_dim: 64 },
+                Layer::Sigmoid,
+                Layer::Linear { in_dim: 64, out_dim: 10 },
+            ],
+        )
+        .expect("static model")
+    }
+
+    /// Feature dimension before each layer plus the final one
+    /// (`len = layers.len() + 1`).
+    pub fn dims(&self) -> Vec<usize> {
+        let mut dims = Vec::with_capacity(self.layers.len() + 1);
+        let mut d = self.in_dim;
+        dims.push(d);
+        for layer in &self.layers {
+            d = layer.out_dim(d).expect("validated at construction");
+            dims.push(d);
+        }
+        dims
+    }
+
+    /// Parameter tensor specs in artifact-input order
+    /// (`param/{layer}/{w|b}`, PyTorch fan-in init -- the same rules
+    /// aot.py records in the manifest, so `init_params` is shared).
+    pub fn param_specs(&self) -> Vec<TensorSpec> {
+        let mut specs = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            if let Layer::Linear { in_dim, out_dim } = *layer {
+                let bound = 1.0 / (in_dim as f32).sqrt();
+                specs.push(TensorSpec {
+                    name: format!("param/{li}/w"),
+                    shape: vec![out_dim, in_dim],
+                    dtype: "f32".to_string(),
+                    init: Some(Init::Uniform { bound }),
+                });
+                specs.push(TensorSpec {
+                    name: format!("param/{li}/b"),
+                    shape: vec![out_dim],
+                    dtype: "f32".to_string(),
+                    init: Some(Init::Zeros),
+                });
+            }
+        }
+        specs
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.param_specs()
+            .iter()
+            .map(|t| t.shape.iter().product::<usize>())
+            .sum()
+    }
+
+    /// `(layer index, in features, out features)` of every `Linear`,
+    /// in layer order -- the parameterized blocks of the model.
+    pub fn linear_dims(&self) -> Vec<(usize, usize, usize)> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter_map(|(li, layer)| match *layer {
+                Layer::Linear { in_dim, out_dim } => {
+                    Some((li, in_dim, out_dim))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Resolve the flat parameter-tensor list (w, b per Linear, in
+    /// layer order) into per-layer views, validating shapes.
+    fn bind<'a>(&self, params: &'a [Tensor])
+        -> Result<Vec<Option<Lin<'a>>>> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        let mut it = params.iter();
+        for (li, layer) in self.layers.iter().enumerate() {
+            match *layer {
+                Layer::Linear { in_dim, out_dim } => {
+                    let (Some(w), Some(b)) = (it.next(), it.next())
+                    else {
+                        bail!("model {}: missing params for layer {li}",
+                              self.name)
+                    };
+                    ensure!(
+                        w.shape == [out_dim, in_dim],
+                        "param/{li}/w: shape {:?} != [{out_dim}, {in_dim}]",
+                        w.shape
+                    );
+                    ensure!(
+                        b.shape == [out_dim],
+                        "param/{li}/b: shape {:?} != [{out_dim}]",
+                        b.shape
+                    );
+                    out.push(Some(Lin {
+                        din: in_dim,
+                        dout: out_dim,
+                        w: w.f32s()?,
+                        b: b.f32s()?,
+                    }));
+                }
+                _ => out.push(None),
+            }
+        }
+        ensure!(
+            it.next().is_none(),
+            "model {}: too many parameter tensors", self.name
+        );
+        Ok(out)
+    }
+
+    /// Forward pass storing every module input (paper Fig. 2):
+    /// returns `layers.len() + 1` activations, `acts[0] = x`,
+    /// `acts.last() = logits`.
+    fn forward_acts(
+        &self,
+        lins: &[Option<Lin>],
+        x: &[f32],
+        n: usize,
+    ) -> Vec<Vec<f32>> {
+        let mut acts = Vec::with_capacity(self.layers.len() + 1);
+        acts.push(x.to_vec());
+        for (li, layer) in self.layers.iter().enumerate() {
+            let inp = acts.last().expect("non-empty");
+            let z = match layer {
+                Layer::Linear { .. } => {
+                    let lin = lins[li].as_ref().expect("bound");
+                    let mut z =
+                        matmul_nt(inp, lin.w, n, lin.din, lin.dout);
+                    for s in 0..n {
+                        for o in 0..lin.dout {
+                            z[s * lin.dout + o] += lin.b[o];
+                        }
+                    }
+                    z
+                }
+                act => act.act(inp),
+            };
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Logits for a batch (test/diagnostic entry point).
+    pub fn forward(&self, params: &[Tensor], x: &Tensor)
+        -> Result<Tensor> {
+        let n = *x.shape.first().unwrap_or(&0);
+        ensure!(
+            x.shape == [n, self.in_dim],
+            "x shape {:?} != [{n}, {}]", x.shape, self.in_dim
+        );
+        let lins = self.bind(params)?;
+        let acts = self.forward_acts(&lins, x.f32s()?, n);
+        Ok(Tensor::from_f32(
+            &[n, self.classes],
+            acts.last().expect("non-empty").clone(),
+        ))
+    }
+
+    /// Evaluation graph payload: mean loss + accuracy.
+    pub fn evaluate(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let logits = self.forward(params, x)?;
+        let n = x.shape[0];
+        let ys = y.i32s()?;
+        ensure!(y.shape == [n], "y shape {:?} != [{n}]", y.shape);
+        let ce = CrossEntropy;
+        let lf = logits.f32s()?;
+        let mut out = BTreeMap::new();
+        out.insert(
+            "loss".to_string(),
+            Tensor::scalar_f32(ce.value(lf, ys, n, self.classes)),
+        );
+        out.insert(
+            "accuracy".to_string(),
+            Tensor::scalar_f32(ce.accuracy(lf, ys, n, self.classes)),
+        );
+        Ok(out)
+    }
+
+    /// The generalized backward pass: returns `loss`, `grad/*`, and
+    /// every requested extension quantity under the manifest naming
+    /// (`{extension}/{layer}/{param-or-factor}`).
+    pub fn extended_backward(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        extensions: &[String],
+        key: Option<[u32; 2]>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        for e in extensions {
+            ensure!(
+                NATIVE_EXTENSIONS.contains(&e.as_str()),
+                "extension {e:?} is not supported by the native backend"
+            );
+        }
+        let has = |e: &str| extensions.iter().any(|x| x == e);
+        let needs_mc = has("diag_ggn_mc") || has("kfac");
+        if needs_mc && key.is_none() {
+            bail!("MC extensions require a PRNG key input");
+        }
+
+        let n = *x.shape.first().unwrap_or(&0);
+        ensure!(n > 0, "empty batch");
+        ensure!(
+            x.shape == [n, self.in_dim],
+            "x shape {:?} != [{n}, {}]", x.shape, self.in_dim
+        );
+        ensure!(y.shape == [n], "y shape {:?} != [{n}]", y.shape);
+        let ys = y.i32s()?;
+        let c = self.classes;
+        let lins = self.bind(params)?;
+        let dims = self.dims();
+        let ce = CrossEntropy;
+
+        // ---- forward pass, storing every module input --------------
+        let acts = self.forward_acts(&lins, x.f32s()?, n);
+        let logits = acts.last().expect("non-empty");
+
+        let mut out = BTreeMap::new();
+        out.insert(
+            "loss".to_string(),
+            Tensor::scalar_f32(ce.value(logits, ys, n, c)),
+        );
+
+        // ---- first-order backward pass (Eq. 3 + Fig. 4) ------------
+        let mut g = ce.grad(logits, ys, n, c); // ∇_f ℓ_n, [N, C]
+        for li in (0..self.layers.len()).rev() {
+            if let Some(lin) = lins[li].as_ref() {
+                self.first_order_at(
+                    li, lin, &acts[li], &g, n, extensions, &mut out,
+                );
+            }
+            if li > 0 {
+                g = self.vjp_input(li, &lins, &acts, g, n);
+            }
+        }
+
+        // ---- second-order backward passes (Eq. 18 / Fig. 5) --------
+        for (ext, exact) in [("diag_ggn", true), ("diag_ggn_mc", false)]
+        {
+            if has(ext) {
+                let (s, cols) =
+                    self.init_sqrt(&ce, logits, n, exact, key);
+                self.propagate_diag(
+                    &lins, &acts, &dims, s, cols, n, ext, &mut out,
+                );
+            }
+        }
+        for (ext, exact) in [("kflr", true), ("kfac", false)] {
+            if has(ext) {
+                let (s, cols) =
+                    self.init_sqrt(&ce, logits, n, exact, key);
+                self.propagate_kron(
+                    &lins, &acts, &dims, s, cols, n, ext, &mut out,
+                );
+            }
+        }
+        if has("kfra") {
+            self.propagate_kfra(&lins, &acts, &dims, n, &mut out);
+        }
+        Ok(out)
+    }
+
+    /// Averaged gradient + requested first-order quantities of one
+    /// `Linear` layer (input `inp [N, din]`, unnormalized per-sample
+    /// output gradients `g [N, dout]`).
+    #[allow(clippy::too_many_arguments)]
+    fn first_order_at(
+        &self,
+        li: usize,
+        lin: &Lin,
+        inp: &[f32],
+        g: &[f32],
+        n: usize,
+        extensions: &[String],
+        out: &mut BTreeMap<String, Tensor>,
+    ) {
+        let has = |e: &str| extensions.iter().any(|x| x == e);
+        let (din, dout) = (lin.din, lin.dout);
+        let nf = n as f32;
+
+        // Averaged gradient: (1/N) gᵀ x and (1/N) Σ_n g_n.
+        let mut gw = matmul_tn(g, inp, n, dout, din);
+        for v in &mut gw {
+            *v /= nf;
+        }
+        let mut gb = vec![0.0f32; dout];
+        for s in 0..n {
+            for o in 0..dout {
+                gb[o] += g[s * dout + o];
+            }
+        }
+        for v in &mut gb {
+            *v /= nf;
+        }
+
+        if has("batch_grad") {
+            // (1/N) ∇ℓ_n: outer products, batch axis kept (Table 1).
+            let mut bw = vec![0.0f32; n * dout * din];
+            for s in 0..n {
+                for o in 0..dout {
+                    let gv = g[s * dout + o] / nf;
+                    let row = (s * dout + o) * din;
+                    for i in 0..din {
+                        bw[row + i] = gv * inp[s * din + i];
+                    }
+                }
+            }
+            out.insert(
+                format!("batch_grad/{li}/w"),
+                Tensor::from_f32(&[n, dout, din], bw),
+            );
+            let bb: Vec<f32> = g.iter().map(|v| v / nf).collect();
+            out.insert(
+                format!("batch_grad/{li}/b"),
+                Tensor::from_f32(&[n, dout], bb),
+            );
+        }
+        if has("batch_l2") {
+            // ‖(1/N) ∇ℓ_n‖²; the rank-1 structure gives
+            // ‖g_n x_nᵀ‖² = ‖g_n‖²·‖x_n‖² without materializing
+            // the individual gradients (Appendix A.1).
+            let mut l2w = vec![0.0f32; n];
+            let mut l2b = vec![0.0f32; n];
+            for s in 0..n {
+                let g2: f32 = g[s * dout..(s + 1) * dout]
+                    .iter()
+                    .map(|v| v * v)
+                    .sum();
+                let x2: f32 = inp[s * din..(s + 1) * din]
+                    .iter()
+                    .map(|v| v * v)
+                    .sum();
+                l2w[s] = g2 * x2 / (nf * nf);
+                l2b[s] = g2 / (nf * nf);
+            }
+            out.insert(
+                format!("batch_l2/{li}/w"),
+                Tensor::from_f32(&[n], l2w),
+            );
+            out.insert(
+                format!("batch_l2/{li}/b"),
+                Tensor::from_f32(&[n], l2b),
+            );
+        }
+        if has("sq_moment") || has("variance") {
+            // (1/N) Σ_n [∇ℓ_n]² = (1/N) (g²)ᵀ (x²), again rank-1.
+            let g2: Vec<f32> = g.iter().map(|v| v * v).collect();
+            let x2: Vec<f32> = inp.iter().map(|v| v * v).collect();
+            let mut sqw = matmul_tn(&g2, &x2, n, dout, din);
+            for v in &mut sqw {
+                *v /= nf;
+            }
+            let mut sqb = vec![0.0f32; dout];
+            for s in 0..n {
+                for o in 0..dout {
+                    sqb[o] += g2[s * dout + o];
+                }
+            }
+            for v in &mut sqb {
+                *v /= nf;
+            }
+            if has("variance") {
+                let vw: Vec<f32> = sqw
+                    .iter()
+                    .zip(&gw)
+                    .map(|(s2, g1)| s2 - g1 * g1)
+                    .collect();
+                let vb: Vec<f32> = sqb
+                    .iter()
+                    .zip(&gb)
+                    .map(|(s2, g1)| s2 - g1 * g1)
+                    .collect();
+                out.insert(
+                    format!("variance/{li}/w"),
+                    Tensor::from_f32(&[dout, din], vw),
+                );
+                out.insert(
+                    format!("variance/{li}/b"),
+                    Tensor::from_f32(&[dout], vb),
+                );
+            }
+            if has("sq_moment") {
+                out.insert(
+                    format!("sq_moment/{li}/w"),
+                    Tensor::from_f32(&[dout, din], sqw),
+                );
+                out.insert(
+                    format!("sq_moment/{li}/b"),
+                    Tensor::from_f32(&[dout], sqb),
+                );
+            }
+        }
+        out.insert(
+            format!("grad/{li}/w"),
+            Tensor::from_f32(&[dout, din], gw),
+        );
+        out.insert(format!("grad/{li}/b"), Tensor::from_f32(&[dout], gb));
+    }
+
+    /// Apply (J_x z)ᵀ per sample: g [N, out] -> [N, in] (Eq. 3).
+    fn vjp_input(
+        &self,
+        li: usize,
+        lins: &[Option<Lin>],
+        acts: &[Vec<f32>],
+        g: Vec<f32>,
+        n: usize,
+    ) -> Vec<f32> {
+        match &self.layers[li] {
+            Layer::Linear { .. } => {
+                let lin = lins[li].as_ref().expect("bound");
+                // [N, out] x [out, in] -> [N, in]
+                matmul(&g, lin.w, n, lin.dout, lin.din)
+            }
+            act => {
+                let d = act.d_act(&acts[li]);
+                g.iter().zip(&d).map(|(gv, dv)| gv * dv).collect()
+            }
+        }
+    }
+
+    /// Apply (J_x z)ᵀ columnwise: S [N, out, cols] -> [N, in, cols]
+    /// (Eq. 18).
+    #[allow(clippy::too_many_arguments)]
+    fn mat_vjp_input(
+        &self,
+        li: usize,
+        lins: &[Option<Lin>],
+        acts: &[Vec<f32>],
+        dims: &[usize],
+        s: Vec<f32>,
+        n: usize,
+        cols: usize,
+    ) -> Vec<f32> {
+        match &self.layers[li] {
+            Layer::Linear { .. } => {
+                let lin = lins[li].as_ref().expect("bound");
+                let (din, dout) = (lin.din, lin.dout);
+                let mut out = vec![0.0f32; n * din * cols];
+                for smp in 0..n {
+                    let blk =
+                        &s[smp * dout * cols..(smp + 1) * dout * cols];
+                    let t = matmul_tn(lin.w, blk, dout, din, cols);
+                    out[smp * din * cols..(smp + 1) * din * cols]
+                        .copy_from_slice(&t);
+                }
+                out
+            }
+            act => {
+                let f = dims[li];
+                let d = act.d_act(&acts[li]); // [N * f]
+                let mut s = s;
+                for (idx, dv) in d.iter().enumerate() {
+                    debug_assert!(idx < n * f);
+                    let base = idx * cols;
+                    for col in 0..cols {
+                        s[base + col] *= dv;
+                    }
+                }
+                s
+            }
+        }
+    }
+
+    /// Initial loss-Hessian square root at the logits: exact
+    /// `[N, C, C]` or Monte-Carlo `[N, C, M]` (Eq. 15 / 20).
+    fn init_sqrt(
+        &self,
+        ce: &CrossEntropy,
+        logits: &[f32],
+        n: usize,
+        exact: bool,
+        key: Option<[u32; 2]>,
+    ) -> (Vec<f32>, usize) {
+        if exact {
+            (ce.sqrt_hessian(logits, n, self.classes), self.classes)
+        } else {
+            let key = key.expect("checked by extended_backward");
+            (
+                ce.sqrt_hessian_mc(
+                    logits, n, self.classes, key, MC_SAMPLES,
+                ),
+                MC_SAMPLES,
+            )
+        }
+    }
+
+    /// DiagGGN(-MC): Eq. 18 propagation + Eq. 19 extraction.
+    #[allow(clippy::too_many_arguments)]
+    fn propagate_diag(
+        &self,
+        lins: &[Option<Lin>],
+        acts: &[Vec<f32>],
+        dims: &[usize],
+        mut s: Vec<f32>,
+        cols: usize,
+        n: usize,
+        name: &str,
+        out: &mut BTreeMap<String, Tensor>,
+    ) {
+        let nf = n as f32;
+        for li in (0..self.layers.len()).rev() {
+            if let Some(lin) = lins[li].as_ref() {
+                let (din, dout) = (lin.din, lin.dout);
+                let inp = &acts[li];
+                // s2[n, o] = Σ_c S[n, o, c]²
+                let mut s2 = vec![0.0f32; n * dout];
+                for (row, v) in s2.iter_mut().enumerate() {
+                    let base = row * cols;
+                    *v = s[base..base + cols]
+                        .iter()
+                        .map(|u| u * u)
+                        .sum();
+                }
+                let x2: Vec<f32> = inp.iter().map(|v| v * v).collect();
+                let mut dw = matmul_tn(&s2, &x2, n, dout, din);
+                for v in &mut dw {
+                    *v /= nf;
+                }
+                let mut db = vec![0.0f32; dout];
+                for smp in 0..n {
+                    for o in 0..dout {
+                        db[o] += s2[smp * dout + o];
+                    }
+                }
+                for v in &mut db {
+                    *v /= nf;
+                }
+                out.insert(
+                    format!("{name}/{li}/w"),
+                    Tensor::from_f32(&[dout, din], dw),
+                );
+                out.insert(
+                    format!("{name}/{li}/b"),
+                    Tensor::from_f32(&[dout], db),
+                );
+            }
+            if li > 0 {
+                s = self
+                    .mat_vjp_input(li, lins, acts, dims, s, n, cols);
+            }
+        }
+    }
+
+    /// KFAC / KFLR: same propagation, Kronecker-factor extraction
+    /// (Eq. 23): `A = 1/N Σ x xᵀ`, `B = bias_ggn = 1/N Σ S Sᵀ`.
+    #[allow(clippy::too_many_arguments)]
+    fn propagate_kron(
+        &self,
+        lins: &[Option<Lin>],
+        acts: &[Vec<f32>],
+        dims: &[usize],
+        mut s: Vec<f32>,
+        cols: usize,
+        n: usize,
+        name: &str,
+        out: &mut BTreeMap<String, Tensor>,
+    ) {
+        let nf = n as f32;
+        for li in (0..self.layers.len()).rev() {
+            if let Some(lin) = lins[li].as_ref() {
+                let (din, dout) = (lin.din, lin.dout);
+                let inp = &acts[li];
+                let mut a = matmul_tn(inp, inp, n, din, din);
+                for v in &mut a {
+                    *v /= nf;
+                }
+                let mut b = vec![0.0f32; dout * dout];
+                for smp in 0..n {
+                    let blk =
+                        &s[smp * dout * cols..(smp + 1) * dout * cols];
+                    let bb = matmul_nt(blk, blk, dout, cols, dout);
+                    for (acc, v) in b.iter_mut().zip(&bb) {
+                        *acc += v;
+                    }
+                }
+                for v in &mut b {
+                    *v /= nf;
+                }
+                out.insert(
+                    format!("{name}/{li}/A"),
+                    Tensor::from_f32(&[din, din], a),
+                );
+                out.insert(
+                    format!("{name}/{li}/bias_ggn"),
+                    Tensor::from_f32(&[dout, dout], b.clone()),
+                );
+                out.insert(
+                    format!("{name}/{li}/B"),
+                    Tensor::from_f32(&[dout, dout], b),
+                );
+            }
+            if li > 0 {
+                s = self
+                    .mat_vjp_input(li, lins, acts, dims, s, n, cols);
+            }
+        }
+    }
+
+    /// KFRA: batch-averaged curvature propagation (Eq. 24). `Linear`
+    /// maps `Ḡ -> Wᵀ Ḡ W`; activations `Ḡ -> Ḡ ∘ (1/N Σ m_n m_nᵀ)`
+    /// with `m = σ'(x)`.
+    fn propagate_kfra(
+        &self,
+        lins: &[Option<Lin>],
+        acts: &[Vec<f32>],
+        dims: &[usize],
+        n: usize,
+        out: &mut BTreeMap<String, Tensor>,
+    ) {
+        let ce = CrossEntropy;
+        let logits = acts.last().expect("non-empty");
+        let mut gbar = ce.hessian_mean(logits, n, self.classes);
+        let nf = n as f32;
+        for li in (0..self.layers.len()).rev() {
+            if let Some(lin) = lins[li].as_ref() {
+                let (din, dout) = (lin.din, lin.dout);
+                let inp = &acts[li];
+                let mut a = matmul_tn(inp, inp, n, din, din);
+                for v in &mut a {
+                    *v /= nf;
+                }
+                out.insert(
+                    format!("kfra/{li}/A"),
+                    Tensor::from_f32(&[din, din], a),
+                );
+                out.insert(
+                    format!("kfra/{li}/B"),
+                    Tensor::from_f32(&[dout, dout], gbar.clone()),
+                );
+                out.insert(
+                    format!("kfra/{li}/bias_ggn"),
+                    Tensor::from_f32(&[dout, dout], gbar.clone()),
+                );
+            }
+            if li > 0 {
+                gbar = match &self.layers[li] {
+                    Layer::Linear { .. } => {
+                        let lin = lins[li].as_ref().expect("bound");
+                        let (din, dout) = (lin.din, lin.dout);
+                        // Wᵀ Ḡ W: [din, dout] x [dout, dout] x [dout, din]
+                        let wt_g =
+                            matmul_tn(lin.w, &gbar, dout, din, dout);
+                        matmul(&wt_g, lin.w, din, dout, din)
+                    }
+                    act => {
+                        let f = dims[li];
+                        let m = act.d_act(&acts[li]); // [N, f]
+                        let mm = matmul_tn(&m, &m, n, f, f);
+                        gbar.iter()
+                            .zip(&mm)
+                            .map(|(gv, mv)| gv * mv / nf)
+                            .collect()
+                    }
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::train::init_params;
+    use crate::data::Rng;
+
+    fn tiny() -> Model {
+        Model::new(
+            "tiny",
+            5,
+            vec![
+                Layer::Linear { in_dim: 5, out_dim: 4 },
+                Layer::Sigmoid,
+                Layer::Linear { in_dim: 4, out_dim: 3 },
+            ],
+        )
+        .unwrap()
+    }
+
+    fn tiny_params(m: &Model, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        m.param_specs()
+            .iter()
+            .map(|t| {
+                let k: usize = t.shape.iter().product();
+                Tensor::from_f32(
+                    &t.shape,
+                    (0..k).map(|_| rng.normal() * 0.4).collect(),
+                )
+            })
+            .collect()
+    }
+
+    fn batch(m: &Model, n: usize, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed ^ 0xBA7);
+        let x: Vec<f32> =
+            (0..n * m.in_dim).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..n)
+            .map(|_| rng.below(m.classes) as i32)
+            .collect();
+        (
+            Tensor::from_f32(&[n, m.in_dim], x),
+            Tensor::from_i32(&[n], y),
+        )
+    }
+
+    #[test]
+    fn registry_models_validate() {
+        assert_eq!(Model::logreg().num_params(), 7_850);
+        assert_eq!(Model::mlp().num_params(), 109_386);
+        assert_eq!(Model::mlp().classes, 10);
+        assert!(Model::new(
+            "bad",
+            5,
+            vec![Layer::Linear { in_dim: 6, out_dim: 2 }]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn dims_chain_through_activations() {
+        assert_eq!(tiny().dims(), vec![5, 4, 4, 3]);
+    }
+
+    #[test]
+    fn loss_at_init_is_near_log_c() {
+        let m = tiny();
+        // Manifest-style fan-in init via the shared init_params path
+        // keeps logits small: loss ≈ ln(3).
+        let specs = m.param_specs();
+        let mut rng = Rng::new(3);
+        let params: Vec<Tensor> = specs
+            .iter()
+            .map(|t| {
+                let k: usize = t.shape.iter().product();
+                let data = match t.init.as_ref().unwrap() {
+                    Init::Zeros => vec![0.0; k],
+                    Init::Uniform { bound } => (0..k)
+                        .map(|_| rng.uniform_in(-bound, *bound))
+                        .collect(),
+                };
+                Tensor::from_f32(&t.shape, data)
+            })
+            .collect();
+        let (x, y) = batch(&m, 16, 0);
+        let out = m
+            .extended_backward(&params, &x, &y, &[], None)
+            .unwrap();
+        let loss = out.get("loss").unwrap().item_f32().unwrap();
+        assert!((0.7..1.6).contains(&loss), "loss {loss}");
+    }
+
+    #[test]
+    fn grad_matches_central_finite_differences() {
+        let m = tiny();
+        let mut params = tiny_params(&m, 1);
+        let (x, y) = batch(&m, 6, 1);
+        let out = m
+            .extended_backward(&params, &x, &y, &[], None)
+            .unwrap();
+        let eps = 1e-2f32;
+        for (pi, spec) in m.param_specs().iter().enumerate() {
+            let (prefix, _) = spec.name.split_at(6); // "param/"
+            assert_eq!(prefix, "param/");
+            let gname = format!("grad/{}", &spec.name[6..]);
+            let g = out.get(&gname).unwrap().f32s().unwrap().to_vec();
+            let k = params[pi].numel();
+            for idx in (0..k).step_by(3) {
+                let orig = params[pi].f32s().unwrap()[idx];
+                params[pi].f32s_mut().unwrap()[idx] = orig + eps;
+                let lp = m
+                    .extended_backward(&params, &x, &y, &[], None)
+                    .unwrap()
+                    .get("loss")
+                    .unwrap()
+                    .item_f32()
+                    .unwrap();
+                params[pi].f32s_mut().unwrap()[idx] = orig - eps;
+                let lm = m
+                    .extended_backward(&params, &x, &y, &[], None)
+                    .unwrap()
+                    .get("loss")
+                    .unwrap()
+                    .item_f32()
+                    .unwrap();
+                params[pi].f32s_mut().unwrap()[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let tol = 1e-3 * (1.0 + fd.abs().max(g[idx].abs()));
+                assert!(
+                    (g[idx] - fd).abs() < tol,
+                    "{gname}[{idx}]: {} vs fd {fd}", g[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mc_requires_key() {
+        let m = tiny();
+        let params = tiny_params(&m, 2);
+        let (x, y) = batch(&m, 4, 2);
+        let exts = vec!["diag_ggn_mc".to_string()];
+        assert!(m
+            .extended_backward(&params, &x, &y, &exts, None)
+            .is_err());
+        assert!(m
+            .extended_backward(&params, &x, &y, &exts, Some([1, 2]))
+            .is_ok());
+    }
+
+    #[test]
+    fn unknown_extension_rejected() {
+        let m = tiny();
+        let params = tiny_params(&m, 2);
+        let (x, y) = batch(&m, 4, 2);
+        let exts = vec!["diag_h".to_string()];
+        let err = m
+            .extended_backward(&params, &x, &y, &exts, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not supported"), "{err}");
+    }
+
+    #[test]
+    fn init_params_integration() {
+        // The shared init path (manifest Init rules) produces the right
+        // shapes for a synthesized native spec.
+        use crate::backend::Backend;
+        let be = crate::backend::native::NativeBackend::new();
+        let spec = be.spec("logreg_grad_n8").unwrap();
+        let params = init_params(&spec, 0);
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].name, "param/0/w");
+        assert_eq!(params[0].tensor.shape, vec![10, 784]);
+        assert_eq!(params[1].tensor.f32s().unwrap(), &[0.0; 10]);
+    }
+}

@@ -1,0 +1,505 @@
+//! The native execution backend: pure-Rust training graphs.
+//!
+//! Instead of loading pre-compiled HLO artifacts, this backend
+//! *synthesizes* the artifact on demand from its name -- the same
+//! naming scheme `python/compile/aot.py` records in the manifest:
+//!
+//! * `{model}_{ext-signature}_n{batch}` -- training graph returning
+//!   `loss`, `grad/*` and the signature's extension quantities
+//!   (signature = extensions joined with `+`, or `grad` for none);
+//! * `{model}_eval_n{batch}` -- evaluation graph returning `loss` and
+//!   `accuracy`.
+//!
+//! Because graphs are synthesized, *any* batch size works and there is
+//! no compile step: `load` is O(1) and `run` does the actual math via
+//! `model::Model::extended_backward`. The registry ships the paper's
+//! fully-connected models (`logreg`, plus an `mlp` that exercises
+//! ReLU + sigmoid); convolutional models require the `pjrt` backend.
+//! Tests can [`NativeBackend::register`] additional models.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use super::model::{Model, NATIVE_EXTENSIONS};
+use super::{Backend, Exec, Outputs};
+use crate::runtime::{ArtifactSpec, Tensor, TensorSpec};
+
+/// Extension signatures advertised by `artifact_names` (single
+/// extensions plus the Fig. 1 combined first-order graph).
+const LISTED_SIGS: &[&str] = &[
+    "grad", "batch_grad", "batch_l2", "sq_moment", "variance",
+    "diag_ggn", "diag_ggn_mc", "kfac", "kflr", "kfra",
+    "batch_grad+batch_l2+sq_moment+variance",
+];
+
+/// A registry of native models, serving synthesized artifacts.
+pub struct NativeBackend {
+    models: BTreeMap<String, Model>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    /// Registry with the built-in fully-connected models.
+    pub fn new() -> NativeBackend {
+        let mut b = NativeBackend { models: BTreeMap::new() };
+        b.register(Model::logreg());
+        b.register(Model::mlp());
+        b
+    }
+
+    /// Register an additional model (used by tests to serve tiny MLPs
+    /// through the full backend path).
+    pub fn register(&mut self, model: Model) {
+        self.models.insert(model.name.clone(), model);
+    }
+
+    fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Resolve an artifact name to (model, parsed request).
+    fn resolve(&self, artifact: &str) -> Result<(&Model, Request)> {
+        let Some((stem, batch)) = split_batch(artifact) else {
+            bail!(
+                "artifact name {artifact:?} does not end in _n<batch>"
+            )
+        };
+        ensure!(batch > 0, "artifact {artifact:?}: batch must be > 0");
+        // A registered model name may be a '_'-delimited prefix of
+        // another registered name ("tiny" / "tiny_mlp"), so a failed
+        // signature parse falls through to the next candidate; the
+        // error is only surfaced when no model matches.
+        let mut sig_err = None;
+        for (name, model) in &self.models {
+            let Some(rest) = stem
+                .strip_prefix(name.as_str())
+                .and_then(|r| r.strip_prefix('_'))
+            else {
+                continue;
+            };
+            if rest == "eval" {
+                return Ok((model, Request::Eval { batch }));
+            }
+            match parse_sig(rest) {
+                Ok(extensions) => {
+                    return Ok((
+                        model,
+                        Request::Train { extensions, batch },
+                    ));
+                }
+                Err(e) => sig_err = Some(e),
+            }
+        }
+        if let Some(e) = sig_err {
+            return Err(e);
+        }
+        bail!(
+            "native backend has no model serving artifact {artifact:?} \
+             (native models: {:?}; convolutional models need \
+             --backend pjrt)",
+            self.model_names()
+        )
+    }
+
+    fn synthesize(&self, artifact: &str) -> Result<(ArtifactSpec, Model)> {
+        let (model, req) = self.resolve(artifact)?;
+        let spec = match &req {
+            Request::Eval { batch } => eval_spec(model, artifact, *batch),
+            Request::Train { extensions, batch } => {
+                train_spec(model, artifact, extensions, *batch)
+            }
+        };
+        Ok((spec, model.clone()))
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn spec(&self, artifact: &str) -> Result<ArtifactSpec> {
+        Ok(self.synthesize(artifact)?.0)
+    }
+
+    fn load(&self, artifact: &str) -> Result<Rc<dyn Exec>> {
+        let (spec, model) = self.synthesize(artifact)?;
+        Ok(Rc::new(NativeExec { spec, model }))
+    }
+
+    fn find_train(
+        &self,
+        model: &str,
+        side: usize,
+        ext_sig: &str,
+        batch: usize,
+    ) -> Result<String> {
+        ensure!(
+            side == 0,
+            "native models have a fixed input size (side must be 0, \
+             got {side})"
+        );
+        ensure!(
+            self.models.contains_key(model),
+            "model {model:?} is not in the native registry {:?}; \
+             convolutional models need --backend pjrt",
+            self.model_names()
+        );
+        let name = format!("{model}_{ext_sig}_n{batch}");
+        self.resolve(&name)?; // validate the signature/batch
+        Ok(name)
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for m in self.models.keys() {
+            names.push(format!("{m}_eval_n256"));
+            for sig in LISTED_SIGS {
+                names.push(format!("{m}_{sig}_n64"));
+            }
+        }
+        names
+    }
+}
+
+/// `"logreg_grad_n64"` -> `("logreg_grad", 64)`.
+fn split_batch(artifact: &str) -> Option<(&str, usize)> {
+    let pos = artifact.rfind("_n")?;
+    let digits = &artifact[pos + 2..];
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit())
+    {
+        return None;
+    }
+    Some((&artifact[..pos], digits.parse().ok()?))
+}
+
+/// `"diag_ggn"` / `"batch_grad+variance"` -> extension list; `"grad"`
+/// is the empty signature.
+fn parse_sig(sig: &str) -> Result<Vec<String>> {
+    if sig == "grad" {
+        return Ok(Vec::new());
+    }
+    let mut exts = Vec::new();
+    for part in sig.split('+') {
+        ensure!(
+            NATIVE_EXTENSIONS.contains(&part),
+            "extension {part:?} is not supported by the native backend \
+             (supported: {NATIVE_EXTENSIONS:?})"
+        );
+        exts.push(part.to_string());
+    }
+    Ok(exts)
+}
+
+enum Request {
+    Eval { batch: usize },
+    Train { extensions: Vec<String>, batch: usize },
+}
+
+fn f32_spec(name: String, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec { name, shape, dtype: "f32".to_string(), init: None }
+}
+
+/// Data/key inputs appended after the parameter specs.
+fn data_inputs(
+    model: &Model,
+    batch: usize,
+    has_key: bool,
+) -> Vec<TensorSpec> {
+    let mut inputs = vec![
+        f32_spec("x".to_string(), vec![batch, model.in_dim]),
+        TensorSpec {
+            name: "y".to_string(),
+            shape: vec![batch],
+            dtype: "i32".to_string(),
+            init: None,
+        },
+    ];
+    if has_key {
+        inputs.push(TensorSpec {
+            name: "key".to_string(),
+            shape: vec![2],
+            dtype: "u32".to_string(),
+            init: None,
+        });
+    }
+    inputs
+}
+
+fn train_spec(
+    model: &Model,
+    artifact: &str,
+    extensions: &[String],
+    batch: usize,
+) -> ArtifactSpec {
+    let has = |e: &str| extensions.iter().any(|x| x == e);
+    let has_key = has("diag_ggn_mc") || has("kfac");
+    let mut inputs = model.param_specs();
+    inputs.extend(data_inputs(model, batch, has_key));
+
+    let mut outputs = vec![f32_spec("loss".to_string(), vec![])];
+    for (li, din, dout) in model.linear_dims() {
+        outputs.push(f32_spec(format!("grad/{li}/w"), vec![dout, din]));
+        outputs.push(f32_spec(format!("grad/{li}/b"), vec![dout]));
+        for ext in extensions {
+            match ext.as_str() {
+                "batch_grad" => {
+                    outputs.push(f32_spec(
+                        format!("batch_grad/{li}/w"),
+                        vec![batch, dout, din],
+                    ));
+                    outputs.push(f32_spec(
+                        format!("batch_grad/{li}/b"),
+                        vec![batch, dout],
+                    ));
+                }
+                "batch_l2" => {
+                    outputs.push(f32_spec(
+                        format!("batch_l2/{li}/w"),
+                        vec![batch],
+                    ));
+                    outputs.push(f32_spec(
+                        format!("batch_l2/{li}/b"),
+                        vec![batch],
+                    ));
+                }
+                "sq_moment" | "variance" | "diag_ggn"
+                | "diag_ggn_mc" => {
+                    outputs.push(f32_spec(
+                        format!("{ext}/{li}/w"),
+                        vec![dout, din],
+                    ));
+                    outputs.push(f32_spec(
+                        format!("{ext}/{li}/b"),
+                        vec![dout],
+                    ));
+                }
+                "kfac" | "kflr" | "kfra" => {
+                    outputs.push(f32_spec(
+                        format!("{ext}/{li}/A"),
+                        vec![din, din],
+                    ));
+                    outputs.push(f32_spec(
+                        format!("{ext}/{li}/B"),
+                        vec![dout, dout],
+                    ));
+                    outputs.push(f32_spec(
+                        format!("{ext}/{li}/bias_ggn"),
+                        vec![dout, dout],
+                    ));
+                }
+                other => unreachable!("validated extension {other}"),
+            }
+        }
+    }
+
+    ArtifactSpec {
+        name: artifact.to_string(),
+        file: format!("native://{artifact}"),
+        model: model.name.clone(),
+        side: 0,
+        batch_size: batch,
+        extensions: extensions.to_vec(),
+        kind: "train".to_string(),
+        has_key,
+        num_classes: model.classes,
+        in_shape: vec![model.in_dim],
+        inputs,
+        outputs,
+    }
+}
+
+fn eval_spec(model: &Model, artifact: &str, batch: usize)
+    -> ArtifactSpec {
+    let mut inputs = model.param_specs();
+    inputs.extend(data_inputs(model, batch, false));
+    ArtifactSpec {
+        name: artifact.to_string(),
+        file: format!("native://{artifact}"),
+        model: model.name.clone(),
+        side: 0,
+        batch_size: batch,
+        extensions: Vec::new(),
+        kind: "eval".to_string(),
+        has_key: false,
+        num_classes: model.classes,
+        in_shape: vec![model.in_dim],
+        inputs,
+        outputs: vec![
+            f32_spec("loss".to_string(), vec![]),
+            f32_spec("accuracy".to_string(), vec![]),
+        ],
+    }
+}
+
+/// A synthesized computation bound to its model.
+pub struct NativeExec {
+    spec: ArtifactSpec,
+    model: Model,
+}
+
+impl Exec for NativeExec {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Outputs> {
+        super::validate_inputs(&self.spec, inputs)?;
+        let p = self.spec.param_inputs().len();
+        let params = &inputs[..p];
+        let (x, y) = (&inputs[p], &inputs[p + 1]);
+        let key = if self.spec.has_key {
+            let k = inputs[p + 2].u32s()?;
+            Some([k[0], k[1]])
+        } else {
+            None
+        };
+        let start = Instant::now();
+        let map = match self.spec.kind.as_str() {
+            "eval" => self.model.evaluate(params, x, y)?,
+            _ => self.model.extended_backward(
+                params, x, y, &self.spec.extensions, key,
+            )?,
+        };
+        Ok(Outputs::new(map, start.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::train::{build_inputs, init_params};
+    use crate::data::{DatasetSpec, Synthetic};
+
+    fn logreg_batch(n: usize, seed: u64) -> (Tensor, Tensor) {
+        let ds = Synthetic::new(
+            DatasetSpec::by_name("mnist").unwrap(), seed);
+        let idx: Vec<usize> = (0..n).collect();
+        let (x, y) = ds.batch(0, &idx);
+        (Tensor::from_f32(&[n, 784], x), Tensor::from_i32(&[n], y))
+    }
+
+    #[test]
+    fn name_parsing() {
+        assert_eq!(split_batch("logreg_grad_n64"),
+                   Some(("logreg_grad", 64)));
+        assert_eq!(
+            split_batch("logreg_batch_grad+variance_n8"),
+            Some(("logreg_batch_grad+variance", 8))
+        );
+        assert_eq!(split_batch("logreg_grad"), None);
+        assert_eq!(split_batch("logreg_grad_nX"), None);
+        assert!(parse_sig("grad").unwrap().is_empty());
+        assert_eq!(parse_sig("kfac").unwrap(), vec!["kfac"]);
+        assert!(parse_sig("diag_h").is_err());
+        assert!(parse_sig("grad+bogus").is_err());
+    }
+
+    #[test]
+    fn resolves_registry_and_rejects_unknown() {
+        let be = NativeBackend::new();
+        assert!(be.spec("logreg_grad_n64").is_ok());
+        assert!(be.spec("mlp_diag_ggn_n32").is_ok());
+        assert!(be.spec("mlp_eval_n256").is_ok());
+        let err =
+            be.spec("3c3d_grad_n64").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+        assert!(be.spec("logreg_diag_h_n8").is_err());
+    }
+
+    #[test]
+    fn find_train_builds_the_manifest_name() {
+        let be = NativeBackend::new();
+        let name = be.find_train("logreg", 0, "kfac", 16).unwrap();
+        assert_eq!(name, "logreg_kfac_n16");
+        let spec = be.spec(&name).unwrap();
+        assert!(spec.has_key);
+        assert_eq!(spec.batch_size, 16);
+        assert!(be.find_train("logreg", 16, "grad", 16).is_err());
+        assert!(be.find_train("allcnnc", 0, "grad", 16).is_err());
+        assert!(be.find_train("logreg", 0, "diag_h", 16).is_err());
+    }
+
+    #[test]
+    fn spec_shapes_are_consistent() {
+        let be = NativeBackend::new();
+        let spec = be.spec("mlp_diag_ggn_n32").unwrap();
+        // 3 linear layers: 6 params + x + y (exact ext: no key).
+        assert_eq!(spec.inputs.len(), 8);
+        assert!(!spec.has_key);
+        // loss + per-layer (grad w/b + diag w/b).
+        assert_eq!(spec.outputs.len(), 1 + 3 * 4);
+        let spec = be.spec("mlp_kfac_n32").unwrap();
+        assert!(spec.has_key);
+        assert_eq!(spec.inputs.len(), 9);
+        assert_eq!(spec.outputs.len(), 1 + 3 * 5);
+    }
+
+    #[test]
+    fn exec_runs_and_validates_inputs() {
+        let be = NativeBackend::new();
+        let exe = be.load("logreg_grad_n16").unwrap();
+        let params = init_params(exe.spec(), 0);
+        let (x, y) = logreg_batch(16, 0);
+        let out =
+            exe.run(&build_inputs(&params, x.clone(), y, None)).unwrap();
+        let loss = out.loss().unwrap();
+        // Random init on 10 classes: loss near ln(10) ≈ 2.30.
+        assert!((1.8..3.2).contains(&loss), "loss {loss}");
+        let g = out.get("grad/0/w").unwrap();
+        assert_eq!(g.shape, vec![10, 784]);
+        assert!(g.f32s().unwrap().iter().all(|v| v.is_finite()));
+
+        // Wrong batch size rejected.
+        let (x8, y8) = logreg_batch(8, 0);
+        assert!(exe
+            .run(&build_inputs(&params, x8, y8, None))
+            .is_err());
+        // Wrong input count rejected.
+        let only_params: Vec<Tensor> =
+            params.iter().map(|p| p.tensor.clone()).collect();
+        assert!(exe.run(&only_params).is_err());
+    }
+
+    #[test]
+    fn eval_graph_reports_chance_accuracy_at_init() {
+        let be = NativeBackend::new();
+        let exe = be.load("logreg_eval_n128").unwrap();
+        let params = init_params(exe.spec(), 4);
+        let (x, y) = logreg_batch(128, 4);
+        let out = exe.run(&build_inputs(&params, x, y, None)).unwrap();
+        let acc = out.get("accuracy").unwrap().item_f32().unwrap();
+        assert!((0.0..0.35).contains(&acc), "chance-ish, got {acc}");
+    }
+
+    #[test]
+    fn mc_key_changes_mc_quantities_only() {
+        let be = NativeBackend::new();
+        let exe = be.load("logreg_diag_ggn_mc_n64").unwrap();
+        let params = init_params(exe.spec(), 2);
+        let (x, y) = logreg_batch(64, 2);
+        let out1 = exe
+            .run(&build_inputs(
+                &params, x.clone(), y.clone(), Some([1, 1])))
+            .unwrap();
+        let out2 = exe
+            .run(&build_inputs(&params, x, y, Some([2, 2])))
+            .unwrap();
+        assert_eq!(
+            out1.get("grad/0/w").unwrap(),
+            out2.get("grad/0/w").unwrap()
+        );
+        assert_ne!(
+            out1.get("diag_ggn_mc/0/w").unwrap(),
+            out2.get("diag_ggn_mc/0/w").unwrap()
+        );
+    }
+}

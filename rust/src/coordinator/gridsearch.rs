@@ -12,9 +12,9 @@ use anyhow::Result;
 
 use super::problems::Problem;
 use super::train::{train, TrainConfig};
+use crate::backend::Backend;
 use crate::coordinator::metrics::RunLog;
 use crate::optim::Hyper;
-use crate::runtime::Runtime;
 
 /// Appendix C.2 grids.
 pub const PAPER_ALPHAS: &[f32] = &[1e-4, 1e-3, 1e-2, 1e-1, 1.0];
@@ -85,7 +85,7 @@ fn uses_damping(optimizer: &str) -> bool {
 /// Run the full protocol for one (problem, optimizer).
 #[allow(clippy::too_many_arguments)]
 pub fn run_protocol(
-    rt: &Runtime,
+    be: &dyn Backend,
     problem: &Problem,
     optimizer: &str,
     preset: GridPreset,
@@ -95,6 +95,16 @@ pub fn run_protocol(
     inv_every: usize,
     verbose: bool,
 ) -> Result<GridResult> {
+    // Fail fast when the backend cannot serve this (model, optimizer)
+    // at all -- e.g. a conv problem on the native backend. Without
+    // this, every grid point's train() error would be recorded as a
+    // bogus "diverged" run before the rerun stage surfaces it.
+    let sig = crate::optim::build(optimizer, Hyper::default(), 1)?
+        .ext_signature();
+    be.find_train(
+        problem.model, problem.side, sig, problem.train_batch,
+    )?;
+
     let damped = uses_damping(optimizer);
     let mut points = Vec::new();
     for &lr in preset.alphas() {
@@ -113,7 +123,7 @@ pub fn run_protocol(
             // An optimizer failure at one grid point (e.g. a curvature
             // factor collapsing under an unstable (α, λ)) counts as a
             // diverged run, not a failed figure.
-            let pt = match train(rt, problem, &cfg) {
+            let pt = match train(be, problem, &cfg) {
                 Ok(log) => GridPoint {
                     lr,
                     damping,
@@ -173,7 +183,7 @@ pub fn run_protocol(
             log_every: (final_steps / 40).max(1),
             ..Default::default()
         };
-        reruns.push(train(rt, problem, &cfg)?);
+        reruns.push(train(be, problem, &cfg)?);
     }
     Ok(GridResult {
         optimizer: optimizer.into(),

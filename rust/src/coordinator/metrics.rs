@@ -22,8 +22,11 @@ pub struct RunLog {
     pub evals: Vec<EvalPoint>,
     pub diverged: bool,
     pub wall_time_s: f64,
-    /// Mean per-step execute time (seconds).
+    /// Mean per-step execute time (seconds), averaged over the steps
+    /// actually executed.
     pub step_time_s: f64,
+    /// Steps actually executed (< the configured count on divergence).
+    pub steps_run: usize,
 }
 
 impl RunLog {

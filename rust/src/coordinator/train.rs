@@ -1,6 +1,7 @@
 //! The training loop: parameters live host-side; every step executes
-//! one AOT artifact (gradient + the optimizer's curvature quantities)
-//! and applies the update in Rust. Python is never on this path.
+//! one training graph (gradient + the optimizer's curvature
+//! quantities) through the active [`Backend`] and applies the update
+//! in Rust. Python is never on this path.
 
 use std::time::Instant;
 
@@ -8,9 +9,10 @@ use anyhow::{Context, Result};
 
 use super::metrics::{EvalPoint, RunLog};
 use super::problems::Problem;
+use crate::backend::{Backend, Exec};
 use crate::data::{Batcher, Rng};
 use crate::optim::{self, Hyper, NamedParam};
-use crate::runtime::{ArtifactSpec, Init, Runtime, Tensor};
+use crate::runtime::{ArtifactSpec, Init, Tensor};
 
 /// Configuration of one training run.
 #[derive(Debug, Clone)]
@@ -44,8 +46,8 @@ impl Default for TrainConfig {
     }
 }
 
-/// Initialize parameters per the manifest's recorded init rules
-/// (uniform fan-in bounds for weights, zeros for biases), seeded.
+/// Initialize parameters per the spec's recorded init rules (uniform
+/// fan-in bounds for weights, zeros for biases), seeded.
 pub fn init_params(spec: &ArtifactSpec, seed: u64) -> Vec<NamedParam> {
     let mut rng = Rng::new(seed ^ 0x1417);
     spec.param_inputs()
@@ -84,20 +86,20 @@ pub fn build_inputs(
 }
 
 /// Run one training configuration; returns the metric log.
-pub fn train(rt: &Runtime, problem: &Problem, cfg: &TrainConfig)
+pub fn train(be: &dyn Backend, problem: &Problem, cfg: &TrainConfig)
     -> Result<RunLog> {
     let mut opt = optim::build(&cfg.optimizer, cfg.hyper, cfg.inv_every)?;
-    let spec = rt.manifest.find_train(
+    let artifact = be.find_train(
         problem.model,
         problem.side,
         opt.ext_signature(),
         problem.train_batch,
     )?;
-    let exe = rt.load(&spec.name)?;
-    let eval_exe = rt.load(problem.eval_artifact)?;
-    let has_key = spec.has_key;
+    let exe = be.load(&artifact)?;
+    let eval_exe = be.load(problem.eval_artifact)?;
+    let has_key = exe.spec().has_key;
 
-    let mut params = init_params(&exe.spec, cfg.seed);
+    let mut params = init_params(exe.spec(), cfg.seed);
     let dataset = problem.make_dataset(0xDA7A5E_u64)?;
     let mut batcher =
         Batcher::new(dataset, problem.train_batch, cfg.seed);
@@ -105,6 +107,7 @@ pub fn train(rt: &Runtime, problem: &Problem, cfg: &TrainConfig)
     let mut log = RunLog::default();
     let start = Instant::now();
     let mut exec_total = 0.0f64;
+    let mut steps_run = 0usize;
 
     for step in 0..cfg.steps {
         let (x, y) = batcher.next_batch();
@@ -113,6 +116,7 @@ pub fn train(rt: &Runtime, problem: &Problem, cfg: &TrainConfig)
         let inputs = build_inputs(&params, x, y, key);
         let out = exe.run(&inputs).context("train step")?;
         exec_total += out.exec_time.as_secs_f64();
+        steps_run += 1;
         let loss = out.loss()?;
         if !loss.is_finite() {
             log.diverged = true;
@@ -125,7 +129,8 @@ pub fn train(rt: &Runtime, problem: &Problem, cfg: &TrainConfig)
             log.train_loss.push((step, loss));
         }
         if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
-            let ev = evaluate(&eval_exe, &params, &mut batcher, step)?;
+            let ev =
+                evaluate(eval_exe.as_ref(), &params, &mut batcher, step)?;
             if cfg.verbose {
                 eprintln!(
                     "  step {step:4} loss {loss:.4} \
@@ -138,19 +143,22 @@ pub fn train(rt: &Runtime, problem: &Problem, cfg: &TrainConfig)
         opt.step(&mut params, &out)?;
     }
     log.wall_time_s = start.elapsed().as_secs_f64();
-    log.step_time_s = exec_total / cfg.steps.max(1) as f64;
+    // Average over the steps actually executed: an early divergence
+    // break must not dilute the per-step time.
+    log.steps_run = steps_run;
+    log.step_time_s = exec_total / steps_run.max(1) as f64;
     Ok(log)
 }
 
-/// Held-out evaluation: average the eval artifact over two windows of
+/// Held-out evaluation: average the eval graph over two windows of
 /// the test split.
 pub fn evaluate(
-    eval_exe: &crate::runtime::Executable,
+    eval_exe: &dyn Exec,
     params: &[NamedParam],
     batcher: &mut Batcher,
     step: usize,
 ) -> Result<EvalPoint> {
-    let n = eval_exe.spec.batch_size;
+    let n = eval_exe.spec().batch_size;
     let mut loss = 0.0;
     let mut acc = 0.0;
     let windows = 2;

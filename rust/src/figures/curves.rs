@@ -6,12 +6,12 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::coordinator::gridsearch::{run_protocol, GridPreset};
 use crate::coordinator::metrics::{
     aggregate, markdown_table, write_csv,
 };
 use crate::coordinator::problems;
-use crate::runtime::Runtime;
 
 /// Budget knobs for a curves figure (CPU-scaled; DESIGN.md §3).
 #[derive(Debug, Clone, Copy)]
@@ -29,7 +29,7 @@ pub struct CurveBudget {
 /// `results/<figure>_<optimizer>.csv` (training-loss and test-accuracy
 /// quartile series) plus a summary table.
 pub fn run_curves(
-    rt: &Runtime,
+    be: &dyn Backend,
     figure: &str,
     problem_name: &str,
     optimizers: &[&str],
@@ -52,7 +52,7 @@ pub fn run_curves(
             continue;
         }
         let res = run_protocol(
-            rt, problem, opt, budget.preset, budget.search_steps,
+            be, problem, opt, budget.preset, budget.search_steps,
             budget.final_steps, budget.seeds, budget.inv_every, verbose,
         )?;
         // quartile series over seeds

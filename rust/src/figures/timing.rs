@@ -10,22 +10,23 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::backend::{Backend, Exec};
 use crate::bench::{bench, fmt_time, Stats};
 use crate::coordinator::metrics::{markdown_table, write_csv};
 use crate::coordinator::train::{build_inputs, init_params};
 use crate::data::{DatasetSpec, Synthetic};
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::Tensor;
 
 /// Time one artifact on a fixed synthetic batch; returns stats.
 pub fn time_artifact(
-    rt: &Runtime,
+    be: &dyn Backend,
     name: &str,
     dataset: &str,
     iters: usize,
     budget_s: f64,
 ) -> Result<Stats> {
-    let exe = rt.load(name)?;
-    let spec = &exe.spec;
+    let exe = be.load(name)?;
+    let spec = exe.spec().clone();
     let n = spec.batch_size;
     let ds = Synthetic::new(
         DatasetSpec::by_name(dataset)
@@ -43,7 +44,7 @@ pub fn time_artifact(
         .clone();
     let x = Tensor::from_f32(&x_shape, xv);
     let y = Tensor::from_i32(&[n], yv);
-    let params = init_params(spec, 0);
+    let params = init_params(&spec, 0);
     let key = spec.has_key.then_some([1u32, 2u32]);
     let inputs = build_inputs(&params, x, y, key);
     // compile+first-run outside the measurement
@@ -61,15 +62,15 @@ pub fn time_artifact(
 
 /// Fig. 3: computing individual gradients -- for-loop (N separate
 /// batch-1 passes) vs vectorized BatchGrad vs plain gradient.
-pub fn fig3(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
+pub fn fig3(be: &dyn Backend, iters: usize, out_dir: &Path) -> Result<()> {
     println!("== Fig. 3: individual gradients, 3c3d/CIFAR-10 ==");
-    let loop1 = time_artifact(rt, "3c3d_grad_n1", "cifar10", iters, 20.0)?;
+    let loop1 = time_artifact(be, "3c3d_grad_n1", "cifar10", iters, 20.0)?;
     let mut rows = Vec::new();
     for n in [4usize, 16, 32] {
         let grad = time_artifact(
-            rt, &format!("3c3d_grad_n{n}"), "cifar10", iters, 20.0)?;
+            be, &format!("3c3d_grad_n{n}"), "cifar10", iters, 20.0)?;
         let bg = time_artifact(
-            rt, &format!("3c3d_batch_grad_n{n}"), "cifar10", iters, 30.0)?;
+            be, &format!("3c3d_batch_grad_n{n}"), "cifar10", iters, 30.0)?;
         let forloop = loop1.p50 * n as f64;
         rows.push(vec![
             n.to_string(),
@@ -117,7 +118,7 @@ const FIG6_ALLCNNC: &[(&str, &str)] = &[
 ];
 
 /// Fig. 6: overhead of gradient + extension vs gradient alone.
-pub fn fig6(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
+pub fn fig6(be: &dyn Backend, iters: usize, out_dir: &Path) -> Result<()> {
     for (title, dataset, table) in [
         ("3c3d / CIFAR-10 (N=64)", "cifar10", FIG6_3C3D),
         ("All-CNN-C / CIFAR-100 32x32 (N=16)", "cifar100_32",
@@ -127,7 +128,7 @@ pub fn fig6(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
         let mut rows = Vec::new();
         let mut grad_time = None;
         for (label, artifact) in table {
-            let s = time_artifact(rt, artifact, dataset, iters, 45.0)?;
+            let s = time_artifact(be, artifact, dataset, iters, 45.0)?;
             let g = *grad_time.get_or_insert(s.p50);
             rows.push(vec![
                 label.to_string(),
@@ -148,7 +149,7 @@ pub fn fig6(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
 
 /// Fig. 8: KFLR / DiagGGN propagate C=100x more information than
 /// KFAC / DiagGGN-MC on CIFAR-100 -- expect ~two orders of magnitude.
-pub fn fig8(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
+pub fn fig8(be: &dyn Backend, iters: usize, out_dir: &Path) -> Result<()> {
     println!("== Fig. 8: exact vs MC propagation, All-CNN-C C=100 (N=8) ==");
     let table = [
         ("grad", "allcnnc32_grad_n8"),
@@ -161,7 +162,7 @@ pub fn fig8(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
     let mut grad_time = None;
     let mut mc: Option<(String, f64)> = None;
     for (label, artifact) in table {
-        let s = time_artifact(rt, artifact, "cifar100_32", iters, 120.0)?;
+        let s = time_artifact(be, artifact, "cifar100_32", iters, 120.0)?;
         let g = *grad_time.get_or_insert(s.p50);
         let vs_mc = match (label, &mc) {
             ("diag_ggn", Some((_, t))) | ("kflr", Some((_, t))) => {
@@ -188,7 +189,7 @@ pub fn fig8(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
 
 /// Fig. 9: Hessian diagonal vs GGN diagonal when the network has one
 /// sigmoid (residual propagation makes DiagH much more expensive).
-pub fn fig9(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
+pub fn fig9(be: &dyn Backend, iters: usize, out_dir: &Path) -> Result<()> {
     println!("== Fig. 9: DiagH vs DiagGGN, 3c3d+sigmoid (N=8) ==");
     let table = [
         ("grad", "3c3d_sigmoid_grad_n8"),
@@ -199,7 +200,7 @@ pub fn fig9(rt: &Runtime, iters: usize, out_dir: &Path) -> Result<()> {
     let mut grad_time = None;
     let mut ggn_time = None;
     for (label, artifact) in table {
-        let s = time_artifact(rt, artifact, "cifar10", iters, 120.0)?;
+        let s = time_artifact(be, artifact, "cifar10", iters, 120.0)?;
         let g = *grad_time.get_or_insert(s.p50);
         if label == "diag_ggn" {
             ggn_time = Some(s.p50);

@@ -2,9 +2,16 @@
 //! (Dangel, Kunstner & Hennig, ICLR 2020) on a Rust + JAX + Pallas stack.
 //!
 //! Layer 3 of the three-layer architecture (see DESIGN.md): a training
-//! and benchmarking coordinator that executes AOT-lowered HLO artifacts
-//! (produced once by `python/compile/aot.py`) through the PJRT C API.
-//! Python never runs on the training path.
+//! and benchmarking coordinator that executes training graphs through
+//! a pluggable [`backend::Backend`]:
+//!
+//! * **native** (default) -- forward + generalized backward pass with
+//!   every BackPACK first- and second-order extension in pure Rust,
+//!   zero external dependencies;
+//! * **pjrt** (cargo feature `pjrt`) -- AOT-lowered HLO artifacts
+//!   (produced once by `python/compile/aot.py`) executed through the
+//!   PJRT C API. Python never runs on the training path.
+pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

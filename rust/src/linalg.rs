@@ -163,6 +163,55 @@ impl Cholesky {
     }
 }
 
+/// Dense `C = Aᵀ B` with a shared leading (batch) axis: A is [n, p],
+/// B is [n, q], C is [p, q] -- the contraction the native backend's
+/// gradient/factor extractions reduce to (mirror of the Python
+/// `ops.matmul_tn` kernel). Row-major-friendly: inner loops stream
+/// rows of B and C.
+pub fn matmul_tn(
+    a: &[f32], b: &[f32], n: usize, p: usize, q: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), n * p);
+    assert_eq!(b.len(), n * q);
+    let mut c = vec![0.0f32; p * q];
+    for s in 0..n {
+        let (ra, rb) = (s * p, s * q);
+        for i in 0..p {
+            let av = a[ra + i];
+            if av != 0.0 {
+                let rc = i * q;
+                for j in 0..q {
+                    c[rc + j] += av * b[rb + j];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Dense `C = A Bᵀ` (row-major, [p,n]x[q,n] -> [p,q]): rows of both
+/// operands are contracted as dot products.
+pub fn matmul_nt(
+    a: &[f32], b: &[f32], p: usize, n: usize, q: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), p * n);
+    assert_eq!(b.len(), q * n);
+    let mut c = vec![0.0f32; p * q];
+    for i in 0..p {
+        let ra = i * n;
+        for j in 0..q {
+            let rb = j * n;
+            let s: f32 = a[ra..ra + n]
+                .iter()
+                .zip(&b[rb..rb + n])
+                .map(|(x, y)| x * y)
+                .sum();
+            c[i * q + j] = s;
+        }
+    }
+    c
+}
+
 /// Dense `C = A B` (row-major, [p,q]x[q,r]); used by tests & examples.
 pub fn matmul(a: &[f32], b: &[f32], p: usize, q: usize, r: usize) -> Vec<f32> {
     let mut c = vec![0.0f32; p * r];
@@ -268,6 +317,40 @@ mod tests {
         let back = matmul(&x, &a.a, 3, 7, 7);
         for (u, v) in back.iter().zip(&b) {
             assert!((u - v).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_plain_matmul() {
+        let mut rng = Rng::new(9);
+        let (n, p, q) = (5, 3, 4);
+        let a: Vec<f32> = (0..n * p).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
+        // Aᵀ B via explicit transpose + matmul.
+        let mut at = vec![0.0f32; p * n];
+        for s in 0..n {
+            for i in 0..p {
+                at[i * n + s] = a[s * p + i];
+            }
+        }
+        let want = matmul(&at, &b, p, n, q);
+        let got = matmul_tn(&a, &b, n, p, q);
+        for (u, v) in got.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-5);
+        }
+        // A Bᵀ via explicit transpose + matmul.
+        let c: Vec<f32> = (0..p * n).map(|_| rng.normal()).collect();
+        let d: Vec<f32> = (0..q * n).map(|_| rng.normal()).collect();
+        let mut dt = vec![0.0f32; n * q];
+        for j in 0..q {
+            for s in 0..n {
+                dt[s * q + j] = d[j * n + s];
+            }
+        }
+        let want = matmul(&c, &dt, p, n, q);
+        let got = matmul_nt(&c, &d, p, n, q);
+        for (u, v) in got.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-5);
         }
     }
 

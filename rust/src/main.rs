@@ -1,39 +1,47 @@
 //! `backpack` -- the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   list                         show available AOT artifacts
+//!   list                         show artifacts the backend serves
 //!   train    --problem P --opt O train one configuration
 //!   fig3|fig6|fig8|fig9          timing figure regenerators
 //!   fig7a|fig7b|fig10|fig11      optimizer-comparison figures
 //!   table3                       problem zoo + parameter checksums
 //!   table4   --problem P         grid-search best hyperparameters
 //!
-//! Everything executes AOT artifacts from `artifacts/` (see `make
-//! artifacts`); results land in `results/*.csv`.
+//! Everything executes through a pluggable backend (`--backend
+//! native|pjrt`, default `native`): the native backend synthesizes
+//! pure-Rust training graphs on demand; the pjrt backend (cargo
+//! feature `pjrt`) runs AOT artifacts from `artifacts/` (see `make
+//! artifacts`). Results land in `results/*.csv`.
 
 use std::path::Path;
 
 use anyhow::Result;
 
+use backpack_rs::backend::{self, Backend as _};
 use backpack_rs::cli::Args;
 use backpack_rs::coordinator::gridsearch::GridPreset;
 use backpack_rs::coordinator::metrics::write_csv;
 use backpack_rs::coordinator::{problems, train, TrainConfig};
 use backpack_rs::figures::{curves, tables, timing};
 use backpack_rs::optim::Hyper;
-use backpack_rs::runtime::Runtime;
 
 const USAGE: &str = "\
-usage: backpack SUBCOMMAND [flags]
+usage: backpack SUBCOMMAND [--backend native|pjrt] [flags]
   list
-  train  --problem mnist_logreg --opt kfac [--lr 0.01] [--damping 0.01]
-         [--steps 200] [--seed 0] [--eval-every 25] [--inv-every 1]
-         [--verbose]
+  train  --problem mnist_logreg --optimizer kfac [--lr 0.01]
+         [--damping 0.01] [--steps 200] [--seed 0] [--eval-every 25]
+         [--inv-every 1] [--verbose]
   fig3 | fig6 | fig8 | fig9      [--iters 10]
   fig7a | fig7b | fig10 | fig11  [--grid small|paper]
          [--search-steps N] [--steps N] [--seeds K] [--verbose]
   table3
   table4 --problem mnist_logreg  [--grid paper|small] [...]
+
+The default `native` backend serves the fully-connected problems
+(mnist_logreg, mnist_mlp) with zero external dependencies; the
+convolutional problems and timing figures need `--backend pjrt`
+(build with `--features pjrt` and run `make artifacts` first).
 ";
 
 fn grid_preset(args: &Args) -> Result<GridPreset> {
@@ -54,11 +62,12 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let rt = Runtime::open_default()?;
+    let be = backend::open(args.get_or("backend", "native"))?;
+    let be = be.as_ref();
     match args.subcommand.as_str() {
         "list" => {
-            for name in rt.artifact_names() {
-                let a = rt.manifest.get(&name)?;
+            for name in be.artifact_names() {
+                let a = be.spec(&name)?;
                 println!(
                     "{name:48} kind={:5} n={:3} outputs={}",
                     a.kind, a.batch_size, a.outputs.len()
@@ -68,9 +77,13 @@ fn main() -> Result<()> {
         "train" => {
             let problem = problems::by_name(
                 args.get_or("problem", "mnist_logreg"))?;
+            let optimizer = args
+                .flag("optimizer")
+                .or_else(|| args.flag("opt"))
+                .unwrap_or("sgd");
             let cfg = TrainConfig {
                 problem: problem.codename.into(),
-                optimizer: args.get_or("opt", "sgd").into(),
+                optimizer: optimizer.into(),
                 hyper: Hyper {
                     lr: args.get_f32("lr", 0.01)?,
                     damping: args.get_f32("damping", 0.01)?,
@@ -83,7 +96,7 @@ fn main() -> Result<()> {
                 log_every: args.get_usize("log-every", 5)?,
                 verbose: args.has("verbose"),
             };
-            let log = train::train(&rt, problem, &cfg)?;
+            let log = train::train(be, problem, &cfg)?;
             println!(
                 "final train loss {:.4}, test acc {:.3}, \
                  {:.1}s total, {:.1}ms/step exec{}",
@@ -106,13 +119,13 @@ fn main() -> Result<()> {
             println!("wrote {}", path.display());
         }
         "fig3" => timing::fig3(
-            &rt, args.get_usize("iters", 10)?, out_dir)?,
+            be, args.get_usize("iters", 10)?, out_dir)?,
         "fig6" => timing::fig6(
-            &rt, args.get_usize("iters", 10)?, out_dir)?,
+            be, args.get_usize("iters", 10)?, out_dir)?,
         "fig8" => timing::fig8(
-            &rt, args.get_usize("iters", 5)?, out_dir)?,
+            be, args.get_usize("iters", 5)?, out_dir)?,
         "fig9" => timing::fig9(
-            &rt, args.get_usize("iters", 5)?, out_dir)?,
+            be, args.get_usize("iters", 5)?, out_dir)?,
         fig @ ("fig7a" | "fig7b" | "fig10" | "fig11") => {
             let (problem, opts) = curves::figure_spec(fig).unwrap();
             let heavy = fig == "fig7b";
@@ -126,14 +139,14 @@ fn main() -> Result<()> {
                 inv_every: args.get_usize(
                     "inv-every", if fig == "fig10" { 1 } else { 10 })?,
             };
-            curves::run_curves(&rt, fig, problem, opts, budget, out_dir,
+            curves::run_curves(be, fig, problem, opts, budget, out_dir,
                                args.has("verbose"))?;
         }
-        "table3" => tables::table3(&rt, out_dir)?,
+        "table3" => tables::table3(be, out_dir)?,
         "table4" => {
             let problem = args.get_or("problem", "mnist_logreg");
             tables::table4(
-                &rt,
+                be,
                 problem,
                 grid_preset(&args)?,
                 args.get_usize("search-steps", 80)?,

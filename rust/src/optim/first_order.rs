@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use super::{Hyper, NamedParam, Optimizer};
-use crate::runtime::Outputs;
+use crate::backend::Outputs;
 
 /// Plain SGD: θ ← θ − α(∇L + ηθ).
 pub struct Sgd {

@@ -20,7 +20,7 @@ use anyhow::{Context, Result};
 
 use super::{Hyper, NamedParam, Optimizer};
 use crate::linalg::{Cholesky, SymMat};
-use crate::runtime::Outputs;
+use crate::backend::Outputs;
 
 /// Cholesky with escalating jitter: PSD curvature + damping is PD in
 /// exact arithmetic, but f32 accumulation error on near-singular

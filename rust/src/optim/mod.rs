@@ -11,7 +11,8 @@ pub mod precond;
 
 use anyhow::Result;
 
-use crate::runtime::{Outputs, Tensor};
+use crate::backend::Outputs;
+use crate::runtime::Tensor;
 
 /// A model parameter: manifest name ("param/{layer}/{w|b}") + value.
 #[derive(Debug, Clone)]

@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use super::{Hyper, NamedParam, Optimizer};
-use crate::runtime::Outputs;
+use crate::backend::Outputs;
 
 pub struct DiagPrecond {
     h: Hyper,

@@ -4,53 +4,24 @@
 //! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
 //! Compiled executables are cached per artifact name for the process
 //! lifetime; artifacts are compiled lazily on first use.
+//!
+//! This whole module sits behind the `pjrt` cargo feature; it is one
+//! of the two implementations of the `backend::Backend` /
+//! `backend::Exec` trait pair (the other is the dependency-free
+//! `backend::native`).
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
 use super::tensor::Tensor;
-
-/// Named outputs of one artifact execution.
-#[derive(Debug)]
-pub struct Outputs {
-    map: BTreeMap<String, Tensor>,
-    /// Device wall-clock of the execute call (excludes literal upload).
-    pub exec_time: Duration,
-}
-
-impl Outputs {
-    pub fn get(&self, name: &str) -> Result<&Tensor> {
-        self.map
-            .get(name)
-            .with_context(|| format!("no output {name:?}"))
-    }
-
-    pub fn loss(&self) -> Result<f32> {
-        self.get("loss")?.item_f32()
-    }
-
-    pub fn names(&self) -> impl Iterator<Item = &String> {
-        self.map.keys()
-    }
-
-    /// All outputs under a `prefix/` (e.g. "grad", "kfac"), keyed by the
-    /// remainder of the name.
-    pub fn with_prefix(&self, prefix: &str) -> BTreeMap<&str, &Tensor> {
-        let pat = format!("{prefix}/");
-        self.map
-            .iter()
-            .filter(|(k, _)| k.starts_with(&pat))
-            .map(|(k, v)| (&k[pat.len()..], v))
-            .collect()
-    }
-}
+use crate::backend::{Backend, Exec, Outputs};
 
 /// A compiled artifact bound to its spec.
 pub struct Executable {
@@ -61,22 +32,9 @@ pub struct Executable {
 impl Executable {
     /// Execute with inputs in manifest order; returns named outputs.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Outputs> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "artifact {}: got {} inputs, expected {}",
-                self.spec.name,
-                inputs.len(),
-                self.spec.inputs.len()
-            );
-        }
+        crate::backend::validate_inputs(&self.spec, inputs)?;
         let mut lits = Vec::with_capacity(inputs.len());
-        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
-            if t.shape != spec.shape {
-                bail!(
-                    "artifact {} input {}: shape {:?} != expected {:?}",
-                    self.spec.name, spec.name, t.shape, spec.shape
-                );
-            }
+        for t in inputs {
             lits.push(t.to_literal()?);
         }
         let start = Instant::now();
@@ -100,7 +58,17 @@ impl Executable {
                 Tensor::from_literal(lit, &spec.shape, &spec.dtype)?,
             );
         }
-        Ok(Outputs { map, exec_time })
+        Ok(Outputs::new(map, exec_time))
+    }
+}
+
+impl Exec for Executable {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Outputs> {
+        Executable::run(self, inputs)
     }
 }
 
@@ -153,5 +121,38 @@ impl Runtime {
 
     pub fn artifact_names(&self) -> Vec<String> {
         self.manifest.artifacts.keys().cloned().collect()
+    }
+}
+
+impl Backend for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn spec(&self, artifact: &str) -> Result<ArtifactSpec> {
+        Ok(self.manifest.get(artifact)?.clone())
+    }
+
+    fn load(&self, artifact: &str) -> Result<Rc<dyn Exec>> {
+        let exe: Rc<dyn Exec> = Runtime::load(self, artifact)?;
+        Ok(exe)
+    }
+
+    fn find_train(
+        &self,
+        model: &str,
+        side: usize,
+        ext_sig: &str,
+        batch: usize,
+    ) -> Result<String> {
+        Ok(self
+            .manifest
+            .find_train(model, side, ext_sig, batch)?
+            .name
+            .clone())
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        Runtime::artifact_names(self)
     }
 }

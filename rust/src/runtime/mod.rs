@@ -1,9 +1,17 @@
-//! PJRT runtime layer: manifest-described AOT artifacts, compiled once,
-//! executed from the training/benchmark hot path.
+//! Runtime substrate: host tensors, the artifact manifest contract,
+//! and (behind the `pjrt` cargo feature) the PJRT execution client.
+//!
+//! `manifest` and `tensor` are backend-agnostic -- the native backend
+//! synthesizes `ArtifactSpec`s with the same schema aot.py records --
+//! so they build with zero external dependencies. Only `client`
+//! touches the `xla` crate.
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 pub mod tensor;
 
-pub use client::{Executable, Outputs, Runtime};
+#[cfg(feature = "pjrt")]
+pub use client::{Executable, Runtime};
+pub use crate::backend::Outputs;
 pub use manifest::{ArtifactSpec, Init, Manifest, TensorSpec};
 pub use tensor::{numel, Tensor, TensorData};

@@ -73,6 +73,13 @@ impl Tensor {
         }
     }
 
+    pub fn u32s(&self) -> Result<&[u32]> {
+        match &self.data {
+            TensorData::U32(v) => Ok(v),
+            other => bail!("expected u32 tensor, got {other:?}"),
+        }
+    }
+
     /// Scalar convenience (0-d or 1-element tensors).
     pub fn item_f32(&self) -> Result<f32> {
         let v = self.f32s()?;
@@ -83,6 +90,7 @@ impl Tensor {
     }
 
     /// Convert to an XLA literal of matching element type and shape.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -94,6 +102,7 @@ impl Tensor {
     }
 
     /// Read back from an XLA literal.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, shape: &[usize],
                         dtype: &str) -> Result<Tensor> {
         Ok(match dtype {

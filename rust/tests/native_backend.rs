@@ -1,0 +1,452 @@
+//! Integration tests for the native execution backend: the full path
+//! manifest-style name -> synthesized spec -> init -> execute ->
+//! quantity extraction -> optimizer update, with no artifacts and no
+//! XLA. The math checks mirror the paper's Table 1 identities and
+//! finite-difference oracles (the role python/tests/ plays for the
+//! PJRT artifacts).
+
+use backpack_rs::backend::layers::Layer;
+use backpack_rs::backend::model::Model;
+use backpack_rs::backend::native::NativeBackend;
+use backpack_rs::backend::{Backend, Exec, Outputs};
+use backpack_rs::coordinator::train::{build_inputs, init_params};
+use backpack_rs::coordinator::{problems, train, TrainConfig};
+use backpack_rs::data::Rng;
+use backpack_rs::optim::{Hyper, NamedParam};
+use backpack_rs::runtime::Tensor;
+
+/// Registry with a small sigmoid MLP (smooth: finite differences are
+/// well-behaved) and a tiny linear model (GGN == Hessian exactly).
+fn backend_with_test_models() -> NativeBackend {
+    let mut be = NativeBackend::new();
+    be.register(
+        Model::new(
+            "tinymlp",
+            6,
+            vec![
+                Layer::Linear { in_dim: 6, out_dim: 5 },
+                Layer::Sigmoid,
+                Layer::Linear { in_dim: 5, out_dim: 3 },
+            ],
+        )
+        .unwrap(),
+    );
+    be.register(
+        Model::new(
+            "tinylin",
+            6,
+            vec![Layer::Linear { in_dim: 6, out_dim: 4 }],
+        )
+        .unwrap(),
+    );
+    be
+}
+
+fn random_batch(n: usize, dim: usize, classes: usize, seed: u64)
+    -> (Tensor, Tensor) {
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal()).collect();
+    let y: Vec<i32> =
+        (0..n).map(|_| rng.below(classes) as i32).collect();
+    (Tensor::from_f32(&[n, dim], x), Tensor::from_i32(&[n], y))
+}
+
+fn run_at(
+    exe: &dyn Exec,
+    params: &[NamedParam],
+    x: &Tensor,
+    y: &Tensor,
+) -> Outputs {
+    exe.run(&build_inputs(params, x.clone(), y.clone(), None))
+        .expect("execute")
+}
+
+/// Acceptance check: native `grad/*` matches central finite
+/// differences of the loss within 1e-3 relative error on the test MLP.
+#[test]
+fn grad_matches_finite_differences_on_test_mlp() {
+    let be = backend_with_test_models();
+    let exe = be.load("tinymlp_grad_n8").unwrap();
+    let mut params = init_params(exe.spec(), 1);
+    let (x, y) = random_batch(8, 6, 3, 1);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    let eps = 1e-2f32;
+    for pi in 0..params.len() {
+        let gname = params[pi].under("grad");
+        let g = out.get(&gname).unwrap().f32s().unwrap().to_vec();
+        for idx in 0..params[pi].tensor.numel() {
+            let orig = params[pi].tensor.f32s().unwrap()[idx];
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig + eps;
+            let lp = run_at(exe.as_ref(), &params, &x, &y)
+                .loss()
+                .unwrap();
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig - eps;
+            let lm = run_at(exe.as_ref(), &params, &x, &y)
+                .loss()
+                .unwrap();
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let tol = 1e-3 * (1.0 + fd.abs().max(g[idx].abs()));
+            assert!(
+                (g[idx] - fd).abs() < tol,
+                "{gname}[{idx}]: analytic {} vs fd {fd}",
+                g[idx]
+            );
+        }
+    }
+}
+
+/// For a linear model with cross-entropy, the GGN *is* the Hessian:
+/// `diag_ggn` must match central finite differences of the gradient.
+#[test]
+fn diag_ggn_matches_hessian_diagonal_on_linear_model() {
+    let be = backend_with_test_models();
+    let exe = be.load("tinylin_diag_ggn_n8").unwrap();
+    let mut params = init_params(exe.spec(), 2);
+    let (x, y) = random_batch(8, 6, 4, 2);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    let eps = 1e-2f32;
+    for pi in 0..params.len() {
+        let gname = params[pi].under("grad");
+        let dname = params[pi].under("diag_ggn");
+        let diag =
+            out.get(&dname).unwrap().f32s().unwrap().to_vec();
+        for idx in 0..params[pi].tensor.numel() {
+            let orig = params[pi].tensor.f32s().unwrap()[idx];
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig + eps;
+            let gp = run_at(exe.as_ref(), &params, &x, &y);
+            let gp = gp.get(&gname).unwrap().f32s().unwrap()[idx];
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig - eps;
+            let gm = run_at(exe.as_ref(), &params, &x, &y);
+            let gm = gm.get(&gname).unwrap().f32s().unwrap()[idx];
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig;
+            let h = (gp - gm) / (2.0 * eps);
+            let tol = 1e-3 + 3e-3 * h.abs().max(diag[idx].abs());
+            assert!(
+                (diag[idx] - h).abs() < tol,
+                "{dname}[{idx}]: {} vs Hessian fd {h}",
+                diag[idx]
+            );
+        }
+    }
+}
+
+/// `diag_ggn` through nonlinear layers vs a brute-force GGN built from
+/// a finite-difference network Jacobian and the exact softmax Hessian.
+#[test]
+fn diag_ggn_matches_brute_force_ggn_on_mlp() {
+    let be = backend_with_test_models();
+    let exe = be.load("tinymlp_diag_ggn_n4").unwrap();
+    let mut params = init_params(exe.spec(), 3);
+    let (x, y) = random_batch(4, 6, 3, 3);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    let (n, c) = (4usize, 3usize);
+
+    let model = Model::new(
+        "tinymlp",
+        6,
+        vec![
+            Layer::Linear { in_dim: 6, out_dim: 5 },
+            Layer::Sigmoid,
+            Layer::Linear { in_dim: 5, out_dim: 3 },
+        ],
+    )
+    .unwrap();
+    let tensors = |ps: &[NamedParam]| -> Vec<Tensor> {
+        ps.iter().map(|p| p.tensor.clone()).collect()
+    };
+    let logits = model
+        .forward(&tensors(&params), &x)
+        .unwrap()
+        .f32s()
+        .unwrap()
+        .to_vec();
+    // Softmax probabilities -> per-sample Hessian diag(p) - p pᵀ.
+    let mut p = vec![0.0f32; n * c];
+    for s in 0..n {
+        let row = &logits[s * c..(s + 1) * c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|v| (v - m).exp()).sum();
+        for j in 0..c {
+            p[s * c + j] = (row[j] - m).exp() / z;
+        }
+    }
+
+    let eps = 1e-2f32;
+    for pi in 0..params.len() {
+        let dname = params[pi].under("diag_ggn");
+        let diag =
+            out.get(&dname).unwrap().f32s().unwrap().to_vec();
+        for idx in 0..params[pi].tensor.numel() {
+            let orig = params[pi].tensor.f32s().unwrap()[idx];
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig + eps;
+            let fp = model
+                .forward(&tensors(&params), &x)
+                .unwrap()
+                .f32s()
+                .unwrap()
+                .to_vec();
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig - eps;
+            let fm = model
+                .forward(&tensors(&params), &x)
+                .unwrap()
+                .f32s()
+                .unwrap()
+                .to_vec();
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig;
+            // Jacobian column j[s][a] = ∂f_a/∂θ_idx per sample.
+            // G_ii = (1/N) Σ_n jᵀ (diag(p) − p pᵀ) j.
+            let mut want = 0.0f32;
+            for s in 0..n {
+                let j: Vec<f32> = (0..c)
+                    .map(|a| {
+                        (fp[s * c + a] - fm[s * c + a]) / (2.0 * eps)
+                    })
+                    .collect();
+                let pj: f32 = (0..c)
+                    .map(|a| p[s * c + a] * j[a])
+                    .sum();
+                for a in 0..c {
+                    want += p[s * c + a] * j[a] * j[a];
+                }
+                want -= pj * pj;
+            }
+            want /= n as f32;
+            let tol = 1e-4 + 3e-2 * want.abs().max(diag[idx].abs());
+            assert!(
+                (diag[idx] - want).abs() < tol,
+                "{dname}[{idx}]: {} vs brute-force {want}",
+                diag[idx]
+            );
+        }
+    }
+}
+
+/// Paper Table 1 identities on one combined first-order graph:
+/// batch_grad rows sum to grad, sq_moment matches the per-sample
+/// squares, variance = sq_moment − grad², batch_l2 = ‖row‖².
+#[test]
+fn first_order_identities() {
+    let be = backend_with_test_models();
+    let exe = be
+        .load("tinymlp_batch_grad+batch_l2+sq_moment+variance_n8")
+        .unwrap();
+    let params = init_params(exe.spec(), 4);
+    let (x, y) = random_batch(8, 6, 3, 4);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    let n = 8usize;
+    for p in &params {
+        let d = p.tensor.numel();
+        let g = out.get(&p.under("grad")).unwrap().f32s().unwrap();
+        let bg = out
+            .get(&p.under("batch_grad"))
+            .unwrap()
+            .f32s()
+            .unwrap();
+        let sq =
+            out.get(&p.under("sq_moment")).unwrap().f32s().unwrap();
+        let var =
+            out.get(&p.under("variance")).unwrap().f32s().unwrap();
+        let l2 =
+            out.get(&p.under("batch_l2")).unwrap().f32s().unwrap();
+        assert_eq!(bg.len(), n * d);
+        for i in 0..d {
+            // Individual gradients are 1/N-scaled: rows sum to grad.
+            let sum: f32 = (0..n).map(|s| bg[s * d + i]).sum();
+            assert!(
+                (sum - g[i]).abs() <= 1e-6 + 1e-4 * g[i].abs(),
+                "{}: Σ_n batch_grad {sum} != grad {}",
+                p.name, g[i]
+            );
+            // 2nd moment = (1/N) Σ (∇ℓ_n)² = N Σ batch_grad².
+            let want: f32 =
+                (0..n).map(|s| bg[s * d + i].powi(2)).sum::<f32>()
+                    * n as f32;
+            assert!(
+                (sq[i] - want).abs() <= 1e-6 + 1e-3 * want.abs(),
+                "{}: sq_moment {} != {want}", p.name, sq[i]
+            );
+            // Variance identity (Table 1).
+            let wantv = sq[i] - g[i] * g[i];
+            assert!(
+                (var[i] - wantv).abs() <= 1e-6 + 1e-3 * wantv.abs(),
+                "{}: variance {} != {wantv}", p.name, var[i]
+            );
+            assert!(var[i] >= -1e-6, "variance must be >= 0");
+        }
+        for s in 0..n {
+            let want: f32 =
+                (0..d).map(|i| bg[s * d + i].powi(2)).sum();
+            assert!(
+                (l2[s] - want).abs() <= 1e-9 + 1e-3 * want.abs(),
+                "{}: batch_l2[{s}] {} != {want}", p.name, l2[s]
+            );
+        }
+    }
+}
+
+/// Kronecker factors: shapes, PSD diagonals, and (for the last linear
+/// layer) B == bias_ggn == the exact output-Hessian average that KFRA
+/// also produces there.
+#[test]
+fn kron_factors_are_consistent() {
+    let be = backend_with_test_models();
+    let exe = be.load("tinymlp_kflr+kfra_n16").unwrap();
+    let params = init_params(exe.spec(), 5);
+    let (x, y) = random_batch(16, 6, 3, 5);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    for (layer, da, db) in [(0usize, 6usize, 5usize), (2, 5, 3)] {
+        for ext in ["kflr", "kfra"] {
+            let a = out.get(&format!("{ext}/{layer}/A")).unwrap();
+            let b = out.get(&format!("{ext}/{layer}/B")).unwrap();
+            assert_eq!(a.shape, vec![da, da], "{ext}/{layer}/A");
+            assert_eq!(b.shape, vec![db, db], "{ext}/{layer}/B");
+            let av = a.f32s().unwrap();
+            for i in 0..da {
+                assert!(av[i * da + i] >= -1e-6, "{ext} A diag");
+                for j in 0..da {
+                    assert!(
+                        (av[i * da + j] - av[j * da + i]).abs() < 1e-4,
+                        "{ext} A symmetric"
+                    );
+                }
+            }
+        }
+    }
+    // At the network's last linear layer KFLR's B (exact S Sᵀ average)
+    // equals KFRA's Ḡ (exact Hessian average): both are
+    // 1/N Σ diag(p) − p pᵀ.
+    let kflr_b = out.get("kflr/2/B").unwrap().f32s().unwrap();
+    let kfra_b = out.get("kfra/2/B").unwrap().f32s().unwrap();
+    for (u, v) in kflr_b.iter().zip(kfra_b) {
+        assert!((u - v).abs() < 1e-5, "KFLR B {u} vs KFRA Ḡ {v}");
+    }
+}
+
+/// End-to-end training: every optimizer reduces the loss on
+/// mnist_logreg through the native backend (no artifacts on disk).
+#[test]
+fn training_reduces_loss_for_every_optimizer_natively() {
+    let be = NativeBackend::new();
+    let problem = problems::by_name("mnist_logreg").unwrap();
+    // The Kronecker optimizers' graphs pay a 784x784 A-factor per
+    // step (and a 784 Cholesky on refresh), which is slow in debug
+    // builds -- give them fewer, stronger steps; the cheap optimizers
+    // get enough steps to clear inter-batch loss noise.
+    for (opt, lr, damping, steps) in [
+        ("sgd", 0.1, 0.0, 25),
+        ("momentum", 0.02, 0.0, 25),
+        ("adam", 0.003, 0.0, 25),
+        ("diag_ggn", 0.01, 0.01, 25),
+        ("diag_ggn_mc", 0.01, 0.01, 25),
+        ("kfac", 0.01, 0.01, 8),
+        ("kflr", 0.01, 0.01, 8),
+        ("kfra", 0.01, 0.01, 8),
+    ] {
+        let cfg = TrainConfig {
+            problem: problem.codename.into(),
+            optimizer: opt.into(),
+            hyper: Hyper { lr, damping, l2: 0.0 },
+            steps,
+            seed: 0,
+            eval_every: steps - 1,
+            inv_every: steps,
+            log_every: steps - 1,
+            verbose: false,
+        };
+        let log = train::train(&be, problem, &cfg).unwrap();
+        assert!(!log.diverged, "{opt} diverged");
+        let first = log.train_loss.first().unwrap().1;
+        let last = log.final_train_loss();
+        assert!(
+            last < first,
+            "{opt}: loss did not decrease ({first} -> {last})"
+        );
+    }
+}
+
+/// The mnist_mlp problem (full native layer set) also trains.
+#[test]
+fn mlp_problem_trains_with_diag_ggn() {
+    let be = NativeBackend::new();
+    let problem = problems::by_name("mnist_mlp").unwrap();
+    let cfg = TrainConfig {
+        problem: problem.codename.into(),
+        optimizer: "diag_ggn".into(),
+        hyper: Hyper { lr: 0.05, damping: 0.01, l2: 0.0 },
+        steps: 15,
+        seed: 0,
+        eval_every: 14,
+        inv_every: 1,
+        log_every: 14,
+        verbose: false,
+    };
+    let log = train::train(&be, problem, &cfg).unwrap();
+    assert!(!log.diverged);
+    let first = log.train_loss.first().unwrap().1;
+    let last = log.final_train_loss();
+    assert!(last < first, "mlp loss {first} -> {last}");
+}
+
+#[test]
+fn seeds_are_reproducible_natively() {
+    let be = NativeBackend::new();
+    let problem = problems::by_name("mnist_logreg").unwrap();
+    let cfg = TrainConfig {
+        problem: problem.codename.into(),
+        optimizer: "diag_ggn".into(),
+        hyper: Hyper { lr: 0.01, damping: 0.01, l2: 0.0 },
+        steps: 8,
+        seed: 7,
+        eval_every: 7,
+        inv_every: 1,
+        log_every: 1,
+        verbose: false,
+    };
+    let a = train::train(&be, problem, &cfg).unwrap();
+    let b = train::train(&be, problem, &cfg).unwrap();
+    assert_eq!(a.train_loss, b.train_loss, "same seed, same curve");
+    let mut cfg2 = cfg.clone();
+    cfg2.seed = 8;
+    let c = train::train(&be, problem, &cfg2).unwrap();
+    assert_ne!(a.train_loss, c.train_loss, "different seed differs");
+}
+
+/// Regression test for the step-time accounting fix: when a run
+/// diverges after a couple of steps, `step_time_s` must average over
+/// the steps actually executed, not the configured step count.
+#[test]
+fn step_time_averages_over_executed_steps_on_divergence() {
+    let be = NativeBackend::new();
+    let problem = problems::by_name("mnist_logreg").unwrap();
+    let cfg = TrainConfig {
+        problem: problem.codename.into(),
+        optimizer: "sgd".into(),
+        hyper: Hyper { lr: f32::MAX, damping: 0.0, l2: 0.0 },
+        steps: 1000,
+        seed: 0,
+        eval_every: 1_000_000,
+        inv_every: 1,
+        log_every: 1,
+        verbose: false,
+    };
+    let log = train::train(&be, problem, &cfg).unwrap();
+    assert!(log.diverged, "f32::MAX learning rate must diverge");
+    assert!(
+        (1..=4).contains(&log.steps_run),
+        "diverged within a few steps, ran {}",
+        log.steps_run
+    );
+    assert!(log.train_loss.len() <= log.steps_run);
+    // Old bug: exec_total / cfg.steps -> ~500x too small. Averaging
+    // over the ~2 executed steps keeps step_time within the same
+    // order of magnitude as the wall clock per executed step. (The
+    // ratio bound only holds where exec dominates: debug builds.)
+    if cfg!(debug_assertions) {
+        assert!(
+            log.step_time_s > log.wall_time_s / 100.0,
+            "step_time_s {} vs wall {}",
+            log.step_time_s, log.wall_time_s
+        );
+    }
+}
