@@ -37,9 +37,11 @@ impl CrossEntropy {
         p
     }
 
-    /// Mean negative log-likelihood over the batch.
-    pub fn value(&self, logits: &[f32], y: &[i32], n: usize, c: usize)
-        -> f32 {
+    /// Summed (unnormalized) negative log-likelihood, f64-accumulated.
+    /// The batch-parallel engine computes this per shard and divides by
+    /// the *global* batch size, so shard results sum-reduce exactly.
+    pub fn nll_sum(&self, logits: &[f32], y: &[i32], n: usize, c: usize)
+        -> f64 {
         let mut total = 0.0f64;
         for s in 0..n {
             let row = &logits[s * c..(s + 1) * c];
@@ -48,7 +50,13 @@ impl CrossEntropy {
             let lse = m + lse.ln();
             total += (lse - row[y[s] as usize]) as f64;
         }
-        (total / n as f64) as f32
+        total
+    }
+
+    /// Mean negative log-likelihood over the batch.
+    pub fn value(&self, logits: &[f32], y: &[i32], n: usize, c: usize)
+        -> f32 {
+        (self.nll_sum(logits, y, n, c) / n as f64) as f32
     }
 
     /// Per-sample output gradient ∇_f ℓ_n = p − e_y, [N, C].
@@ -84,7 +92,11 @@ impl CrossEntropy {
     }
 
     /// Monte-Carlo factorization S̃ [N, C, M]: ŷ ~ Cat(p) per column,
-    /// `s̃ = (p − e_ŷ)/√M`. Deterministic in `key`.
+    /// `s̃ = (p − e_ŷ)/√M`. Deterministic in `key` and in each sample's
+    /// *global* batch index `base + i`: every sample owns a counter-mode
+    /// RNG stream derived from (key, index), so the draws -- and hence
+    /// every MC quantity -- are identical no matter how the batch is
+    /// sharded across threads.
     pub fn sqrt_hessian_mc(
         &self,
         logits: &[f32],
@@ -92,15 +104,17 @@ impl CrossEntropy {
         c: usize,
         key: [u32; 2],
         samples: usize,
+        base: usize,
     ) -> Vec<f32> {
         let p = self.probs(logits, n, c);
-        let mut rng = Rng::new(splitmix64(
-            ((key[0] as u64) << 32) | key[1] as u64,
-        ));
+        let keyed = splitmix64(((key[0] as u64) << 32) | key[1] as u64);
         let scale = 1.0 / (samples as f32).sqrt();
         let mut s = vec![0.0f32; n * c * samples];
         for i in 0..n {
             let pr = &p[i * c..(i + 1) * c];
+            let mut rng = Rng::new(splitmix64(
+                keyed ^ splitmix64(0x5EED ^ (base + i) as u64),
+            ));
             for m in 0..samples {
                 let u = rng.uniform();
                 let mut cum = 0.0f32;
@@ -149,9 +163,10 @@ impl CrossEntropy {
         h
     }
 
-    /// Top-1 accuracy.
-    pub fn accuracy(&self, logits: &[f32], y: &[i32], n: usize, c: usize)
-        -> f32 {
+    /// Number of top-1 hits (the shard-reducible numerator of
+    /// [`Self::accuracy`]).
+    pub fn correct(&self, logits: &[f32], y: &[i32], n: usize, c: usize)
+        -> usize {
         let mut hits = 0usize;
         for s in 0..n {
             let row = &logits[s * c..(s + 1) * c];
@@ -165,7 +180,13 @@ impl CrossEntropy {
                 hits += 1;
             }
         }
-        hits as f32 / n as f32
+        hits
+    }
+
+    /// Top-1 accuracy.
+    pub fn accuracy(&self, logits: &[f32], y: &[i32], n: usize, c: usize)
+        -> f32 {
+        self.correct(logits, y, n, c) as f32 / n as f32
     }
 }
 
@@ -230,14 +251,28 @@ mod tests {
     #[test]
     fn mc_factor_is_deterministic_per_key_and_key_sensitive() {
         let ce = CrossEntropy;
-        let a = ce.sqrt_hessian_mc(&LOGITS, 2, 3, [1, 1], 1);
-        let b = ce.sqrt_hessian_mc(&LOGITS, 2, 3, [1, 1], 1);
+        let a = ce.sqrt_hessian_mc(&LOGITS, 2, 3, [1, 1], 1, 0);
+        let b = ce.sqrt_hessian_mc(&LOGITS, 2, 3, [1, 1], 1, 0);
         assert_eq!(a, b);
         // Many samples: astronomically unlikely to draw identically.
         let big: Vec<f32> = (0..300).map(|i| (i % 7) as f32 * 0.3).collect();
-        let y = ce.sqrt_hessian_mc(&big, 100, 3, [2, 2], 1);
-        let z = ce.sqrt_hessian_mc(&big, 100, 3, [3, 3], 1);
+        let y = ce.sqrt_hessian_mc(&big, 100, 3, [2, 2], 1, 0);
+        let z = ce.sqrt_hessian_mc(&big, 100, 3, [3, 3], 1, 0);
         assert_ne!(y, z);
+    }
+
+    #[test]
+    fn mc_factor_draws_are_shard_invariant() {
+        // Computing a sub-range with the matching base offset must
+        // reproduce the full-batch draws exactly -- the property the
+        // batch-parallel engine relies on for MC extensions.
+        let ce = CrossEntropy;
+        let big: Vec<f32> =
+            (0..60).map(|i| ((i % 11) as f32 - 5.0) * 0.2).collect();
+        let full = ce.sqrt_hessian_mc(&big, 20, 3, [4, 9], 2, 0);
+        let shard = ce.sqrt_hessian_mc(&big[7 * 3..15 * 3], 8, 3,
+                                       [4, 9], 2, 7);
+        assert_eq!(&full[7 * 3 * 2..15 * 3 * 2], &shard[..]);
     }
 
     #[test]
@@ -249,7 +284,7 @@ mod tests {
         let draws: u32 = 4000;
         let mut acc = vec![0.0f64; 9];
         for k in 0..draws {
-            let s = ce.sqrt_hessian_mc(&logits, 1, 3, [k, 7], 1);
+            let s = ce.sqrt_hessian_mc(&logits, 1, 3, [k, 7], 1, 0);
             for a in 0..3 {
                 for b in 0..3 {
                     acc[a * 3 + b] +=

@@ -131,10 +131,21 @@ pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[Tensor])
     Ok(())
 }
 
-/// Construct a backend by CLI name (`--backend native|pjrt`).
+/// Construct a backend by CLI name (`--backend native|pjrt`) with
+/// auto-sized batch parallelism (all cores, `BACKPACK_THREADS`
+/// override).
 pub fn open(kind: &str) -> Result<Box<dyn Backend>> {
+    open_with(kind, 0)
+}
+
+/// [`open`] with an explicit batch-parallel worker count (`0` = auto,
+/// `1` = serial). The pjrt runtime schedules its own intra-op
+/// parallelism, so `threads` only shapes the native backend.
+pub fn open_with(kind: &str, threads: usize) -> Result<Box<dyn Backend>> {
     match kind {
-        "native" => Ok(Box::new(native::NativeBackend::new())),
+        "native" => {
+            Ok(Box::new(native::NativeBackend::with_threads(threads)))
+        }
         "pjrt" => {
             #[cfg(feature = "pjrt")]
             {

@@ -17,15 +17,41 @@
 //! All quantities follow Table 1's scaling conventions (the loss is
 //! the *mean* over the batch); the Rust integration tests assert the
 //! same identities the Python test-suite checks against autodiff.
+//!
+//! **Batch parallelism.** Every quantity above is a sum or a
+//! concatenation over the batch axis, so the engine shards the batch
+//! into contiguous ranges (`crate::parallel`) and runs the *whole*
+//! forward + backward per shard, normalizing by the **global** batch
+//! size. Reduction is extension-aware:
+//!
+//! * `loss`, `grad/*`, `sq_moment/*`, `diag_ggn*/*` and the
+//!   KFAC/KFLR/KFRA factors sum-reduce across shards;
+//! * `batch_grad/*` / `batch_l2/*` concatenate in shard (= sample)
+//!   order;
+//! * `variance/*` is computed exactly from the merged first and
+//!   second moments after the reduction;
+//! * KFRA's nonlinear `Ḡ` recursion runs once on the merged batch
+//!   averages (`A`, activation second moments, output Hessian mean);
+//! * MC draws are keyed by each sample's global index, so
+//!   `diag_ggn_mc`/`kfac` are invariant to the shard layout.
+//!
+//! Results are bit-for-bit deterministic for a fixed thread count
+//! (shards reduce in index order) and agree across thread counts to
+//! f32 summation-reordering error (≤ 1e-5; asserted by
+//! `tests/parallel_equiv.rs`).
 
 use std::collections::BTreeMap;
+use std::ops::Range;
 
 use anyhow::{bail, ensure, Result};
 
 use super::layers::Layer;
 use super::loss::CrossEntropy;
-use crate::linalg::{matmul, matmul_nt, matmul_tn};
-use crate::runtime::{Init, Tensor, TensorSpec};
+use crate::linalg::{
+    matmul, matmul_nt, matmul_par, matmul_tn, matmul_tn_par,
+};
+use crate::parallel;
+use crate::runtime::{Init, Tensor, TensorData, TensorSpec};
 
 /// Monte-Carlo rank of the DiagGGN-MC / KFAC factorization (paper: 1).
 pub const MC_SAMPLES: usize = 1;
@@ -236,17 +262,46 @@ impl Model {
     /// Logits for a batch (test/diagnostic entry point).
     pub fn forward(&self, params: &[Tensor], x: &Tensor)
         -> Result<Tensor> {
+        self.forward_threads(params, x, 1)
+    }
+
+    /// [`Model::forward`] sharded over the batch axis across
+    /// `threads` scoped threads; shard logits concatenate in sample
+    /// order.
+    pub fn forward_threads(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        threads: usize,
+    ) -> Result<Tensor> {
         let n = *x.shape.first().unwrap_or(&0);
         ensure!(
             x.shape == [n, self.in_dim],
             "x shape {:?} != [{n}, {}]", x.shape, self.in_dim
         );
         let lins = self.bind(params)?;
-        let acts = self.forward_acts(&lins, x.f32s()?, n);
-        Ok(Tensor::from_f32(
-            &[n, self.classes],
-            acts.last().expect("non-empty").clone(),
-        ))
+        let xs = x.f32s()?;
+        let work = parallel::shards(n, threads);
+        if work.len() <= 1 {
+            let mut acts = self.forward_acts(&lins, xs, n);
+            return Ok(Tensor::from_f32(
+                &[n, self.classes],
+                acts.pop().expect("non-empty"),
+            ));
+        }
+        let parts = parallel::par_map(&work, |r| {
+            let mut acts = self.forward_acts(
+                &lins,
+                &xs[r.start * self.in_dim..r.end * self.in_dim],
+                r.len(),
+            );
+            acts.pop().expect("non-empty")
+        });
+        let mut logits = Vec::with_capacity(n * self.classes);
+        for p in parts {
+            logits.extend_from_slice(&p);
+        }
+        Ok(Tensor::from_f32(&[n, self.classes], logits))
     }
 
     /// Evaluation graph payload: mean loss + accuracy.
@@ -256,20 +311,57 @@ impl Model {
         x: &Tensor,
         y: &Tensor,
     ) -> Result<BTreeMap<String, Tensor>> {
-        let logits = self.forward(params, x)?;
-        let n = x.shape[0];
-        let ys = y.i32s()?;
+        self.evaluate_threads(params, x, y, 1)
+    }
+
+    /// [`Model::evaluate`] sharded over the batch axis: shards return
+    /// (NLL sum, hit count) pairs, which reduce exactly.
+    pub fn evaluate_threads(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        threads: usize,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let n = *x.shape.first().unwrap_or(&0);
+        ensure!(
+            x.shape == [n, self.in_dim],
+            "x shape {:?} != [{n}, {}]", x.shape, self.in_dim
+        );
         ensure!(y.shape == [n], "y shape {:?} != [{n}]", y.shape);
+        let ys = y.i32s()?;
+        let xs = x.f32s()?;
+        let lins = self.bind(params)?;
+        let c = self.classes;
         let ce = CrossEntropy;
-        let lf = logits.f32s()?;
+        let parts =
+            parallel::par_map(&parallel::shards(n, threads), |r| {
+                let ns = r.len();
+                let acts = self.forward_acts(
+                    &lins,
+                    &xs[r.start * self.in_dim..r.end * self.in_dim],
+                    ns,
+                );
+                let logits = acts.last().expect("non-empty");
+                let yr = &ys[r.start..r.end];
+                (
+                    ce.nll_sum(logits, yr, ns, c),
+                    ce.correct(logits, yr, ns, c),
+                )
+            });
+        let (mut nll, mut hits) = (0.0f64, 0usize);
+        for (l, h) in parts {
+            nll += l;
+            hits += h;
+        }
         let mut out = BTreeMap::new();
         out.insert(
             "loss".to_string(),
-            Tensor::scalar_f32(ce.value(lf, ys, n, self.classes)),
+            Tensor::scalar_f32((nll / n as f64) as f32),
         );
         out.insert(
             "accuracy".to_string(),
-            Tensor::scalar_f32(ce.accuracy(lf, ys, n, self.classes)),
+            Tensor::scalar_f32(hits as f32 / n as f32),
         );
         Ok(out)
     }
@@ -284,6 +376,22 @@ impl Model {
         y: &Tensor,
         extensions: &[String],
         key: Option<[u32; 2]>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        self.extended_backward_threads(params, x, y, extensions, key, 1)
+    }
+
+    /// [`Model::extended_backward`] sharded over the batch axis across
+    /// `threads` scoped threads, with the extension-aware reduction
+    /// described in the module docs. `threads = 1` is the serial
+    /// reference path.
+    pub fn extended_backward_threads(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        extensions: &[String],
+        key: Option<[u32; 2]>,
+        threads: usize,
     ) -> Result<BTreeMap<String, Tensor>> {
         for e in extensions {
             ensure!(
@@ -305,31 +413,82 @@ impl Model {
         );
         ensure!(y.shape == [n], "y shape {:?} != [{n}]", y.shape);
         let ys = y.i32s()?;
-        let c = self.classes;
+        let xs = x.f32s()?;
         let lins = self.bind(params)?;
         let dims = self.dims();
+
+        let work = parallel::shards(n, threads);
+        let mut out = if work.len() <= 1 {
+            self.backward_range(
+                &lins, &dims, xs, ys, 0..n, n, extensions, key,
+            )?
+        } else {
+            let parts = parallel::par_map(&work, |r| {
+                self.backward_range(
+                    &lins, &dims, xs, ys, r, n, extensions, key,
+                )
+            });
+            let mut done = Vec::with_capacity(parts.len());
+            for p in parts {
+                done.push(p?);
+            }
+            merge_shard_outputs(done)?
+        };
+        self.finish_extensions(
+            &lins, &dims, extensions, threads, &mut out,
+        )?;
+        Ok(out)
+    }
+
+    /// Forward + backward over one contiguous sample range, with every
+    /// averaged quantity normalized by the **global** batch size
+    /// `total_n` (so shard outputs sum-reduce exactly) and per-sample
+    /// quantities covering only the range (so shard outputs
+    /// concatenate). The full-range call `backward_range(.., 0..n, n,
+    /// ..)` is the serial engine.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_range(
+        &self,
+        lins: &[Option<Lin>],
+        dims: &[usize],
+        xs: &[f32],
+        ys: &[i32],
+        range: Range<usize>,
+        total_n: usize,
+        extensions: &[String],
+        key: Option<[u32; 2]>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let has = |e: &str| extensions.iter().any(|x| x == e);
+        let ns = range.len();
+        let norm = total_n as f32;
+        let c = self.classes;
         let ce = CrossEntropy;
+        let x = &xs[range.start * self.in_dim..range.end * self.in_dim];
+        let y = &ys[range.start..range.end];
 
         // ---- forward pass, storing every module input --------------
-        let acts = self.forward_acts(&lins, x.f32s()?, n);
+        let acts = self.forward_acts(lins, x, ns);
         let logits = acts.last().expect("non-empty");
 
         let mut out = BTreeMap::new();
         out.insert(
             "loss".to_string(),
-            Tensor::scalar_f32(ce.value(logits, ys, n, c)),
+            Tensor::scalar_f32(
+                (ce.nll_sum(logits, y, ns, c) / total_n as f64) as f32,
+            ),
         );
 
         // ---- first-order backward pass (Eq. 3 + Fig. 4) ------------
-        let mut g = ce.grad(logits, ys, n, c); // ∇_f ℓ_n, [N, C]
+        let mut g = ce.grad(logits, y, ns, c); // ∇_f ℓ_n, [ns, C]
         for li in (0..self.layers.len()).rev() {
             if let Some(lin) = lins[li].as_ref() {
                 self.first_order_at(
-                    li, lin, &acts[li], &g, n, extensions, &mut out,
+                    li, lin, &acts[li], &g, ns, norm, extensions,
+                    &mut out,
                 );
             }
             if li > 0 {
-                g = self.vjp_input(li, &lins, &acts, g, n);
+                g = self.vjp_input(li, lins, &acts, g, ns);
             }
         }
 
@@ -337,31 +496,80 @@ impl Model {
         for (ext, exact) in [("diag_ggn", true), ("diag_ggn_mc", false)]
         {
             if has(ext) {
-                let (s, cols) =
-                    self.init_sqrt(&ce, logits, n, exact, key);
+                let (s, cols) = self.init_sqrt(
+                    &ce, logits, ns, exact, key, range.start,
+                );
                 self.propagate_diag(
-                    &lins, &acts, &dims, s, cols, n, ext, &mut out,
+                    lins, &acts, dims, s, cols, ns, norm, ext, &mut out,
                 );
             }
         }
         for (ext, exact) in [("kflr", true), ("kfac", false)] {
             if has(ext) {
-                let (s, cols) =
-                    self.init_sqrt(&ce, logits, n, exact, key);
+                let (s, cols) = self.init_sqrt(
+                    &ce, logits, ns, exact, key, range.start,
+                );
                 self.propagate_kron(
-                    &lins, &acts, &dims, s, cols, n, ext, &mut out,
+                    lins, &acts, dims, s, cols, ns, norm, ext, &mut out,
                 );
             }
         }
         if has("kfra") {
-            self.propagate_kfra(&lins, &acts, &dims, n, &mut out);
+            self.kfra_partials(lins, &acts, dims, ns, norm, &mut out);
         }
         Ok(out)
     }
 
+    /// Post-reduction pass: derive `variance` from the merged moments
+    /// (dropping `sq_moment` if it was only computed as an
+    /// intermediate) and run KFRA's `Ḡ` recursion on the merged batch
+    /// averages.
+    fn finish_extensions(
+        &self,
+        lins: &[Option<Lin>],
+        dims: &[usize],
+        extensions: &[String],
+        threads: usize,
+        out: &mut BTreeMap<String, Tensor>,
+    ) -> Result<()> {
+        let has = |e: &str| extensions.iter().any(|x| x == e);
+        if has("variance") {
+            for (li, _, _) in self.linear_dims() {
+                for part in ["w", "b"] {
+                    let gname = format!("grad/{li}/{part}");
+                    let sname = format!("sq_moment/{li}/{part}");
+                    let (shape, var) = {
+                        let g = out[&gname].f32s()?;
+                        let sq = out[&sname].f32s()?;
+                        let var: Vec<f32> = sq
+                            .iter()
+                            .zip(g)
+                            .map(|(s2, g1)| s2 - g1 * g1)
+                            .collect();
+                        (out[&sname].shape.clone(), var)
+                    };
+                    out.insert(
+                        format!("variance/{li}/{part}"),
+                        Tensor::from_f32(&shape, var),
+                    );
+                    if !has("sq_moment") {
+                        out.remove(&sname);
+                    }
+                }
+            }
+        }
+        if has("kfra") {
+            self.kfra_finish(lins, dims, threads, out)?;
+        }
+        Ok(())
+    }
+
     /// Averaged gradient + requested first-order quantities of one
-    /// `Linear` layer (input `inp [N, din]`, unnormalized per-sample
-    /// output gradients `g [N, dout]`).
+    /// `Linear` layer (shard input `inp [n, din]`, unnormalized
+    /// per-sample output gradients `g [n, dout]`, averages normalized
+    /// by the global batch size `norm`). `variance` is not extracted
+    /// here: it is derived from the merged `grad`/`sq_moment` in
+    /// `finish_extensions`.
     #[allow(clippy::too_many_arguments)]
     fn first_order_at(
         &self,
@@ -370,12 +578,13 @@ impl Model {
         inp: &[f32],
         g: &[f32],
         n: usize,
+        norm: f32,
         extensions: &[String],
         out: &mut BTreeMap<String, Tensor>,
     ) {
         let has = |e: &str| extensions.iter().any(|x| x == e);
         let (din, dout) = (lin.din, lin.dout);
-        let nf = n as f32;
+        let nf = norm;
 
         // Averaged gradient: (1/N) gᵀ x and (1/N) Σ_n g_n.
         let mut gw = matmul_tn(g, inp, n, dout, din);
@@ -443,6 +652,8 @@ impl Model {
         }
         if has("sq_moment") || has("variance") {
             // (1/N) Σ_n [∇ℓ_n]² = (1/N) (g²)ᵀ (x²), again rank-1.
+            // Always emitted when `variance` is requested: the merged
+            // moments are what variance derives from exactly.
             let g2: Vec<f32> = g.iter().map(|v| v * v).collect();
             let x2: Vec<f32> = inp.iter().map(|v| v * v).collect();
             let mut sqw = matmul_tn(&g2, &x2, n, dout, din);
@@ -458,36 +669,14 @@ impl Model {
             for v in &mut sqb {
                 *v /= nf;
             }
-            if has("variance") {
-                let vw: Vec<f32> = sqw
-                    .iter()
-                    .zip(&gw)
-                    .map(|(s2, g1)| s2 - g1 * g1)
-                    .collect();
-                let vb: Vec<f32> = sqb
-                    .iter()
-                    .zip(&gb)
-                    .map(|(s2, g1)| s2 - g1 * g1)
-                    .collect();
-                out.insert(
-                    format!("variance/{li}/w"),
-                    Tensor::from_f32(&[dout, din], vw),
-                );
-                out.insert(
-                    format!("variance/{li}/b"),
-                    Tensor::from_f32(&[dout], vb),
-                );
-            }
-            if has("sq_moment") {
-                out.insert(
-                    format!("sq_moment/{li}/w"),
-                    Tensor::from_f32(&[dout, din], sqw),
-                );
-                out.insert(
-                    format!("sq_moment/{li}/b"),
-                    Tensor::from_f32(&[dout], sqb),
-                );
-            }
+            out.insert(
+                format!("sq_moment/{li}/w"),
+                Tensor::from_f32(&[dout, din], sqw),
+            );
+            out.insert(
+                format!("sq_moment/{li}/b"),
+                Tensor::from_f32(&[dout], sqb),
+            );
         }
         out.insert(
             format!("grad/{li}/w"),
@@ -562,7 +751,10 @@ impl Model {
     }
 
     /// Initial loss-Hessian square root at the logits: exact
-    /// `[N, C, C]` or Monte-Carlo `[N, C, M]` (Eq. 15 / 20).
+    /// `[N, C, C]` or Monte-Carlo `[N, C, M]` (Eq. 15 / 20). `base` is
+    /// the shard's global sample offset, keying the MC draws so they
+    /// are invariant to the shard layout.
+    #[allow(clippy::too_many_arguments)]
     fn init_sqrt(
         &self,
         ce: &CrossEntropy,
@@ -570,6 +762,7 @@ impl Model {
         n: usize,
         exact: bool,
         key: Option<[u32; 2]>,
+        base: usize,
     ) -> (Vec<f32>, usize) {
         if exact {
             (ce.sqrt_hessian(logits, n, self.classes), self.classes)
@@ -577,14 +770,15 @@ impl Model {
             let key = key.expect("checked by extended_backward");
             (
                 ce.sqrt_hessian_mc(
-                    logits, n, self.classes, key, MC_SAMPLES,
+                    logits, n, self.classes, key, MC_SAMPLES, base,
                 ),
                 MC_SAMPLES,
             )
         }
     }
 
-    /// DiagGGN(-MC): Eq. 18 propagation + Eq. 19 extraction.
+    /// DiagGGN(-MC): Eq. 18 propagation + Eq. 19 extraction, averaged
+    /// with the global normalizer `norm`.
     #[allow(clippy::too_many_arguments)]
     fn propagate_diag(
         &self,
@@ -594,10 +788,11 @@ impl Model {
         mut s: Vec<f32>,
         cols: usize,
         n: usize,
+        norm: f32,
         name: &str,
         out: &mut BTreeMap<String, Tensor>,
     ) {
-        let nf = n as f32;
+        let nf = norm;
         for li in (0..self.layers.len()).rev() {
             if let Some(lin) = lins[li].as_ref() {
                 let (din, dout) = (lin.din, lin.dout);
@@ -642,7 +837,8 @@ impl Model {
     }
 
     /// KFAC / KFLR: same propagation, Kronecker-factor extraction
-    /// (Eq. 23): `A = 1/N Σ x xᵀ`, `B = bias_ggn = 1/N Σ S Sᵀ`.
+    /// (Eq. 23): `A = 1/N Σ x xᵀ`, `B = bias_ggn = 1/N Σ S Sᵀ`,
+    /// averaged with the global normalizer `norm`.
     #[allow(clippy::too_many_arguments)]
     fn propagate_kron(
         &self,
@@ -652,10 +848,11 @@ impl Model {
         mut s: Vec<f32>,
         cols: usize,
         n: usize,
+        norm: f32,
         name: &str,
         out: &mut BTreeMap<String, Tensor>,
     ) {
-        let nf = n as f32;
+        let nf = norm;
         for li in (0..self.layers.len()).rev() {
             if let Some(lin) = lins[li].as_ref() {
                 let (din, dout) = (lin.din, lin.dout);
@@ -696,33 +893,81 @@ impl Model {
         }
     }
 
-    /// KFRA: batch-averaged curvature propagation (Eq. 24). `Linear`
-    /// maps `Ḡ -> Wᵀ Ḡ W`; activations `Ḡ -> Ḡ ∘ (1/N Σ m_n m_nᵀ)`
-    /// with `m = σ'(x)`.
-    fn propagate_kfra(
+    /// KFRA shard phase: the batch *averages* its `Ḡ` recursion
+    /// (Eq. 24) consumes -- `A = 1/N Σ x xᵀ` per `Linear`, the
+    /// activation second moments `1/N Σ m_n m_nᵀ` (`m = σ'(x)`), and
+    /// the output Hessian mean -- each normalized by the global batch
+    /// size so shards sum-reduce exactly. The recursion itself is
+    /// nonlinear in these averages, so it runs once on the merged
+    /// values in [`Model::kfra_finish`]. Internal quantities go under
+    /// `__kfra/` keys, consumed (and removed) by the finish pass.
+    fn kfra_partials(
         &self,
         lins: &[Option<Lin>],
         acts: &[Vec<f32>],
         dims: &[usize],
         n: usize,
+        norm: f32,
         out: &mut BTreeMap<String, Tensor>,
     ) {
         let ce = CrossEntropy;
+        let c = self.classes;
         let logits = acts.last().expect("non-empty");
-        let mut gbar = ce.hessian_mean(logits, n, self.classes);
-        let nf = n as f32;
-        for li in (0..self.layers.len()).rev() {
+        // hessian_mean averages over the shard; reweigh to n/norm so
+        // the full-range (serial) call scales by exactly 1.0.
+        let mut h = ce.hessian_mean(logits, n, c);
+        let w = n as f32 / norm;
+        for v in &mut h {
+            *v *= w;
+        }
+        out.insert(
+            "__kfra/h".to_string(),
+            Tensor::from_f32(&[c, c], h),
+        );
+        for (li, layer) in self.layers.iter().enumerate() {
             if let Some(lin) = lins[li].as_ref() {
-                let (din, dout) = (lin.din, lin.dout);
-                let inp = &acts[li];
-                let mut a = matmul_tn(inp, inp, n, din, din);
+                let din = lin.din;
+                let mut a = matmul_tn(&acts[li], &acts[li], n, din, din);
                 for v in &mut a {
-                    *v /= nf;
+                    *v /= norm;
                 }
                 out.insert(
                     format!("kfra/{li}/A"),
                     Tensor::from_f32(&[din, din], a),
                 );
+            } else if li > 0 {
+                let f = dims[li];
+                let m = layer.d_act(&acts[li]); // [n, f]
+                let mut mm = matmul_tn(&m, &m, n, f, f);
+                for v in &mut mm {
+                    *v /= norm;
+                }
+                out.insert(
+                    format!("__kfra/mm/{li}"),
+                    Tensor::from_f32(&[f, f], mm),
+                );
+            }
+        }
+    }
+
+    /// KFRA merge phase: propagate `Ḡ` (Eq. 24) through the layers on
+    /// the merged batch averages -- `Linear` maps `Ḡ -> Wᵀ Ḡ W`
+    /// (row-parallel matmuls), activations `Ḡ -> Ḡ ∘ (1/N Σ m m ᵀ)` --
+    /// extracting `B`/`bias_ggn` at every `Linear`.
+    fn kfra_finish(
+        &self,
+        lins: &[Option<Lin>],
+        dims: &[usize],
+        threads: usize,
+        out: &mut BTreeMap<String, Tensor>,
+    ) -> Result<()> {
+        let Some(h) = out.remove("__kfra/h") else {
+            bail!("kfra reduction is missing the output-Hessian mean")
+        };
+        let mut gbar = h.f32s()?.to_vec();
+        for li in (0..self.layers.len()).rev() {
+            if let Some(lin) = lins[li].as_ref() {
+                let dout = lin.dout;
                 out.insert(
                     format!("kfra/{li}/B"),
                     Tensor::from_f32(&[dout, dout], gbar.clone()),
@@ -738,23 +983,89 @@ impl Model {
                         let lin = lins[li].as_ref().expect("bound");
                         let (din, dout) = (lin.din, lin.dout);
                         // Wᵀ Ḡ W: [din, dout] x [dout, dout] x [dout, din]
-                        let wt_g =
-                            matmul_tn(lin.w, &gbar, dout, din, dout);
-                        matmul(&wt_g, lin.w, din, dout, din)
+                        let wt_g = matmul_tn_par(
+                            lin.w, &gbar, dout, din, dout, threads,
+                        );
+                        matmul_par(&wt_g, lin.w, din, dout, din, threads)
                     }
-                    act => {
+                    _ => {
                         let f = dims[li];
-                        let m = act.d_act(&acts[li]); // [N, f]
-                        let mm = matmul_tn(&m, &m, n, f, f);
+                        let mm = out
+                            .remove(&format!("__kfra/mm/{li}"))
+                            .expect("kfra activation moment partial");
+                        debug_assert_eq!(mm.shape, vec![f, f]);
                         gbar.iter()
-                            .zip(&mm)
-                            .map(|(gv, mv)| gv * mv / nf)
+                            .zip(mm.f32s()?)
+                            .map(|(gv, mv)| gv * mv)
                             .collect()
                     }
                 };
             }
         }
+        Ok(())
     }
+}
+
+/// Reduce shard outputs (shards arrive in sample order): per-sample
+/// quantities (`batch_grad/*`, `batch_l2/*`) concatenate along the
+/// batch axis; everything else -- already normalized by the global
+/// batch size -- sums elementwise.
+fn merge_shard_outputs(
+    parts: Vec<BTreeMap<String, Tensor>>,
+) -> Result<BTreeMap<String, Tensor>> {
+    let mut it = parts.into_iter();
+    let mut out = it.next().expect("at least one shard");
+    for part in it {
+        ensure!(
+            part.len() == out.len(),
+            "shard output key sets differ"
+        );
+        for (k, v) in part {
+            let Some(acc) = out.get_mut(&k) else {
+                bail!("shard output key mismatch: {k:?}")
+            };
+            if k.starts_with("batch_grad/") || k.starts_with("batch_l2/")
+            {
+                append_rows(acc, v)?;
+            } else {
+                add_into(acc, &v)?;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Concatenate `more` onto `acc` along the leading (batch) axis.
+fn append_rows(acc: &mut Tensor, more: Tensor) -> Result<()> {
+    ensure!(
+        acc.shape.len() == more.shape.len()
+            && acc.shape[1..] == more.shape[1..],
+        "batch concat shape mismatch: {:?} vs {:?}",
+        acc.shape,
+        more.shape
+    );
+    let add = more.shape.first().copied().unwrap_or(0);
+    match (&mut acc.data, more.data) {
+        (TensorData::F32(a), TensorData::F32(b)) => a.extend(b),
+        _ => bail!("batch concat expects f32 tensors"),
+    }
+    acc.shape[0] += add;
+    Ok(())
+}
+
+/// Elementwise `acc += more` (same shape).
+fn add_into(acc: &mut Tensor, more: &Tensor) -> Result<()> {
+    ensure!(
+        acc.shape == more.shape,
+        "sum-reduce shape mismatch: {:?} vs {:?}",
+        acc.shape,
+        more.shape
+    );
+    let b = more.f32s()?;
+    for (x, y) in acc.f32s_mut()?.iter_mut().zip(b) {
+        *x += *y;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -918,6 +1229,77 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("not supported"), "{err}");
+    }
+
+    #[test]
+    fn threaded_backward_matches_serial_on_tiny() {
+        let m = tiny();
+        let params = tiny_params(&m, 9);
+        let (x, y) = batch(&m, 7, 9); // 7 samples: uneven shards
+        let exts: Vec<String> =
+            ["batch_grad", "batch_l2", "variance", "diag_ggn_mc",
+             "kfac", "kfra"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let key = Some([3, 4]);
+        let serial = m
+            .extended_backward(&params, &x, &y, &exts, key)
+            .unwrap();
+        // variance was requested without sq_moment: the intermediate
+        // moments must not leak, nor the internal __kfra partials.
+        assert!(serial.keys().all(|k| {
+            !k.starts_with("sq_moment/") && !k.starts_with("__kfra")
+        }));
+        for t in [2usize, 3, 5, 16] {
+            let par = m
+                .extended_backward_threads(&params, &x, &y, &exts, key, t)
+                .unwrap();
+            assert_eq!(
+                serial.keys().collect::<Vec<_>>(),
+                par.keys().collect::<Vec<_>>(),
+                "threads={t}"
+            );
+            for (k, want) in &serial {
+                let got = par.get(k).unwrap();
+                assert_eq!(want.shape, got.shape, "{k} threads={t}");
+                for (u, v) in want
+                    .f32s()
+                    .unwrap()
+                    .iter()
+                    .zip(got.f32s().unwrap())
+                {
+                    assert!(
+                        (u - v).abs() <= 1e-5 * (1.0 + u.abs()),
+                        "{k} threads={t}: {u} vs {v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_forward_and_evaluate_match_serial() {
+        let m = tiny();
+        let params = tiny_params(&m, 11);
+        let (x, y) = batch(&m, 9, 11);
+        let logits = m.forward(&params, &x).unwrap();
+        for t in [2usize, 4, 9] {
+            let lt = m.forward_threads(&params, &x, t).unwrap();
+            assert_eq!(logits.shape, lt.shape);
+            for (u, v) in
+                logits.f32s().unwrap().iter().zip(lt.f32s().unwrap())
+            {
+                assert!((u - v).abs() <= 1e-6, "threads={t}");
+            }
+            let es = m.evaluate(&params, &x, &y).unwrap();
+            let ep = m.evaluate_threads(&params, &x, &y, t).unwrap();
+            for k in ["loss", "accuracy"] {
+                let a = es[k].item_f32().unwrap();
+                let b = ep[k].item_f32().unwrap();
+                assert!((a - b).abs() <= 1e-6, "{k} threads={t}");
+            }
+        }
     }
 
     #[test]

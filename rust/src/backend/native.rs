@@ -38,6 +38,9 @@ const LISTED_SIGS: &[&str] = &[
 /// A registry of native models, serving synthesized artifacts.
 pub struct NativeBackend {
     models: BTreeMap<String, Model>,
+    /// Batch-parallel worker count every loaded [`NativeExec`]
+    /// inherits (resolved: >= 1).
+    threads: usize,
 }
 
 impl Default for NativeBackend {
@@ -47,12 +50,27 @@ impl Default for NativeBackend {
 }
 
 impl NativeBackend {
-    /// Registry with the built-in fully-connected models.
+    /// Registry with the built-in fully-connected models, auto-sized
+    /// batch parallelism (all cores; `BACKPACK_THREADS` overrides).
     pub fn new() -> NativeBackend {
-        let mut b = NativeBackend { models: BTreeMap::new() };
+        Self::with_threads(0)
+    }
+
+    /// Registry with an explicit worker count (`0` = auto). `1` is
+    /// the serial reference configuration.
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        let mut b = NativeBackend {
+            models: BTreeMap::new(),
+            threads: crate::parallel::resolve_threads(threads),
+        };
         b.register(Model::logreg());
         b.register(Model::mlp());
         b
+    }
+
+    /// The resolved batch-parallel worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Register an additional model (used by tests to serve tiny MLPs
@@ -132,7 +150,11 @@ impl Backend for NativeBackend {
 
     fn load(&self, artifact: &str) -> Result<Rc<dyn Exec>> {
         let (spec, model) = self.synthesize(artifact)?;
-        Ok(Rc::new(NativeExec { spec, model }))
+        Ok(Rc::new(NativeExec {
+            spec,
+            model,
+            threads: self.threads,
+        }))
     }
 
     fn find_train(
@@ -340,10 +362,36 @@ fn eval_spec(model: &Model, artifact: &str, batch: usize)
     }
 }
 
-/// A synthesized computation bound to its model.
+/// A synthesized computation bound to its model, executing
+/// batch-parallel over `threads` scoped workers.
 pub struct NativeExec {
     spec: ArtifactSpec,
     model: Model,
+    threads: usize,
+}
+
+/// Minimum multiply-adds a shard must carry before it is worth a
+/// scoped-thread spawn (mirrors `linalg::PAR_MIN_MACS` at the batch
+/// level).
+const MIN_SHARD_MACS: usize = 1 << 18;
+
+impl NativeExec {
+    /// Effective worker count for one execution: the configured count,
+    /// capped so every shard carries at least [`MIN_SHARD_MACS`] of
+    /// work. The per-sample cost estimate is a conservative lower
+    /// bound -- params for a forward-only eval graph, 2 x params
+    /// (forward + first-order backward) for training graphs, valid
+    /// for every extension signature -- so cheap small-batch runs
+    /// collapse to serial while expensive signatures keep full
+    /// parallelism. `Model::*_threads` itself honors the count
+    /// verbatim: this resource policy lives at the backend layer.
+    fn effective_threads(&self) -> usize {
+        let passes = if self.spec.kind == "eval" { 1 } else { 2 };
+        let per_sample = passes * self.model.num_params().max(1);
+        let max_shards =
+            (self.spec.batch_size * per_sample / MIN_SHARD_MACS).max(1);
+        self.threads.min(max_shards)
+    }
 }
 
 impl Exec for NativeExec {
@@ -363,10 +411,13 @@ impl Exec for NativeExec {
             None
         };
         let start = Instant::now();
+        let threads = self.effective_threads();
         let map = match self.spec.kind.as_str() {
-            "eval" => self.model.evaluate(params, x, y)?,
-            _ => self.model.extended_backward(
-                params, x, y, &self.spec.extensions, key,
+            "eval" => {
+                self.model.evaluate_threads(params, x, y, threads)?
+            }
+            _ => self.model.extended_backward_threads(
+                params, x, y, &self.spec.extensions, key, threads,
             )?,
         };
         Ok(Outputs::new(map, start.elapsed()))
@@ -478,6 +529,20 @@ mod tests {
         let out = exe.run(&build_inputs(&params, x, y, None)).unwrap();
         let acc = out.get("accuracy").unwrap().item_f32().unwrap();
         assert!((0.0..0.35).contains(&acc), "chance-ish, got {acc}");
+    }
+
+    #[test]
+    fn small_batches_fall_back_to_serial_sharding() {
+        let be = NativeBackend::with_threads(16);
+        // logreg at batch 8: 8 x 2 x 7,850 MACs < MIN_SHARD_MACS --
+        // a thread spawn would cost more than the shard's work.
+        let (spec, model) = be.synthesize("logreg_grad_n8").unwrap();
+        let exe = NativeExec { spec, model, threads: 16 };
+        assert_eq!(exe.effective_threads(), 1);
+        // mlp at batch 128 carries ~28M MACs: full parallelism.
+        let (spec, model) = be.synthesize("mlp_grad_n128").unwrap();
+        let exe = NativeExec { spec, model, threads: 16 };
+        assert_eq!(exe.effective_threads(), 16);
     }
 
     #[test]

@@ -1,9 +1,17 @@
 //! Micro-benchmark harness (substrate; criterion is unavailable
 //! offline). Warmup + fixed-count sampling, robust summary statistics,
-//! criterion-like console output, and CSV export for the figure
-//! regenerators.
+//! criterion-like console output, CSV export for the figure
+//! regenerators, and the machine-readable perf baseline
+//! ([`perf_baseline`] -> `BENCH_native.json`) that CI uploads on every
+//! push so the repo carries a perf trajectory.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::backend::Backend;
+use crate::json::Json;
 
 /// Summary statistics over the sampled iteration times.
 #[derive(Debug, Clone)]
@@ -15,6 +23,10 @@ pub struct Stats {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    /// Wall-clock of the measured sampling loop (>= the sample sum;
+    /// reveals when a time budget truncated the requested iteration
+    /// count).
+    pub total_s: f64,
 }
 
 impl Stats {
@@ -40,6 +52,7 @@ impl Stats {
             min: s[0],
             p50: pct(0.5),
             p95: pct(0.95),
+            total_s: s.iter().sum(),
             samples: s,
         }
     }
@@ -70,8 +83,11 @@ pub fn fmt_time(s: f64) -> String {
 }
 
 /// Benchmark a closure: `warmup` unmeasured runs, then up to `iters`
-/// measured runs, but stop early once `budget` wall-clock is spent
-/// (long-running artifacts get fewer samples, never zero).
+/// measured runs, but stop early once `budget` wall-clock is spent.
+/// The budget check sits after the `push`, so a long-running artifact
+/// gets fewer samples but never zero. `Stats::total_s` records the
+/// measured loop's wall-clock, making budget truncation visible in
+/// the exported numbers.
 pub fn bench<F: FnMut()>(
     name: &str,
     warmup: usize,
@@ -88,13 +104,141 @@ pub fn bench<F: FnMut()>(
         let t = Instant::now();
         f();
         samples.push(t.elapsed().as_secs_f64());
-        if start.elapsed() > budget && !samples.is_empty() {
+        if start.elapsed() > budget {
             break;
         }
     }
-    let s = Stats::from_samples(name, samples);
+    let total_s = start.elapsed().as_secs_f64();
+    let mut s = Stats::from_samples(name, samples);
+    s.total_s = total_s;
     s.print_line();
     s
+}
+
+/// JSON schema identifier written into the baseline file; bump on any
+/// breaking change to the layout below.
+pub const BENCH_SCHEMA: &str = "backpack-bench/v1";
+
+/// The perf-baseline grid: the paper's two native problems under the
+/// plain gradient plus every native extension signature (Fig. 6's
+/// overhead story, on this backend).
+pub fn baseline_cases() -> Vec<(&'static str, &'static str)> {
+    let mut cases = Vec::new();
+    for model in ["logreg", "mlp"] {
+        cases.push((model, "grad"));
+        for sig in crate::backend::model::NATIVE_EXTENSIONS {
+            cases.push((model, *sig));
+        }
+    }
+    cases
+}
+
+/// Run the perf baseline through a backend and write the
+/// machine-readable summary (`BENCH_native.json` by default).
+///
+/// Schema (`backpack-bench/v1`): top-level `schema`, `backend`,
+/// `threads`, `git_rev`, `quick`, `batch`, `unit` ("seconds"),
+/// `total_wall_s`, and `cases[]` with `name`, `model`, `signature`,
+/// `batch`, `samples`, `mean_s`, `p50_s`, `p95_s`, `min_s`, `std_s`,
+/// `total_s`.
+pub fn perf_baseline(
+    be: &dyn Backend,
+    threads: usize,
+    quick: bool,
+    batch: usize,
+    out: &Path,
+) -> Result<()> {
+    let (iters, budget_s) = if quick { (5, 0.5) } else { (30, 3.0) };
+    println!(
+        "== perf baseline: backend={} threads={threads} batch={batch} \
+         iters<={iters} ==",
+        be.name()
+    );
+    let start = Instant::now();
+    let mut cases = Vec::new();
+    for (model, sig) in baseline_cases() {
+        let name = format!("{model}_{sig}_n{batch}");
+        let stats = crate::figures::timing::time_artifact(
+            be, &name, "mnist", iters, budget_s,
+        )
+        .with_context(|| format!("bench case {name}"))?;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(name));
+        obj.insert("model".to_string(), Json::Str(model.to_string()));
+        obj.insert(
+            "signature".to_string(),
+            Json::Str(sig.to_string()),
+        );
+        obj.insert("batch".to_string(), Json::Num(batch as f64));
+        obj.insert(
+            "samples".to_string(),
+            Json::Num(stats.samples.len() as f64),
+        );
+        obj.insert("mean_s".to_string(), Json::Num(stats.mean));
+        obj.insert("p50_s".to_string(), Json::Num(stats.p50));
+        obj.insert("p95_s".to_string(), Json::Num(stats.p95));
+        obj.insert("min_s".to_string(), Json::Num(stats.min));
+        obj.insert("std_s".to_string(), Json::Num(stats.std));
+        obj.insert("total_s".to_string(), Json::Num(stats.total_s));
+        cases.push(Json::Obj(obj));
+    }
+    let mut root = std::collections::BTreeMap::new();
+    root.insert(
+        "schema".to_string(),
+        Json::Str(BENCH_SCHEMA.to_string()),
+    );
+    root.insert(
+        "backend".to_string(),
+        Json::Str(be.name().to_string()),
+    );
+    root.insert("threads".to_string(), Json::Num(threads as f64));
+    root.insert("git_rev".to_string(), Json::Str(git_rev()));
+    root.insert("quick".to_string(), Json::Bool(quick));
+    root.insert("batch".to_string(), Json::Num(batch as f64));
+    root.insert(
+        "unit".to_string(),
+        Json::Str("seconds".to_string()),
+    );
+    root.insert(
+        "total_wall_s".to_string(),
+        Json::Num(start.elapsed().as_secs_f64()),
+    );
+    root.insert("cases".to_string(), Json::Arr(cases));
+    let text = Json::Obj(root).to_string_json();
+    if let Some(dir) = out.parent().filter(|d| !d.as_os_str().is_empty())
+    {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(out, text + "\n")
+        .with_context(|| format!("write {}", out.display()))?;
+    println!(
+        "wrote {} ({} cases, {:.1}s)",
+        out.display(),
+        baseline_cases().len(),
+        start.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// Git revision for the baseline provenance: `GITHUB_SHA` when CI
+/// sets it, else `git rev-parse`, else `"unknown"`. Always truncated
+/// to 12 hex chars so CI- and locally-produced baselines compare
+/// equal on this field.
+fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        let sha = sha.trim();
+        if !sha.is_empty() {
+            return sha.chars().take(12).collect();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 #[cfg(test)]
@@ -121,6 +265,52 @@ mod tests {
         });
         assert!(!s.samples.is_empty());
         assert!(count < 1000, "budget should stop early");
+    }
+
+    #[test]
+    fn budget_truncation_is_visible_in_total() {
+        // The budget stops sampling early; total_s must cover the
+        // whole measured loop so the truncation is honest in exports.
+        let s = bench("b", 0, 1000, Duration::from_millis(10), || {
+            std::thread::sleep(Duration::from_millis(4));
+        });
+        assert!(s.samples.len() < 1000);
+        let sum: f64 = s.samples.iter().sum();
+        assert!(s.total_s >= sum, "{} < {sum}", s.total_s);
+    }
+
+    #[test]
+    fn baseline_grid_covers_both_models_and_all_signatures() {
+        let cases = baseline_cases();
+        assert_eq!(cases.len(), 2 * 10, "grad + 9 extensions x 2 models");
+        assert!(cases.contains(&("mlp", "grad")));
+        assert!(cases.contains(&("logreg", "kfra")));
+    }
+
+    #[test]
+    fn perf_baseline_writes_parseable_json() {
+        let be = crate::backend::native::NativeBackend::with_threads(2);
+        let path = std::env::temp_dir()
+            .join("backpack_bench_test")
+            .join("BENCH_test.json");
+        perf_baseline(&be, 2, true, 8, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str().unwrap(),
+                   BENCH_SCHEMA);
+        assert_eq!(v.get("backend").unwrap().as_str().unwrap(),
+                   "native");
+        assert_eq!(v.get("threads").unwrap().as_usize().unwrap(), 2);
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), baseline_cases().len());
+        for c in cases {
+            assert!(c.get("mean_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(c.get("p95_s").unwrap().as_f64().unwrap()
+                    >= c.get("p50_s").unwrap().as_f64().unwrap()
+                       - 1e-12);
+            assert!(c.get("samples").unwrap().as_usize().unwrap() >= 1);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -9,7 +9,8 @@ use anyhow::{bail, Result};
 
 /// Flags that never take a value (needed to disambiguate
 /// `--verbose positional` without clap-style per-command schemas).
-const BOOL_SWITCHES: &[&str] = &["verbose", "help", "force", "quiet"];
+const BOOL_SWITCHES: &[&str] =
+    &["verbose", "help", "force", "quiet", "quick"];
 
 #[derive(Debug, Default)]
 pub struct Args {

@@ -19,5 +19,6 @@ pub mod data;
 pub mod json;
 pub mod linalg;
 pub mod optim;
+pub mod parallel;
 pub mod runtime;
 pub mod figures;

@@ -4,7 +4,11 @@
 //!
 //! Matrices are row-major `Vec<f32>`; sizes are the Kronecker-factor
 //! dimensions (≤ ~1.7k for All-CNN-C), where a cache-blocked scalar
-//! Cholesky is adequate on this single-core testbed.
+//! Cholesky is adequate. The dense `matmul*` kernels below dominate
+//! the native backend's hot call sites; they are cache-blocked
+//! ([`BLOCK`]) and have `*_par` row-split variants (see
+//! `crate::parallel`) that are bit-for-bit equal to the serial
+//! kernels for any thread count.
 
 use anyhow::{bail, Result};
 
@@ -163,70 +167,222 @@ impl Cholesky {
     }
 }
 
+/// Cache-block edge for the dense kernels: 64x64 f32 tiles (16 KiB)
+/// keep an output tile plus an operand panel L1/L2-resident at the
+/// native backend's hot shapes (din up to 784, dout up to 128, batch
+/// shards up to 128). Blocks are visited in index order, so per-element
+/// accumulation order -- and therefore the f32 result -- is identical
+/// to the unblocked kernels.
+const BLOCK: usize = 64;
+
+/// Work threshold (multiply-adds) below which the `*_par` kernels stay
+/// serial: under ~1 Mflop the scoped-thread fork/join overhead beats
+/// the speedup.
+const PAR_MIN_MACS: usize = 1 << 20;
+
 /// Dense `C = Aᵀ B` with a shared leading (batch) axis: A is [n, p],
 /// B is [n, q], C is [p, q] -- the contraction the native backend's
 /// gradient/factor extractions reduce to (mirror of the Python
-/// `ops.matmul_tn` kernel). Row-major-friendly: inner loops stream
-/// rows of B and C.
+/// `ops.matmul_tn` kernel). Cache-blocked over all three axes; inner
+/// loops stream rows of B and C.
 pub fn matmul_tn(
     a: &[f32], b: &[f32], n: usize, p: usize, q: usize,
 ) -> Vec<f32> {
     assert_eq!(a.len(), n * p);
     assert_eq!(b.len(), n * q);
     let mut c = vec![0.0f32; p * q];
-    for s in 0..n {
-        let (ra, rb) = (s * p, s * q);
-        for i in 0..p {
-            let av = a[ra + i];
-            if av != 0.0 {
-                let rc = i * q;
-                for j in 0..q {
-                    c[rc + j] += av * b[rb + j];
+    matmul_tn_rows(a, b, n, p, q, 0..p, &mut c);
+    c
+}
+
+/// Row slab `C[rows, :] = (Aᵀ B)[rows, :]` of [`matmul_tn`], written
+/// into `c` (len `rows.len() * q`). The shared building block of the
+/// serial and parallel drivers.
+fn matmul_tn_rows(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    p: usize,
+    q: usize,
+    rows: std::ops::Range<usize>,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), rows.len() * q);
+    let i_off = rows.start;
+    for s0 in (0..n).step_by(BLOCK) {
+        let s1 = (s0 + BLOCK).min(n);
+        for i0 in (rows.start..rows.end).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(rows.end);
+            for j0 in (0..q).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(q);
+                for s in s0..s1 {
+                    let (ra, rb) = (s * p, s * q);
+                    for i in i0..i1 {
+                        let av = a[ra + i];
+                        if av != 0.0 {
+                            let rc = (i - i_off) * q;
+                            for j in j0..j1 {
+                                c[rc + j] += av * b[rb + j];
+                            }
+                        }
+                    }
                 }
             }
         }
     }
+}
+
+/// Shared driver of the `*_par` kernels: split the `p` output rows
+/// into per-thread slabs, run `kernel` on each slab's sub-buffer, and
+/// concatenate in slab order. Each thread owns a disjoint row slab,
+/// so the result is bit-for-bit identical to the serial kernel.
+fn par_rows<K>(p: usize, q: usize, threads: usize, kernel: K) -> Vec<f32>
+where
+    K: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    let slabs = crate::parallel::shards(p, threads);
+    let parts = crate::parallel::par_map(&slabs, |rows| {
+        let mut c = vec![0.0f32; rows.len() * q];
+        kernel(rows, &mut c);
+        c
+    });
+    let mut c = Vec::with_capacity(p * q);
+    for part in parts {
+        c.extend_from_slice(&part);
+    }
     c
 }
 
+/// [`matmul_tn`] with the output rows split across `threads` scoped
+/// threads (bit-for-bit identical to serial; serial below
+/// [`PAR_MIN_MACS`]).
+pub fn matmul_tn_par(
+    a: &[f32], b: &[f32], n: usize, p: usize, q: usize, threads: usize,
+) -> Vec<f32> {
+    if threads <= 1 || n * p * q < PAR_MIN_MACS {
+        return matmul_tn(a, b, n, p, q);
+    }
+    assert_eq!(a.len(), n * p);
+    assert_eq!(b.len(), n * q);
+    par_rows(p, q, threads, |rows, c| {
+        matmul_tn_rows(a, b, n, p, q, rows, c)
+    })
+}
+
 /// Dense `C = A Bᵀ` (row-major, [p,n]x[q,n] -> [p,q]): rows of both
-/// operands are contracted as dot products.
+/// operands are contracted as dot products, tiled so a panel of B rows
+/// stays cache-resident across the A rows of a block.
 pub fn matmul_nt(
     a: &[f32], b: &[f32], p: usize, n: usize, q: usize,
 ) -> Vec<f32> {
     assert_eq!(a.len(), p * n);
     assert_eq!(b.len(), q * n);
     let mut c = vec![0.0f32; p * q];
-    for i in 0..p {
-        let ra = i * n;
-        for j in 0..q {
-            let rb = j * n;
-            let s: f32 = a[ra..ra + n]
-                .iter()
-                .zip(&b[rb..rb + n])
-                .map(|(x, y)| x * y)
-                .sum();
-            c[i * q + j] = s;
-        }
-    }
+    matmul_nt_rows(a, b, n, q, 0..p, &mut c);
     c
 }
 
-/// Dense `C = A B` (row-major, [p,q]x[q,r]); used by tests & examples.
-pub fn matmul(a: &[f32], b: &[f32], p: usize, q: usize, r: usize) -> Vec<f32> {
-    let mut c = vec![0.0f32; p * r];
-    for i in 0..p {
-        for k in 0..q {
-            let aik = a[i * q + k];
-            if aik != 0.0 {
-                let (brow, crow) = (k * r, i * r);
-                for j in 0..r {
-                    c[crow + j] += aik * b[brow + j];
+/// Row slab `C[rows, :] = (A Bᵀ)[rows, :]` of [`matmul_nt`].
+fn matmul_nt_rows(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    q: usize,
+    rows: std::ops::Range<usize>,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), rows.len() * q);
+    let i_off = rows.start;
+    for i0 in (rows.start..rows.end).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(rows.end);
+        for j0 in (0..q).step_by(BLOCK) {
+            let j1 = (j0 + BLOCK).min(q);
+            for i in i0..i1 {
+                let ra = i * n;
+                let rc = (i - i_off) * q;
+                for j in j0..j1 {
+                    let rb = j * n;
+                    let s: f32 = a[ra..ra + n]
+                        .iter()
+                        .zip(&b[rb..rb + n])
+                        .map(|(x, y)| x * y)
+                        .sum();
+                    c[rc + j] = s;
                 }
             }
         }
     }
+}
+
+/// [`matmul_nt`] with the output rows split across scoped threads
+/// (bit-for-bit identical to serial; serial below [`PAR_MIN_MACS`]).
+pub fn matmul_nt_par(
+    a: &[f32], b: &[f32], p: usize, n: usize, q: usize, threads: usize,
+) -> Vec<f32> {
+    if threads <= 1 || p * n * q < PAR_MIN_MACS {
+        return matmul_nt(a, b, p, n, q);
+    }
+    assert_eq!(a.len(), p * n);
+    assert_eq!(b.len(), q * n);
+    par_rows(p, q, threads, |rows, c| {
+        matmul_nt_rows(a, b, n, q, rows, c)
+    })
+}
+
+/// Dense `C = A B` (row-major, [p,q]x[q,r]), tiled so a panel of B
+/// rows is reused across the A rows of a block.
+pub fn matmul(a: &[f32], b: &[f32], p: usize, q: usize, r: usize) -> Vec<f32> {
+    assert_eq!(a.len(), p * q);
+    assert_eq!(b.len(), q * r);
+    let mut c = vec![0.0f32; p * r];
+    matmul_rows(a, b, q, r, 0..p, &mut c);
     c
+}
+
+/// Row slab `C[rows, :] = (A B)[rows, :]` of [`matmul`].
+fn matmul_rows(
+    a: &[f32],
+    b: &[f32],
+    q: usize,
+    r: usize,
+    rows: std::ops::Range<usize>,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), rows.len() * r);
+    let i_off = rows.start;
+    for i0 in (rows.start..rows.end).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(rows.end);
+        for k0 in (0..q).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(q);
+            for i in i0..i1 {
+                let crow = (i - i_off) * r;
+                for k in k0..k1 {
+                    let aik = a[i * q + k];
+                    if aik != 0.0 {
+                        let brow = k * r;
+                        for j in 0..r {
+                            c[crow + j] += aik * b[brow + j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// [`matmul`] with the output rows split across scoped threads
+/// (bit-for-bit identical to serial; serial below [`PAR_MIN_MACS`]).
+pub fn matmul_par(
+    a: &[f32], b: &[f32], p: usize, q: usize, r: usize, threads: usize,
+) -> Vec<f32> {
+    if threads <= 1 || p * q * r < PAR_MIN_MACS {
+        return matmul(a, b, p, q, r);
+    }
+    assert_eq!(a.len(), p * q);
+    assert_eq!(b.len(), q * r);
+    par_rows(p, r, threads, |rows, c| {
+        matmul_rows(a, b, q, r, rows, c)
+    })
 }
 
 #[cfg(test)]
@@ -352,6 +508,94 @@ mod tests {
         for (u, v) in got.iter().zip(&want) {
             assert!((u - v).abs() < 1e-5);
         }
+    }
+
+    /// Unblocked reference kernels: the shapes in
+    /// `blocked_kernels_match_reference` cross the 64-wide BLOCK edge,
+    /// so any tiling mistake (wrong offset, dropped remainder tile)
+    /// shows up against these.
+    fn ref_tn(a: &[f32], b: &[f32], n: usize, p: usize, q: usize)
+        -> Vec<f32> {
+        let mut c = vec![0.0f32; p * q];
+        for s in 0..n {
+            for i in 0..p {
+                for j in 0..q {
+                    c[i * q + j] += a[s * p + i] * b[s * q + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn ref_nn(a: &[f32], b: &[f32], p: usize, q: usize, r: usize)
+        -> Vec<f32> {
+        let mut c = vec![0.0f32; p * r];
+        for i in 0..p {
+            for j in 0..r {
+                for k in 0..q {
+                    c[i * r + j] += a[i * q + k] * b[k * r + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_kernels_match_reference_across_block_edges() {
+        let mut rng = Rng::new(11);
+        // Deliberately awkward sizes: 1 under, on, and over BLOCK.
+        let (n, p, q) = (67, 65, 130);
+        let a: Vec<f32> = (0..n * p).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
+        let want = ref_tn(&a, &b, n, p, q);
+        for (u, v) in matmul_tn(&a, &b, n, p, q).iter().zip(&want) {
+            assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()));
+        }
+        let c: Vec<f32> = (0..p * n).map(|_| rng.normal()).collect();
+        let d: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
+        let want = ref_nn(&c, &d, p, n, q);
+        for (u, v) in matmul(&c, &d, p, n, q).iter().zip(&want) {
+            assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()));
+        }
+        // A Bᵀ against A (Bᵀ) via the plain kernel.
+        let e: Vec<f32> = (0..q * n).map(|_| rng.normal()).collect();
+        let mut et = vec![0.0f32; n * q];
+        for j in 0..q {
+            for s in 0..n {
+                et[s * q + j] = e[j * n + s];
+            }
+        }
+        let want = ref_nn(&c, &et, p, n, q);
+        for (u, v) in matmul_nt(&c, &e, p, n, q).iter().zip(&want) {
+            assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()));
+        }
+    }
+
+    #[test]
+    fn par_kernels_are_bitwise_equal_to_serial() {
+        let mut rng = Rng::new(13);
+        // Big enough to clear PAR_MIN_MACS (130*129*131 > 2^20).
+        let (n, p, q) = (130, 129, 131);
+        let a: Vec<f32> = (0..n * p).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
+        for t in [1usize, 2, 3, 5] {
+            assert_eq!(
+                matmul_tn_par(&a, &b, n, p, q, t),
+                matmul_tn(&a, &b, n, p, q),
+                "tn t={t}"
+            );
+        }
+        let c: Vec<f32> = (0..p * n).map(|_| rng.normal()).collect();
+        let d: Vec<f32> = (0..q * n).map(|_| rng.normal()).collect();
+        assert_eq!(
+            matmul_nt_par(&c, &d, p, n, q, 3),
+            matmul_nt(&c, &d, p, n, q)
+        );
+        let e: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
+        assert_eq!(
+            matmul_par(&c, &e, p, n, q, 3),
+            matmul(&c, &e, p, n, q)
+        );
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   list                         show artifacts the backend serves
 //!   train    --problem P --opt O train one configuration
+//!   bench    [--quick]           machine-readable perf baseline
 //!   fig3|fig6|fig8|fig9          timing figure regenerators
 //!   fig7a|fig7b|fig10|fig11      optimizer-comparison figures
 //!   table3                       problem zoo + parameter checksums
@@ -27,11 +28,12 @@ use backpack_rs::figures::{curves, tables, timing};
 use backpack_rs::optim::Hyper;
 
 const USAGE: &str = "\
-usage: backpack SUBCOMMAND [--backend native|pjrt] [flags]
+usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N] [flags]
   list
   train  --problem mnist_logreg --optimizer kfac [--lr 0.01]
          [--damping 0.01] [--steps 200] [--seed 0] [--eval-every 25]
          [--inv-every 1] [--verbose]
+  bench  [--quick] [--batch 128] [--out BENCH_native.json]
   fig3 | fig6 | fig8 | fig9      [--iters 10]
   fig7a | fig7b | fig10 | fig11  [--grid small|paper]
          [--search-steps N] [--steps N] [--seeds K] [--verbose]
@@ -39,7 +41,10 @@ usage: backpack SUBCOMMAND [--backend native|pjrt] [flags]
   table4 --problem mnist_logreg  [--grid paper|small] [...]
 
 The default `native` backend serves the fully-connected problems
-(mnist_logreg, mnist_mlp) with zero external dependencies; the
+(mnist_logreg, mnist_mlp) with zero external dependencies and runs
+batch-parallel on all cores (`--threads N` or BACKPACK_THREADS=N
+override; `--threads 1` is the serial reference). `bench` writes the
+machine-readable perf baseline CI uploads on every push. The
 convolutional problems and timing figures need `--backend pjrt`
 (build with `--features pjrt` and run `make artifacts` first).
 ";
@@ -62,7 +67,10 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let be = backend::open(args.get_or("backend", "native"))?;
+    let threads = backpack_rs::parallel::resolve_threads(
+        args.get_usize("threads", 0)?,
+    );
+    let be = backend::open_with(args.get_or("backend", "native"), threads)?;
     let be = be.as_ref();
     match args.subcommand.as_str() {
         "list" => {
@@ -117,6 +125,17 @@ fn main() -> Result<()> {
             ));
             write_csv(&path, "step,train_loss", &rows)?;
             println!("wrote {}", path.display());
+        }
+        "bench" => {
+            let default_out = format!("BENCH_{}.json", be.name());
+            let out = args.get_or("out", &default_out);
+            backpack_rs::bench::perf_baseline(
+                be,
+                threads,
+                args.has("quick"),
+                args.get_usize("batch", 128)?,
+                Path::new(out),
+            )?;
         }
         "fig3" => timing::fig3(
             be, args.get_usize("iters", 10)?, out_dir)?,

@@ -1,0 +1,154 @@
+//! Batch-parallel fork/join substrate (zero dependencies).
+//!
+//! The native backend's hot loops are all "per-sample work, then a
+//! reduction" (paper Table 1: every BackPACK quantity is a sum or a
+//! concatenation over the batch axis). This module provides the two
+//! pieces needed to exploit that with `std::thread::scope` alone:
+//!
+//! * [`shards`] -- split `0..n` into at most `t` contiguous,
+//!   nearly-equal ranges, deterministically;
+//! * [`par_map`] -- run one closure per shard on scoped threads
+//!   (shard 0 runs on the calling thread) and return the results *in
+//!   shard order*, so reductions are deterministic for a fixed thread
+//!   count regardless of OS scheduling.
+//!
+//! Thread-count resolution ([`resolve_threads`]): an explicit request
+//! wins, then the `BACKPACK_THREADS` environment variable, then
+//! `std::thread::available_parallelism()`.
+
+use std::ops::Range;
+
+/// Environment variable overriding the auto-detected thread count.
+pub const THREADS_ENV: &str = "BACKPACK_THREADS";
+
+/// Detected hardware parallelism (1 if detection fails).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a requested thread count: `0` means auto (`BACKPACK_THREADS`
+/// if set to a positive integer, else all cores); any positive request
+/// is taken verbatim.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var(THREADS_ENV) {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    available_threads()
+}
+
+/// Split `0..n` into at most `threads` contiguous shards whose lengths
+/// differ by at most one, in index order. Returns fewer shards when
+/// `n < threads` (never an empty shard) and an empty vec for `n = 0`.
+pub fn shards(n: usize, threads: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let t = threads.clamp(1, n);
+    let (base, rem) = (n / t, n % t);
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Fork/join map: run `f` once per shard, spawning scoped threads for
+/// shards `1..` while the calling thread computes shard `0`. Results
+/// come back in shard order, so downstream reductions see a fixed
+/// order for a fixed shard layout (bit-for-bit deterministic per
+/// thread count). Panics in workers propagate to the caller.
+pub fn par_map<T, F>(work: &[Range<usize>], f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    if work.len() <= 1 {
+        return work.iter().cloned().map(f).collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = work[1..]
+            .iter()
+            .map(|r| {
+                let (f, r) = (&f, r.clone());
+                scope.spawn(move || f(r))
+            })
+            .collect();
+        let mut out = Vec::with_capacity(work.len());
+        out.push(f(work[0].clone()));
+        out.extend(
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("parallel worker panicked")),
+        );
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_cover_and_balance() {
+        for n in [0usize, 1, 2, 7, 64, 65, 1000] {
+            for t in [1usize, 2, 3, 8, 200] {
+                let sh = shards(n, t);
+                assert_eq!(sh.len(), t.clamp(1, n.max(1)).min(n));
+                let total: usize = sh.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n, "n={n} t={t}");
+                let mut next = 0;
+                for r in &sh {
+                    assert_eq!(r.start, next, "contiguous in order");
+                    assert!(!r.is_empty());
+                    next = r.end;
+                }
+                if let (Some(max), Some(min)) = (
+                    sh.iter().map(|r| r.len()).max(),
+                    sh.iter().map(|r| r.len()).min(),
+                ) {
+                    assert!(max - min <= 1, "balanced: {max} vs {min}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_returns_in_shard_order() {
+        let sh = shards(100, 7);
+        let got = par_map(&sh, |r| (r.start, r.len()));
+        let want: Vec<(usize, usize)> =
+            sh.iter().map(|r| (r.start, r.len())).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_matches_serial_reduction() {
+        let xs: Vec<f64> = (0..997).map(|i| (i as f64).sqrt()).collect();
+        let serial: f64 = xs.iter().sum();
+        for t in [1usize, 2, 3, 5, 16] {
+            let sh = shards(xs.len(), t);
+            let partial = par_map(&sh, |r| xs[r].iter().sum::<f64>());
+            let total: f64 = partial.iter().sum();
+            assert!((total - serial).abs() < 1e-9, "t={t}");
+        }
+    }
+
+    #[test]
+    fn resolve_threads_prefers_explicit_request() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+}

@@ -1,0 +1,247 @@
+//! Seeded equivalence suite for the batch-parallel native engine:
+//! 1-thread vs N-thread `extended_backward` must agree to f32
+//! summation-reordering error (≤ 1e-5) for every native extension
+//! signature on the paper's registry models (logreg, mlp), and the
+//! per-sample quantities must keep their sample order. Same
+//! proptests-style seeded driver as `tests/proptests.rs`: every case
+//! is a pure function of its seed, and failures report it.
+
+use backpack_rs::backend::model::{Model, NATIVE_EXTENSIONS};
+use backpack_rs::backend::native::NativeBackend;
+use backpack_rs::backend::Backend;
+use backpack_rs::coordinator::train::{build_inputs, init_params};
+use backpack_rs::data::Rng;
+use backpack_rs::runtime::Tensor;
+
+/// Run `prop` for `cases` seeded cases; panic with the seed on failure.
+fn check<F: Fn(&mut Rng, u64) -> Result<(), String>>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x9A7A ^ seed);
+        if let Err(msg) = prop(&mut rng, seed) {
+            panic!("property {name} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+fn registry_model(name: &str) -> Model {
+    match name {
+        "logreg" => Model::logreg(),
+        "mlp" => Model::mlp(),
+        other => panic!("no registry model {other}"),
+    }
+}
+
+/// Small random parameters + batch for a registry model.
+fn problem(
+    m: &Model,
+    n: usize,
+    rng: &mut Rng,
+) -> (Vec<Tensor>, Tensor, Tensor) {
+    let params: Vec<Tensor> = m
+        .param_specs()
+        .iter()
+        .map(|t| {
+            let k: usize = t.shape.iter().product();
+            Tensor::from_f32(
+                &t.shape,
+                (0..k).map(|_| rng.normal() * 0.05).collect(),
+            )
+        })
+        .collect();
+    let x: Vec<f32> = (0..n * m.in_dim).map(|_| rng.normal()).collect();
+    let y: Vec<i32> =
+        (0..n).map(|_| rng.below(m.classes) as i32).collect();
+    (
+        params,
+        Tensor::from_f32(&[n, m.in_dim], x),
+        Tensor::from_i32(&[n], y),
+    )
+}
+
+fn assert_close(
+    key: &str,
+    want: &Tensor,
+    got: &Tensor,
+    tol: f32,
+) -> Result<(), String> {
+    if want.shape != got.shape {
+        return Err(format!(
+            "{key}: shape {:?} vs {:?}",
+            want.shape, got.shape
+        ));
+    }
+    let (a, b) = (
+        want.f32s().map_err(|e| e.to_string())?,
+        got.f32s().map_err(|e| e.to_string())?,
+    );
+    for (i, (u, v)) in a.iter().zip(b).enumerate() {
+        if (u - v).abs() > tol * (1.0 + u.abs()) {
+            return Err(format!("{key}[{i}]: {u} vs {v}"));
+        }
+    }
+    Ok(())
+}
+
+/// The tentpole acceptance property: every extension signature,
+/// both registry models, 1 thread vs several (including counts that
+/// do not divide the batch), agreement ≤ 1e-5.
+#[test]
+fn all_signatures_agree_across_thread_counts() {
+    let mut signatures: Vec<Vec<String>> = vec![Vec::new()]; // "grad"
+    for ext in NATIVE_EXTENSIONS {
+        signatures.push(vec![ext.to_string()]);
+    }
+    for model_name in ["logreg", "mlp"] {
+        let m = registry_model(model_name);
+        check(&format!("thread_equiv_{model_name}"), 2, |rng, seed| {
+            let n = 11 + rng.below(10); // odd sizes: uneven shards
+            let (params, x, y) = problem(&m, n, rng);
+            let key = Some([seed as u32, 0xC0FE]);
+            for exts in &signatures {
+                let serial = m
+                    .extended_backward(&params, &x, &y, exts, key)
+                    .map_err(|e| e.to_string())?;
+                for threads in [2usize, 3, 7] {
+                    let par = m
+                        .extended_backward_threads(
+                            &params, &x, &y, exts, key, threads,
+                        )
+                        .map_err(|e| e.to_string())?;
+                    if serial.len() != par.len() {
+                        return Err(format!(
+                            "{exts:?}: {} vs {} outputs",
+                            serial.len(),
+                            par.len()
+                        ));
+                    }
+                    for (k, want) in &serial {
+                        let got = par.get(k).ok_or_else(|| {
+                            format!("threads={threads}: missing {k}")
+                        })?;
+                        assert_close(
+                            &format!("{exts:?}/{k} threads={threads}"),
+                            want,
+                            got,
+                            1e-5,
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// `batch_grad` keeps sample order under sharding: row `s` of the
+/// N-thread result must equal the gradient of sample `s` computed
+/// alone (rescaled from its own batch-of-1 normalization to 1/N).
+#[test]
+fn batch_grad_sample_order_is_preserved() {
+    let m = Model::mlp();
+    check("batch_grad_order", 2, |rng, _seed| {
+        let n = 9 + rng.below(4);
+        let (params, x, y) = problem(&m, n, rng);
+        let exts = vec!["batch_grad".to_string()];
+        let par = m
+            .extended_backward_threads(&params, &x, &y, &exts, None, 4)
+            .map_err(|e| e.to_string())?;
+        let xs = x.f32s().map_err(|e| e.to_string())?;
+        let ys = y.i32s().map_err(|e| e.to_string())?;
+        for s in [0usize, n / 2, n - 1] {
+            let xi = Tensor::from_f32(
+                &[1, m.in_dim],
+                xs[s * m.in_dim..(s + 1) * m.in_dim].to_vec(),
+            );
+            let yi = Tensor::from_i32(&[1], vec![ys[s]]);
+            let single = m
+                .extended_backward(&params, &xi, &yi, &exts, None)
+                .map_err(|e| e.to_string())?;
+            for (li, din, dout) in m.linear_dims() {
+                for (part, d) in [("w", dout * din), ("b", dout)] {
+                    let key = format!("batch_grad/{li}/{part}");
+                    let full = par[&key]
+                        .f32s()
+                        .map_err(|e| e.to_string())?;
+                    let one = single[&key]
+                        .f32s()
+                        .map_err(|e| e.to_string())?;
+                    for i in 0..d {
+                        // batch-of-1 rows carry 1/1; the full batch
+                        // carries 1/N.
+                        let want = one[i] / n as f32;
+                        let got = full[s * d + i];
+                        if (got - want).abs()
+                            > 1e-5 * (1.0 + want.abs())
+                        {
+                            return Err(format!(
+                                "{key} sample {s} [{i}]: {got} vs {want}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Fixed thread count => bit-for-bit identical outputs (shard
+/// reduction order is deterministic, never scheduler-dependent).
+#[test]
+fn fixed_thread_count_is_bitwise_deterministic() {
+    let m = Model::mlp();
+    let mut rng = Rng::new(0xD37);
+    let (params, x, y) = problem(&m, 13, &mut rng);
+    let exts: Vec<String> = ["variance", "diag_ggn_mc", "kfra"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let key = Some([5, 6]);
+    for threads in [1usize, 4] {
+        let a = m
+            .extended_backward_threads(&params, &x, &y, &exts, key, threads)
+            .unwrap();
+        let b = m
+            .extended_backward_threads(&params, &x, &y, &exts, key, threads)
+            .unwrap();
+        for (k, va) in &a {
+            assert_eq!(va, &b[k], "{k} threads={threads}");
+        }
+    }
+}
+
+/// The full backend path honors the configured worker count: a
+/// 1-thread and an 8-thread backend produce ≤ 1e-5-equal training
+/// graphs for the combined first-order signature.
+#[test]
+fn backend_thread_counts_agree_end_to_end() {
+    let serial = NativeBackend::with_threads(1);
+    let parallel = NativeBackend::with_threads(8);
+    assert_eq!(serial.threads(), 1);
+    assert_eq!(parallel.threads(), 8);
+    let name = "mlp_batch_grad+batch_l2+sq_moment+variance_n24";
+    let exe1 = serial.load(name).unwrap();
+    let exe8 = parallel.load(name).unwrap();
+    let params = init_params(exe1.spec(), 3);
+    let mut rng = Rng::new(77);
+    let x: Vec<f32> = (0..24 * 784).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..24).map(|_| rng.below(10) as i32).collect();
+    let inputs = build_inputs(
+        &params,
+        Tensor::from_f32(&[24, 784], x),
+        Tensor::from_i32(&[24], y),
+        None,
+    );
+    let o1 = exe1.run(&inputs).unwrap();
+    let o8 = exe8.run(&inputs).unwrap();
+    let names: Vec<&String> = o1.names().collect();
+    assert_eq!(names, o8.names().collect::<Vec<_>>());
+    for k in names {
+        assert_close(k, o1.get(k).unwrap(), o8.get(k).unwrap(), 1e-5)
+            .unwrap();
+    }
+}
