@@ -1,18 +1,18 @@
 //! End-to-end driver (deliverable (b) / DESIGN.md §5): train the 3c3d
 //! network (895,210 parameters) on synthetic CIFAR-10 with a
 //! second-order optimizer built on BackPACK quantities, for a few
-//! hundred steps, logging the loss curve -- proving all three layers
-//! compose: Pallas kernels inside the JAX graph, lowered to HLO,
-//! executed and consumed by the Rust coordinator's KFAC-preconditioned
-//! update.
+//! hundred steps, logging the loss curve. Runs on the default
+//! **native** backend -- no artifacts, no flags, no external
+//! dependencies: the im2col conv subsystem executes the whole graph
+//! and the KFAC-preconditioned update consumes its Kronecker factors.
 //!
 //! Run: `cargo run --release --example train_cifar10 -- [steps] [opt]`
 
 use anyhow::Result;
+use backpack_rs::backend;
 use backpack_rs::coordinator::metrics::write_csv;
 use backpack_rs::coordinator::{problems, train, TrainConfig};
 use backpack_rs::optim::Hyper;
-use backpack_rs::runtime::Runtime;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -20,7 +20,7 @@ fn main() -> Result<()> {
         args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(300);
     let opt = args.get(2).cloned().unwrap_or_else(|| "kfac".to_string());
 
-    let rt = Runtime::open_default()?;
+    let be = backend::open("native")?;
     let problem = problems::by_name("cifar10_3c3d")?;
     let cfg = TrainConfig {
         problem: problem.codename.into(),
@@ -39,7 +39,7 @@ fn main() -> Result<()> {
         "training 3c3d (895,210 params) on synthetic CIFAR-10 with \
          {opt} for {steps} steps..."
     );
-    let log = train::train(&rt, problem, &cfg)?;
+    let log = train::train(be.as_ref(), problem, &cfg)?;
 
     println!("\nloss curve:");
     for (s, l) in &log.train_loss {

@@ -1,0 +1,390 @@
+//! `Conv2d` forward + every BackPACK extraction rule, via im2col
+//! (DESIGN.md §6). All functions operate on one contiguous batch
+//! shard and normalize averaged quantities by the **global** batch
+//! size `norm`, so shard outputs sum-reduce exactly like the `Linear`
+//! rules in `backend/model.rs`.
+//!
+//! Conventions (weight `W [c_out, J]` with `J = c_in·k·k`, unfolded
+//! input `U = ⟦x⟧ [J, P]`, per-sample output gradient `G [c_out, P]`,
+//! square-root GGN `S [c_out·P, cols]`):
+//!
+//! * gradient         `(1/N) Σ_n G_n U_nᵀ`, bias `(1/N) Σ_n G_n 1`;
+//! * DiagGGN          `(1/N) Σ_{n,c} (Jᵀ S)²` with
+//!                    `(Jᵀ S)[o,j,c] = Σ_p U[j,p] S[(o,p),c]`;
+//! * KFAC/KFLR        `A = (1/N) Σ_n U_n U_nᵀ` (positions folded into
+//!                    the contraction), `B = (1/(N·P)) Σ_n S_n S_nᵀ`
+//!                    (position-averaged), bias GGN from the
+//!                    position-summed `S̄ [c_out, cols]` — the Grosse
+//!                    & Martens (2016) KFC convention, which reduces
+//!                    exactly to the `Linear` factors at `P = 1`.
+//!
+//! Each phase re-unfolds its layer input instead of sharing a cached
+//! `⟦x⟧` across the forward / first-order / second-order walks: the
+//! unfold is `O(J·P)` data movement against the phase's `O(J·P·c)`
+//! matmul (`c >= 32` on every registry model, so ≤ ~3% of the work),
+//! and keeping the phases independent keeps shard-local memory flat
+//! at one unfolded matrix per sample.
+
+use crate::linalg::{matmul, matmul_nt, matmul_tn};
+
+use super::im2col::ConvGeom;
+
+/// Forward over a shard: `z = W ⟦x⟧ + b 1ᵀ` per sample.
+pub fn forward(
+    geom: &ConvGeom,
+    w: &[f32],
+    b: &[f32],
+    inp: &[f32],
+    ns: usize,
+) -> Vec<f32> {
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let c_out = geom.out_shape.c;
+    let mut z = vec![0.0f32; ns * fout];
+    for s in 0..ns {
+        let u = geom.im2col(&inp[s * fin..(s + 1) * fin]);
+        let zs = matmul(w, &u, c_out, j, p);
+        let dst = &mut z[s * fout..(s + 1) * fout];
+        dst.copy_from_slice(&zs);
+        for o in 0..c_out {
+            for q in 0..p {
+                dst[o * p + q] += b[o];
+            }
+        }
+    }
+    z
+}
+
+/// First-order VJP w.r.t. the input: `G ↦ col2im(Wᵀ G)` per sample.
+pub fn vjp_input(
+    geom: &ConvGeom,
+    w: &[f32],
+    g: &[f32],
+    ns: usize,
+) -> Vec<f32> {
+    mat_vjp_input(geom, w, g, ns, 1)
+}
+
+/// Square-root-GGN VJP: `S [ns, c_out·P, cols] -> [ns, c_in·h·w,
+/// cols]` — `Wᵀ S` as one matmul per sample (positions and columns
+/// share the minor axis), then the col2im scatter.
+pub fn mat_vjp_input(
+    geom: &ConvGeom,
+    w: &[f32],
+    s: &[f32],
+    ns: usize,
+    cols: usize,
+) -> Vec<f32> {
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let c_out = geom.out_shape.c;
+    debug_assert_eq!(s.len(), ns * fout * cols);
+    let mut out = vec![0.0f32; ns * fin * cols];
+    for smp in 0..ns {
+        let blk = &s[smp * fout * cols..(smp + 1) * fout * cols];
+        // [c_out, P·cols] -> [J, P·cols]
+        let t = matmul_tn(w, blk, c_out, j, p * cols);
+        geom.col2im_acc(
+            &t,
+            cols,
+            &mut out[smp * fin * cols..(smp + 1) * fin * cols],
+        );
+    }
+    out
+}
+
+/// First-order quantities of one conv layer over a shard. `gw`/`gb`
+/// are the norm-averaged gradient; the optional vectors are filled
+/// only when requested (batch quantities in shard sample order).
+pub struct FirstOrder {
+    pub gw: Vec<f32>,
+    pub gb: Vec<f32>,
+    pub batch_w: Vec<f32>,
+    pub batch_b: Vec<f32>,
+    pub l2_w: Vec<f32>,
+    pub l2_b: Vec<f32>,
+    pub sq_w: Vec<f32>,
+    pub sq_b: Vec<f32>,
+}
+
+/// Compute gradient + requested first-order extensions from per-sample
+/// `G_n U_nᵀ` products (one `matmul_nt` per sample, reused by every
+/// quantity). Unlike `Linear`, the per-sample gradient is not rank-1
+/// (spatial positions sum into it), so `batch_l2`/`sq_moment`
+/// materialize the product instead of using the rank-1 shortcut.
+#[allow(clippy::too_many_arguments)]
+pub fn first_order(
+    geom: &ConvGeom,
+    inp: &[f32],
+    g: &[f32],
+    ns: usize,
+    norm: f32,
+    want_batch: bool,
+    want_l2: bool,
+    want_sq: bool,
+) -> FirstOrder {
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let c_out = geom.out_shape.c;
+    let mut fo = FirstOrder {
+        gw: vec![0.0f32; c_out * j],
+        gb: vec![0.0f32; c_out],
+        batch_w: Vec::new(),
+        batch_b: Vec::new(),
+        l2_w: Vec::new(),
+        l2_b: Vec::new(),
+        sq_w: if want_sq { vec![0.0f32; c_out * j] } else { Vec::new() },
+        sq_b: if want_sq { vec![0.0f32; c_out] } else { Vec::new() },
+    };
+    if want_batch {
+        fo.batch_w.reserve(ns * c_out * j);
+        fo.batch_b.reserve(ns * c_out);
+    }
+    for smp in 0..ns {
+        let u = geom.im2col(&inp[smp * fin..(smp + 1) * fin]);
+        let gs = &g[smp * fout..(smp + 1) * fout];
+        // Per-sample weight gradient G_n U_nᵀ [c_out, J].
+        let pg = matmul_nt(gs, &u, c_out, p, j);
+        for (acc, v) in fo.gw.iter_mut().zip(&pg) {
+            *acc += v;
+        }
+        // Per-sample bias gradient: position sums of G_n.
+        let mut pb = vec![0.0f32; c_out];
+        for o in 0..c_out {
+            pb[o] = gs[o * p..(o + 1) * p].iter().sum();
+            fo.gb[o] += pb[o];
+        }
+        if want_batch {
+            fo.batch_w.extend(pg.iter().map(|v| v / norm));
+            fo.batch_b.extend(pb.iter().map(|v| v / norm));
+        }
+        if want_l2 {
+            let g2: f32 = pg.iter().map(|v| v * v).sum();
+            let b2: f32 = pb.iter().map(|v| v * v).sum();
+            fo.l2_w.push(g2 / (norm * norm));
+            fo.l2_b.push(b2 / (norm * norm));
+        }
+        if want_sq {
+            for (acc, v) in fo.sq_w.iter_mut().zip(&pg) {
+                *acc += v * v;
+            }
+            for (acc, v) in fo.sq_b.iter_mut().zip(&pb) {
+                *acc += v * v;
+            }
+        }
+    }
+    for v in fo.gw.iter_mut().chain(fo.gb.iter_mut()) {
+        *v /= norm;
+    }
+    for v in fo.sq_w.iter_mut().chain(fo.sq_b.iter_mut()) {
+        *v /= norm;
+    }
+    fo
+}
+
+/// DiagGGN extraction (Eq. 19 through the unfolded view): per sample,
+/// transpose `S` to `[(o,c), P]`, contract against `U [J, P]`, square
+/// and accumulate. Returns `(diag_w [c_out·J], diag_b [c_out])`,
+/// norm-averaged.
+pub fn diag_sqrt(
+    geom: &ConvGeom,
+    inp: &[f32],
+    s: &[f32],
+    ns: usize,
+    cols: usize,
+    norm: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let c_out = geom.out_shape.c;
+    debug_assert_eq!(s.len(), ns * fout * cols);
+    let mut dw = vec![0.0f32; c_out * j];
+    let mut db = vec![0.0f32; c_out];
+    let mut st = vec![0.0f32; c_out * cols * p];
+    for smp in 0..ns {
+        let u = geom.im2col(&inp[smp * fin..(smp + 1) * fin]);
+        let blk = &s[smp * fout * cols..(smp + 1) * fout * cols];
+        // S [(o,p), c] -> St [(o,c), p]
+        for o in 0..c_out {
+            for q in 0..p {
+                let src = (o * p + q) * cols;
+                for cc in 0..cols {
+                    st[(o * cols + cc) * p + q] = blk[src + cc];
+                }
+            }
+        }
+        // V[(o,c), j] = Σ_p S[(o,p),c] U[j,p]
+        let v = matmul_nt(&st, &u, c_out * cols, p, j);
+        for o in 0..c_out {
+            for cc in 0..cols {
+                let row = &v[(o * cols + cc) * j..(o * cols + cc + 1) * j];
+                let dst = &mut dw[o * j..(o + 1) * j];
+                for (acc, x) in dst.iter_mut().zip(row) {
+                    *acc += x * x;
+                }
+                // Bias Jacobian sums S over positions.
+                let sbar: f32 = (0..p)
+                    .map(|q| st[(o * cols + cc) * p + q])
+                    .sum();
+                db[o] += sbar * sbar;
+            }
+        }
+    }
+    for v in dw.iter_mut().chain(db.iter_mut()) {
+        *v /= norm;
+    }
+    (dw, db)
+}
+
+/// KFAC/KFLR Kronecker factors of one conv layer over a shard:
+/// `(A [J,J], B [c_out,c_out], bias_ggn [c_out,c_out])`, normalized so
+/// shard outputs sum-reduce.
+pub fn kron_factors(
+    geom: &ConvGeom,
+    inp: &[f32],
+    s: &[f32],
+    ns: usize,
+    cols: usize,
+    norm: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let c_out = geom.out_shape.c;
+    debug_assert_eq!(s.len(), ns * fout * cols);
+    let mut a = vec![0.0f32; j * j];
+    let mut bf = vec![0.0f32; c_out * c_out];
+    let mut bias = vec![0.0f32; c_out * c_out];
+    let mut srow = vec![0.0f32; c_out * cols];
+    for smp in 0..ns {
+        let u = geom.im2col(&inp[smp * fin..(smp + 1) * fin]);
+        // A += U Uᵀ (spatial positions folded into the contraction).
+        let uu = matmul_nt(&u, &u, j, p, j);
+        for (acc, v) in a.iter_mut().zip(&uu) {
+            *acc += v;
+        }
+        // B += S Sᵀ, contracting positions AND columns (rows of the
+        // sample block are [P·cols] long).
+        let blk = &s[smp * fout * cols..(smp + 1) * fout * cols];
+        let ss = matmul_nt(blk, blk, c_out, p * cols, c_out);
+        for (acc, v) in bf.iter_mut().zip(&ss) {
+            *acc += v;
+        }
+        // bias GGN from the position-summed S̄ [c_out, cols].
+        for o in 0..c_out {
+            for cc in 0..cols {
+                srow[o * cols + cc] = (0..p)
+                    .map(|q| blk[(o * p + q) * cols + cc])
+                    .sum();
+            }
+        }
+        let bb = matmul_nt(&srow, &srow, c_out, cols, c_out);
+        for (acc, v) in bias.iter_mut().zip(&bb) {
+            *acc += v;
+        }
+    }
+    for v in a.iter_mut() {
+        *v /= norm;
+    }
+    // Position-averaged B (KFC): reduces to the Linear 1/N Σ S Sᵀ at
+    // P = 1.
+    let pf = norm * p as f32;
+    for v in bf.iter_mut() {
+        *v /= pf;
+    }
+    for v in bias.iter_mut() {
+        *v /= norm;
+    }
+    (a, bf, bias)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::conv::Shape;
+    use crate::data::Rng;
+
+    /// 1x1 conv on a 1x1 image is exactly a Linear layer: every
+    /// extraction rule must reduce to the FC formulas.
+    #[test]
+    fn one_by_one_conv_reduces_to_linear() {
+        let geom =
+            ConvGeom::new(Shape::new(4, 1, 1), 3, 1, 1, 0).unwrap();
+        assert_eq!(geom.patch_len(), 4);
+        assert_eq!(geom.positions(), 1);
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..3).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..8).map(|_| rng.normal()).collect(); // 2 samples
+        let z = forward(&geom, &w, &b, &x, 2);
+        for s in 0..2 {
+            for o in 0..3 {
+                let want: f32 = (0..4)
+                    .map(|i| w[o * 4 + i] * x[s * 4 + i])
+                    .sum::<f32>()
+                    + b[o];
+                assert!((z[s * 3 + o] - want).abs() < 1e-5);
+            }
+        }
+        // Gradient = (1/N) Σ g_n x_nᵀ, the Linear rule.
+        let g: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        let fo = first_order(&geom, &x, &g, 2, 2.0, true, true, true);
+        for o in 0..3 {
+            for i in 0..4 {
+                let want: f32 = (0..2)
+                    .map(|s| g[s * 3 + o] * x[s * 4 + i])
+                    .sum::<f32>()
+                    / 2.0;
+                assert!((fo.gw[o * 4 + i] - want).abs() < 1e-5);
+            }
+        }
+        // Kron factors: A = (1/N) Σ x xᵀ, B = (1/N) Σ s sᵀ (P = 1).
+        let s: Vec<f32> = (0..2 * 3 * 2).map(|_| rng.normal()).collect();
+        let (a, bf, bias) = kron_factors(&geom, &x, &s, 2, 2, 2.0);
+        for i in 0..4 {
+            for k in 0..4 {
+                let want: f32 = (0..2)
+                    .map(|smp| x[smp * 4 + i] * x[smp * 4 + k])
+                    .sum::<f32>()
+                    / 2.0;
+                assert!((a[i * 4 + k] - want).abs() < 1e-5);
+            }
+        }
+        // At P = 1 the position-summed S̄ equals S: B == bias_ggn.
+        for (u, v) in bf.iter().zip(&bias) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn vjp_input_matches_finite_differences_of_forward() {
+        let geom =
+            ConvGeom::new(Shape::new(2, 4, 4), 3, 3, 1, 1).unwrap();
+        let mut rng = Rng::new(9);
+        let w: Vec<f32> =
+            (0..3 * geom.patch_len()).map(|_| rng.normal()).collect();
+        let b = vec![0.0f32; 3];
+        let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let g: Vec<f32> = (0..geom.out_shape.flat())
+            .map(|_| rng.normal())
+            .collect();
+        let dx = vjp_input(&geom, &w, &g, 1);
+        let eps = 1e-2f32;
+        let dot = |z: &[f32]| -> f32 {
+            z.iter().zip(&g).map(|(a, b)| a * b).sum()
+        };
+        for idx in [0usize, 5, 13, 31] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = (dot(&forward(&geom, &w, &b, &xp, 1))
+                - dot(&forward(&geom, &w, &b, &xm, 1)))
+                / (2.0 * eps);
+            assert!(
+                (dx[idx] - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                "dx[{idx}] {} vs fd {fd}",
+                dx[idx]
+            );
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! im2col / col2im: the patch-extraction lowering every conv
+//! extraction rule in this subsystem is built on (DESIGN.md §6).
+//!
+//! `im2col` unfolds one sample `x [c_in, h, w]` into
+//! `⟦x⟧ [J, P]` with `J = c_in·k·k` patch rows and `P = out_h·out_w`
+//! position columns; out-of-bounds (padding) taps stay zero.
+//! `col2im_acc` is its exact adjoint, scattering a `[J, P]`-shaped
+//! cotangent back onto the input grid — the pair satisfies
+//! `⟨im2col(x), T⟩ = ⟨x, col2im(T)⟩`, which is what makes the
+//! conv backward pass a matmul + scatter.
+
+use anyhow::{ensure, Result};
+
+use super::Shape;
+
+/// Geometry of one `Conv2d` application: square `kernel`, symmetric
+/// zero `pad`, uniform `stride`. Output dims use the floor rule
+/// `out = (in + 2·pad − k)/stride + 1`, validated at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    pub fn new(
+        in_shape: Shape,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Result<ConvGeom> {
+        ensure!(
+            kernel >= 1 && stride >= 1 && out_ch >= 1,
+            "Conv2d: kernel/stride/out_ch must be >= 1"
+        );
+        ensure!(
+            pad < kernel,
+            "Conv2d: pad {pad} >= kernel {kernel} creates all-zero \
+             patches"
+        );
+        ensure!(
+            in_shape.h + 2 * pad >= kernel
+                && in_shape.w + 2 * pad >= kernel,
+            "Conv2d: kernel {kernel} exceeds padded input {}x{} (+{pad})",
+            in_shape.h,
+            in_shape.w
+        );
+        let oh = (in_shape.h + 2 * pad - kernel) / stride + 1;
+        let ow = (in_shape.w + 2 * pad - kernel) / stride + 1;
+        Ok(ConvGeom {
+            in_shape,
+            out_shape: Shape::new(out_ch, oh, ow),
+            kernel,
+            stride,
+            pad,
+        })
+    }
+
+    /// Patch length `J = c_in·k·k` — the A-factor / weight-column dim.
+    pub fn patch_len(&self) -> usize {
+        self.in_shape.c * self.kernel * self.kernel
+    }
+
+    /// Spatial output positions `P = out_h·out_w`.
+    pub fn positions(&self) -> usize {
+        self.out_shape.h * self.out_shape.w
+    }
+
+    /// Weight tensor shape `[out_ch, in_ch, k, k]` (row-major flat
+    /// equals the `[out_ch, J]` matrix the lowering multiplies by).
+    pub fn w_shape(&self) -> Vec<usize> {
+        vec![
+            self.out_shape.c,
+            self.in_shape.c,
+            self.kernel,
+            self.kernel,
+        ]
+    }
+
+    /// Unfold one sample `x [c_in·h·w]` into `⟦x⟧ [J, P]`.
+    pub fn im2col(&self, x: &[f32]) -> Vec<f32> {
+        let Shape { c, h, w } = self.in_shape;
+        debug_assert_eq!(x.len(), self.in_shape.flat());
+        let (oh, ow) = (self.out_shape.h, self.out_shape.w);
+        let p = oh * ow;
+        let k = self.kernel;
+        let mut u = vec![0.0f32; self.patch_len() * p];
+        for ci in 0..c {
+            for ki in 0..k {
+                for kj in 0..k {
+                    let j = (ci * k + ki) * k + kj;
+                    let row = &mut u[j * p..(j + 1) * p];
+                    for oy in 0..oh {
+                        let Some(iy) = (oy * self.stride + ki)
+                            .checked_sub(self.pad)
+                            .filter(|&iy| iy < h)
+                        else {
+                            continue;
+                        };
+                        let src = (ci * h + iy) * w;
+                        for ox in 0..ow {
+                            let Some(ix) = (ox * self.stride + kj)
+                                .checked_sub(self.pad)
+                                .filter(|&ix| ix < w)
+                            else {
+                                continue;
+                            };
+                            row[oy * ow + ox] = x[src + ix];
+                        }
+                    }
+                }
+            }
+        }
+        u
+    }
+
+    /// Adjoint scatter: accumulate `t [J, P·cols]` (a `[J, P]`
+    /// cotangent carrying `cols` trailing channels per position, as
+    /// the square-root-GGN propagation produces) onto
+    /// `out [c_in·h·w · cols]`. `cols = 1` is the plain first-order
+    /// col2im.
+    pub fn col2im_acc(&self, t: &[f32], cols: usize, out: &mut [f32]) {
+        let Shape { c, h, w } = self.in_shape;
+        let (oh, ow) = (self.out_shape.h, self.out_shape.w);
+        let p = oh * ow;
+        let k = self.kernel;
+        debug_assert_eq!(t.len(), self.patch_len() * p * cols);
+        debug_assert_eq!(out.len(), self.in_shape.flat() * cols);
+        for ci in 0..c {
+            for ki in 0..k {
+                for kj in 0..k {
+                    let j = (ci * k + ki) * k + kj;
+                    let row = &t[j * p * cols..(j + 1) * p * cols];
+                    for oy in 0..oh {
+                        let Some(iy) = (oy * self.stride + ki)
+                            .checked_sub(self.pad)
+                            .filter(|&iy| iy < h)
+                        else {
+                            continue;
+                        };
+                        for ox in 0..ow {
+                            let Some(ix) = (ox * self.stride + kj)
+                                .checked_sub(self.pad)
+                                .filter(|&ix| ix < w)
+                            else {
+                                continue;
+                            };
+                            let dst = ((ci * h + iy) * w + ix) * cols;
+                            let src = (oy * ow + ox) * cols;
+                            for cc in 0..cols {
+                                out[dst + cc] += row[src + cc];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn output_shape_rules() {
+        // 3c3d chain on 32x32 (DESIGN.md §6 trace).
+        let g = ConvGeom::new(Shape::new(3, 32, 32), 64, 5, 1, 0)
+            .unwrap();
+        assert_eq!(g.out_shape, Shape::new(64, 28, 28));
+        assert_eq!(g.patch_len(), 75);
+        // 'same' 1x1 and stride-2 'same' (All-CNN-C at side 16).
+        let g = ConvGeom::new(Shape::new(96, 16, 16), 96, 3, 2, 1)
+            .unwrap();
+        assert_eq!(g.out_shape, Shape::new(96, 8, 8));
+        assert!(ConvGeom::new(Shape::new(1, 2, 2), 4, 5, 1, 0).is_err());
+        assert!(ConvGeom::new(Shape::new(1, 8, 8), 4, 3, 1, 3).is_err());
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1: ⟦x⟧ is x itself, row per channel.
+        let g = ConvGeom::new(Shape::new(2, 2, 2), 3, 1, 1, 0).unwrap();
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        assert_eq!(g.im2col(&x), x);
+    }
+
+    #[test]
+    fn im2col_padding_and_stride() {
+        // 1 channel 3x3, k=3, pad=1, stride=2 -> P = 2x2 corners.
+        let g = ConvGeom::new(Shape::new(1, 3, 3), 1, 3, 2, 1).unwrap();
+        assert_eq!(g.out_shape, Shape::new(1, 2, 2));
+        let x: Vec<f32> =
+            (1..=9).map(|v| v as f32).collect(); // 1..9 row-major
+        let u = g.im2col(&x);
+        assert_eq!(u.len(), 9 * 4);
+        // Center tap j = ki*k + kj = 4; its row starts at 4*P = 16.
+        // Position (0,0) reads x[0][0] = 1.
+        assert_eq!(u[16], 1.0);
+        // Top-left tap of position (0,0) is padding: 0.
+        assert_eq!(u[0], 0.0);
+        // Center tap of position (1,1) is x[2][2] = 9.
+        assert_eq!(u[16 + 3], 9.0);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), T> == <x, col2im(T)> for random x, T -- the
+        // identity the conv backward pass rests on. Checked across
+        // padding/stride/clipping variants.
+        let mut rng = Rng::new(3);
+        for (c, h, w, oc, k, s, p) in [
+            (2usize, 5usize, 5usize, 3usize, 3usize, 1usize, 1usize),
+            (3, 6, 4, 2, 3, 2, 1),
+            (1, 7, 7, 2, 5, 1, 0),
+            (2, 4, 4, 2, 1, 1, 0),
+        ] {
+            let g =
+                ConvGeom::new(Shape::new(c, h, w), oc, k, s, p).unwrap();
+            let x: Vec<f32> =
+                (0..c * h * w).map(|_| rng.normal()).collect();
+            let t: Vec<f32> = (0..g.patch_len() * g.positions())
+                .map(|_| rng.normal())
+                .collect();
+            let u = g.im2col(&x);
+            let fwd: f64 = u
+                .iter()
+                .zip(&t)
+                .map(|(a, b)| (a * b) as f64)
+                .sum();
+            let mut back = vec![0.0f32; c * h * w];
+            g.col2im_acc(&t, 1, &mut back);
+            let adj: f64 = x
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a * b) as f64)
+                .sum();
+            assert!(
+                (fwd - adj).abs() < 1e-3 * (1.0 + fwd.abs()),
+                "adjoint mismatch k={k} s={s} p={p}: {fwd} vs {adj}"
+            );
+        }
+    }
+
+    #[test]
+    fn col2im_cols_routes_trailing_channels_together() {
+        let g = ConvGeom::new(Shape::new(1, 2, 2), 1, 1, 1, 0).unwrap();
+        // J = 1, P = 4, cols = 2: scatter is the identity per column.
+        let t: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let mut out = vec![0.0f32; 4 * 2];
+        g.col2im_acc(&t, 2, &mut out);
+        assert_eq!(out, t);
+    }
+}

@@ -1,0 +1,85 @@
+//! Native convolution subsystem (DESIGN.md §6).
+//!
+//! Convolutions reduce to the fully-connected case by *patch
+//! extraction*: `im2col` unfolds each sample into a matrix
+//! `⟦x⟧ [c_in·k·k, P]` whose columns are the receptive fields of the
+//! `P = out_h·out_w` output positions, turning `Conv2d` into the
+//! matrix product `z = W ⟦x⟧ + b 1ᵀ` on the cache-blocked `linalg`
+//! kernels. Every BackPACK extraction rule then follows the `Linear`
+//! derivations of `backend/model.rs` with the unfolded input in place
+//! of `x` and spatial positions folded into the contraction:
+//!
+//! * first-order quantities from per-sample `G ⟦x⟧ᵀ` products
+//!   ([`conv2d::first_order`]),
+//! * DiagGGN via the square-root propagation `S ↦ Wᵀ S` + `col2im`
+//!   ([`conv2d::mat_vjp_input`], [`conv2d::diag_sqrt`]),
+//! * KFAC/KFLR Kronecker factors from the unfolded input's
+//!   self-outer-product and the position-averaged `S Sᵀ`
+//!   ([`conv2d::kron_factors`]; Grosse & Martens 2016).
+//!
+//! KFRA is *not* lowered: its batch-averaged `Ḡ` recursion does not
+//! scale to weight-shared layers (paper footnote 5), and the engine
+//! rejects it on any model containing conv/pool layers.
+//!
+//! [`pool`] implements `MaxPool2d` (clipped windows = TF "same"
+//! pooling; the Jacobian is a selection matrix, so all propagations
+//! are index routing) and the global average pool All-CNN-C ends in.
+
+pub mod conv2d;
+pub mod im2col;
+pub mod pool;
+
+pub use im2col::ConvGeom;
+pub use pool::PoolGeom;
+
+/// Channels × height × width of one activation. Flat (vector) features
+/// are `[d, 1, 1]`; activations are stored row-major `[c][h][w]` per
+/// sample, so `flat()` is the feature dimension the engine's
+/// `[N, features]` buffers use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub fn new(c: usize, h: usize, w: usize) -> Shape {
+        Shape { c, h, w }
+    }
+
+    /// A flat feature vector of dimension `d`.
+    pub fn flat_vec(d: usize) -> Shape {
+        Shape { c: d, h: 1, w: 1 }
+    }
+
+    /// Total feature count.
+    pub fn flat(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Manifest-style dims: `[c, h, w]` for images, `[d]` for flat
+    /// vectors.
+    pub fn dims(&self) -> Vec<usize> {
+        if self.h == 1 && self.w == 1 {
+            vec![self.c]
+        } else {
+            vec![self.c, self.h, self.w]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_flat_and_dims() {
+        let s = Shape::new(3, 4, 5);
+        assert_eq!(s.flat(), 60);
+        assert_eq!(s.dims(), vec![3, 4, 5]);
+        let f = Shape::flat_vec(784);
+        assert_eq!(f.flat(), 784);
+        assert_eq!(f.dims(), vec![784]);
+    }
+}

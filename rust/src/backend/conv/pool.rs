@@ -1,0 +1,252 @@
+//! Pooling layers: `MaxPool2d` and the global average pool.
+//!
+//! Max pooling's Jacobian is a per-sample selection matrix (one 1 per
+//! output at the window argmax), so every propagation the engine needs
+//! — first-order VJP and the column-carrying square-root-GGN VJP — is
+//! index routing via [`PoolGeom::for_each_max`]. Windows *clip* at the
+//! borders instead of padding (equivalent to −∞ padding; TF "same"
+//! pooling), and `ceil` selects the TF/ceil output-size rule
+//! `out = ⌈(in − k)/stride⌉ + 1` the 3c3d net relies on. Ties resolve
+//! to the first element in row-major scan order, deterministically, so
+//! shard layout can never change the routing.
+//!
+//! The global average pool (`GlobalAvgPool`, All-CNN-C's head) is a
+//! fixed linear map: every propagation is a broadcast scaled by
+//! `1/(h·w)`.
+
+use anyhow::{ensure, Result};
+
+use super::Shape;
+
+/// Geometry of one `MaxPool2d` application (square window, uniform
+/// stride, clipped borders).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolGeom {
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+    pub kernel: usize,
+    pub stride: usize,
+}
+
+impl PoolGeom {
+    pub fn new(
+        in_shape: Shape,
+        kernel: usize,
+        stride: usize,
+        ceil: bool,
+    ) -> Result<PoolGeom> {
+        ensure!(
+            kernel >= 1 && stride >= 1,
+            "MaxPool2d: kernel/stride must be >= 1"
+        );
+        ensure!(
+            !ceil || stride <= kernel,
+            "MaxPool2d: ceil mode with stride {stride} > kernel \
+             {kernel} would start windows outside the input"
+        );
+        ensure!(
+            in_shape.h >= kernel && in_shape.w >= kernel,
+            "MaxPool2d: window {kernel} exceeds input {}x{}",
+            in_shape.h,
+            in_shape.w
+        );
+        let out = |d: usize| {
+            if ceil {
+                (d - kernel).div_ceil(stride) + 1
+            } else {
+                (d - kernel) / stride + 1
+            }
+        };
+        Ok(PoolGeom {
+            in_shape,
+            out_shape: Shape::new(
+                in_shape.c,
+                out(in_shape.h),
+                out(in_shape.w),
+            ),
+            kernel,
+            stride,
+        })
+    }
+
+    /// Visit every (output index, input argmax index) pair of one
+    /// sample `x [c·h·w]`, in output order.
+    pub fn for_each_max<F: FnMut(usize, usize)>(
+        &self,
+        x: &[f32],
+        mut f: F,
+    ) {
+        let Shape { c, h, w } = self.in_shape;
+        debug_assert_eq!(x.len(), self.in_shape.flat());
+        let (oh, ow) = (self.out_shape.h, self.out_shape.w);
+        for ch in 0..c {
+            let plane = ch * h * w;
+            for oy in 0..oh {
+                let y0 = oy * self.stride;
+                let y1 = (y0 + self.kernel).min(h);
+                for ox in 0..ow {
+                    let x0 = ox * self.stride;
+                    let x1 = (x0 + self.kernel).min(w);
+                    let mut best = plane + y0 * w + x0;
+                    for iy in y0..y1 {
+                        let row = plane + iy * w;
+                        for ix in x0..x1 {
+                            if x[row + ix] > x[best] {
+                                best = row + ix;
+                            }
+                        }
+                    }
+                    f((ch * oh + oy) * ow + ox, best);
+                }
+            }
+        }
+    }
+
+    /// Forward over a shard `inp [ns · c·h·w]`.
+    pub fn forward(&self, inp: &[f32], ns: usize) -> Vec<f32> {
+        let (fin, fout) = (self.in_shape.flat(), self.out_shape.flat());
+        let mut z = vec![0.0f32; ns * fout];
+        for s in 0..ns {
+            let x = &inp[s * fin..(s + 1) * fin];
+            let dst = &mut z[s * fout..(s + 1) * fout];
+            self.for_each_max(x, |o, i| dst[o] = x[i]);
+        }
+        z
+    }
+
+    /// Transposed-Jacobian routing with `cols` trailing channels per
+    /// feature: `g [ns, F_out, cols] -> [ns, F_in, cols]`. `cols = 1`
+    /// is the first-order VJP; larger `cols` carries the square-root
+    /// GGN columns. Overlapping windows (k > stride) accumulate.
+    pub fn vjp(
+        &self,
+        inp: &[f32],
+        g: &[f32],
+        ns: usize,
+        cols: usize,
+    ) -> Vec<f32> {
+        let (fin, fout) = (self.in_shape.flat(), self.out_shape.flat());
+        debug_assert_eq!(g.len(), ns * fout * cols);
+        let mut out = vec![0.0f32; ns * fin * cols];
+        for s in 0..ns {
+            let x = &inp[s * fin..(s + 1) * fin];
+            let gs = &g[s * fout * cols..(s + 1) * fout * cols];
+            let dst = &mut out[s * fin * cols..(s + 1) * fin * cols];
+            self.for_each_max(x, |o, i| {
+                for cc in 0..cols {
+                    dst[i * cols + cc] += gs[o * cols + cc];
+                }
+            });
+        }
+        out
+    }
+}
+
+/// Global average pool forward: `[ns, c·hw] -> [ns, c]`.
+pub fn gap_forward(c: usize, hw: usize, inp: &[f32], ns: usize)
+    -> Vec<f32> {
+    debug_assert_eq!(inp.len(), ns * c * hw);
+    let inv = 1.0 / hw as f32;
+    let mut z = vec![0.0f32; ns * c];
+    for s in 0..ns {
+        for ch in 0..c {
+            let src = (s * c + ch) * hw;
+            z[s * c + ch] =
+                inp[src..src + hw].iter().sum::<f32>() * inv;
+        }
+    }
+    z
+}
+
+/// Global average pool transposed Jacobian with `cols` trailing
+/// channels: broadcast each pooled feature back over its `hw`
+/// positions, scaled by `1/hw`.
+pub fn gap_vjp(c: usize, hw: usize, g: &[f32], ns: usize, cols: usize)
+    -> Vec<f32> {
+    debug_assert_eq!(g.len(), ns * c * cols);
+    let inv = 1.0 / hw as f32;
+    let mut out = vec![0.0f32; ns * c * hw * cols];
+    for s in 0..ns {
+        for ch in 0..c {
+            let src = (s * c + ch) * cols;
+            let base = (s * c + ch) * hw * cols;
+            for p in 0..hw {
+                for cc in 0..cols {
+                    out[base + p * cols + cc] = g[src + cc] * inv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_size_floor_and_ceil() {
+        // 3c3d's 3x3 stride-2 'same' pools: 28->14, 12->6, 6->3.
+        for (d, want) in [(28usize, 14usize), (12, 6), (6, 3)] {
+            let g = PoolGeom::new(Shape::new(1, d, d), 3, 2, true)
+                .unwrap();
+            assert_eq!(g.out_shape.h, want, "ceil in={d}");
+        }
+        // 2c2d's 2x2 stride-2 pools: 28->14, 14->7.
+        let g = PoolGeom::new(Shape::new(1, 14, 14), 2, 2, false)
+            .unwrap();
+        assert_eq!(g.out_shape.h, 7);
+        assert!(PoolGeom::new(Shape::new(1, 2, 2), 3, 2, true).is_err());
+    }
+
+    #[test]
+    fn forward_takes_window_max_with_clipping() {
+        // 1 channel 3x3, k=2, s=2, ceil: out 2x2, last windows clip.
+        let g = PoolGeom::new(Shape::new(1, 3, 3), 2, 2, true).unwrap();
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 5.0, 2.0,
+            0.0, 3.0, 8.0,
+            7.0, 4.0, 6.0,
+        ];
+        assert_eq!(g.forward(&x, 1), vec![5.0, 8.0, 7.0, 6.0]);
+    }
+
+    #[test]
+    fn vjp_routes_to_argmax_and_accumulates_overlaps() {
+        // k=3 > stride=2: overlapping (and clipped) windows can pick
+        // the same input. On 4x4, starts {0, 2}: all four windows
+        // contain cell (2, 2).
+        let g = PoolGeom::new(Shape::new(1, 4, 4), 3, 2, true).unwrap();
+        assert_eq!(g.out_shape, Shape::new(1, 2, 2));
+        let mut x = vec![0.0f32; 16];
+        x[2 * 4 + 2] = 9.0; // dominates every window
+        let grad = g.vjp(&x, &[1.0, 2.0, 3.0, 4.0], 1, 1);
+        let mut want = vec![0.0f32; 16];
+        want[2 * 4 + 2] = 10.0;
+        assert_eq!(grad, want);
+    }
+
+    #[test]
+    fn ties_resolve_to_first_in_scan_order() {
+        let g = PoolGeom::new(Shape::new(1, 2, 2), 2, 2, false).unwrap();
+        let x = vec![3.0f32, 3.0, 3.0, 3.0];
+        let grad = g.vjp(&x, &[1.0], 1, 1);
+        assert_eq!(grad, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gap_forward_and_vjp_are_adjoint() {
+        let (c, hw, ns) = (2usize, 4usize, 3usize);
+        let x: Vec<f32> = (0..ns * c * hw).map(|v| v as f32).collect();
+        let z = gap_forward(c, hw, &x, ns);
+        assert_eq!(z.len(), ns * c);
+        assert_eq!(z[0], (0.0 + 1.0 + 2.0 + 3.0) / 4.0);
+        let g: Vec<f32> = (0..ns * c).map(|v| v as f32 + 1.0).collect();
+        let back = gap_vjp(c, hw, &g, ns, 1);
+        // <gap(x), g> == <x, gap_vjp(g)>
+        let fwd: f32 = z.iter().zip(&g).map(|(a, b)| a * b).sum();
+        let adj: f32 = x.iter().zip(&back).map(|(a, b)| a * b).sum();
+        assert!((fwd - adj).abs() < 1e-4 * (1.0 + fwd.abs()));
+    }
+}

@@ -1,56 +1,100 @@
 //! Native layer set (paper Sec. 2's modular feed-forward setting).
 //!
-//! The native backend covers the fully-connected slice of the paper's
-//! model zoo: affine maps plus elementwise activations, the layers for
-//! which every BackPACK quantity has a closed-form extraction rule
-//! (Table 1 / Eq. 19 / Eq. 23). Convolutions stay on the PJRT backend.
+//! The native backend covers the paper's full model zoo: affine maps
+//! (`Linear`, `Conv2d` via the im2col lowering in `backend/conv/`),
+//! the pooling layers (`MaxPool2d`, `GlobalAvgPool`), `Flatten`, and
+//! elementwise activations — the layers for which every BackPACK
+//! quantity has a closed-form extraction rule (Table 1 / Eq. 19 /
+//! Eq. 23; DESIGN.md §6 for the conv conventions).
 //!
 //! Activations here are stateless; the engine in `model.rs` owns the
 //! stored forward activations and calls back into these rules, exactly
 //! like the Python layer framework (`python/compile/layers.py`) whose
-//! conventions this mirrors: activations `[N, features]` row-major,
-//! `Linear: w [out, in], b [out]`, weight and bias as separate blocks
-//! (paper footnote 7).
+//! conventions this mirrors: activations `[N, features]` row-major
+//! with image features flattened `[c][h][w]`, `Linear: w [out, in],
+//! b [out]`, `Conv2d: w [out_ch, in_ch, k, k], b [out_ch]`, weight
+//! and bias as separate blocks (paper footnote 7).
 
 use anyhow::{ensure, Result};
+
+use super::conv::{ConvGeom, PoolGeom, Shape};
 
 /// One module of a native sequential model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Layer {
-    /// `z = x Wᵀ + b` with `w [out, in]`, `b [out]`.
+    /// `z = x Wᵀ + b` with `w [out, in]`, `b [out]`; expects the
+    /// flattened feature dimension to match `in_dim`.
     Linear { in_dim: usize, out_dim: usize },
+    /// Square-kernel 2-D convolution, symmetric zero padding
+    /// (`w [out_ch, in_ch, k, k]`, `b [out_ch]`).
+    Conv2d {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Square max pooling with border clipping; `ceil` selects the
+    /// TF-style output-size rule `⌈(in − k)/stride⌉ + 1`.
+    MaxPool2d { kernel: usize, stride: usize, ceil: bool },
+    /// Global average pool `(c, h, w) -> (c, 1, 1)` (All-CNN-C head).
+    GlobalAvgPool,
+    /// `(c, h, w) -> (c·h·w, 1, 1)`; a no-op on the flat storage, it
+    /// marks the conv→dense transition for shape validation.
+    Flatten,
     Relu,
     Sigmoid,
 }
 
 impl Layer {
     pub fn has_params(&self) -> bool {
-        matches!(self, Layer::Linear { .. })
+        matches!(self, Layer::Linear { .. } | Layer::Conv2d { .. })
     }
 
-    /// Output feature dimension given the input dimension; checks the
-    /// chain for `Linear`.
-    pub fn out_dim(&self, in_dim: usize) -> Result<usize> {
+    /// Output activation shape given the input shape; validates the
+    /// chain (feature dims for `Linear`, channel/window geometry for
+    /// the spatial layers).
+    pub fn out_shape(&self, s: Shape) -> Result<Shape> {
         match *self {
-            Layer::Linear { in_dim: d, out_dim } => {
+            Layer::Linear { in_dim, out_dim } => {
                 ensure!(
-                    d == in_dim,
-                    "Linear expects {d} input features, got {in_dim}"
+                    s.flat() == in_dim,
+                    "Linear expects {in_dim} input features, got {}",
+                    s.flat()
                 );
-                Ok(out_dim)
+                Ok(Shape::flat_vec(out_dim))
             }
-            Layer::Relu | Layer::Sigmoid => Ok(in_dim),
+            Layer::Conv2d { in_ch, out_ch, kernel, stride, pad } => {
+                ensure!(
+                    s.c == in_ch,
+                    "Conv2d expects {in_ch} input channels, got {}",
+                    s.c
+                );
+                Ok(ConvGeom::new(s, out_ch, kernel, stride, pad)?
+                    .out_shape)
+            }
+            Layer::MaxPool2d { kernel, stride, ceil } => {
+                Ok(PoolGeom::new(s, kernel, stride, ceil)?.out_shape)
+            }
+            Layer::GlobalAvgPool => {
+                ensure!(
+                    s.h * s.w >= 1,
+                    "GlobalAvgPool needs a spatial extent"
+                );
+                Ok(Shape::new(s.c, 1, 1))
+            }
+            Layer::Flatten => Ok(Shape::flat_vec(s.flat())),
+            Layer::Relu | Layer::Sigmoid => Ok(s),
         }
     }
 
-    /// Elementwise activation σ(x); `Linear` is handled by the engine.
+    /// Elementwise activation σ(x); every other layer is handled by
+    /// the engine.
     pub fn act(&self, x: &[f32]) -> Vec<f32> {
         match self {
             Layer::Relu => x.iter().map(|&v| v.max(0.0)).collect(),
             Layer::Sigmoid => x.iter().map(|&v| sigmoid(v)).collect(),
-            Layer::Linear { .. } => {
-                unreachable!("Linear forward lives in the engine")
-            }
+            _ => unreachable!("only activations have σ"),
         }
     }
 
@@ -68,9 +112,7 @@ impl Layer {
                     s * (1.0 - s)
                 })
                 .collect(),
-            Layer::Linear { .. } => {
-                unreachable!("Linear has no activation derivative")
-            }
+            _ => unreachable!("only activations have σ'"),
         }
     }
 }
@@ -87,9 +129,46 @@ mod tests {
     #[test]
     fn dims_chain() {
         let l = Layer::Linear { in_dim: 4, out_dim: 3 };
-        assert_eq!(l.out_dim(4).unwrap(), 3);
-        assert!(l.out_dim(5).is_err());
-        assert_eq!(Layer::Relu.out_dim(7).unwrap(), 7);
+        assert_eq!(
+            l.out_shape(Shape::flat_vec(4)).unwrap(),
+            Shape::flat_vec(3)
+        );
+        assert!(l.out_shape(Shape::flat_vec(5)).is_err());
+        // Linear accepts any geometry with the right flat dim.
+        assert_eq!(
+            l.out_shape(Shape::new(1, 2, 2)).unwrap(),
+            Shape::flat_vec(3)
+        );
+        assert_eq!(
+            Layer::Relu.out_shape(Shape::flat_vec(7)).unwrap(),
+            Shape::flat_vec(7)
+        );
+    }
+
+    #[test]
+    fn spatial_chain() {
+        let s = Shape::new(1, 28, 28);
+        let c = Layer::Conv2d {
+            in_ch: 1, out_ch: 32, kernel: 5, stride: 1, pad: 2,
+        };
+        let s = c.out_shape(s).unwrap();
+        assert_eq!(s, Shape::new(32, 28, 28));
+        let p = Layer::MaxPool2d { kernel: 2, stride: 2, ceil: false };
+        let s = p.out_shape(s).unwrap();
+        assert_eq!(s, Shape::new(32, 14, 14));
+        assert_eq!(
+            Layer::Flatten.out_shape(s).unwrap(),
+            Shape::flat_vec(32 * 14 * 14)
+        );
+        assert_eq!(
+            Layer::GlobalAvgPool.out_shape(s).unwrap(),
+            Shape::new(32, 1, 1)
+        );
+        // Channel mismatch rejected.
+        let bad = Layer::Conv2d {
+            in_ch: 3, out_ch: 8, kernel: 3, stride: 1, pad: 1,
+        };
+        assert!(bad.out_shape(s).is_err());
     }
 
     #[test]

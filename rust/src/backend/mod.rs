@@ -7,11 +7,13 @@
 //!
 //! * [`native::NativeBackend`] -- forward + generalized backward pass
 //!   (paper Figs. 4-5) in pure Rust on the host [`Tensor`] type, for
-//!   the paper's fully-connected layer set. Zero external dependencies;
-//!   the default.
+//!   the paper's full layer set: fully-connected *and* convolutional
+//!   (im2col lowering in [`conv`]). Every problem in
+//!   `coordinator::problems::PROBLEMS` is servable. Zero external
+//!   dependencies; the default.
 //! * `runtime::Runtime` (behind the `pjrt` cargo feature) -- executes
-//!   AOT-lowered HLO artifacts through the PJRT C API, covering the
-//!   convolutional models.
+//!   AOT-lowered HLO artifacts through the PJRT C API (and the
+//!   `diag_h` extension, which has no native walk).
 //!
 //! Both return the same named [`Outputs`]: `loss`, `grad/*`, and the
 //! extension quantities (`batch_grad/*`, `sq_moment/*`, `variance/*`,
@@ -19,6 +21,7 @@
 //! consume, so everything above this layer (training loop, grid
 //! search, figures, CLI) is backend-agnostic.
 
+pub mod conv;
 pub mod layers;
 pub mod loss;
 pub mod model;

@@ -6,13 +6,20 @@
 //!
 //! 1. a **first-order** backward walk (paper Fig. 4) propagating the
 //!    per-sample output gradients `g [N, F]` (Eq. 3) and extracting,
-//!    at every `Linear`, the averaged gradient plus any requested
-//!    first-order quantity (individual gradients, L2 norms, 2nd
-//!    moment, variance -- Table 1 / Appendix A.1);
+//!    at every parameterized layer (`Linear`, `Conv2d`), the averaged
+//!    gradient plus any requested first-order quantity (individual
+//!    gradients, L2 norms, 2nd moment, variance -- Table 1 /
+//!    Appendix A.1);
 //! 2. **second-order** backward walks (Fig. 5) propagating the
 //!    symmetric loss-Hessian factorization `S [N, F, C]` (Eq. 18) --
 //!    exact (DiagGGN, KFLR) or Monte-Carlo (DiagGGN-MC, KFAC) -- and
 //!    the KFRA batch-averaged curvature `Ḡ [h, h]` (Eq. 24).
+//!
+//! Convolutions lower to the linear case by im2col
+//! (`backend/conv/`, DESIGN.md §6); pooling layers propagate by index
+//! routing / broadcast. KFRA stays fully-connected-only (paper
+//! footnote 5): the engine rejects it on any model with conv or pool
+//! layers.
 //!
 //! All quantities follow Table 1's scaling conventions (the loss is
 //! the *mean* over the batch); the Rust integration tests assert the
@@ -45,6 +52,7 @@ use std::ops::Range;
 
 use anyhow::{bail, ensure, Result};
 
+use super::conv::{conv2d, pool, ConvGeom, PoolGeom, Shape};
 use super::layers::Layer;
 use super::loss::CrossEntropy;
 use crate::linalg::{
@@ -57,23 +65,41 @@ use crate::runtime::{Init, Tensor, TensorData, TensorSpec};
 pub const MC_SAMPLES: usize = 1;
 
 /// Extensions the native engine implements (`diag_h` stays PJRT-only:
-/// its signed residual-factor lists only pay off on the conv nets the
-/// native layer set excludes).
+/// its signed residual-factor propagation is the one quantity this
+/// engine has no closed-form walk for). `kfra` is additionally
+/// restricted to fully-connected models (paper footnote 5).
 pub const NATIVE_EXTENSIONS: &[&str] = &[
     "batch_grad", "batch_l2", "sq_moment", "variance",
     "diag_ggn", "diag_ggn_mc", "kfac", "kflr", "kfra",
 ];
 
-/// A sequential fully-connected model with a cross-entropy loss.
+/// A sequential model with a cross-entropy loss. `in_shape` carries
+/// the image geometry for convolutional models; activations are
+/// stored flat (`in_dim = in_shape.flat()` features per sample).
 #[derive(Debug, Clone)]
 pub struct Model {
     pub name: String,
     pub in_dim: usize,
+    pub in_shape: Shape,
     pub classes: usize,
     pub layers: Vec<Layer>,
 }
 
-/// Weight/bias views of one `Linear` layer, bound from input tensors.
+/// One parameterized block of a model: layer index, weight tensor
+/// dims, Kronecker factor dimensions. For `Linear` the weight is
+/// `[dout, a_dim]`; for `Conv2d` it is `[out_ch, in_ch, k, k]` with
+/// `a_dim = in_ch·k²` (the im2col patch length).
+#[derive(Debug, Clone)]
+pub struct ParamBlock {
+    pub li: usize,
+    pub w_shape: Vec<usize>,
+    pub a_dim: usize,
+    pub dout: usize,
+}
+
+/// Weight/bias views of one parameterized layer, bound from input
+/// tensors. For `Conv2d`, `w` is the `[dout, din]` im2col matrix view
+/// of the `[out_ch, in_ch, k, k]` tensor (`din = in_ch·k²`).
 struct Lin<'a> {
     din: usize,
     dout: usize,
@@ -81,20 +107,35 @@ struct Lin<'a> {
     b: &'a [f32],
 }
 
+/// Per-layer spatial geometry, resolved once per engine call.
+enum Geom {
+    None,
+    Conv(ConvGeom),
+    Pool(PoolGeom),
+    Gap { c: usize, hw: usize },
+}
+
 impl Model {
-    /// Build and validate a model (feature dims must chain; the last
-    /// layer's output dimension is the class count).
+    /// Build and validate a model with a flat input vector.
     pub fn new(name: &str, in_dim: usize, layers: Vec<Layer>)
         -> Result<Model> {
+        Model::with_input(name, Shape::flat_vec(in_dim), layers)
+    }
+
+    /// Build and validate a model (shapes must chain; the last
+    /// layer's flattened output dimension is the class count).
+    pub fn with_input(name: &str, in_shape: Shape, layers: Vec<Layer>)
+        -> Result<Model> {
         ensure!(!layers.is_empty(), "model {name} has no layers");
-        let mut d = in_dim;
+        let mut s = in_shape;
         for layer in &layers {
-            d = layer.out_dim(d)?;
+            s = layer.out_shape(s)?;
         }
         Ok(Model {
             name: name.to_string(),
-            in_dim,
-            classes: d,
+            in_dim: in_shape.flat(),
+            in_shape,
+            classes: s.flat(),
             layers,
         })
     }
@@ -110,7 +151,7 @@ impl Model {
     }
 
     /// A ReLU+sigmoid MLP on MNIST shapes: exercises the full native
-    /// layer set in end-to-end training (109,386 parameters).
+    /// fully-connected layer set (109,386 parameters).
     pub fn mlp() -> Model {
         Model::new(
             "mlp",
@@ -126,17 +167,215 @@ impl Model {
         .expect("static model")
     }
 
-    /// Feature dimension before each layer plus the final one
+    /// DeepOBS 2c2d on Fashion-MNIST shapes (paper Table 3:
+    /// 3,274,634 parameters): two 5x5 'same' conv + 2x2 max-pool
+    /// blocks, then a 1024-unit dense head.
+    pub fn conv_2c2d() -> Model {
+        Model::with_input(
+            "2c2d",
+            Shape::new(1, 28, 28),
+            vec![
+                Layer::Conv2d {
+                    in_ch: 1, out_ch: 32, kernel: 5, stride: 1, pad: 2,
+                },
+                Layer::Relu,
+                Layer::MaxPool2d { kernel: 2, stride: 2, ceil: false },
+                Layer::Conv2d {
+                    in_ch: 32, out_ch: 64, kernel: 5, stride: 1, pad: 2,
+                },
+                Layer::Relu,
+                Layer::MaxPool2d { kernel: 2, stride: 2, ceil: false },
+                Layer::Flatten,
+                Layer::Linear { in_dim: 3136, out_dim: 1024 },
+                Layer::Relu,
+                Layer::Linear { in_dim: 1024, out_dim: 10 },
+            ],
+        )
+        .expect("static model")
+    }
+
+    /// DeepOBS 3c3d on CIFAR-10 (895,210 parameters): three
+    /// conv + max-pool blocks (valid 5x5, valid 3x3, 'same' 3x3;
+    /// 3x3 stride-2 ceil-mode pools: 32 → 14 → 6 → 3) and a
+    /// 512-256-10 dense head.
+    pub fn conv_3c3d() -> Model {
+        Model::with_input(
+            "3c3d",
+            Shape::new(3, 32, 32),
+            vec![
+                Layer::Conv2d {
+                    in_ch: 3, out_ch: 64, kernel: 5, stride: 1, pad: 0,
+                },
+                Layer::Relu,
+                Layer::MaxPool2d { kernel: 3, stride: 2, ceil: true },
+                Layer::Conv2d {
+                    in_ch: 64, out_ch: 96, kernel: 3, stride: 1, pad: 0,
+                },
+                Layer::Relu,
+                Layer::MaxPool2d { kernel: 3, stride: 2, ceil: true },
+                Layer::Conv2d {
+                    in_ch: 96, out_ch: 128, kernel: 3, stride: 1, pad: 1,
+                },
+                Layer::Relu,
+                Layer::MaxPool2d { kernel: 3, stride: 2, ceil: true },
+                Layer::Flatten,
+                Layer::Linear { in_dim: 1152, out_dim: 512 },
+                Layer::Relu,
+                Layer::Linear { in_dim: 512, out_dim: 256 },
+                Layer::Relu,
+                Layer::Linear { in_dim: 256, out_dim: 10 },
+            ],
+        )
+        .expect("static model")
+    }
+
+    /// All-CNN-C on CIFAR-100 (1,387,108 parameters at any input
+    /// side, paper Table 3): nine convolutions with pooling replaced
+    /// by stride-2 convs, a valid 3x3 + two 1x1 head, and globally
+    /// average-pooled logits. `side` scales the spatial input (paper:
+    /// 32; the CPU-scaled cifar100 problem: 16); registered as
+    /// `allcnnc{side}`.
+    pub fn allcnnc(side: usize) -> Model {
+        let c3 = |i, o, s| Layer::Conv2d {
+            in_ch: i, out_ch: o, kernel: 3, stride: s, pad: 1,
+        };
+        Model::with_input(
+            &format!("allcnnc{side}"),
+            Shape::new(3, side, side),
+            vec![
+                c3(3, 96, 1),
+                Layer::Relu,
+                c3(96, 96, 1),
+                Layer::Relu,
+                c3(96, 96, 2),
+                Layer::Relu,
+                c3(96, 192, 1),
+                Layer::Relu,
+                c3(192, 192, 1),
+                Layer::Relu,
+                c3(192, 192, 2),
+                Layer::Relu,
+                Layer::Conv2d {
+                    in_ch: 192, out_ch: 192, kernel: 3, stride: 1,
+                    pad: 0,
+                },
+                Layer::Relu,
+                Layer::Conv2d {
+                    in_ch: 192, out_ch: 192, kernel: 1, stride: 1,
+                    pad: 0,
+                },
+                Layer::Relu,
+                Layer::Conv2d {
+                    in_ch: 192, out_ch: 100, kernel: 1, stride: 1,
+                    pad: 0,
+                },
+                Layer::GlobalAvgPool,
+            ],
+        )
+        .expect("static model")
+    }
+
+    /// Activation shape before each layer plus the final one
     /// (`len = layers.len() + 1`).
-    pub fn dims(&self) -> Vec<usize> {
-        let mut dims = Vec::with_capacity(self.layers.len() + 1);
-        let mut d = self.in_dim;
-        dims.push(d);
+    pub fn shapes(&self) -> Vec<Shape> {
+        let mut shapes = Vec::with_capacity(self.layers.len() + 1);
+        let mut s = self.in_shape;
+        shapes.push(s);
         for layer in &self.layers {
-            d = layer.out_dim(d).expect("validated at construction");
-            dims.push(d);
+            s = layer.out_shape(s).expect("validated at construction");
+            shapes.push(s);
         }
-        dims
+        shapes
+    }
+
+    /// Flat feature dimension before each layer plus the final one.
+    pub fn dims(&self) -> Vec<usize> {
+        self.shapes().iter().map(|s| s.flat()).collect()
+    }
+
+    /// True when the model contains only `Linear` layers and
+    /// elementwise activations -- the class KFRA is defined for
+    /// (paper footnote 5).
+    pub fn is_fully_connected(&self) -> bool {
+        self.layers.iter().all(|l| {
+            matches!(l, Layer::Linear { .. } | Layer::Relu
+                     | Layer::Sigmoid)
+        })
+    }
+
+    /// Validate a batch input tensor -- `[N, in_dim]` (flat) or
+    /// `[N, c, h, w]` (the image layout the data pipeline ships for
+    /// non-flat datasets; identical row-major data) -- returning `N`.
+    fn check_x(&self, x: &Tensor) -> Result<usize> {
+        let n = *x.shape.first().unwrap_or(&0);
+        let mut img = vec![n];
+        img.extend(self.in_shape.dims());
+        ensure!(
+            x.shape == [n, self.in_dim] || x.shape == img,
+            "x shape {:?} != [{n}, {}] or {img:?}",
+            x.shape,
+            self.in_dim
+        );
+        Ok(n)
+    }
+
+    /// Per-layer spatial geometry (conv/pool lowering parameters),
+    /// aligned with `layers`.
+    fn geoms(&self) -> Vec<Geom> {
+        let mut s = self.in_shape;
+        self.layers
+            .iter()
+            .map(|layer| {
+                let g = match *layer {
+                    Layer::Conv2d {
+                        out_ch, kernel, stride, pad, ..
+                    } => Geom::Conv(
+                        ConvGeom::new(s, out_ch, kernel, stride, pad)
+                            .expect("validated at construction"),
+                    ),
+                    Layer::MaxPool2d { kernel, stride, ceil } => {
+                        Geom::Pool(
+                            PoolGeom::new(s, kernel, stride, ceil)
+                                .expect("validated at construction"),
+                        )
+                    }
+                    Layer::GlobalAvgPool => {
+                        Geom::Gap { c: s.c, hw: s.h * s.w }
+                    }
+                    _ => Geom::None,
+                };
+                s = layer
+                    .out_shape(s)
+                    .expect("validated at construction");
+                g
+            })
+            .collect()
+    }
+
+    /// `(layer index, weight dims, Kronecker dims)` of every
+    /// parameterized layer, in layer order.
+    pub fn param_blocks(&self) -> Vec<ParamBlock> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter_map(|(li, layer)| match *layer {
+                Layer::Linear { in_dim, out_dim } => Some(ParamBlock {
+                    li,
+                    w_shape: vec![out_dim, in_dim],
+                    a_dim: in_dim,
+                    dout: out_dim,
+                }),
+                Layer::Conv2d { in_ch, out_ch, kernel, .. } => {
+                    Some(ParamBlock {
+                        li,
+                        w_shape: vec![out_ch, in_ch, kernel, kernel],
+                        a_dim: in_ch * kernel * kernel,
+                        dout: out_ch,
+                    })
+                }
+                _ => None,
+            })
+            .collect()
     }
 
     /// Parameter tensor specs in artifact-input order
@@ -144,22 +383,20 @@ impl Model {
     /// aot.py records in the manifest, so `init_params` is shared).
     pub fn param_specs(&self) -> Vec<TensorSpec> {
         let mut specs = Vec::new();
-        for (li, layer) in self.layers.iter().enumerate() {
-            if let Layer::Linear { in_dim, out_dim } = *layer {
-                let bound = 1.0 / (in_dim as f32).sqrt();
-                specs.push(TensorSpec {
-                    name: format!("param/{li}/w"),
-                    shape: vec![out_dim, in_dim],
-                    dtype: "f32".to_string(),
-                    init: Some(Init::Uniform { bound }),
-                });
-                specs.push(TensorSpec {
-                    name: format!("param/{li}/b"),
-                    shape: vec![out_dim],
-                    dtype: "f32".to_string(),
-                    init: Some(Init::Zeros),
-                });
-            }
+        for blk in self.param_blocks() {
+            let bound = 1.0 / (blk.a_dim as f32).sqrt();
+            specs.push(TensorSpec {
+                name: format!("param/{}/w", blk.li),
+                shape: blk.w_shape.clone(),
+                dtype: "f32".to_string(),
+                init: Some(Init::Uniform { bound }),
+            });
+            specs.push(TensorSpec {
+                name: format!("param/{}/b", blk.li),
+                shape: vec![blk.dout],
+                dtype: "f32".to_string(),
+                init: Some(Init::Zeros),
+            });
         }
         specs
     }
@@ -172,7 +409,7 @@ impl Model {
     }
 
     /// `(layer index, in features, out features)` of every `Linear`,
-    /// in layer order -- the parameterized blocks of the model.
+    /// in layer order (the fully-connected blocks of the model).
     pub fn linear_dims(&self) -> Vec<(usize, usize, usize)> {
         self.layers
             .iter()
@@ -186,39 +423,43 @@ impl Model {
             .collect()
     }
 
-    /// Resolve the flat parameter-tensor list (w, b per Linear, in
-    /// layer order) into per-layer views, validating shapes.
+    /// Resolve the flat parameter-tensor list (w, b per parameterized
+    /// layer, in layer order) into per-layer views, validating shapes.
     fn bind<'a>(&self, params: &'a [Tensor])
         -> Result<Vec<Option<Lin<'a>>>> {
+        let blocks: BTreeMap<usize, ParamBlock> = self
+            .param_blocks()
+            .into_iter()
+            .map(|b| (b.li, b))
+            .collect();
         let mut out = Vec::with_capacity(self.layers.len());
         let mut it = params.iter();
         for (li, layer) in self.layers.iter().enumerate() {
-            match *layer {
-                Layer::Linear { in_dim, out_dim } => {
-                    let (Some(w), Some(b)) = (it.next(), it.next())
-                    else {
-                        bail!("model {}: missing params for layer {li}",
-                              self.name)
-                    };
-                    ensure!(
-                        w.shape == [out_dim, in_dim],
-                        "param/{li}/w: shape {:?} != [{out_dim}, {in_dim}]",
-                        w.shape
-                    );
-                    ensure!(
-                        b.shape == [out_dim],
-                        "param/{li}/b: shape {:?} != [{out_dim}]",
-                        b.shape
-                    );
-                    out.push(Some(Lin {
-                        din: in_dim,
-                        dout: out_dim,
-                        w: w.f32s()?,
-                        b: b.f32s()?,
-                    }));
-                }
-                _ => out.push(None),
+            if !layer.has_params() {
+                out.push(None);
+                continue;
             }
+            let blk = blocks.get(&li).expect("block per param layer");
+            let (Some(w), Some(b)) = (it.next(), it.next()) else {
+                bail!("model {}: missing params for layer {li}",
+                      self.name)
+            };
+            ensure!(
+                w.shape == blk.w_shape,
+                "param/{li}/w: shape {:?} != {:?}",
+                w.shape,
+                blk.w_shape
+            );
+            ensure!(
+                b.shape == [blk.dout],
+                "param/{li}/b: shape {:?} != [{}]", b.shape, blk.dout
+            );
+            out.push(Some(Lin {
+                din: blk.a_dim,
+                dout: blk.dout,
+                w: w.f32s()?,
+                b: b.f32s()?,
+            }));
         }
         ensure!(
             it.next().is_none(),
@@ -233,6 +474,7 @@ impl Model {
     fn forward_acts(
         &self,
         lins: &[Option<Lin>],
+        geoms: &[Geom],
         x: &[f32],
         n: usize,
     ) -> Vec<Vec<f32>> {
@@ -240,8 +482,8 @@ impl Model {
         acts.push(x.to_vec());
         for (li, layer) in self.layers.iter().enumerate() {
             let inp = acts.last().expect("non-empty");
-            let z = match layer {
-                Layer::Linear { .. } => {
+            let z = match (layer, &geoms[li]) {
+                (Layer::Linear { .. }, _) => {
                     let lin = lins[li].as_ref().expect("bound");
                     let mut z =
                         matmul_nt(inp, lin.w, n, lin.din, lin.dout);
@@ -252,7 +494,18 @@ impl Model {
                     }
                     z
                 }
-                act => act.act(inp),
+                (Layer::Conv2d { .. }, Geom::Conv(geom)) => {
+                    let lin = lins[li].as_ref().expect("bound");
+                    conv2d::forward(geom, lin.w, lin.b, inp, n)
+                }
+                (Layer::MaxPool2d { .. }, Geom::Pool(geom)) => {
+                    geom.forward(inp, n)
+                }
+                (Layer::GlobalAvgPool, Geom::Gap { c, hw }) => {
+                    pool::gap_forward(*c, *hw, inp, n)
+                }
+                (Layer::Flatten, _) => inp.clone(),
+                (act, _) => act.act(inp),
             };
             acts.push(z);
         }
@@ -274,16 +527,13 @@ impl Model {
         x: &Tensor,
         threads: usize,
     ) -> Result<Tensor> {
-        let n = *x.shape.first().unwrap_or(&0);
-        ensure!(
-            x.shape == [n, self.in_dim],
-            "x shape {:?} != [{n}, {}]", x.shape, self.in_dim
-        );
+        let n = self.check_x(x)?;
         let lins = self.bind(params)?;
+        let geoms = self.geoms();
         let xs = x.f32s()?;
         let work = parallel::shards(n, threads);
         if work.len() <= 1 {
-            let mut acts = self.forward_acts(&lins, xs, n);
+            let mut acts = self.forward_acts(&lins, &geoms, xs, n);
             return Ok(Tensor::from_f32(
                 &[n, self.classes],
                 acts.pop().expect("non-empty"),
@@ -292,6 +542,7 @@ impl Model {
         let parts = parallel::par_map(&work, |r| {
             let mut acts = self.forward_acts(
                 &lins,
+                &geoms,
                 &xs[r.start * self.in_dim..r.end * self.in_dim],
                 r.len(),
             );
@@ -323,15 +574,12 @@ impl Model {
         y: &Tensor,
         threads: usize,
     ) -> Result<BTreeMap<String, Tensor>> {
-        let n = *x.shape.first().unwrap_or(&0);
-        ensure!(
-            x.shape == [n, self.in_dim],
-            "x shape {:?} != [{n}, {}]", x.shape, self.in_dim
-        );
+        let n = self.check_x(x)?;
         ensure!(y.shape == [n], "y shape {:?} != [{n}]", y.shape);
         let ys = y.i32s()?;
         let xs = x.f32s()?;
         let lins = self.bind(params)?;
+        let geoms = self.geoms();
         let c = self.classes;
         let ce = CrossEntropy;
         let parts =
@@ -339,6 +587,7 @@ impl Model {
                 let ns = r.len();
                 let acts = self.forward_acts(
                     &lins,
+                    &geoms,
                     &xs[r.start * self.in_dim..r.end * self.in_dim],
                     ns,
                 );
@@ -400,32 +649,35 @@ impl Model {
             );
         }
         let has = |e: &str| extensions.iter().any(|x| x == e);
+        ensure!(
+            !has("kfra") || self.is_fully_connected(),
+            "kfra is restricted to fully-connected models (paper \
+             footnote 5); model {:?} contains conv/pool layers",
+            self.name
+        );
         let needs_mc = has("diag_ggn_mc") || has("kfac");
         if needs_mc && key.is_none() {
             bail!("MC extensions require a PRNG key input");
         }
 
-        let n = *x.shape.first().unwrap_or(&0);
+        let n = self.check_x(x)?;
         ensure!(n > 0, "empty batch");
-        ensure!(
-            x.shape == [n, self.in_dim],
-            "x shape {:?} != [{n}, {}]", x.shape, self.in_dim
-        );
         ensure!(y.shape == [n], "y shape {:?} != [{n}]", y.shape);
         let ys = y.i32s()?;
         let xs = x.f32s()?;
         let lins = self.bind(params)?;
+        let geoms = self.geoms();
         let dims = self.dims();
 
         let work = parallel::shards(n, threads);
         let mut out = if work.len() <= 1 {
             self.backward_range(
-                &lins, &dims, xs, ys, 0..n, n, extensions, key,
+                &lins, &geoms, &dims, xs, ys, 0..n, n, extensions, key,
             )?
         } else {
             let parts = parallel::par_map(&work, |r| {
                 self.backward_range(
-                    &lins, &dims, xs, ys, r, n, extensions, key,
+                    &lins, &geoms, &dims, xs, ys, r, n, extensions, key,
                 )
             });
             let mut done = Vec::with_capacity(parts.len());
@@ -450,6 +702,7 @@ impl Model {
     fn backward_range(
         &self,
         lins: &[Option<Lin>],
+        geoms: &[Geom],
         dims: &[usize],
         xs: &[f32],
         ys: &[i32],
@@ -467,7 +720,7 @@ impl Model {
         let y = &ys[range.start..range.end];
 
         // ---- forward pass, storing every module input --------------
-        let acts = self.forward_acts(lins, x, ns);
+        let acts = self.forward_acts(lins, geoms, x, ns);
         let logits = acts.last().expect("non-empty");
 
         let mut out = BTreeMap::new();
@@ -482,13 +735,19 @@ impl Model {
         let mut g = ce.grad(logits, y, ns, c); // ∇_f ℓ_n, [ns, C]
         for li in (0..self.layers.len()).rev() {
             if let Some(lin) = lins[li].as_ref() {
-                self.first_order_at(
-                    li, lin, &acts[li], &g, ns, norm, extensions,
-                    &mut out,
-                );
+                match &geoms[li] {
+                    Geom::Conv(geom) => self.conv_first_order_at(
+                        li, geom, &acts[li], &g, ns, norm, extensions,
+                        &mut out,
+                    ),
+                    _ => self.first_order_at(
+                        li, lin, &acts[li], &g, ns, norm, extensions,
+                        &mut out,
+                    ),
+                }
             }
             if li > 0 {
-                g = self.vjp_input(li, lins, &acts, g, ns);
+                g = self.vjp_input(li, lins, geoms, &acts, g, ns);
             }
         }
 
@@ -500,7 +759,8 @@ impl Model {
                     &ce, logits, ns, exact, key, range.start,
                 );
                 self.propagate_diag(
-                    lins, &acts, dims, s, cols, ns, norm, ext, &mut out,
+                    lins, geoms, &acts, dims, s, cols, ns, norm, ext,
+                    &mut out,
                 );
             }
         }
@@ -510,7 +770,8 @@ impl Model {
                     &ce, logits, ns, exact, key, range.start,
                 );
                 self.propagate_kron(
-                    lins, &acts, dims, s, cols, ns, norm, ext, &mut out,
+                    lins, geoms, &acts, dims, s, cols, ns, norm, ext,
+                    &mut out,
                 );
             }
         }
@@ -534,7 +795,8 @@ impl Model {
     ) -> Result<()> {
         let has = |e: &str| extensions.iter().any(|x| x == e);
         if has("variance") {
-            for (li, _, _) in self.linear_dims() {
+            for blk in self.param_blocks() {
+                let li = blk.li;
                 for part in ["w", "b"] {
                     let gname = format!("grad/{li}/{part}");
                     let sname = format!("sq_moment/{li}/{part}");
@@ -685,22 +947,99 @@ impl Model {
         out.insert(format!("grad/{li}/b"), Tensor::from_f32(&[dout], gb));
     }
 
+    /// Conv twin of [`Model::first_order_at`]: extraction through the
+    /// unfolded view (`backend/conv/conv2d.rs`), weight tensors keep
+    /// the `[out_ch, in_ch, k, k]` parameter shape.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_first_order_at(
+        &self,
+        li: usize,
+        geom: &ConvGeom,
+        inp: &[f32],
+        g: &[f32],
+        n: usize,
+        norm: f32,
+        extensions: &[String],
+        out: &mut BTreeMap<String, Tensor>,
+    ) {
+        let has = |e: &str| extensions.iter().any(|x| x == e);
+        let want_sq = has("sq_moment") || has("variance");
+        let fo = conv2d::first_order(
+            geom, inp, g, n, norm,
+            has("batch_grad"), has("batch_l2"), want_sq,
+        );
+        let w_shape = geom.w_shape();
+        let c_out = geom.out_shape.c;
+        if has("batch_grad") {
+            let mut bshape = vec![n];
+            bshape.extend(&w_shape);
+            out.insert(
+                format!("batch_grad/{li}/w"),
+                Tensor::from_f32(&bshape, fo.batch_w),
+            );
+            out.insert(
+                format!("batch_grad/{li}/b"),
+                Tensor::from_f32(&[n, c_out], fo.batch_b),
+            );
+        }
+        if has("batch_l2") {
+            out.insert(
+                format!("batch_l2/{li}/w"),
+                Tensor::from_f32(&[n], fo.l2_w),
+            );
+            out.insert(
+                format!("batch_l2/{li}/b"),
+                Tensor::from_f32(&[n], fo.l2_b),
+            );
+        }
+        if want_sq {
+            out.insert(
+                format!("sq_moment/{li}/w"),
+                Tensor::from_f32(&w_shape, fo.sq_w),
+            );
+            out.insert(
+                format!("sq_moment/{li}/b"),
+                Tensor::from_f32(&[c_out], fo.sq_b),
+            );
+        }
+        out.insert(
+            format!("grad/{li}/w"),
+            Tensor::from_f32(&w_shape, fo.gw),
+        );
+        out.insert(
+            format!("grad/{li}/b"),
+            Tensor::from_f32(&[c_out], fo.gb),
+        );
+    }
+
     /// Apply (J_x z)ᵀ per sample: g [N, out] -> [N, in] (Eq. 3).
     fn vjp_input(
         &self,
         li: usize,
         lins: &[Option<Lin>],
+        geoms: &[Geom],
         acts: &[Vec<f32>],
         g: Vec<f32>,
         n: usize,
     ) -> Vec<f32> {
-        match &self.layers[li] {
-            Layer::Linear { .. } => {
+        match (&self.layers[li], &geoms[li]) {
+            (Layer::Linear { .. }, _) => {
                 let lin = lins[li].as_ref().expect("bound");
                 // [N, out] x [out, in] -> [N, in]
                 matmul(&g, lin.w, n, lin.dout, lin.din)
             }
-            act => {
+            (Layer::Conv2d { .. }, Geom::Conv(geom)) => {
+                let lin = lins[li].as_ref().expect("bound");
+                conv2d::vjp_input(geom, lin.w, &g, n)
+            }
+            (Layer::MaxPool2d { .. }, Geom::Pool(geom)) => {
+                geom.vjp(&acts[li], &g, n, 1)
+            }
+            (Layer::GlobalAvgPool, Geom::Gap { c, hw }) => {
+                pool::gap_vjp(*c, *hw, &g, n, 1)
+            }
+            (Layer::Flatten, _) => g,
+            (act, _) => {
                 let d = act.d_act(&acts[li]);
                 g.iter().zip(&d).map(|(gv, dv)| gv * dv).collect()
             }
@@ -714,14 +1053,15 @@ impl Model {
         &self,
         li: usize,
         lins: &[Option<Lin>],
+        geoms: &[Geom],
         acts: &[Vec<f32>],
         dims: &[usize],
         s: Vec<f32>,
         n: usize,
         cols: usize,
     ) -> Vec<f32> {
-        match &self.layers[li] {
-            Layer::Linear { .. } => {
+        match (&self.layers[li], &geoms[li]) {
+            (Layer::Linear { .. }, _) => {
                 let lin = lins[li].as_ref().expect("bound");
                 let (din, dout) = (lin.din, lin.dout);
                 let mut out = vec![0.0f32; n * din * cols];
@@ -734,7 +1074,18 @@ impl Model {
                 }
                 out
             }
-            act => {
+            (Layer::Conv2d { .. }, Geom::Conv(geom)) => {
+                let lin = lins[li].as_ref().expect("bound");
+                conv2d::mat_vjp_input(geom, lin.w, &s, n, cols)
+            }
+            (Layer::MaxPool2d { .. }, Geom::Pool(geom)) => {
+                geom.vjp(&acts[li], &s, n, cols)
+            }
+            (Layer::GlobalAvgPool, Geom::Gap { c, hw }) => {
+                pool::gap_vjp(*c, *hw, &s, n, cols)
+            }
+            (Layer::Flatten, _) => s,
+            (act, _) => {
                 let f = dims[li];
                 let d = act.d_act(&acts[li]); // [N * f]
                 let mut s = s;
@@ -783,6 +1134,7 @@ impl Model {
     fn propagate_diag(
         &self,
         lins: &[Option<Lin>],
+        geoms: &[Geom],
         acts: &[Vec<f32>],
         dims: &[usize],
         mut s: Vec<f32>,
@@ -795,54 +1147,73 @@ impl Model {
         let nf = norm;
         for li in (0..self.layers.len()).rev() {
             if let Some(lin) = lins[li].as_ref() {
-                let (din, dout) = (lin.din, lin.dout);
-                let inp = &acts[li];
-                // s2[n, o] = Σ_c S[n, o, c]²
-                let mut s2 = vec![0.0f32; n * dout];
-                for (row, v) in s2.iter_mut().enumerate() {
-                    let base = row * cols;
-                    *v = s[base..base + cols]
-                        .iter()
-                        .map(|u| u * u)
-                        .sum();
-                }
-                let x2: Vec<f32> = inp.iter().map(|v| v * v).collect();
-                let mut dw = matmul_tn(&s2, &x2, n, dout, din);
-                for v in &mut dw {
-                    *v /= nf;
-                }
-                let mut db = vec![0.0f32; dout];
-                for smp in 0..n {
-                    for o in 0..dout {
-                        db[o] += s2[smp * dout + o];
+                if let Geom::Conv(geom) = &geoms[li] {
+                    let (dw, db) = conv2d::diag_sqrt(
+                        geom, &acts[li], &s, n, cols, nf,
+                    );
+                    out.insert(
+                        format!("{name}/{li}/w"),
+                        Tensor::from_f32(&geom.w_shape(), dw),
+                    );
+                    out.insert(
+                        format!("{name}/{li}/b"),
+                        Tensor::from_f32(&[geom.out_shape.c], db),
+                    );
+                } else {
+                    let (din, dout) = (lin.din, lin.dout);
+                    let inp = &acts[li];
+                    // s2[n, o] = Σ_c S[n, o, c]²
+                    let mut s2 = vec![0.0f32; n * dout];
+                    for (row, v) in s2.iter_mut().enumerate() {
+                        let base = row * cols;
+                        *v = s[base..base + cols]
+                            .iter()
+                            .map(|u| u * u)
+                            .sum();
                     }
+                    let x2: Vec<f32> =
+                        inp.iter().map(|v| v * v).collect();
+                    let mut dw = matmul_tn(&s2, &x2, n, dout, din);
+                    for v in &mut dw {
+                        *v /= nf;
+                    }
+                    let mut db = vec![0.0f32; dout];
+                    for smp in 0..n {
+                        for o in 0..dout {
+                            db[o] += s2[smp * dout + o];
+                        }
+                    }
+                    for v in &mut db {
+                        *v /= nf;
+                    }
+                    out.insert(
+                        format!("{name}/{li}/w"),
+                        Tensor::from_f32(&[dout, din], dw),
+                    );
+                    out.insert(
+                        format!("{name}/{li}/b"),
+                        Tensor::from_f32(&[dout], db),
+                    );
                 }
-                for v in &mut db {
-                    *v /= nf;
-                }
-                out.insert(
-                    format!("{name}/{li}/w"),
-                    Tensor::from_f32(&[dout, din], dw),
-                );
-                out.insert(
-                    format!("{name}/{li}/b"),
-                    Tensor::from_f32(&[dout], db),
-                );
             }
             if li > 0 {
-                s = self
-                    .mat_vjp_input(li, lins, acts, dims, s, n, cols);
+                s = self.mat_vjp_input(
+                    li, lins, geoms, acts, dims, s, n, cols,
+                );
             }
         }
     }
 
     /// KFAC / KFLR: same propagation, Kronecker-factor extraction
-    /// (Eq. 23): `A = 1/N Σ x xᵀ`, `B = bias_ggn = 1/N Σ S Sᵀ`,
-    /// averaged with the global normalizer `norm`.
+    /// (Eq. 23): `A = 1/N Σ x xᵀ`, `B = bias_ggn = 1/N Σ S Sᵀ` for
+    /// `Linear`; the unfolded-input / position-averaged conv factors
+    /// (DESIGN.md §6) for `Conv2d`. Averaged with the global
+    /// normalizer `norm`.
     #[allow(clippy::too_many_arguments)]
     fn propagate_kron(
         &self,
         lins: &[Option<Lin>],
+        geoms: &[Geom],
         acts: &[Vec<f32>],
         dims: &[usize],
         mut s: Vec<f32>,
@@ -855,40 +1226,61 @@ impl Model {
         let nf = norm;
         for li in (0..self.layers.len()).rev() {
             if let Some(lin) = lins[li].as_ref() {
-                let (din, dout) = (lin.din, lin.dout);
-                let inp = &acts[li];
-                let mut a = matmul_tn(inp, inp, n, din, din);
-                for v in &mut a {
-                    *v /= nf;
-                }
-                let mut b = vec![0.0f32; dout * dout];
-                for smp in 0..n {
-                    let blk =
-                        &s[smp * dout * cols..(smp + 1) * dout * cols];
-                    let bb = matmul_nt(blk, blk, dout, cols, dout);
-                    for (acc, v) in b.iter_mut().zip(&bb) {
-                        *acc += v;
+                if let Geom::Conv(geom) = &geoms[li] {
+                    let (a, b, bias) = conv2d::kron_factors(
+                        geom, &acts[li], &s, n, cols, nf,
+                    );
+                    let (j, co) =
+                        (geom.patch_len(), geom.out_shape.c);
+                    out.insert(
+                        format!("{name}/{li}/A"),
+                        Tensor::from_f32(&[j, j], a),
+                    );
+                    out.insert(
+                        format!("{name}/{li}/bias_ggn"),
+                        Tensor::from_f32(&[co, co], bias),
+                    );
+                    out.insert(
+                        format!("{name}/{li}/B"),
+                        Tensor::from_f32(&[co, co], b),
+                    );
+                } else {
+                    let (din, dout) = (lin.din, lin.dout);
+                    let inp = &acts[li];
+                    let mut a = matmul_tn(inp, inp, n, din, din);
+                    for v in &mut a {
+                        *v /= nf;
                     }
+                    let mut b = vec![0.0f32; dout * dout];
+                    for smp in 0..n {
+                        let blk = &s[smp * dout * cols
+                            ..(smp + 1) * dout * cols];
+                        let bb = matmul_nt(blk, blk, dout, cols, dout);
+                        for (acc, v) in b.iter_mut().zip(&bb) {
+                            *acc += v;
+                        }
+                    }
+                    for v in &mut b {
+                        *v /= nf;
+                    }
+                    out.insert(
+                        format!("{name}/{li}/A"),
+                        Tensor::from_f32(&[din, din], a),
+                    );
+                    out.insert(
+                        format!("{name}/{li}/bias_ggn"),
+                        Tensor::from_f32(&[dout, dout], b.clone()),
+                    );
+                    out.insert(
+                        format!("{name}/{li}/B"),
+                        Tensor::from_f32(&[dout, dout], b),
+                    );
                 }
-                for v in &mut b {
-                    *v /= nf;
-                }
-                out.insert(
-                    format!("{name}/{li}/A"),
-                    Tensor::from_f32(&[din, din], a),
-                );
-                out.insert(
-                    format!("{name}/{li}/bias_ggn"),
-                    Tensor::from_f32(&[dout, dout], b.clone()),
-                );
-                out.insert(
-                    format!("{name}/{li}/B"),
-                    Tensor::from_f32(&[dout, dout], b),
-                );
             }
             if li > 0 {
-                s = self
-                    .mat_vjp_input(li, lins, acts, dims, s, n, cols);
+                s = self.mat_vjp_input(
+                    li, lins, geoms, acts, dims, s, n, cols,
+                );
             }
         }
     }
@@ -901,6 +1293,7 @@ impl Model {
     /// nonlinear in these averages, so it runs once on the merged
     /// values in [`Model::kfra_finish`]. Internal quantities go under
     /// `__kfra/` keys, consumed (and removed) by the finish pass.
+    /// Fully-connected models only (checked by `extended_backward`).
     fn kfra_partials(
         &self,
         lins: &[Option<Lin>],
@@ -1128,8 +1521,65 @@ mod tests {
     }
 
     #[test]
+    fn conv_registry_models_match_paper_counts() {
+        // Paper Table 3 parameter checksums.
+        let m = Model::conv_2c2d();
+        assert_eq!(m.num_params(), 3_274_634);
+        assert_eq!((m.classes, m.in_dim), (10, 784));
+        let m = Model::conv_3c3d();
+        assert_eq!(m.num_params(), 895_210);
+        assert_eq!((m.classes, m.in_dim), (10, 3072));
+        // All-CNN-C's count is spatial-size-invariant.
+        for side in [16usize, 32] {
+            let m = Model::allcnnc(side);
+            assert_eq!(m.num_params(), 1_387_108, "side {side}");
+            assert_eq!(m.classes, 100);
+            assert_eq!(m.in_dim, 3 * side * side);
+            assert!(!m.is_fully_connected());
+        }
+        assert!(Model::logreg().is_fully_connected());
+        assert!(!Model::conv_2c2d().is_fully_connected());
+    }
+
+    #[test]
+    fn conv_3c3d_shape_chain() {
+        // The DeepOBS trace behind the 1152-dim flatten.
+        let shapes = Model::conv_3c3d().shapes();
+        assert_eq!(shapes[1], Shape::new(64, 28, 28)); // conv1 valid
+        assert_eq!(shapes[3], Shape::new(64, 14, 14)); // pool ceil
+        assert_eq!(shapes[6], Shape::new(96, 6, 6));
+        assert_eq!(shapes[9], Shape::new(128, 3, 3));
+        assert_eq!(shapes[10].flat(), 1152); // flatten
+    }
+
+    #[test]
     fn dims_chain_through_activations() {
         assert_eq!(tiny().dims(), vec![5, 4, 4, 3]);
+    }
+
+    #[test]
+    fn kfra_rejected_on_conv_models() {
+        let m = Model::with_input(
+            "tinyconv",
+            Shape::new(1, 4, 4),
+            vec![
+                Layer::Conv2d {
+                    in_ch: 1, out_ch: 2, kernel: 3, stride: 1, pad: 1,
+                },
+                Layer::Relu,
+                Layer::Flatten,
+                Layer::Linear { in_dim: 32, out_dim: 3 },
+            ],
+        )
+        .unwrap();
+        let params = tiny_params(&m, 1);
+        let (x, y) = batch(&m, 4, 1);
+        let exts = vec!["kfra".to_string()];
+        let err = m
+            .extended_backward(&params, &x, &y, &exts, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fully-connected"), "{err}");
     }
 
     #[test]

@@ -13,8 +13,12 @@
 //! Because graphs are synthesized, *any* batch size works and there is
 //! no compile step: `load` is O(1) and `run` does the actual math via
 //! `model::Model::extended_backward`. The registry ships the paper's
-//! fully-connected models (`logreg`, plus an `mlp` that exercises
-//! ReLU + sigmoid); convolutional models require the `pjrt` backend.
+//! full model zoo: the fully-connected `logreg` and `mlp`, and the
+//! convolutional `2c2d`, `3c3d` and `allcnnc{16,32}` (im2col lowering
+//! in `backend/conv/`; side-parameterized models are keyed
+//! `{model}{side}`). Every problem in `coordinator/problems.rs` is
+//! trainable here with zero external dependencies; `kfra` stays
+//! fully-connected-only (paper footnote 5) and `diag_h` PJRT-only.
 //! Tests can [`NativeBackend::register`] additional models.
 
 use std::collections::BTreeMap;
@@ -65,6 +69,10 @@ impl NativeBackend {
         };
         b.register(Model::logreg());
         b.register(Model::mlp());
+        b.register(Model::conv_2c2d());
+        b.register(Model::conv_3c3d());
+        b.register(Model::allcnnc(16)); // CPU-scaled cifar100 problem
+        b.register(Model::allcnnc(32)); // paper-sized overhead benches
         b
     }
 
@@ -108,6 +116,15 @@ impl NativeBackend {
             }
             match parse_sig(rest) {
                 Ok(extensions) => {
+                    // Paper footnote 5: KFRA's averaged recursion is
+                    // only defined for fully-connected networks.
+                    ensure!(
+                        !extensions.iter().any(|e| e == "kfra")
+                            || model.is_fully_connected(),
+                        "kfra is restricted to fully-connected models \
+                         (paper footnote 5); {name} has conv/pool \
+                         layers"
+                    );
                     return Ok((
                         model,
                         Request::Train { extensions, batch },
@@ -121,8 +138,7 @@ impl NativeBackend {
         }
         bail!(
             "native backend has no model serving artifact {artifact:?} \
-             (native models: {:?}; convolutional models need \
-             --backend pjrt)",
+             (native models: {:?})",
             self.model_names()
         )
     }
@@ -164,27 +180,33 @@ impl Backend for NativeBackend {
         ext_sig: &str,
         batch: usize,
     ) -> Result<String> {
+        // Side-parameterized models are registered as "{model}{side}"
+        // (e.g. allcnnc at side 16 -> "allcnnc16"); fixed-size models
+        // use side 0.
+        let key = if side > 0 {
+            format!("{model}{side}")
+        } else {
+            model.to_string()
+        };
         ensure!(
-            side == 0,
-            "native models have a fixed input size (side must be 0, \
-             got {side})"
-        );
-        ensure!(
-            self.models.contains_key(model),
-            "model {model:?} is not in the native registry {:?}; \
-             convolutional models need --backend pjrt",
+            self.models.contains_key(&key),
+            "model {key:?} is not in the native registry {:?}",
             self.model_names()
         );
-        let name = format!("{model}_{ext_sig}_n{batch}");
+        let name = format!("{key}_{ext_sig}_n{batch}");
         self.resolve(&name)?; // validate the signature/batch
         Ok(name)
     }
 
     fn artifact_names(&self) -> Vec<String> {
         let mut names = Vec::new();
-        for m in self.models.keys() {
+        for (m, model) in &self.models {
             names.push(format!("{m}_eval_n256"));
             for sig in LISTED_SIGS {
+                if sig.contains("kfra") && !model.is_fully_connected()
+                {
+                    continue; // paper footnote 5
+                }
                 names.push(format!("{m}_{sig}_n64"));
             }
         }
@@ -230,14 +252,19 @@ fn f32_spec(name: String, shape: Vec<usize>) -> TensorSpec {
     TensorSpec { name, shape, dtype: "f32".to_string(), init: None }
 }
 
-/// Data/key inputs appended after the parameter specs.
+/// Data/key inputs appended after the parameter specs. `x` uses the
+/// layout the data pipeline ships: flat `[batch, d]` for vector
+/// models, `[batch, c, h, w]` for image models (the engine accepts
+/// either; the row-major data is identical).
 fn data_inputs(
     model: &Model,
     batch: usize,
     has_key: bool,
 ) -> Vec<TensorSpec> {
+    let mut x_shape = vec![batch];
+    x_shape.extend(model.in_shape.dims());
     let mut inputs = vec![
-        f32_spec("x".to_string(), vec![batch, model.in_dim]),
+        f32_spec("x".to_string(), x_shape),
         TensorSpec {
             name: "y".to_string(),
             shape: vec![batch],
@@ -268,15 +295,19 @@ fn train_spec(
     inputs.extend(data_inputs(model, batch, has_key));
 
     let mut outputs = vec![f32_spec("loss".to_string(), vec![])];
-    for (li, din, dout) in model.linear_dims() {
-        outputs.push(f32_spec(format!("grad/{li}/w"), vec![dout, din]));
+    for blk in model.param_blocks() {
+        let (li, dout) = (blk.li, blk.dout);
+        let wsh = &blk.w_shape; // [out, in] or [out_ch, in_ch, k, k]
+        outputs.push(f32_spec(format!("grad/{li}/w"), wsh.clone()));
         outputs.push(f32_spec(format!("grad/{li}/b"), vec![dout]));
         for ext in extensions {
             match ext.as_str() {
                 "batch_grad" => {
+                    let mut bsh = vec![batch];
+                    bsh.extend(wsh);
                     outputs.push(f32_spec(
                         format!("batch_grad/{li}/w"),
-                        vec![batch, dout, din],
+                        bsh,
                     ));
                     outputs.push(f32_spec(
                         format!("batch_grad/{li}/b"),
@@ -297,7 +328,7 @@ fn train_spec(
                 | "diag_ggn_mc" => {
                     outputs.push(f32_spec(
                         format!("{ext}/{li}/w"),
-                        vec![dout, din],
+                        wsh.clone(),
                     ));
                     outputs.push(f32_spec(
                         format!("{ext}/{li}/b"),
@@ -307,7 +338,7 @@ fn train_spec(
                 "kfac" | "kflr" | "kfra" => {
                     outputs.push(f32_spec(
                         format!("{ext}/{li}/A"),
-                        vec![din, din],
+                        vec![blk.a_dim, blk.a_dim],
                     ));
                     outputs.push(f32_spec(
                         format!("{ext}/{li}/B"),
@@ -333,7 +364,7 @@ fn train_spec(
         kind: "train".to_string(),
         has_key,
         num_classes: model.classes,
-        in_shape: vec![model.in_dim],
+        in_shape: model.in_shape.dims(),
         inputs,
         outputs,
     }
@@ -353,7 +384,7 @@ fn eval_spec(model: &Model, artifact: &str, batch: usize)
         kind: "eval".to_string(),
         has_key: false,
         num_classes: model.classes,
-        in_shape: vec![model.in_dim],
+        in_shape: model.in_shape.dims(),
         inputs,
         outputs: vec![
             f32_spec("loss".to_string(), vec![]),
@@ -460,10 +491,37 @@ mod tests {
         assert!(be.spec("logreg_grad_n64").is_ok());
         assert!(be.spec("mlp_diag_ggn_n32").is_ok());
         assert!(be.spec("mlp_eval_n256").is_ok());
-        let err =
-            be.spec("3c3d_grad_n64").unwrap_err().to_string();
-        assert!(err.contains("pjrt"), "{err}");
+        // Conv models are first-class citizens of the registry.
+        assert!(be.spec("2c2d_grad_n32").is_ok());
+        assert!(be.spec("3c3d_kfac_n64").is_ok());
+        assert!(be.spec("3c3d_eval_n128").is_ok());
+        assert!(be.spec("allcnnc16_diag_ggn_mc_n8").is_ok());
+        assert!(be.spec("allcnnc32_grad_n4").is_ok());
+        assert!(be.spec("4c4d_grad_n64").is_err());
         assert!(be.spec("logreg_diag_h_n8").is_err());
+    }
+
+    #[test]
+    fn kfra_is_fully_connected_only() {
+        // Paper footnote 5: kfra resolves on FC models, never on conv.
+        let be = NativeBackend::new();
+        assert!(be.spec("mlp_kfra_n16").is_ok());
+        for model in ["2c2d", "3c3d", "allcnnc16"] {
+            let err = be
+                .spec(&format!("{model}_kfra_n16"))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("footnote 5"), "{model}: {err}");
+            assert!(be
+                .find_train(model, 0, "kfra", 16)
+                .is_err());
+        }
+        // Conv models never advertise a kfra artifact.
+        assert!(be
+            .artifact_names()
+            .iter()
+            .all(|n| !n.contains("kfra")
+                || n.starts_with("logreg") || n.starts_with("mlp")));
     }
 
     #[test]
@@ -474,9 +532,35 @@ mod tests {
         let spec = be.spec(&name).unwrap();
         assert!(spec.has_key);
         assert_eq!(spec.batch_size, 16);
+        // Side-parameterized models resolve to their "{model}{side}"
+        // registry key.
+        let name = be.find_train("allcnnc", 16, "grad", 8).unwrap();
+        assert_eq!(name, "allcnnc16_grad_n8");
         assert!(be.find_train("logreg", 16, "grad", 16).is_err());
         assert!(be.find_train("allcnnc", 0, "grad", 16).is_err());
         assert!(be.find_train("logreg", 0, "diag_h", 16).is_err());
+    }
+
+    #[test]
+    fn conv_spec_shapes_follow_the_parameter_layout() {
+        let be = NativeBackend::new();
+        let spec = be.spec("2c2d_batch_grad+kfac_n8").unwrap();
+        assert!(spec.has_key);
+        assert_eq!(spec.in_shape, vec![1, 28, 28]);
+        let find = |n: &str| {
+            spec.outputs
+                .iter()
+                .find(|t| t.name == n)
+                .unwrap_or_else(|| panic!("missing output {n}"))
+                .shape
+                .clone()
+        };
+        assert_eq!(find("grad/0/w"), vec![32, 1, 5, 5]);
+        assert_eq!(find("batch_grad/0/w"), vec![8, 32, 1, 5, 5]);
+        assert_eq!(find("kfac/0/A"), vec![25, 25]);
+        assert_eq!(find("kfac/3/A"), vec![32 * 25, 32 * 25]);
+        assert_eq!(find("kfac/3/B"), vec![64, 64]);
+        assert_eq!(find("grad/7/w"), vec![1024, 3136]);
     }
 
     #[test]

@@ -119,15 +119,48 @@ pub fn bench<F: FnMut()>(
 /// breaking change to the layout below.
 pub const BENCH_SCHEMA: &str = "backpack-bench/v1";
 
-/// The perf-baseline grid: the paper's two native problems under the
-/// plain gradient plus every native extension signature (Fig. 6's
-/// overhead story, on this backend).
-pub fn baseline_cases() -> Vec<(&'static str, &'static str)> {
+/// One perf-baseline case: model x extension signature, bound to the
+/// dataset whose sample dim the model consumes. `batch_div` scales
+/// the requested batch down for the expensive conv graphs (min 4) so
+/// `--quick` stays CI-sized while the recorded `batch` field keeps
+/// the baseline comparable run-to-run.
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineCase {
+    pub model: &'static str,
+    pub dataset: &'static str,
+    pub signature: &'static str,
+    pub batch_div: usize,
+}
+
+/// The perf-baseline grid: the paper's native problems under the
+/// plain gradient plus every applicable extension signature (Fig. 6's
+/// overhead story, on this backend). Fully-connected models carry all
+/// nine extensions; the conv models drop `kfra` (paper footnote 5)
+/// and run at `batch / 8` -- the conv overhead *trajectory* is what
+/// the baseline records, not paper-scale absolute cost.
+pub fn baseline_cases() -> Vec<BaselineCase> {
+    let grid = [
+        ("logreg", "mnist", 1usize),
+        ("mlp", "mnist", 1),
+        ("2c2d", "fmnist", 8),
+        ("3c3d", "cifar10", 8),
+    ];
     let mut cases = Vec::new();
-    for model in ["logreg", "mlp"] {
-        cases.push((model, "grad"));
-        for sig in crate::backend::model::NATIVE_EXTENSIONS {
-            cases.push((model, *sig));
+    for (model, dataset, batch_div) in grid {
+        for sig in ["grad"]
+            .into_iter()
+            .chain(crate::backend::model::NATIVE_EXTENSIONS.iter()
+                   .copied())
+        {
+            if sig == "kfra" && batch_div > 1 {
+                continue; // conv models: fully-connected only
+            }
+            cases.push(BaselineCase {
+                model,
+                dataset,
+                signature: sig,
+                batch_div,
+            });
         }
     }
     cases
@@ -148,6 +181,19 @@ pub fn perf_baseline(
     batch: usize,
     out: &Path,
 ) -> Result<()> {
+    perf_baseline_with(be, threads, quick, batch, &baseline_cases(), out)
+}
+
+/// [`perf_baseline`] over an explicit case list (tests use a reduced
+/// grid; the CLI always runs [`baseline_cases`]).
+pub fn perf_baseline_with(
+    be: &dyn Backend,
+    threads: usize,
+    quick: bool,
+    batch: usize,
+    grid: &[BaselineCase],
+    out: &Path,
+) -> Result<()> {
     let (iters, budget_s) = if quick { (5, 0.5) } else { (30, 3.0) };
     println!(
         "== perf baseline: backend={} threads={threads} batch={batch} \
@@ -156,20 +202,31 @@ pub fn perf_baseline(
     );
     let start = Instant::now();
     let mut cases = Vec::new();
-    for (model, sig) in baseline_cases() {
-        let name = format!("{model}_{sig}_n{batch}");
+    for case in grid.iter().copied() {
+        // The min-4 floor belongs to the conv down-scaling only; an
+        // explicitly requested tiny --batch is honored for FC cases.
+        let case_batch = if case.batch_div > 1 {
+            (batch / case.batch_div).max(4)
+        } else {
+            batch
+        };
+        let name =
+            format!("{}_{}_n{case_batch}", case.model, case.signature);
         let stats = crate::figures::timing::time_artifact(
-            be, &name, "mnist", iters, budget_s,
+            be, &name, case.dataset, iters, budget_s,
         )
         .with_context(|| format!("bench case {name}"))?;
         let mut obj = std::collections::BTreeMap::new();
         obj.insert("name".to_string(), Json::Str(name));
-        obj.insert("model".to_string(), Json::Str(model.to_string()));
+        obj.insert(
+            "model".to_string(),
+            Json::Str(case.model.to_string()),
+        );
         obj.insert(
             "signature".to_string(),
-            Json::Str(sig.to_string()),
+            Json::Str(case.signature.to_string()),
         );
-        obj.insert("batch".to_string(), Json::Num(batch as f64));
+        obj.insert("batch".to_string(), Json::Num(case_batch as f64));
         obj.insert(
             "samples".to_string(),
             Json::Num(stats.samples.len() as f64),
@@ -214,7 +271,7 @@ pub fn perf_baseline(
     println!(
         "wrote {} ({} cases, {:.1}s)",
         out.display(),
-        baseline_cases().len(),
+        grid.len(),
         start.elapsed().as_secs_f64()
     );
     Ok(())
@@ -280,11 +337,27 @@ mod tests {
     }
 
     #[test]
-    fn baseline_grid_covers_both_models_and_all_signatures() {
+    fn baseline_grid_covers_all_models_and_signatures() {
         let cases = baseline_cases();
-        assert_eq!(cases.len(), 2 * 10, "grad + 9 extensions x 2 models");
-        assert!(cases.contains(&("mlp", "grad")));
-        assert!(cases.contains(&("logreg", "kfra")));
+        // FC: grad + 9 extensions; conv: grad + 8 (no kfra).
+        assert_eq!(cases.len(), 2 * 10 + 2 * 9);
+        let has = |m: &str, s: &str| {
+            cases
+                .iter()
+                .any(|c| c.model == m && c.signature == s)
+        };
+        assert!(has("mlp", "grad"));
+        assert!(has("logreg", "kfra"));
+        assert!(has("2c2d", "kfac"));
+        assert!(has("3c3d", "diag_ggn"));
+        assert!(!has("2c2d", "kfra"), "kfra is FC-only");
+        assert!(!has("3c3d", "kfra"), "kfra is FC-only");
+        // Conv cases scale the batch down; their datasets match the
+        // model input dims.
+        for c in &cases {
+            let conv = matches!(c.model, "2c2d" | "3c3d");
+            assert_eq!(c.batch_div, if conv { 8 } else { 1 }, "{c:?}");
+        }
     }
 
     #[test]
@@ -293,7 +366,30 @@ mod tests {
         let path = std::env::temp_dir()
             .join("backpack_bench_test")
             .join("BENCH_test.json");
-        perf_baseline(&be, 2, true, 8, &path).unwrap();
+        // Reduced grid (full conv cases are release-bench material,
+        // not debug-test material); one conv case keeps the
+        // dataset-routing + batch_div path covered.
+        let grid = [
+            BaselineCase {
+                model: "logreg",
+                dataset: "mnist",
+                signature: "grad",
+                batch_div: 1,
+            },
+            BaselineCase {
+                model: "mlp",
+                dataset: "mnist",
+                signature: "variance",
+                batch_div: 1,
+            },
+            BaselineCase {
+                model: "2c2d",
+                dataset: "fmnist",
+                signature: "grad",
+                batch_div: 8,
+            },
+        ];
+        perf_baseline_with(&be, 2, true, 8, &grid, &path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let v = Json::parse(&text).unwrap();
         assert_eq!(v.get("schema").unwrap().as_str().unwrap(),
@@ -302,7 +398,7 @@ mod tests {
                    "native");
         assert_eq!(v.get("threads").unwrap().as_usize().unwrap(), 2);
         let cases = v.get("cases").unwrap().as_arr().unwrap();
-        assert_eq!(cases.len(), baseline_cases().len());
+        assert_eq!(cases.len(), grid.len());
         for c in cases {
             assert!(c.get("mean_s").unwrap().as_f64().unwrap() > 0.0);
             assert!(c.get("p95_s").unwrap().as_f64().unwrap()
@@ -310,6 +406,14 @@ mod tests {
                        - 1e-12);
             assert!(c.get("samples").unwrap().as_usize().unwrap() >= 1);
         }
+        // The conv case records its scaled batch (8 / 8 -> min 4).
+        let conv = cases
+            .iter()
+            .find(|c| {
+                c.get("model").unwrap().as_str().unwrap() == "2c2d"
+            })
+            .unwrap();
+        assert_eq!(conv.get("batch").unwrap().as_usize().unwrap(), 4);
         let _ = std::fs::remove_file(&path);
     }
 

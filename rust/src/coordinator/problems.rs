@@ -3,6 +3,10 @@
 //! Each problem binds a model, a synthetic dataset, the training batch
 //! size and the evaluation artifact. Batch sizes are the CPU-scaled
 //! values documented in DESIGN.md §3 (paper: 128, 256 for CIFAR-100).
+//! Every problem -- fully-connected and convolutional -- is servable
+//! by the default native backend (`tests::native_serves_every_problem`
+//! pins this); the pjrt backend additionally serves the problems with
+//! AOT artifacts.
 
 use anyhow::{bail, Result};
 
@@ -56,6 +60,8 @@ pub const PROBLEMS: &[Problem] = &[
         native_only: true,
     },
     Problem {
+        // Conv problem, native-servable since the im2col subsystem
+        // (backend/conv/): KFRA stays absent (paper footnote 5).
         codename: "fmnist_2c2d",
         model: "2c2d",
         side: 0,
@@ -67,6 +73,7 @@ pub const PROBLEMS: &[Problem] = &[
         native_only: false,
     },
     Problem {
+        // Conv problem, native-servable since the im2col subsystem.
         codename: "cifar10_3c3d",
         model: "3c3d",
         side: 0,
@@ -137,6 +144,47 @@ mod tests {
     fn datasets_exist() {
         for p in PROBLEMS {
             assert!(p.make_dataset(0).is_ok(), "{}", p.codename);
+        }
+    }
+
+    #[test]
+    fn native_serves_every_problem() {
+        // The "flip" this registry relies on: all five problems --
+        // including the conv ones -- resolve train artifacts for each
+        // of their optimizers, plus the eval artifact, on the native
+        // backend.
+        use crate::backend::Backend;
+        let be = crate::backend::native::NativeBackend::new();
+        for p in PROBLEMS {
+            assert!(
+                be.spec(p.eval_artifact).is_ok(),
+                "{}: eval {}", p.codename, p.eval_artifact
+            );
+            for opt in p.optimizers {
+                let sig = match *opt {
+                    "momentum" | "adam" | "sgd" => "grad",
+                    other => other,
+                };
+                let name = be
+                    .find_train(p.model, p.side, sig, p.train_batch)
+                    .unwrap_or_else(|e| {
+                        panic!("{}/{opt}: {e}", p.codename)
+                    });
+                assert!(be.spec(&name).is_ok(), "{name}");
+            }
+            // Dataset shape must match the model's input: the x spec
+            // is [n, d] for flat models, [n, c, h, w] for image ones.
+            let spec = be.spec(p.eval_artifact).unwrap();
+            let ds = p.make_dataset(0).unwrap();
+            let x_dim: usize = spec
+                .inputs
+                .iter()
+                .find(|t| t.name == "x")
+                .unwrap()
+                .shape[1..]
+                .iter()
+                .product();
+            assert_eq!(ds.spec.sample_dim(), x_dim, "{}", p.codename);
         }
     }
 }

@@ -3,7 +3,10 @@
 //! (Hessian diagonal vs GGN diagonal).
 //!
 //! The paper's claims are *relative* costs (extension time / gradient
-//! time); we report the same ratios on this testbed.
+//! time); we report the same ratios on this testbed. Figs. 3, 6 and 8
+//! run on the native backend (the conv subsystem serves 3c3d and
+//! allcnnc32); Fig. 9's `diag_h` residual propagation remains
+//! pjrt-only.
 
 use std::path::Path;
 use std::time::Duration;

@@ -40,12 +40,13 @@ usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N] [flags]
   table3
   table4 --problem mnist_logreg  [--grid paper|small] [...]
 
-The default `native` backend serves the fully-connected problems
-(mnist_logreg, mnist_mlp) with zero external dependencies and runs
-batch-parallel on all cores (`--threads N` or BACKPACK_THREADS=N
-override; `--threads 1` is the serial reference). `bench` writes the
-machine-readable perf baseline CI uploads on every push. The
-convolutional problems and timing figures need `--backend pjrt`
+The default `native` backend serves every registered problem --
+fully-connected (mnist_logreg, mnist_mlp) and convolutional
+(fmnist_2c2d, cifar10_3c3d, cifar100_allcnnc) -- with zero external
+dependencies, and runs batch-parallel on all cores (`--threads N` or
+BACKPACK_THREADS=N override; `--threads 1` is the serial reference).
+`bench` writes the machine-readable perf baseline CI uploads on every
+push. Only fig9's diag_h comparison still needs `--backend pjrt`
 (build with `--features pjrt` and run `make artifacts` first).
 ";
 

@@ -1,0 +1,503 @@
+//! Integration tests for the native convolution subsystem
+//! (`backend/conv/`): finite-difference oracles for `Conv2d` /
+//! `MaxPool2d` / `GlobalAvgPool`, a brute-force GGN check through a
+//! conv+pool stack, the paper's Table-1 identities on a conv model,
+//! the 1x1-conv ≡ Linear reduction of every extraction rule, the
+//! KFRA fully-connected-only invariant, and one-step servability of
+//! all five registered problems on the native backend.
+//!
+//! Models here are tiny (debug-build test budget); the real 2c2d /
+//! 3c3d / allcnnc registry models are exercised at the spec level and
+//! with single gradient steps.
+
+use backpack_rs::backend::conv::Shape;
+use backpack_rs::backend::layers::Layer;
+use backpack_rs::backend::model::Model;
+use backpack_rs::backend::native::NativeBackend;
+use backpack_rs::backend::{Backend, Exec, Outputs};
+use backpack_rs::coordinator::problems::PROBLEMS;
+use backpack_rs::coordinator::train::{build_inputs, init_params};
+use backpack_rs::data::Rng;
+use backpack_rs::optim::NamedParam;
+use backpack_rs::runtime::Tensor;
+
+/// Conv + ceil-mode max-pool + dense, with a *smooth* activation so
+/// finite differences are well-behaved away from the pool's argmax
+/// routing.
+fn tiny_conv() -> Model {
+    Model::with_input(
+        "tinyconv",
+        Shape::new(2, 5, 5),
+        vec![
+            Layer::Conv2d {
+                in_ch: 2, out_ch: 3, kernel: 3, stride: 1, pad: 1,
+            },
+            Layer::Sigmoid,
+            Layer::MaxPool2d { kernel: 2, stride: 2, ceil: true },
+            Layer::Flatten,
+            Layer::Linear { in_dim: 27, out_dim: 4 },
+        ],
+    )
+    .unwrap()
+}
+
+/// Stride-2 'same' conv + global average pool (the All-CNN-C shape
+/// vocabulary) ending directly in pooled logits.
+fn tiny_gap() -> Model {
+    Model::with_input(
+        "tinygap",
+        Shape::new(2, 4, 4),
+        vec![
+            Layer::Conv2d {
+                in_ch: 2, out_ch: 4, kernel: 3, stride: 2, pad: 1,
+            },
+            Layer::Sigmoid,
+            Layer::Conv2d {
+                in_ch: 4, out_ch: 3, kernel: 1, stride: 1, pad: 0,
+            },
+            Layer::GlobalAvgPool,
+        ],
+    )
+    .unwrap()
+}
+
+fn backend_with_test_models() -> NativeBackend {
+    let mut be = NativeBackend::new();
+    be.register(tiny_conv());
+    be.register(tiny_gap());
+    be
+}
+
+fn random_batch(n: usize, dim: usize, classes: usize, seed: u64)
+    -> (Tensor, Tensor) {
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal()).collect();
+    let y: Vec<i32> =
+        (0..n).map(|_| rng.below(classes) as i32).collect();
+    (Tensor::from_f32(&[n, dim], x), Tensor::from_i32(&[n], y))
+}
+
+/// Random batch in the artifact's own `x` layout (`[n, c, h, w]` for
+/// image models -- what the data pipeline ships and `Exec::run`
+/// validates against).
+fn spec_batch(spec: &backpack_rs::runtime::ArtifactSpec, seed: u64)
+    -> (Tensor, Tensor) {
+    let xsh = spec
+        .inputs
+        .iter()
+        .find(|t| t.name == "x")
+        .expect("x input")
+        .shape
+        .clone();
+    let n = xsh[0];
+    let dim: usize = xsh[1..].iter().product();
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let x: Vec<f32> = (0..n * dim).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..n)
+        .map(|_| rng.below(spec.num_classes) as i32)
+        .collect();
+    (Tensor::from_f32(&xsh, x), Tensor::from_i32(&[n], y))
+}
+
+fn run_at(
+    exe: &dyn Exec,
+    params: &[NamedParam],
+    x: &Tensor,
+    y: &Tensor,
+) -> Outputs {
+    exe.run(&build_inputs(params, x.clone(), y.clone(), None))
+        .expect("execute")
+}
+
+/// Central finite differences of the loss against `grad/*` for every
+/// parameter of `artifact`. `abs`/`rel` set the tolerance: the smooth
+/// (pool-free) model uses the acceptance bound ≤ 1e-3 relative; the
+/// max-pool model allows slightly more, because a parameter
+/// perturbation can flip a window argmax inside the fd stencil (the
+/// loss stays continuous, but the two-sided difference then averages
+/// two routing branches the analytic gradient rightly does not).
+fn check_grad_fd(be: &NativeBackend, artifact: &str, seed: u64,
+                 abs: f32, rel: f32) {
+    let exe = be.load(artifact).unwrap();
+    let mut params = init_params(exe.spec(), seed);
+    let (x, y) = spec_batch(exe.spec(), seed);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    let eps = 5e-3f32;
+    for pi in 0..params.len() {
+        let gname = params[pi].under("grad");
+        let g = out.get(&gname).unwrap().f32s().unwrap().to_vec();
+        for idx in 0..params[pi].tensor.numel() {
+            let orig = params[pi].tensor.f32s().unwrap()[idx];
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig + eps;
+            let lp =
+                run_at(exe.as_ref(), &params, &x, &y).loss().unwrap();
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig - eps;
+            let lm =
+                run_at(exe.as_ref(), &params, &x, &y).loss().unwrap();
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let tol = abs + rel * (1.0 + fd.abs().max(g[idx].abs()));
+            assert!(
+                (g[idx] - fd).abs() < tol,
+                "{artifact} {gname}[{idx}]: analytic {} vs fd {fd}",
+                g[idx]
+            );
+        }
+    }
+}
+
+#[test]
+fn conv_and_maxpool_grad_matches_finite_differences() {
+    let be = backend_with_test_models();
+    check_grad_fd(&be, "tinyconv_grad_n6", 1, 2e-3, 5e-3);
+}
+
+#[test]
+fn strided_conv_and_gap_grad_matches_finite_differences() {
+    // Smooth model (no max-pool): the strict ≤ 1e-3 acceptance bound.
+    let be = backend_with_test_models();
+    check_grad_fd(&be, "tinygap_grad_n5", 2, 0.0, 1e-3);
+}
+
+/// `diag_ggn` through conv + pool vs a brute-force GGN from a
+/// finite-difference network Jacobian and the exact softmax Hessian
+/// (the conv twin of the MLP check in `tests/native_backend.rs`).
+#[test]
+fn conv_diag_ggn_matches_brute_force_ggn() {
+    let be = backend_with_test_models();
+    let exe = be.load("tinyconv_diag_ggn_n3").unwrap();
+    let mut params = init_params(exe.spec(), 3);
+    let (x, y) = spec_batch(exe.spec(), 3);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    let (n, c) = (3usize, 4usize);
+
+    let model = tiny_conv();
+    let tensors = |ps: &[NamedParam]| -> Vec<Tensor> {
+        ps.iter().map(|p| p.tensor.clone()).collect()
+    };
+    let logits = model
+        .forward(&tensors(&params), &x)
+        .unwrap()
+        .f32s()
+        .unwrap()
+        .to_vec();
+    let mut p = vec![0.0f32; n * c];
+    for s in 0..n {
+        let row = &logits[s * c..(s + 1) * c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|v| (v - m).exp()).sum();
+        for j in 0..c {
+            p[s * c + j] = (row[j] - m).exp() / z;
+        }
+    }
+
+    let eps = 1e-2f32;
+    for pi in 0..params.len() {
+        let dname = params[pi].under("diag_ggn");
+        let diag = out.get(&dname).unwrap().f32s().unwrap().to_vec();
+        for idx in (0..params[pi].tensor.numel()).step_by(2) {
+            let orig = params[pi].tensor.f32s().unwrap()[idx];
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig + eps;
+            let fp = model
+                .forward(&tensors(&params), &x)
+                .unwrap()
+                .f32s()
+                .unwrap()
+                .to_vec();
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig - eps;
+            let fm = model
+                .forward(&tensors(&params), &x)
+                .unwrap()
+                .f32s()
+                .unwrap()
+                .to_vec();
+            params[pi].tensor.f32s_mut().unwrap()[idx] = orig;
+            // G_ii = (1/N) Σ_n jᵀ (diag(p) − p pᵀ) j.
+            let mut want = 0.0f32;
+            for s in 0..n {
+                let j: Vec<f32> = (0..c)
+                    .map(|a| {
+                        (fp[s * c + a] - fm[s * c + a]) / (2.0 * eps)
+                    })
+                    .collect();
+                let pj: f32 =
+                    (0..c).map(|a| p[s * c + a] * j[a]).sum();
+                for a in 0..c {
+                    want += p[s * c + a] * j[a] * j[a];
+                }
+                want -= pj * pj;
+            }
+            want /= n as f32;
+            let tol = 1e-4 + 3e-2 * want.abs().max(diag[idx].abs());
+            assert!(
+                (diag[idx] - want).abs() < tol,
+                "{dname}[{idx}]: {} vs brute-force {want}",
+                diag[idx]
+            );
+        }
+    }
+}
+
+/// Paper Table 1 identities on one combined first-order conv graph:
+/// batch_grad rows sum to grad, sq_moment matches the per-sample
+/// squares, variance = sq_moment − grad², batch_l2 = ‖row‖².
+#[test]
+fn conv_first_order_identities() {
+    let be = backend_with_test_models();
+    let exe = be
+        .load("tinyconv_batch_grad+batch_l2+sq_moment+variance_n8")
+        .unwrap();
+    let params = init_params(exe.spec(), 4);
+    let (x, y) = spec_batch(exe.spec(), 4);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    let n = 8usize;
+    for p in &params {
+        let d = p.tensor.numel();
+        let g = out.get(&p.under("grad")).unwrap().f32s().unwrap();
+        let bg = out
+            .get(&p.under("batch_grad"))
+            .unwrap()
+            .f32s()
+            .unwrap();
+        let sq =
+            out.get(&p.under("sq_moment")).unwrap().f32s().unwrap();
+        let var =
+            out.get(&p.under("variance")).unwrap().f32s().unwrap();
+        let l2 =
+            out.get(&p.under("batch_l2")).unwrap().f32s().unwrap();
+        assert_eq!(bg.len(), n * d, "{}", p.name);
+        for i in 0..d {
+            let sum: f32 = (0..n).map(|s| bg[s * d + i]).sum();
+            assert!(
+                (sum - g[i]).abs() <= 1e-6 + 1e-4 * g[i].abs(),
+                "{}: Σ_n batch_grad {sum} != grad {}", p.name, g[i]
+            );
+            let want: f32 =
+                (0..n).map(|s| bg[s * d + i].powi(2)).sum::<f32>()
+                    * n as f32;
+            assert!(
+                (sq[i] - want).abs() <= 1e-6 + 1e-3 * want.abs(),
+                "{}: sq_moment {} != {want}", p.name, sq[i]
+            );
+            let wantv = sq[i] - g[i] * g[i];
+            assert!(
+                (var[i] - wantv).abs() <= 1e-6 + 1e-3 * wantv.abs(),
+                "{}: variance {} != {wantv}", p.name, var[i]
+            );
+            assert!(var[i] >= -1e-6, "variance must be >= 0");
+        }
+        for s in 0..n {
+            let want: f32 =
+                (0..d).map(|i| bg[s * d + i].powi(2)).sum();
+            assert!(
+                (l2[s] - want).abs() <= 1e-9 + 1e-3 * want.abs(),
+                "{}: batch_l2[{s}] {} != {want}", p.name, l2[s]
+            );
+        }
+    }
+}
+
+/// The FC-limit soundness check for every conv extraction rule: a
+/// stack of 1x1 convs on 1x1 "images" IS a fully-connected net, so
+/// grads, batch quantities, DiagGGN(-MC) and KFAC/KFLR factors must
+/// match a `Linear` twin sharing the same (reshaped) parameters.
+#[test]
+fn one_by_one_conv_model_matches_linear_twin() {
+    let conv = Model::with_input(
+        "conv1x1",
+        Shape::new(6, 1, 1),
+        vec![
+            Layer::Conv2d {
+                in_ch: 6, out_ch: 4, kernel: 1, stride: 1, pad: 0,
+            },
+            Layer::Sigmoid,
+            Layer::Conv2d {
+                in_ch: 4, out_ch: 3, kernel: 1, stride: 1, pad: 0,
+            },
+        ],
+    )
+    .unwrap();
+    let lin = Model::new(
+        "lin",
+        6,
+        vec![
+            Layer::Linear { in_dim: 6, out_dim: 4 },
+            Layer::Sigmoid,
+            Layer::Linear { in_dim: 4, out_dim: 3 },
+        ],
+    )
+    .unwrap();
+    let mut rng = Rng::new(7);
+    let mut mk = |shape: &[usize]| {
+        let k: usize = shape.iter().product();
+        (0..k).map(|_| rng.normal() * 0.4).collect::<Vec<f32>>()
+    };
+    let (w0, b0) = (mk(&[4, 6]), mk(&[4]));
+    let (w1, b1) = (mk(&[3, 4]), mk(&[3]));
+    let conv_params = vec![
+        Tensor::from_f32(&[4, 6, 1, 1], w0.clone()),
+        Tensor::from_f32(&[4], b0.clone()),
+        Tensor::from_f32(&[3, 4, 1, 1], w1.clone()),
+        Tensor::from_f32(&[3], b1.clone()),
+    ];
+    let lin_params = vec![
+        Tensor::from_f32(&[4, 6], w0),
+        Tensor::from_f32(&[4], b0),
+        Tensor::from_f32(&[3, 4], w1),
+        Tensor::from_f32(&[3], b1),
+    ];
+    let (x, y) = random_batch(9, 6, 3, 7);
+    let exts: Vec<String> = [
+        "batch_grad", "batch_l2", "variance", "diag_ggn",
+        "diag_ggn_mc", "kfac", "kflr",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let key = Some([11, 12]);
+    let a = conv
+        .extended_backward(&conv_params, &x, &y, &exts, key)
+        .unwrap();
+    let b = lin
+        .extended_backward(&lin_params, &x, &y, &exts, key)
+        .unwrap();
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        b.keys().collect::<Vec<_>>()
+    );
+    for (k, want) in &b {
+        let got = &a[k];
+        // Weight-shaped tensors differ only by the trailing 1x1 dims.
+        assert_eq!(
+            got.numel(),
+            want.numel(),
+            "{k}: {:?} vs {:?}", got.shape, want.shape
+        );
+        for (i, (u, v)) in want
+            .f32s()
+            .unwrap()
+            .iter()
+            .zip(got.f32s().unwrap())
+            .enumerate()
+        {
+            assert!(
+                (u - v).abs() <= 1e-5 * (1.0 + u.abs()),
+                "{k}[{i}]: linear {u} vs conv {v}"
+            );
+        }
+    }
+}
+
+/// KFAC/KFLR conv factors: spec-consistent shapes, symmetry, PSD
+/// diagonals on a spatial model (P > 1).
+#[test]
+fn conv_kron_factors_are_consistent() {
+    let be = backend_with_test_models();
+    let exe = be.load("tinyconv_kflr_n6").unwrap();
+    let params = init_params(exe.spec(), 5);
+    let (x, y) = spec_batch(exe.spec(), 5);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    // Layer 0: conv (J = 2·3·3 = 18, c_out = 3); layer 4: linear.
+    for (name, dim) in [
+        ("kflr/0/A", 18usize),
+        ("kflr/0/B", 3),
+        ("kflr/0/bias_ggn", 3),
+        ("kflr/4/A", 27),
+        ("kflr/4/B", 4),
+    ] {
+        let t = out.get(name).unwrap();
+        assert_eq!(t.shape, vec![dim, dim], "{name}");
+        let v = t.f32s().unwrap();
+        for i in 0..dim {
+            assert!(v[i * dim + i] >= -1e-6, "{name} diag[{i}]");
+            for j in 0..dim {
+                assert!(
+                    (v[i * dim + j] - v[j * dim + i]).abs()
+                        <= 1e-5 * (1.0 + v[i * dim + j].abs()),
+                    "{name} symmetry [{i},{j}]"
+                );
+            }
+        }
+    }
+}
+
+/// KFRA is fully-connected-only (paper footnote 5): the backend
+/// refuses conv kfra artifacts end-to-end and the invariant test in
+/// `coordinator/problems.rs` keeps the optimizer lists consistent.
+#[test]
+fn kfra_is_rejected_on_conv_models_end_to_end() {
+    let be = backend_with_test_models();
+    for artifact in
+        ["tinyconv_kfra_n4", "2c2d_kfra_n4", "3c3d_kfra+kfac_n4"]
+    {
+        let err = be.spec(artifact).unwrap_err().to_string();
+        assert!(err.contains("footnote 5"), "{artifact}: {err}");
+        assert!(be.load(artifact).is_err(), "{artifact}");
+    }
+    assert!(be.spec("mlp_kfra_n4").is_ok());
+}
+
+/// Acceptance: every registered problem is servable on the native
+/// backend -- one full gradient execution per problem with finite
+/// outputs (allcnnc at side 16, per the registry).
+#[test]
+fn every_problem_runs_a_gradient_step_natively() {
+    let be = NativeBackend::new();
+    for p in PROBLEMS {
+        let name = be
+            .find_train(p.model, p.side, "grad", 2)
+            .unwrap_or_else(|e| panic!("{}: {e}", p.codename));
+        let exe = be.load(&name).unwrap();
+        let spec = exe.spec().clone();
+        let params = init_params(&spec, 0);
+        let (x, y) = spec_batch(&spec, 9);
+        let out = run_at(exe.as_ref(), &params, &x, &y);
+        let loss = out.loss().unwrap();
+        assert!(loss.is_finite(), "{}: loss {loss}", p.codename);
+        for p2 in &params {
+            let g = out.get(&p2.under("grad")).unwrap();
+            assert_eq!(g.shape, p2.tensor.shape, "{}", p2.name);
+            assert!(
+                g.f32s().unwrap().iter().all(|v| v.is_finite()),
+                "{}: non-finite grad {}", p.codename, p2.name
+            );
+        }
+    }
+}
+
+/// End-to-end conv training: plain SGD on a fixed batch must overfit
+/// (loss strictly decreases over a few steps) through the full
+/// backend path, and the eval graph reports sane numbers.
+#[test]
+fn conv_training_reduces_loss_and_eval_runs() {
+    let be = backend_with_test_models();
+    let exe = be.load("tinyconv_grad_n16").unwrap();
+    let mut params = init_params(exe.spec(), 6);
+    let (x, y) = spec_batch(exe.spec(), 6);
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let out = run_at(exe.as_ref(), &params, &x, &y);
+        losses.push(out.loss().unwrap());
+        for p in params.iter_mut() {
+            let g = out.get(&p.under("grad")).unwrap().f32s().unwrap()
+                .to_vec();
+            let t = p.tensor.f32s_mut().unwrap();
+            for (w, gv) in t.iter_mut().zip(&g) {
+                *w -= 0.5 * gv;
+            }
+        }
+    }
+    let (first, last) = (losses[0], *losses.last().unwrap());
+    assert!(
+        last < first,
+        "SGD on a fixed batch must reduce the loss: {losses:?}"
+    );
+    let eval = be.load("tinyconv_eval_n32").unwrap();
+    let (x, y) = spec_batch(eval.spec(), 8);
+    let out = eval
+        .run(&build_inputs(&params, x, y, None))
+        .unwrap();
+    assert!(out.loss().unwrap().is_finite());
+    let acc = out.get("accuracy").unwrap().item_f32().unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}

@@ -136,6 +136,52 @@ fn all_signatures_agree_across_thread_counts() {
     }
 }
 
+/// Conv acceptance property: every signature `cifar10_3c3d`'s
+/// optimizers use ("grad", diag_ggn, diag_ggn_mc, kfac, kflr) agrees
+/// between 1 thread and several to ≤ 1e-5 on the real 3c3d model --
+/// conv factors sum-reduce like linear ones, MC draws are keyed by
+/// global sample index, max-pool routing is shard-independent. One
+/// small odd batch keeps the exact-GGN signatures debug-test-sized.
+#[test]
+fn conv_3c3d_signatures_agree_across_thread_counts() {
+    let m = Model::conv_3c3d();
+    let mut rng = Rng::new(0xC07);
+    let n = 4; // uneven shards at 3 threads (2, 1, 1)
+    let (params, x, y) = problem(&m, n, &mut rng);
+    let key = Some([21, 0xC0FE]);
+    let signatures: Vec<Vec<String>> = vec![
+        Vec::new(), // "grad"
+        vec!["diag_ggn".into()],
+        vec!["diag_ggn_mc".into()],
+        vec!["kfac".into()],
+        vec!["kflr".into()],
+        vec!["batch_grad".into(), "batch_l2".into(),
+             "variance".into()],
+    ];
+    for exts in &signatures {
+        let serial = m
+            .extended_backward(&params, &x, &y, exts, key)
+            .unwrap();
+        for threads in [2usize, 3] {
+            let par = m
+                .extended_backward_threads(
+                    &params, &x, &y, exts, key, threads,
+                )
+                .unwrap();
+            assert_eq!(serial.len(), par.len(), "{exts:?}");
+            for (k, want) in &serial {
+                assert_close(
+                    &format!("3c3d {exts:?}/{k} threads={threads}"),
+                    want,
+                    par.get(k).unwrap(),
+                    1e-5,
+                )
+                .unwrap();
+            }
+        }
+    }
+}
+
 /// `batch_grad` keeps sample order under sharding: row `s` of the
 /// N-thread result must equal the gradient of sample `s` computed
 /// alone (rescaled from its own batch-of-1 normalization to 1/N).
