@@ -1,4 +1,5 @@
-//! Quickstart: the Rust analogue of the paper's Fig. 1.
+//! Quickstart: the Rust analogue of the paper's Fig. 1, on the
+//! default native backend — no Python, no artifacts, no features.
 //!
 //! PyTorch+BackPACK:
 //! ```python
@@ -9,24 +10,28 @@
 //! print(param.grad, param.var)
 //! ```
 //!
-//! Here the extended backward pass was AOT-lowered to an HLO artifact;
-//! one `execute` returns the gradient AND the variance (plus the other
-//! first-order quantities) in the same pass.
+//! Here the backend synthesizes the extended-backward graph from its
+//! artifact name and runs it in pure Rust: one `run` returns the
+//! gradient AND the variance (plus the other first-order quantities)
+//! in the same pass. Every quantity is an `Extension` module behind
+//! the `backend/extensions/` registry — the same snippet works for a
+//! user-defined quantity after `NativeBackend::register_extension`.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
 use backpack_rs::coordinator::train::{build_inputs, init_params};
 use backpack_rs::data::{DatasetSpec, Synthetic};
-use backpack_rs::runtime::{Runtime, Tensor};
+use backpack_rs::runtime::Tensor;
+use backpack_rs::{Backend, Exec, NativeBackend};
 
 fn main() -> Result<()> {
-    let rt = Runtime::open_default()?;
+    let be = NativeBackend::new();
     // logreg (Linear(784, 10) + CrossEntropy) with every first-order
     // extension in one graph.
     let exe =
-        rt.load("logreg_batch_grad+batch_l2+sq_moment+variance_n64")?;
-    let spec = &exe.spec;
+        be.load("logreg_batch_grad+batch_l2+sq_moment+variance_n64")?;
+    let spec = exe.spec();
     println!(
         "artifact: {} ({} inputs, {} outputs)",
         spec.name,

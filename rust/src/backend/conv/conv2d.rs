@@ -1,8 +1,10 @@
-//! `Conv2d` forward + every BackPACK extraction rule, via im2col
-//! (DESIGN.md §6). All functions operate on one contiguous batch
-//! shard and normalize averaged quantities by the **global** batch
-//! size `norm`, so shard outputs sum-reduce exactly like the `Linear`
-//! rules in `backend/model.rs`.
+//! `Conv2d` forward, VJPs, and the im2col math kernels behind the
+//! conv extraction rules (DESIGN.md §6) — called by the engine walks
+//! in `backend/model.rs` and by the `Conv2d` arms of the extension
+//! modules in `backend/extensions/`. All functions operate on one
+//! contiguous batch shard and normalize averaged quantities by the
+//! **global** batch size `norm`, so shard outputs sum-reduce exactly
+//! like the `Linear` rules.
 //!
 //! Conventions (weight `W [c_out, J]` with `J = c_in·k·k`, unfolded
 //! input `U = ⟦x⟧ [J, P]`, per-sample output gradient `G [c_out, P]`,
@@ -93,93 +95,69 @@ pub fn mat_vjp_input(
     out
 }
 
-/// First-order quantities of one conv layer over a shard. `gw`/`gb`
-/// are the norm-averaged gradient; the optional vectors are filled
-/// only when requested (batch quantities in shard sample order).
-pub struct FirstOrder {
-    pub gw: Vec<f32>,
-    pub gb: Vec<f32>,
-    pub batch_w: Vec<f32>,
-    pub batch_b: Vec<f32>,
-    pub l2_w: Vec<f32>,
-    pub l2_b: Vec<f32>,
-    pub sq_w: Vec<f32>,
-    pub sq_b: Vec<f32>,
-}
-
-/// Compute gradient + requested first-order extensions from per-sample
-/// `G_n U_nᵀ` products (one `matmul_nt` per sample, reused by every
-/// quantity). Unlike `Linear`, the per-sample gradient is not rank-1
-/// (spatial positions sum into it), so `batch_l2`/`sq_moment`
-/// materialize the product instead of using the rank-1 shortcut.
-#[allow(clippy::too_many_arguments)]
-pub fn first_order(
+/// Norm-averaged gradient of one conv layer over a shard, streaming:
+/// one per-sample `G_n U_nᵀ` product (`matmul_nt`), accumulated in
+/// sample order without materializing the per-sample gradients. This
+/// is the plain-`grad` path; when first-order extensions are active
+/// the engine shares one materialized [`per_sample_grads`] instead.
+pub fn grad(
     geom: &ConvGeom,
     inp: &[f32],
     g: &[f32],
     ns: usize,
     norm: f32,
-    want_batch: bool,
-    want_l2: bool,
-    want_sq: bool,
-) -> FirstOrder {
+) -> (Vec<f32>, Vec<f32>) {
     let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
     let (j, p) = (geom.patch_len(), geom.positions());
     let c_out = geom.out_shape.c;
-    let mut fo = FirstOrder {
-        gw: vec![0.0f32; c_out * j],
-        gb: vec![0.0f32; c_out],
-        batch_w: Vec::new(),
-        batch_b: Vec::new(),
-        l2_w: Vec::new(),
-        l2_b: Vec::new(),
-        sq_w: if want_sq { vec![0.0f32; c_out * j] } else { Vec::new() },
-        sq_b: if want_sq { vec![0.0f32; c_out] } else { Vec::new() },
-    };
-    if want_batch {
-        fo.batch_w.reserve(ns * c_out * j);
-        fo.batch_b.reserve(ns * c_out);
-    }
+    let mut gw = vec![0.0f32; c_out * j];
+    let mut gb = vec![0.0f32; c_out];
     for smp in 0..ns {
         let u = geom.im2col(&inp[smp * fin..(smp + 1) * fin]);
         let gs = &g[smp * fout..(smp + 1) * fout];
         // Per-sample weight gradient G_n U_nᵀ [c_out, J].
         let pg = matmul_nt(gs, &u, c_out, p, j);
-        for (acc, v) in fo.gw.iter_mut().zip(&pg) {
+        for (acc, v) in gw.iter_mut().zip(&pg) {
             *acc += v;
         }
         // Per-sample bias gradient: position sums of G_n.
-        let mut pb = vec![0.0f32; c_out];
         for o in 0..c_out {
-            pb[o] = gs[o * p..(o + 1) * p].iter().sum();
-            fo.gb[o] += pb[o];
-        }
-        if want_batch {
-            fo.batch_w.extend(pg.iter().map(|v| v / norm));
-            fo.batch_b.extend(pb.iter().map(|v| v / norm));
-        }
-        if want_l2 {
-            let g2: f32 = pg.iter().map(|v| v * v).sum();
-            let b2: f32 = pb.iter().map(|v| v * v).sum();
-            fo.l2_w.push(g2 / (norm * norm));
-            fo.l2_b.push(b2 / (norm * norm));
-        }
-        if want_sq {
-            for (acc, v) in fo.sq_w.iter_mut().zip(&pg) {
-                *acc += v * v;
-            }
-            for (acc, v) in fo.sq_b.iter_mut().zip(&pb) {
-                *acc += v * v;
-            }
+            gb[o] += gs[o * p..(o + 1) * p].iter().sum::<f32>();
         }
     }
-    for v in fo.gw.iter_mut().chain(fo.gb.iter_mut()) {
+    for v in gw.iter_mut().chain(gb.iter_mut()) {
         *v /= norm;
     }
-    for v in fo.sq_w.iter_mut().chain(fo.sq_b.iter_mut()) {
-        *v /= norm;
+    (gw, gb)
+}
+
+/// Unnormalized per-sample parameter gradients over a shard, in
+/// sample order: `(w [ns, c_out, J], b [ns, c_out])` with
+/// `w_n = G_n U_nᵀ` and `b_n` the position sums of `G_n`. The shared
+/// intermediate of the first-order extension rules — unlike `Linear`,
+/// the conv per-sample gradient is not rank-1 (spatial positions sum
+/// into it), so `batch_l2`/`sq_moment` consume this materialized
+/// product instead of a factored shortcut.
+pub fn per_sample_grads(
+    geom: &ConvGeom,
+    inp: &[f32],
+    g: &[f32],
+    ns: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let c_out = geom.out_shape.c;
+    let mut w = Vec::with_capacity(ns * c_out * j);
+    let mut b = Vec::with_capacity(ns * c_out);
+    for smp in 0..ns {
+        let u = geom.im2col(&inp[smp * fin..(smp + 1) * fin]);
+        let gs = &g[smp * fout..(smp + 1) * fout];
+        w.extend(matmul_nt(gs, &u, c_out, p, j));
+        for o in 0..c_out {
+            b.push(gs[o * p..(o + 1) * p].iter().sum::<f32>());
+        }
     }
-    fo
+    (w, b)
 }
 
 /// DiagGGN extraction (Eq. 19 through the unfolded view): per sample,
@@ -327,16 +305,29 @@ mod tests {
         }
         // Gradient = (1/N) Σ g_n x_nᵀ, the Linear rule.
         let g: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
-        let fo = first_order(&geom, &x, &g, 2, 2.0, true, true, true);
+        let (gw, _gb) = grad(&geom, &x, &g, 2, 2.0);
         for o in 0..3 {
             for i in 0..4 {
                 let want: f32 = (0..2)
                     .map(|s| g[s * 3 + o] * x[s * 4 + i])
                     .sum::<f32>()
                     / 2.0;
-                assert!((fo.gw[o * 4 + i] - want).abs() < 1e-5);
+                assert!((gw[o * 4 + i] - want).abs() < 1e-5);
             }
         }
+        // Per-sample gradients at P = 1 are the rank-1 outer
+        // products, unnormalized; the bias rows are g itself.
+        let (psw, psb) = per_sample_grads(&geom, &x, &g, 2);
+        for s in 0..2 {
+            for o in 0..3 {
+                for i in 0..4 {
+                    let want = g[s * 3 + o] * x[s * 4 + i];
+                    let got = psw[(s * 3 + o) * 4 + i];
+                    assert!((got - want).abs() < 1e-6);
+                }
+            }
+        }
+        assert_eq!(psb, g);
         // Kron factors: A = (1/N) Σ x xᵀ, B = (1/N) Σ s sᵀ (P = 1).
         let s: Vec<f32> = (0..2 * 3 * 2).map(|_| rng.normal()).collect();
         let (a, bf, bias) = kron_factors(&geom, &x, &s, 2, 2, 2.0);

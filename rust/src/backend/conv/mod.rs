@@ -9,8 +9,9 @@
 //! derivations of `backend/model.rs` with the unfolded input in place
 //! of `x` and spatial positions folded into the contraction:
 //!
-//! * first-order quantities from per-sample `G ⟦x⟧ᵀ` products
-//!   ([`conv2d::first_order`]),
+//! * the averaged gradient and the per-sample `G ⟦x⟧ᵀ` products the
+//!   first-order extension modules share ([`conv2d::grad`],
+//!   [`conv2d::per_sample_grads`]),
 //! * DiagGGN via the square-root propagation `S ↦ Wᵀ S` + `col2im`
 //!   ([`conv2d::mat_vjp_input`], [`conv2d::diag_sqrt`]),
 //! * KFAC/KFLR Kronecker factors from the unfolded input's

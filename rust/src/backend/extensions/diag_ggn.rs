@@ -1,0 +1,136 @@
+//! Diagonal GGN extensions (paper Eqs. 18–20): `diag_ggn` (exact) and
+//! `diag_ggn_mc` (Monte-Carlo), extracted from the propagated
+//! square-root GGN `S [N, F, cols]`.
+//!
+//! Convention (DESIGN.md §4): `diag(G)` with `G = (1/N) Σ_n JᵀH_nJ`
+//! — the `1/N` is inside, matching the batch-mean loss. The exact
+//! variant propagates `cols = C` (class count) columns, the MC
+//! variant `cols = M` ([`crate::backend::model::MC_SAMPLES`]) columns
+//! drawn per sample from a counter-mode stream keyed by the step key
+//! and the sample's **global** batch index, so the result is
+//! invariant to the shard layout (DESIGN.md §9).
+//!
+//! Extraction at a `Linear` layer squares the propagated columns
+//! (`Σ_c (Jᵀ S)²` reduces to `(Σ_c S²)ᵀ (x²)` by the rank-1 Jacobian
+//! structure, Eq. 19); convolutions contract the transposed `S`
+//! against the unfolded input (`conv2d::diag_sqrt`, DESIGN.md §6).
+
+use crate::linalg::matmul_tn;
+use crate::runtime::{Tensor, TensorSpec};
+
+use super::{f32_spec, Extension, LayerCtx, LayerOp, Quantities, Walk};
+use crate::backend::conv::conv2d;
+use crate::backend::model::Model;
+
+/// Exact (`diag_ggn`) or Monte-Carlo (`diag_ggn_mc`) GGN diagonal.
+pub struct DiagGgn {
+    mc: bool,
+}
+
+impl DiagGgn {
+    /// The exact variant: propagates the full `[N, F, C]` square root
+    /// (Eq. 18).
+    pub fn exact() -> DiagGgn {
+        DiagGgn { mc: false }
+    }
+
+    /// The Monte-Carlo variant: propagates the rank-`M` sampled
+    /// square root (Eq. 20); needs a PRNG key.
+    pub fn mc() -> DiagGgn {
+        DiagGgn { mc: true }
+    }
+}
+
+impl Extension for DiagGgn {
+    fn name(&self) -> &str {
+        if self.mc {
+            "diag_ggn_mc"
+        } else {
+            "diag_ggn"
+        }
+    }
+
+    fn walk(&self) -> Walk {
+        if self.mc {
+            Walk::SqrtGgnMc
+        } else {
+            Walk::SqrtGgn
+        }
+    }
+
+    fn sqrt_ggn(
+        &self,
+        ctx: &LayerCtx,
+        s: &[f32],
+        cols: usize,
+        out: &mut Quantities,
+    ) {
+        let (li, n, nf) = (ctx.li, ctx.n, ctx.norm);
+        let name = self.name();
+        match ctx.op {
+            LayerOp::Conv { geom, .. } => {
+                let (dw, db) = conv2d::diag_sqrt(
+                    geom, ctx.input, s, n, cols, nf,
+                );
+                out.insert(
+                    format!("{name}/{li}/w"),
+                    Tensor::from_f32(&geom.w_shape(), dw),
+                );
+                out.insert(
+                    format!("{name}/{li}/b"),
+                    Tensor::from_f32(&[geom.out_shape.c], db),
+                );
+            }
+            LayerOp::Linear { din, dout, .. } => {
+                let inp = ctx.input;
+                // s2[n, o] = Σ_c S[n, o, c]²
+                let mut s2 = vec![0.0f32; n * dout];
+                for (row, v) in s2.iter_mut().enumerate() {
+                    let base = row * cols;
+                    *v = s[base..base + cols]
+                        .iter()
+                        .map(|u| u * u)
+                        .sum();
+                }
+                let x2: Vec<f32> =
+                    inp.iter().map(|v| v * v).collect();
+                let mut dw = matmul_tn(&s2, &x2, n, dout, din);
+                for v in &mut dw {
+                    *v /= nf;
+                }
+                let mut db = vec![0.0f32; dout];
+                for smp in 0..n {
+                    for o in 0..dout {
+                        db[o] += s2[smp * dout + o];
+                    }
+                }
+                for v in &mut db {
+                    *v /= nf;
+                }
+                out.insert(
+                    format!("{name}/{li}/w"),
+                    Tensor::from_f32(&[dout, din], dw),
+                );
+                out.insert(
+                    format!("{name}/{li}/b"),
+                    Tensor::from_f32(&[dout], db),
+                );
+            }
+        }
+    }
+
+    fn output_specs(&self, model: &Model, _batch: usize) -> Vec<TensorSpec> {
+        let mut specs = Vec::new();
+        for blk in model.param_blocks() {
+            specs.push(f32_spec(
+                format!("{}/{}/w", self.name(), blk.li),
+                blk.w_shape.clone(),
+            ));
+            specs.push(f32_spec(
+                format!("{}/{}/b", self.name(), blk.li),
+                vec![blk.dout],
+            ));
+        }
+        specs
+    }
+}

@@ -1,0 +1,376 @@
+//! First-order extensions (paper Table 1 / Appendix A.1): quantities
+//! extracted from the per-sample output gradients `g [N, F]` that the
+//! engine propagates anyway (Eq. 3, [`Walk::Grad`]) — individual
+//! gradients, their L2 norms, the second moment, and the variance.
+//!
+//! Conventions (DESIGN.md §4; the loss is the batch **mean**):
+//!
+//! * [`BatchGrad`]: individual gradients `(1/N) ∇ℓ_n`, batch axis
+//!   kept — shapes `[N, …w]` / `[N, dout]`;
+//! * [`BatchL2`]: `‖(1/N) ∇ℓ_n‖²` per sample, one scalar per block;
+//! * [`SqMoment`]: `(1/N) Σ_n [∇ℓ_n]²`, parameter-shaped;
+//! * [`Variance`]: `(1/N) Σ_n [∇ℓ_n]² − [∇L]²`, derived **after** the
+//!   shard reduction from the merged moments (exactly — not a
+//!   per-shard approximation).
+//!
+//! For `Linear` layers the per-sample gradient is the rank-1 outer
+//! product `g_n x_nᵀ`, so `batch_l2`/`sq_moment` use the factored
+//! shortcuts (`‖g_n x_nᵀ‖² = ‖g_n‖²·‖x_n‖²`) without materializing
+//! individual gradients. Convolutions have no rank-1 shortcut
+//! (spatial positions sum into the per-sample gradient), so the conv
+//! rules share one materialized `G_n ⟦x⟧_nᵀ` product per sample via
+//! [`LayerCtx::per_sample_grads`].
+
+use crate::linalg::matmul_tn;
+use crate::runtime::{Tensor, TensorSpec};
+
+use super::{
+    f32_spec, Extension, FinishCtx, LayerCtx, LayerOp, Quantities,
+    Reduce, Walk,
+};
+use crate::backend::model::Model;
+
+/// Individual gradients `(1/N) ∇ℓ_n` with the batch axis kept
+/// (`batch_grad`, Table 1 row 1).
+pub struct BatchGrad;
+
+impl Extension for BatchGrad {
+    fn name(&self) -> &str {
+        "batch_grad"
+    }
+
+    fn walk(&self) -> Walk {
+        Walk::Grad
+    }
+
+    fn first_order(
+        &self,
+        ctx: &LayerCtx,
+        g: &[f32],
+        out: &mut Quantities,
+    ) {
+        let (li, n, nf) = (ctx.li, ctx.n, ctx.norm);
+        match ctx.op {
+            LayerOp::Linear { din, dout, .. } => {
+                // (1/N) ∇ℓ_n: rank-1 outer products per sample.
+                let inp = ctx.input;
+                let mut bw = vec![0.0f32; n * dout * din];
+                for s in 0..n {
+                    for o in 0..dout {
+                        let gv = g[s * dout + o] / nf;
+                        let row = (s * dout + o) * din;
+                        for i in 0..din {
+                            bw[row + i] = gv * inp[s * din + i];
+                        }
+                    }
+                }
+                out.insert(
+                    format!("batch_grad/{li}/w"),
+                    Tensor::from_f32(&[n, dout, din], bw),
+                );
+                let bb: Vec<f32> = g.iter().map(|v| v / nf).collect();
+                out.insert(
+                    format!("batch_grad/{li}/b"),
+                    Tensor::from_f32(&[n, dout], bb),
+                );
+            }
+            LayerOp::Conv { .. } => {
+                let ps = ctx.per_sample_grads(g);
+                let mut bshape = vec![n];
+                bshape.extend(ctx.op.w_shape());
+                out.insert(
+                    format!("batch_grad/{li}/w"),
+                    Tensor::from_f32(
+                        &bshape,
+                        ps.w.iter().map(|v| v / nf).collect(),
+                    ),
+                );
+                out.insert(
+                    format!("batch_grad/{li}/b"),
+                    Tensor::from_f32(
+                        &[n, ctx.op.dout()],
+                        ps.b.iter().map(|v| v / nf).collect(),
+                    ),
+                );
+            }
+        }
+    }
+
+    fn reduce(&self, key: &str) -> Option<Reduce> {
+        key.starts_with("batch_grad/").then_some(Reduce::Concat)
+    }
+
+    fn output_specs(&self, model: &Model, batch: usize) -> Vec<TensorSpec> {
+        let mut specs = Vec::new();
+        for blk in model.param_blocks() {
+            let mut bsh = vec![batch];
+            bsh.extend(&blk.w_shape);
+            specs.push(f32_spec(format!("batch_grad/{}/w", blk.li), bsh));
+            specs.push(f32_spec(
+                format!("batch_grad/{}/b", blk.li),
+                vec![batch, blk.dout],
+            ));
+        }
+        specs
+    }
+}
+
+/// Per-sample gradient L2 norms `‖(1/N) ∇ℓ_n‖²` (`batch_l2`,
+/// Appendix A.1): one scalar per sample per parameter block.
+pub struct BatchL2;
+
+impl Extension for BatchL2 {
+    fn name(&self) -> &str {
+        "batch_l2"
+    }
+
+    fn walk(&self) -> Walk {
+        Walk::Grad
+    }
+
+    fn first_order(
+        &self,
+        ctx: &LayerCtx,
+        g: &[f32],
+        out: &mut Quantities,
+    ) {
+        let (li, n, nf) = (ctx.li, ctx.n, ctx.norm);
+        let (mut l2w, mut l2b) = (vec![0.0f32; n], vec![0.0f32; n]);
+        match ctx.op {
+            LayerOp::Linear { din, dout, .. } => {
+                // The rank-1 structure gives ‖g_n x_nᵀ‖² =
+                // ‖g_n‖²·‖x_n‖² without materializing the individual
+                // gradients.
+                let inp = ctx.input;
+                for s in 0..n {
+                    let g2: f32 = g[s * dout..(s + 1) * dout]
+                        .iter()
+                        .map(|v| v * v)
+                        .sum();
+                    let x2: f32 = inp[s * din..(s + 1) * din]
+                        .iter()
+                        .map(|v| v * v)
+                        .sum();
+                    l2w[s] = g2 * x2 / (nf * nf);
+                    l2b[s] = g2 / (nf * nf);
+                }
+            }
+            LayerOp::Conv { .. } => {
+                let ps = ctx.per_sample_grads(g);
+                let (dout, j) = (ctx.op.dout(), ctx.op.a_dim());
+                for s in 0..n {
+                    let g2: f32 = ps.w[s * dout * j..(s + 1) * dout * j]
+                        .iter()
+                        .map(|v| v * v)
+                        .sum();
+                    let b2: f32 = ps.b[s * dout..(s + 1) * dout]
+                        .iter()
+                        .map(|v| v * v)
+                        .sum();
+                    l2w[s] = g2 / (nf * nf);
+                    l2b[s] = b2 / (nf * nf);
+                }
+            }
+        }
+        out.insert(
+            format!("batch_l2/{li}/w"),
+            Tensor::from_f32(&[n], l2w),
+        );
+        out.insert(
+            format!("batch_l2/{li}/b"),
+            Tensor::from_f32(&[n], l2b),
+        );
+    }
+
+    fn reduce(&self, key: &str) -> Option<Reduce> {
+        key.starts_with("batch_l2/").then_some(Reduce::Concat)
+    }
+
+    fn output_specs(&self, model: &Model, batch: usize) -> Vec<TensorSpec> {
+        let mut specs = Vec::new();
+        for blk in model.param_blocks() {
+            for part in ["w", "b"] {
+                specs.push(f32_spec(
+                    format!("batch_l2/{}/{part}", blk.li),
+                    vec![batch],
+                ));
+            }
+        }
+        specs
+    }
+}
+
+/// Emit `sq_moment/{li}/{w,b}` for one layer unless another
+/// first-order module already did (the moments are shared between
+/// [`SqMoment`] and [`Variance`], whichever hook runs first).
+fn sq_moment_at(ctx: &LayerCtx, g: &[f32], out: &mut Quantities) {
+    let (li, n, nf) = (ctx.li, ctx.n, ctx.norm);
+    if out.contains_key(&format!("sq_moment/{li}/w")) {
+        return;
+    }
+    match ctx.op {
+        LayerOp::Linear { din, dout, .. } => {
+            // (1/N) Σ_n [∇ℓ_n]² = (1/N) (g²)ᵀ (x²), again rank-1.
+            let g2: Vec<f32> = g.iter().map(|v| v * v).collect();
+            let x2: Vec<f32> =
+                ctx.input.iter().map(|v| v * v).collect();
+            let mut sqw = matmul_tn(&g2, &x2, n, dout, din);
+            for v in &mut sqw {
+                *v /= nf;
+            }
+            let mut sqb = vec![0.0f32; dout];
+            for s in 0..n {
+                for o in 0..dout {
+                    sqb[o] += g2[s * dout + o];
+                }
+            }
+            for v in &mut sqb {
+                *v /= nf;
+            }
+            out.insert(
+                format!("sq_moment/{li}/w"),
+                Tensor::from_f32(&[dout, din], sqw),
+            );
+            out.insert(
+                format!("sq_moment/{li}/b"),
+                Tensor::from_f32(&[dout], sqb),
+            );
+        }
+        LayerOp::Conv { .. } => {
+            let ps = ctx.per_sample_grads(g);
+            let (dout, j) = (ctx.op.dout(), ctx.op.a_dim());
+            let mut sqw = vec![0.0f32; dout * j];
+            let mut sqb = vec![0.0f32; dout];
+            for s in 0..n {
+                for (acc, v) in
+                    sqw.iter_mut().zip(&ps.w[s * dout * j..])
+                {
+                    *acc += v * v;
+                }
+                for (acc, v) in sqb.iter_mut().zip(&ps.b[s * dout..]) {
+                    *acc += v * v;
+                }
+            }
+            for v in sqw.iter_mut().chain(sqb.iter_mut()) {
+                *v /= nf;
+            }
+            out.insert(
+                format!("sq_moment/{li}/w"),
+                Tensor::from_f32(&ctx.op.w_shape(), sqw),
+            );
+            out.insert(
+                format!("sq_moment/{li}/b"),
+                Tensor::from_f32(&[dout], sqb),
+            );
+        }
+    }
+}
+
+/// Parameter-shaped `sq_moment/{li}/{w,b}` specs for every block.
+fn moment_specs(name: &str, model: &Model) -> Vec<TensorSpec> {
+    let mut specs = Vec::new();
+    for blk in model.param_blocks() {
+        specs.push(f32_spec(
+            format!("{name}/{}/w", blk.li),
+            blk.w_shape.clone(),
+        ));
+        specs.push(f32_spec(
+            format!("{name}/{}/b", blk.li),
+            vec![blk.dout],
+        ));
+    }
+    specs
+}
+
+/// Second moment of the individual gradients `(1/N) Σ_n [∇ℓ_n]²`
+/// (`sq_moment`, Table 1 row 2).
+pub struct SqMoment;
+
+impl Extension for SqMoment {
+    fn name(&self) -> &str {
+        "sq_moment"
+    }
+
+    fn walk(&self) -> Walk {
+        Walk::Grad
+    }
+
+    fn first_order(
+        &self,
+        ctx: &LayerCtx,
+        g: &[f32],
+        out: &mut Quantities,
+    ) {
+        sq_moment_at(ctx, g, out);
+    }
+
+    fn output_specs(&self, model: &Model, _batch: usize) -> Vec<TensorSpec> {
+        moment_specs("sq_moment", model)
+    }
+}
+
+/// Gradient variance `(1/N) Σ_n [∇ℓ_n]² − [∇L]²` (`variance`,
+/// Table 1 row 3).
+///
+/// The shard phase emits the second moments (`sq_moment_at`, shared
+/// with [`SqMoment`]); the variance itself is derived in
+/// [`Extension::finish`] from the **merged** `grad`/`sq_moment` —
+/// exactly, because both moments sum-reduce across shards. The
+/// intermediate moments are dropped unless `sq_moment` was also
+/// requested.
+pub struct Variance;
+
+impl Extension for Variance {
+    fn name(&self) -> &str {
+        "variance"
+    }
+
+    fn walk(&self) -> Walk {
+        Walk::Grad
+    }
+
+    fn first_order(
+        &self,
+        ctx: &LayerCtx,
+        g: &[f32],
+        out: &mut Quantities,
+    ) {
+        sq_moment_at(ctx, g, out);
+    }
+
+    fn finish(
+        &self,
+        ctx: &FinishCtx,
+        out: &mut Quantities,
+    ) -> anyhow::Result<()> {
+        for blk in ctx.model.param_blocks() {
+            let li = blk.li;
+            for part in ["w", "b"] {
+                let gname = format!("grad/{li}/{part}");
+                let sname = format!("sq_moment/{li}/{part}");
+                let (shape, var) = {
+                    let g = out[&gname].f32s()?;
+                    let sq = out[&sname].f32s()?;
+                    let var: Vec<f32> = sq
+                        .iter()
+                        .zip(g)
+                        .map(|(s2, g1)| s2 - g1 * g1)
+                        .collect();
+                    (out[&sname].shape.clone(), var)
+                };
+                out.insert(
+                    format!("variance/{li}/{part}"),
+                    Tensor::from_f32(&shape, var),
+                );
+                if !ctx.requested("sq_moment") {
+                    out.remove(&sname);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn output_specs(&self, model: &Model, _batch: usize) -> Vec<TensorSpec> {
+        moment_specs("variance", model)
+    }
+}

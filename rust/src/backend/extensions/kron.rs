@@ -1,0 +1,305 @@
+//! Kronecker-factored curvature extensions (paper Eqs. 23–24):
+//! `kfac`, `kflr`, and `kfra`.
+//!
+//! Convention (DESIGN.md §4): each parameter block's GGN is
+//! approximated as `G^(i) ≈ A^(i) ⊗ B^(i)` with the `1/N` **inside**
+//! the factors, and bias blocks carry their full GGN (`bias_ggn`,
+//! paper footnotes 7/8):
+//!
+//! * `A = (1/N) Σ_n x_n x_nᵀ` for `Linear`; the unfolded-input factor
+//!   `(1/N) Σ_n ⟦x⟧_n ⟦x⟧_nᵀ` (positions folded into the contraction)
+//!   for `Conv2d` — the Grosse & Martens (2016) KFC convention
+//!   (DESIGN.md §6);
+//! * `B = (1/N) Σ_n S_n S_nᵀ` from the propagated square root — exact
+//!   (`kflr`, [`Walk::SqrtGgn`]) or Monte-Carlo (`kfac`,
+//!   [`Walk::SqrtGgnMc`]); conv `B` is additionally
+//!   position-averaged (`1/(N·P)`), reducing exactly to the `Linear`
+//!   factor at `P = 1`;
+//! * `kfra` instead propagates the **batch-averaged** curvature `Ḡ`
+//!   (Eq. 24). The recursion is nonlinear in the batch averages, so
+//!   the shard phase ([`Extension::batch_averages`]) emits the
+//!   averages it consumes — `A` per `Linear`, activation second
+//!   moments `(1/N) Σ_n m_n m_nᵀ` (`m = σ'(x)`) under internal
+//!   `__kfra/…` keys, and the output-Hessian mean — and the recursion
+//!   runs once on the merged values in [`Extension::finish`]. KFRA is
+//!   fully-connected-only (paper footnote 5): weight sharing makes
+//!   the conv `Ḡ` both enormous and structurally wrong to average.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{matmul_nt, matmul_par, matmul_tn, matmul_tn_par};
+use crate::runtime::{Tensor, TensorSpec};
+
+use super::{
+    f32_spec, Extension, FinishCtx, LayerCtx, LayerOp, Quantities,
+    ShardCtx, Walk,
+};
+use crate::backend::conv::conv2d;
+use crate::backend::loss::CrossEntropy;
+use crate::backend::model::Model;
+
+/// `A`/`B`/`bias_ggn` factor extraction shared by [`Kfac`] and
+/// [`Kflr`] (they differ only in which square root is propagated).
+fn kron_factors_at(
+    name: &str,
+    ctx: &LayerCtx,
+    s: &[f32],
+    cols: usize,
+    out: &mut Quantities,
+) {
+    let (li, n, nf) = (ctx.li, ctx.n, ctx.norm);
+    match ctx.op {
+        LayerOp::Conv { geom, .. } => {
+            let (a, b, bias) =
+                conv2d::kron_factors(geom, ctx.input, s, n, cols, nf);
+            let (j, co) = (geom.patch_len(), geom.out_shape.c);
+            out.insert(
+                format!("{name}/{li}/A"),
+                Tensor::from_f32(&[j, j], a),
+            );
+            out.insert(
+                format!("{name}/{li}/bias_ggn"),
+                Tensor::from_f32(&[co, co], bias),
+            );
+            out.insert(
+                format!("{name}/{li}/B"),
+                Tensor::from_f32(&[co, co], b),
+            );
+        }
+        LayerOp::Linear { din, dout, .. } => {
+            let inp = ctx.input;
+            let mut a = matmul_tn(inp, inp, n, din, din);
+            for v in &mut a {
+                *v /= nf;
+            }
+            let mut b = vec![0.0f32; dout * dout];
+            for smp in 0..n {
+                let blk =
+                    &s[smp * dout * cols..(smp + 1) * dout * cols];
+                let bb = matmul_nt(blk, blk, dout, cols, dout);
+                for (acc, v) in b.iter_mut().zip(&bb) {
+                    *acc += v;
+                }
+            }
+            for v in &mut b {
+                *v /= nf;
+            }
+            out.insert(
+                format!("{name}/{li}/A"),
+                Tensor::from_f32(&[din, din], a),
+            );
+            out.insert(
+                format!("{name}/{li}/bias_ggn"),
+                Tensor::from_f32(&[dout, dout], b.clone()),
+            );
+            out.insert(
+                format!("{name}/{li}/B"),
+                Tensor::from_f32(&[dout, dout], b),
+            );
+        }
+    }
+}
+
+/// `A`/`B`/`bias_ggn` spec triple per parameter block.
+fn kron_specs(name: &str, model: &Model) -> Vec<TensorSpec> {
+    let mut specs = Vec::new();
+    for blk in model.param_blocks() {
+        specs.push(f32_spec(
+            format!("{name}/{}/A", blk.li),
+            vec![blk.a_dim, blk.a_dim],
+        ));
+        specs.push(f32_spec(
+            format!("{name}/{}/B", blk.li),
+            vec![blk.dout, blk.dout],
+        ));
+        specs.push(f32_spec(
+            format!("{name}/{}/bias_ggn", blk.li),
+            vec![blk.dout, blk.dout],
+        ));
+    }
+    specs
+}
+
+/// KFAC (Eq. 23 with the Monte-Carlo square root): `A ⊗ B` with a
+/// rank-`M` sampled `B`.
+pub struct Kfac;
+
+impl Extension for Kfac {
+    fn name(&self) -> &str {
+        "kfac"
+    }
+
+    fn walk(&self) -> Walk {
+        Walk::SqrtGgnMc
+    }
+
+    fn sqrt_ggn(
+        &self,
+        ctx: &LayerCtx,
+        s: &[f32],
+        cols: usize,
+        out: &mut Quantities,
+    ) {
+        kron_factors_at("kfac", ctx, s, cols, out);
+    }
+
+    fn output_specs(&self, model: &Model, _batch: usize) -> Vec<TensorSpec> {
+        kron_specs("kfac", model)
+    }
+}
+
+/// KFLR (Eq. 23 with the exact square root): `A ⊗ B` with the
+/// full-rank `B = (1/N) Σ S Sᵀ`.
+pub struct Kflr;
+
+impl Extension for Kflr {
+    fn name(&self) -> &str {
+        "kflr"
+    }
+
+    fn walk(&self) -> Walk {
+        Walk::SqrtGgn
+    }
+
+    fn sqrt_ggn(
+        &self,
+        ctx: &LayerCtx,
+        s: &[f32],
+        cols: usize,
+        out: &mut Quantities,
+    ) {
+        kron_factors_at("kflr", ctx, s, cols, out);
+    }
+
+    fn output_specs(&self, model: &Model, _batch: usize) -> Vec<TensorSpec> {
+        kron_specs("kflr", model)
+    }
+}
+
+/// KFRA (Eq. 24): `A ⊗ B` with `B` from the batch-averaged curvature
+/// recursion. Fully-connected models only (paper footnote 5).
+pub struct Kfra;
+
+impl Extension for Kfra {
+    fn name(&self) -> &str {
+        "kfra"
+    }
+
+    fn walk(&self) -> Walk {
+        Walk::Shard
+    }
+
+    fn fully_connected_only(&self) -> bool {
+        true
+    }
+
+    /// Shard phase: emit the batch averages the `Ḡ` recursion
+    /// consumes, each normalized by the **global** batch size so
+    /// shards sum-reduce exactly. Internal quantities go under
+    /// `__kfra/…` keys, consumed (and removed) by the
+    /// [`Extension::finish`] pass below.
+    fn batch_averages(&self, ctx: &ShardCtx, out: &mut Quantities) {
+        let ce = CrossEntropy;
+        let (n, norm) = (ctx.n, ctx.norm);
+        let c = ctx.model.classes;
+        let logits = ctx.acts.last().expect("non-empty");
+        // hessian_mean averages over the shard; reweigh to n/norm so
+        // the full-range (serial) call scales by exactly 1.0.
+        let mut h = ce.hessian_mean(logits, n, c);
+        let w = n as f32 / norm;
+        for v in &mut h {
+            *v *= w;
+        }
+        out.insert(
+            "__kfra/h".to_string(),
+            Tensor::from_f32(&[c, c], h),
+        );
+        for (li, layer) in ctx.model.layers.iter().enumerate() {
+            if let Some(op) = ctx.ops[li].as_ref() {
+                let din = op.a_dim();
+                let mut a = matmul_tn(
+                    &ctx.acts[li], &ctx.acts[li], n, din, din,
+                );
+                for v in &mut a {
+                    *v /= norm;
+                }
+                out.insert(
+                    format!("kfra/{li}/A"),
+                    Tensor::from_f32(&[din, din], a),
+                );
+            } else if li > 0 {
+                let f = ctx.dims[li];
+                let m = layer.d_act(&ctx.acts[li]); // [n, f]
+                let mut mm = matmul_tn(&m, &m, n, f, f);
+                for v in &mut mm {
+                    *v /= norm;
+                }
+                out.insert(
+                    format!("__kfra/mm/{li}"),
+                    Tensor::from_f32(&[f, f], mm),
+                );
+            }
+        }
+    }
+
+    /// Merge phase: propagate `Ḡ` (Eq. 24) through the layers on the
+    /// merged batch averages — `Linear` maps `Ḡ → Wᵀ Ḡ W`
+    /// (row-parallel matmuls), activations `Ḡ → Ḡ ∘ (1/N Σ m mᵀ)` —
+    /// extracting `B`/`bias_ggn` at every `Linear`.
+    fn finish(&self, ctx: &FinishCtx, out: &mut Quantities) -> Result<()> {
+        let Some(h) = out.remove("__kfra/h") else {
+            bail!("kfra reduction is missing the output-Hessian mean")
+        };
+        let mut gbar = h.f32s()?.to_vec();
+        for li in (0..ctx.model.layers.len()).rev() {
+            if let Some(op) = ctx.ops[li].as_ref() {
+                let dout = op.dout();
+                out.insert(
+                    format!("kfra/{li}/B"),
+                    Tensor::from_f32(&[dout, dout], gbar.clone()),
+                );
+                out.insert(
+                    format!("kfra/{li}/bias_ggn"),
+                    Tensor::from_f32(&[dout, dout], gbar.clone()),
+                );
+            }
+            if li > 0 {
+                gbar = match ctx.ops[li].as_ref() {
+                    Some(LayerOp::Linear { din, dout, w, .. }) => {
+                        let (din, dout) = (*din, *dout);
+                        // Wᵀ Ḡ W: [din, dout] x [dout, dout] x
+                        // [dout, din]
+                        let wt_g = matmul_tn_par(
+                            w, &gbar, dout, din, dout, ctx.threads,
+                        );
+                        matmul_par(
+                            &wt_g, w, din, dout, din, ctx.threads,
+                        )
+                    }
+                    Some(LayerOp::Conv { .. }) => {
+                        bail!(
+                            "kfra is restricted to fully-connected \
+                             models (paper footnote 5)"
+                        )
+                    }
+                    None => {
+                        let f = ctx.dims[li];
+                        let mm = out
+                            .remove(&format!("__kfra/mm/{li}"))
+                            .expect("kfra activation moment partial");
+                        debug_assert_eq!(mm.shape, vec![f, f]);
+                        gbar.iter()
+                            .zip(mm.f32s()?)
+                            .map(|(gv, mv)| gv * mv)
+                            .collect()
+                    }
+                };
+            }
+        }
+        Ok(())
+    }
+
+    fn output_specs(&self, model: &Model, _batch: usize) -> Vec<TensorSpec> {
+        kron_specs("kfra", model)
+    }
+}

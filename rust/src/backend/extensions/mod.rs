@@ -1,0 +1,754 @@
+//! The extension engine: BackPACK quantities as pluggable modules.
+//!
+//! The paper's core architectural claim (§3) is that every extra
+//! quantity — individual gradients, their statistics, curvature
+//! proxies — is a *module* hooked into backpropagation, so a new
+//! quantity never requires engine surgery. This module is the Rust
+//! realization of that claim: the generalized backward pass in
+//! [`Model`] walks the network **once per propagated quantity** and
+//! dispatches, at every parameterized layer, to the [`Extension`]
+//! implementations registered in an [`ExtensionSet`].
+//!
+//! An extension declares
+//!
+//! * which backward [`Walk`] feeds it (the per-sample output
+//!   gradients `g [N, F]` of Eq. 3, the exact or Monte-Carlo
+//!   square-root GGN `S [N, F, C]` of Eqs. 18/20, or KFRA's
+//!   whole-shard batch averages of Eq. 24);
+//! * a per-layer hook ([`Extension::first_order`] /
+//!   [`Extension::sqrt_ggn`]) receiving a [`LayerCtx`] — the layer's
+//!   operator view, its saved forward input, and the shard/global
+//!   batch sizes — plus the incoming walk quantity;
+//! * a shard-reduction rule ([`Extension::reduce`]) telling the
+//!   batch-parallel engine (DESIGN.md §9) how its output keys merge
+//!   across shards: [`Reduce::Sum`] for averaged quantities,
+//!   [`Reduce::Concat`] for per-sample ones;
+//! * an optional post-merge [`Extension::finish`] hook for quantities
+//!   that are nonlinear in the merged averages (variance, KFRA's `Ḡ`
+//!   recursion).
+//!
+//! # Quantity conventions (DESIGN.md §4)
+//!
+//! The loss is the **mean** over the batch (Eq. 1), and every
+//! built-in follows Table 1's scalings:
+//!
+//! | quantity ([`Extension::name`]) | module | convention |
+//! |---|---|---|
+//! | `batch_grad` | [`first_order`] | individual gradients `(1/N)∇ℓ_n` |
+//! | `batch_l2`   | [`first_order`] | `‖(1/N)∇ℓ_n‖²` per sample |
+//! | `sq_moment`  | [`first_order`] | `(1/N)Σ_n [∇ℓ_n]²` |
+//! | `variance`   | [`first_order`] | `(1/N)Σ_n [∇ℓ_n]² − [∇L]²` |
+//! | `diag_ggn`   | [`diag_ggn`]    | `diag(G)`, `G = (1/N)Σ JᵀHJ` (Eq. 19) |
+//! | `diag_ggn_mc`| [`diag_ggn`]    | Monte-Carlo `diag(G)` (Eq. 20) |
+//! | `kfac`       | [`kron`]        | `G ≈ A ⊗ B`, MC-sampled `B` (Eq. 23) |
+//! | `kflr`       | [`kron`]        | `G ≈ A ⊗ B`, exact full-rank `B` |
+//! | `kfra`       | [`kron`]        | batch-averaged `Ḡ` recursion (Eq. 24) |
+//!
+//! Kronecker blocks keep the `1/N` inside the factors and bias blocks
+//! carry their full GGN (paper footnotes 7/8); `kfra` is restricted
+//! to fully-connected models (footnote 5, enforced by
+//! [`Extension::fully_connected_only`]).
+//!
+//! # Registering a user-defined extension
+//!
+//! New quantities drop in without touching the engine. A per-sample
+//! bias-gradient L2 norm, end to end:
+//!
+//! ```
+//! use backpack_rs::backend::extensions::{
+//!     Extension, ExtensionSet, LayerCtx, Quantities, Reduce, Walk,
+//! };
+//! use backpack_rs::backend::model::Model;
+//! use backpack_rs::runtime::Tensor;
+//!
+//! /// `‖(1/N) ∇_b ℓ_n‖²` per sample — a quantity the engine has
+//! /// never heard of.
+//! struct BiasL2;
+//!
+//! impl Extension for BiasL2 {
+//!     fn name(&self) -> &str {
+//!         "bias_l2"
+//!     }
+//!
+//!     fn walk(&self) -> Walk {
+//!         Walk::Grad
+//!     }
+//!
+//!     fn first_order(
+//!         &self,
+//!         ctx: &LayerCtx,
+//!         g: &[f32],
+//!         out: &mut Quantities,
+//!     ) {
+//!         let dout = ctx.op.dout();
+//!         let ps = ctx.per_sample_grads(g);
+//!         let l2: Vec<f32> = (0..ctx.n)
+//!             .map(|s| {
+//!                 ps.b[s * dout..(s + 1) * dout]
+//!                     .iter()
+//!                     .map(|v| (v / ctx.norm) * (v / ctx.norm))
+//!                     .sum()
+//!             })
+//!             .collect();
+//!         out.insert(
+//!             format!("bias_l2/{}/b", ctx.li),
+//!             Tensor::from_f32(&[ctx.n], l2),
+//!         );
+//!     }
+//!
+//!     /// Per-sample outputs concatenate across batch shards.
+//!     fn reduce(&self, key: &str) -> Option<Reduce> {
+//!         key.starts_with("bias_l2/").then_some(Reduce::Concat)
+//!     }
+//! }
+//!
+//! let mut set = ExtensionSet::builtin();
+//! set.register(BiasL2);
+//!
+//! let m = Model::logreg();
+//! let params: Vec<Tensor> = m
+//!     .param_specs()
+//!     .iter()
+//!     .map(|t| Tensor::zeros(&t.shape))
+//!     .collect();
+//! let x = Tensor::from_f32(&[4, 784], vec![0.1; 4 * 784]);
+//! let y = Tensor::from_i32(&[4], vec![0, 1, 2, 3]);
+//! let out = m
+//!     .extended_backward_with(
+//!         &set,
+//!         &params,
+//!         &x,
+//!         &y,
+//!         &["bias_l2".to_string()],
+//!         None,
+//!         2, // sharded over 2 threads: Reduce::Concat applies
+//!     )
+//!     .unwrap();
+//! assert_eq!(out["bias_l2/0/b"].shape, vec![4]);
+//! ```
+//!
+//! The same object can be served through the full backend path with
+//! [`crate::backend::native::NativeBackend::register_extension`],
+//! which makes `{model}_bias_l2_n{batch}` a resolvable artifact name.
+
+use std::cell::{Ref, RefCell};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::conv::{conv2d, ConvGeom};
+use super::model::Model;
+use crate::runtime::{Tensor, TensorSpec};
+
+pub mod diag_ggn;
+pub mod first_order;
+pub mod kron;
+
+pub use diag_ggn::DiagGgn;
+pub use first_order::{BatchGrad, BatchL2, SqMoment, Variance};
+pub use kron::{Kfac, Kflr, Kfra};
+
+/// Named output map of one engine call: `loss`, `grad/*`, and every
+/// requested `{extension}/{layer}/{part}` quantity.
+pub type Quantities = BTreeMap<String, Tensor>;
+
+/// Extension names built into [`ExtensionSet::builtin`] — the paper's
+/// nine quantities, in registry (hook-dispatch) order. `diag_h` stays
+/// PJRT-only: its signed residual-factor propagation is the one
+/// quantity the native engine has no closed-form walk for.
+pub const BUILTIN_NAMES: &[&str] = &[
+    "batch_grad", "batch_l2", "sq_moment", "variance",
+    "diag_ggn", "diag_ggn_mc", "kfac", "kflr", "kfra",
+];
+
+/// Which propagated backward quantity feeds an extension's layer
+/// hook. The engine runs one walk per variant that has at least one
+/// active user, so e.g. `diag_ggn` and `kflr` share a single exact-`S`
+/// propagation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Walk {
+    /// Per-sample output gradients `g [N, F]` (Eq. 3); always
+    /// propagated — the engine extracts `grad/*` from it.
+    Grad,
+    /// Exact square-root GGN `S [N, F, C]` (Eq. 18, `C` = classes).
+    SqrtGgn,
+    /// Monte-Carlo square-root GGN `S [N, F, M]` (Eq. 20, `M` =
+    /// [`crate::backend::model::MC_SAMPLES`]); draws are keyed by each
+    /// sample's global batch index, so results are shard-layout
+    /// invariant.
+    SqrtGgnMc,
+    /// No propagated quantity: the extension consumes whole-shard
+    /// batch averages through [`Extension::batch_averages`] (KFRA).
+    Shard,
+}
+
+/// How one output key merges across batch shards (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduce {
+    /// Elementwise sum — correct for every quantity already
+    /// normalized by the global batch size.
+    Sum,
+    /// Concatenate along the leading (batch) axis, in shard (= sample)
+    /// order — for per-sample quantities.
+    Concat,
+}
+
+/// Operator view of one parameterized layer, bound from the input
+/// parameter tensors for the duration of one engine call.
+#[derive(Clone, Copy)]
+pub enum LayerOp<'a> {
+    /// `z = x Wᵀ + b` with `w [dout, din]` row-major, `b [dout]`.
+    Linear {
+        /// Input feature count.
+        din: usize,
+        /// Output feature count.
+        dout: usize,
+        /// Weight matrix, `[dout, din]` row-major.
+        w: &'a [f32],
+        /// Bias vector, `[dout]`.
+        b: &'a [f32],
+    },
+    /// im2col-lowered convolution (DESIGN.md §6): `w` is the
+    /// `[c_out, J]` matrix view of the `[c_out, c_in, k, k]` parameter
+    /// tensor (`J = c_in·k²`).
+    Conv {
+        /// Resolved spatial geometry of the convolution.
+        geom: &'a ConvGeom,
+        /// Weight matrix view, `[c_out, J]` row-major.
+        w: &'a [f32],
+        /// Bias vector, `[c_out]`.
+        b: &'a [f32],
+    },
+}
+
+impl<'a> LayerOp<'a> {
+    /// The weight matrix view (`[dout, a_dim]` row-major).
+    pub fn w(&self) -> &'a [f32] {
+        match *self {
+            LayerOp::Linear { w, .. } | LayerOp::Conv { w, .. } => w,
+        }
+    }
+
+    /// The bias vector (`[dout]`).
+    pub fn b(&self) -> &'a [f32] {
+        match *self {
+            LayerOp::Linear { b, .. } | LayerOp::Conv { b, .. } => b,
+        }
+    }
+
+    /// Kronecker `A`-side dimension: `din` for `Linear`, the im2col
+    /// patch length `J = c_in·k²` for `Conv2d`.
+    pub fn a_dim(&self) -> usize {
+        match self {
+            LayerOp::Linear { din, .. } => *din,
+            LayerOp::Conv { geom, .. } => geom.patch_len(),
+        }
+    }
+
+    /// Kronecker `B`-side dimension: output features for `Linear`,
+    /// output channels for `Conv2d`.
+    pub fn dout(&self) -> usize {
+        match self {
+            LayerOp::Linear { dout, .. } => *dout,
+            LayerOp::Conv { geom, .. } => geom.out_shape.c,
+        }
+    }
+
+    /// Parameter-tensor shape of the weight: `[dout, din]` for
+    /// `Linear`, `[c_out, c_in, k, k]` for `Conv2d`.
+    pub fn w_shape(&self) -> Vec<usize> {
+        match self {
+            LayerOp::Linear { din, dout, .. } => vec![*dout, *din],
+            LayerOp::Conv { geom, .. } => geom.w_shape(),
+        }
+    }
+}
+
+/// Unnormalized per-sample parameter gradients of one layer — the
+/// shared intermediate of the first-order extraction rules, computed
+/// at most once per layer via [`LayerCtx::per_sample_grads`].
+pub struct PerSampleGrads {
+    /// `[n, dout, a_dim]` row-major: sample `s`'s weight gradient
+    /// `g_s x_sᵀ` (`Linear`) or `G_s ⟦x⟧_sᵀ` (`Conv2d`), **not** yet
+    /// divided by the global batch size.
+    pub w: Vec<f32>,
+    /// `[n, dout]`: per-sample bias gradients (position-summed for
+    /// `Conv2d`), unnormalized.
+    pub b: Vec<f32>,
+}
+
+/// Everything an [`Extension`] layer hook sees at one parameterized
+/// layer of one batch shard.
+pub struct LayerCtx<'a> {
+    /// Index of the layer in [`Model::layers`].
+    pub li: usize,
+    /// The layer's bound operator (weights, bias, geometry).
+    pub op: LayerOp<'a>,
+    /// Saved forward input of this layer, `[n * in_features]`
+    /// row-major (paper Fig. 2: the module input stored by the
+    /// forward pass).
+    pub input: &'a [f32],
+    /// Sample count of this shard.
+    pub n: usize,
+    /// The **global** batch size, as `f32` — averaged quantities
+    /// divide by this so shard outputs sum-reduce exactly
+    /// (DESIGN.md §9).
+    pub norm: f32,
+    psg: RefCell<Option<PerSampleGrads>>,
+}
+
+impl<'a> LayerCtx<'a> {
+    /// Context for one layer of one shard (engine-internal; public so
+    /// tests and doctests can drive hooks directly).
+    pub fn new(
+        li: usize,
+        op: LayerOp<'a>,
+        input: &'a [f32],
+        n: usize,
+        norm: f32,
+    ) -> LayerCtx<'a> {
+        LayerCtx { li, op, input, n, norm, psg: RefCell::new(None) }
+    }
+
+    /// Unnormalized per-sample parameter gradients for the incoming
+    /// output gradients `g [n, dout_features]`, materialized lazily
+    /// and cached for the layer — so the engine's `grad` reduction
+    /// and every first-order extension share one `G_n ⟦x⟧_nᵀ` product
+    /// per sample instead of each recomputing it.
+    ///
+    /// **Contract:** `g` must be the walk's propagated output
+    /// gradient for this layer — the exact slice the
+    /// [`Extension::first_order`] hook received. The first call fills
+    /// the cache; repeated calls (even with a previous [`Ref`] still
+    /// alive) return the cached value *without* re-reading `g`, so
+    /// passing a transformed gradient here returns stale data. An
+    /// extension that backpropagates its own modified quantity must
+    /// compute from `ctx.input` directly instead.
+    ///
+    /// The cache trades `O(n·dout·a_dim)` shard-local memory
+    /// for that sharing; an extension that only needs a streaming
+    /// fold over samples is free to compute from `ctx.input` and `g`
+    /// directly instead.
+    pub fn per_sample_grads(&self, g: &[f32]) -> Ref<'_, PerSampleGrads> {
+        if self.psg.borrow().is_none() {
+            let mut slot = self.psg.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(match self.op {
+                    LayerOp::Linear { din, dout, .. } => {
+                        let mut w = vec![0.0f32; self.n * dout * din];
+                        for s in 0..self.n {
+                            for o in 0..dout {
+                                let gv = g[s * dout + o];
+                                let row = (s * dout + o) * din;
+                                for i in 0..din {
+                                    w[row + i] =
+                                        gv * self.input[s * din + i];
+                                }
+                            }
+                        }
+                        PerSampleGrads { w, b: g.to_vec() }
+                    }
+                    LayerOp::Conv { geom, .. } => {
+                        let (w, b) = conv2d::per_sample_grads(
+                            geom, self.input, g, self.n,
+                        );
+                        PerSampleGrads { w, b }
+                    }
+                });
+            }
+        }
+        Ref::map(self.psg.borrow(), |o| {
+            o.as_ref().expect("filled above")
+        })
+    }
+}
+
+/// Whole-shard view for [`Walk::Shard`] extensions (KFRA): the model,
+/// every bound layer operator, and all stored forward activations.
+pub struct ShardCtx<'a> {
+    /// The model being differentiated.
+    pub model: &'a Model,
+    /// Bound operator per layer (`None` for parameter-free layers),
+    /// aligned with [`Model::layers`].
+    pub ops: &'a [Option<LayerOp<'a>>],
+    /// Stored forward activations, `acts[li]` = input of layer `li`,
+    /// `acts.last()` = logits (`len = layers.len() + 1`).
+    pub acts: &'a [Vec<f32>],
+    /// Flat feature dimension before each layer (`dims[li]`).
+    pub dims: &'a [usize],
+    /// Sample count of this shard.
+    pub n: usize,
+    /// Global batch size normalizer (see [`LayerCtx::norm`]).
+    pub norm: f32,
+}
+
+/// Post-merge view for [`Extension::finish`]: runs once, after the
+/// shard outputs were reduced, with the layer operators still bound.
+pub struct FinishCtx<'a> {
+    /// The model being differentiated.
+    pub model: &'a Model,
+    /// Bound operator per layer, aligned with [`Model::layers`].
+    pub ops: &'a [Option<LayerOp<'a>>],
+    /// Flat feature dimension before each layer.
+    pub dims: &'a [usize],
+    /// Worker count of the engine call (for parallel post-merge
+    /// linear algebra, e.g. KFRA's `Wᵀ Ḡ W`).
+    pub threads: usize,
+    /// The extension names requested for this engine call.
+    pub extensions: &'a [String],
+}
+
+impl FinishCtx<'_> {
+    /// True when `name` was explicitly requested — lets an extension
+    /// drop intermediates another quantity only computed on its
+    /// behalf (variance drops `sq_moment/*` unless also requested).
+    pub fn requested(&self, name: &str) -> bool {
+        self.extensions.iter().any(|e| e == name)
+    }
+}
+
+/// One BackPACK quantity as a backprop module (paper §3).
+///
+/// Implementations declare which [`Walk`] feeds them, extract their
+/// quantity in a per-layer hook, and describe how their outputs merge
+/// across batch shards. All hooks default to no-ops so an extension
+/// only implements the walk it consumes. See the
+/// [module docs](crate::backend::extensions) for a complete
+/// user-defined example.
+pub trait Extension: Send + Sync {
+    /// Manifest name: output keys are `{name}/{layer}/{part}` and the
+    /// artifact signature joins names with `+`.
+    fn name(&self) -> &str;
+
+    /// Which propagated backward quantity feeds this extension.
+    fn walk(&self) -> Walk;
+
+    /// True when the extension is only defined for fully-connected
+    /// models (paper footnote 5: KFRA).
+    fn fully_connected_only(&self) -> bool {
+        false
+    }
+
+    /// True when the extension consumes Monte-Carlo draws and thus
+    /// needs a PRNG key input.
+    fn needs_key(&self) -> bool {
+        self.walk() == Walk::SqrtGgnMc
+    }
+
+    /// Layer hook for [`Walk::Grad`] extensions: `g [n, dout_feat]`
+    /// are the (unnormalized) per-sample gradients of the loss w.r.t.
+    /// this layer's output.
+    fn first_order(
+        &self,
+        ctx: &LayerCtx,
+        g: &[f32],
+        out: &mut Quantities,
+    ) {
+        let _ = (ctx, g, out);
+    }
+
+    /// Layer hook for [`Walk::SqrtGgn`] / [`Walk::SqrtGgnMc`]
+    /// extensions: `s [n, dout_feat, cols]` is the propagated
+    /// square-root GGN at this layer's output.
+    fn sqrt_ggn(
+        &self,
+        ctx: &LayerCtx,
+        s: &[f32],
+        cols: usize,
+        out: &mut Quantities,
+    ) {
+        let _ = (ctx, s, cols, out);
+    }
+
+    /// Whole-shard hook for [`Walk::Shard`] extensions, called once
+    /// per shard after the forward pass (KFRA emits the batch
+    /// averages its post-merge recursion consumes).
+    fn batch_averages(&self, ctx: &ShardCtx, out: &mut Quantities) {
+        let _ = (ctx, out);
+    }
+
+    /// Shard-reduction rule for one output key this extension emitted
+    /// (the PR-2 parallel semantics, DESIGN.md §9). Return `None` for
+    /// keys this extension does not own; unclaimed keys sum-reduce.
+    /// The default claims `{name}/…` as [`Reduce::Sum`].
+    fn reduce(&self, key: &str) -> Option<Reduce> {
+        key.strip_prefix(self.name())
+            .is_some_and(|rest| rest.starts_with('/'))
+            .then_some(Reduce::Sum)
+    }
+
+    /// Post-merge hook, run once after the shard reduction with the
+    /// layer operators still bound — for quantities that are
+    /// nonlinear in the merged averages.
+    fn finish(&self, ctx: &FinishCtx, out: &mut Quantities) -> Result<()> {
+        let _ = (ctx, out);
+        Ok(())
+    }
+
+    /// Output tensor specs for artifact synthesis
+    /// (`NativeBackend::spec`). Only consulted when the extension is
+    /// served through a [`crate::backend::Backend`]; extensions driven
+    /// directly through [`Model::extended_backward_with`] may keep the
+    /// default (empty).
+    fn output_specs(&self, model: &Model, batch: usize) -> Vec<TensorSpec> {
+        let _ = (model, batch);
+        Vec::new()
+    }
+}
+
+/// An `f32` output spec with no init rule (the shape declarations
+/// extensions hand to artifact synthesis).
+pub(crate) fn f32_spec(name: String, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec { name, shape, dtype: "f32".to_string(), init: None }
+}
+
+/// A registry of [`Extension`] modules, dispatched through by the
+/// engine ([`Model::extended_backward_with`]) and by artifact
+/// synthesis ([`crate::backend::native::NativeBackend`]).
+///
+/// Cloning is cheap (the modules are shared), so a backend and every
+/// computation it loads can hold the same registry.
+#[derive(Clone, Default)]
+pub struct ExtensionSet {
+    exts: Vec<Arc<dyn Extension>>,
+}
+
+impl ExtensionSet {
+    /// An empty registry (engine runs extract `loss` + `grad/*` only).
+    pub fn empty() -> ExtensionSet {
+        ExtensionSet { exts: Vec::new() }
+    }
+
+    /// The paper's nine quantities ([`BUILTIN_NAMES`], in that order).
+    pub fn builtin() -> ExtensionSet {
+        let mut set = ExtensionSet::empty();
+        set.register(BatchGrad);
+        set.register(BatchL2);
+        set.register(SqMoment);
+        set.register(Variance);
+        set.register(DiagGgn::exact());
+        set.register(DiagGgn::mc());
+        set.register(Kfac);
+        set.register(Kflr);
+        set.register(Kfra);
+        set
+    }
+
+    /// Register an extension. A module with the same
+    /// [`Extension::name`] is replaced in place, so built-ins can be
+    /// overridden; new names append in registration order (which is
+    /// also hook-dispatch order).
+    ///
+    /// # Panics
+    ///
+    /// Panics on names the output-key and artifact-name grammars
+    /// cannot represent: empty, containing `+` (the signature
+    /// separator), `/` (the output-key separator) or whitespace, the
+    /// reserved words `grad` / `eval`, or a trailing `_n<digits>`
+    /// (the batch suffix `split_batch` would strip).
+    pub fn register(&mut self, ext: impl Extension + 'static) {
+        let ext: Arc<dyn Extension> = Arc::new(ext);
+        let name = ext.name();
+        assert!(
+            !name.is_empty()
+                && !name.contains('+')
+                && !name.contains('/')
+                && !name.contains(char::is_whitespace)
+                && name != "grad"
+                && name != "eval",
+            "extension name {name:?} is not a valid signature part \
+             (empty, reserved, or contains '+'/'/'/' ')"
+        );
+        if let Some(pos) = name.rfind("_n") {
+            let digits = &name[pos + 2..];
+            assert!(
+                digits.is_empty()
+                    || !digits.bytes().all(|b| b.is_ascii_digit()),
+                "extension name {name:?} ends in a _n<digits> batch \
+                 suffix, which artifact-name parsing would strip"
+            );
+        }
+        if let Some(slot) =
+            self.exts.iter_mut().find(|e| e.name() == ext.name())
+        {
+            *slot = ext;
+        } else {
+            self.exts.push(ext);
+        }
+    }
+
+    /// Registered extension names, in dispatch order.
+    pub fn names(&self) -> Vec<&str> {
+        self.exts.iter().map(|e| e.name()).collect()
+    }
+
+    /// True when an extension with this name is registered.
+    pub fn contains(&self, name: &str) -> bool {
+        self.exts.iter().any(|e| e.name() == name)
+    }
+
+    /// Look up one registered extension by name.
+    pub fn get(&self, name: &str) -> Option<&dyn Extension> {
+        self.exts
+            .iter()
+            .find(|e| e.name() == name)
+            .map(|e| e.as_ref())
+    }
+
+    /// Resolve requested names to modules (in dispatch order,
+    /// duplicates collapsed); errors on any unregistered name.
+    pub fn select(&self, requested: &[String]) -> Result<Vec<&dyn Extension>> {
+        for name in requested {
+            ensure!(
+                self.contains(name),
+                "extension {name:?} is not supported by the native \
+                 backend (registered: {:?})",
+                self.names()
+            );
+        }
+        Ok(self
+            .exts
+            .iter()
+            .filter(|e| requested.iter().any(|r| r == e.name()))
+            .map(|e| e.as_ref())
+            .collect())
+    }
+
+    /// Shard-reduction rule for an output key: the first registered
+    /// extension claiming the key decides; unclaimed keys (`loss`,
+    /// `grad/*`, internal partials) sum-reduce.
+    pub fn reduce(&self, key: &str) -> Reduce {
+        self.exts
+            .iter()
+            .find_map(|e| e.reduce(key))
+            .unwrap_or(Reduce::Sum)
+    }
+}
+
+impl std::fmt::Debug for ExtensionSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("ExtensionSet").field(&self.names()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_set_matches_the_published_name_list() {
+        let set = ExtensionSet::builtin();
+        assert_eq!(set.names(), BUILTIN_NAMES.to_vec());
+        assert!(set.contains("kfac"));
+        assert!(!set.contains("diag_h"));
+        assert!(set.get("kfra").unwrap().fully_connected_only());
+        assert!(set.get("kfac").unwrap().needs_key());
+        assert!(set.get("diag_ggn_mc").unwrap().needs_key());
+        assert!(!set.get("diag_ggn").unwrap().needs_key());
+        assert!(!set.get("batch_grad").unwrap().needs_key());
+    }
+
+    #[test]
+    fn select_validates_and_keeps_dispatch_order() {
+        let set = ExtensionSet::builtin();
+        let req =
+            vec!["kfac".to_string(), "batch_grad".to_string()];
+        let picked = set.select(&req).unwrap();
+        // Dispatch order is registry order, not request order.
+        assert_eq!(
+            picked.iter().map(|e| e.name()).collect::<Vec<_>>(),
+            vec!["batch_grad", "kfac"]
+        );
+        let err = set
+            .select(&["diag_h".to_string()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not supported"), "{err}");
+    }
+
+    #[test]
+    fn reduction_rules_follow_table_1() {
+        let set = ExtensionSet::builtin();
+        assert_eq!(set.reduce("batch_grad/0/w"), Reduce::Concat);
+        assert_eq!(set.reduce("batch_l2/2/b"), Reduce::Concat);
+        assert_eq!(set.reduce("grad/0/w"), Reduce::Sum);
+        assert_eq!(set.reduce("sq_moment/0/w"), Reduce::Sum);
+        assert_eq!(set.reduce("kfac/0/A"), Reduce::Sum);
+        assert_eq!(set.reduce("__kfra/h"), Reduce::Sum);
+        assert_eq!(set.reduce("loss"), Reduce::Sum);
+        // Prefix matching is exact up to the separator: the
+        // "diag_ggn" claim must not swallow "diag_ggn_mc/…".
+        assert_eq!(set.reduce("diag_ggn_mc/0/w"), Reduce::Sum);
+        // A name that prefixes another without the separator is not
+        // claimed ("batch_grad" vs "batch_gradx/…").
+        assert_eq!(set.reduce("batch_gradx/0/w"), Reduce::Sum);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a valid signature part")]
+    fn register_rejects_names_the_artifact_grammar_cannot_parse() {
+        struct Bad;
+        impl Extension for Bad {
+            fn name(&self) -> &str {
+                "a+b"
+            }
+            fn walk(&self) -> Walk {
+                Walk::Grad
+            }
+        }
+        ExtensionSet::empty().register(Bad);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch suffix")]
+    fn register_rejects_names_with_a_batch_suffix() {
+        struct Bad;
+        impl Extension for Bad {
+            fn name(&self) -> &str {
+                "mine_n64"
+            }
+            fn walk(&self) -> Walk {
+                Walk::Grad
+            }
+        }
+        ExtensionSet::empty().register(Bad);
+    }
+
+    #[test]
+    fn register_accepts_underscore_n_when_not_a_batch_suffix() {
+        struct Fine;
+        impl Extension for Fine {
+            fn name(&self) -> &str {
+                "my_norm"
+            }
+            fn walk(&self) -> Walk {
+                Walk::Grad
+            }
+        }
+        let mut set = ExtensionSet::empty();
+        set.register(Fine);
+        assert!(set.contains("my_norm"));
+    }
+
+    #[test]
+    fn register_replaces_same_name_in_place() {
+        struct Fake;
+        impl Extension for Fake {
+            fn name(&self) -> &str {
+                "batch_l2"
+            }
+            fn walk(&self) -> Walk {
+                Walk::Grad
+            }
+        }
+        let mut set = ExtensionSet::builtin();
+        let before = set.names().len();
+        set.register(Fake);
+        assert_eq!(set.names().len(), before);
+        // Replacement keeps the slot but swaps the module: the fake
+        // inherits the default prefix rule (Sum), dropping the
+        // built-in's Concat override.
+        assert_eq!(set.reduce("batch_l2/0/w"), Reduce::Sum);
+    }
+}

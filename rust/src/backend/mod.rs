@@ -7,8 +7,14 @@
 //!
 //! * [`native::NativeBackend`] -- forward + generalized backward pass
 //!   (paper Figs. 4-5) in pure Rust on the host [`Tensor`] type, for
-//!   the paper's full layer set: fully-connected *and* convolutional
-//!   (im2col lowering in [`conv`]). Every problem in
+//!   the paper's full layer set ([`layers::Layer`]): the affine maps
+//!   `Linear` and `Conv2d` (im2col lowering in [`conv`]), the pooling
+//!   layers `MaxPool2d` / `GlobalAvgPool`, `Flatten`, and the `ReLU` /
+//!   `Sigmoid` activations. Every quantity is an
+//!   [`Extension`](extensions::Extension) module dispatched through
+//!   an [`ExtensionSet`](extensions::ExtensionSet) registry --
+//!   user-defined quantities drop in without engine changes. Every
+//!   problem in
 //!   `coordinator::problems::PROBLEMS` is servable. Zero external
 //!   dependencies; the default.
 //! * `runtime::Runtime` (behind the `pjrt` cargo feature) -- executes
@@ -22,6 +28,7 @@
 //! search, figures, CLI) is backend-agnostic.
 
 pub mod conv;
+pub mod extensions;
 pub mod layers;
 pub mod loss;
 pub mod model;

@@ -2,41 +2,48 @@
 //!
 //! `extended_backward` is the Rust twin of the Python extension engine
 //! (`python/compile/extensions.py`): ONE forward pass storing module
-//! inputs, then
+//! inputs, then one backward walk per propagated quantity, with every
+//! extraction rule living in a pluggable [`Extension`] module
+//! ([`crate::backend::extensions`]) rather than in this engine:
 //!
 //! 1. a **first-order** backward walk (paper Fig. 4) propagating the
-//!    per-sample output gradients `g [N, F]` (Eq. 3) and extracting,
-//!    at every parameterized layer (`Linear`, `Conv2d`), the averaged
-//!    gradient plus any requested first-order quantity (individual
-//!    gradients, L2 norms, 2nd moment, variance -- Table 1 /
-//!    Appendix A.1);
+//!    per-sample output gradients `g [N, F]` (Eq. 3); at every
+//!    parameterized layer (`Linear`, `Conv2d`) the engine extracts
+//!    the averaged gradient and dispatches to the active
+//!    [`Walk::Grad`] extensions (individual gradients, L2 norms, 2nd
+//!    moment, variance -- Table 1 / Appendix A.1);
 //! 2. **second-order** backward walks (Fig. 5) propagating the
 //!    symmetric loss-Hessian factorization `S [N, F, C]` (Eq. 18) --
-//!    exact (DiagGGN, KFLR) or Monte-Carlo (DiagGGN-MC, KFAC) -- and
-//!    the KFRA batch-averaged curvature `Ḡ [h, h]` (Eq. 24).
+//!    exact ([`Walk::SqrtGgn`]: DiagGGN, KFLR) or Monte-Carlo
+//!    ([`Walk::SqrtGgnMc`]: DiagGGN-MC, KFAC), one shared propagation
+//!    per variant -- and a whole-shard hook for KFRA's batch-averaged
+//!    curvature `Ḡ [h, h]` (Eq. 24, [`Walk::Shard`]).
 //!
 //! Convolutions lower to the linear case by im2col
 //! (`backend/conv/`, DESIGN.md §6); pooling layers propagate by index
 //! routing / broadcast. KFRA stays fully-connected-only (paper
-//! footnote 5): the engine rejects it on any model with conv or pool
-//! layers.
+//! footnote 5): the engine rejects any
+//! [`Extension::fully_connected_only`] module on a model with conv or
+//! pool layers.
 //!
 //! All quantities follow Table 1's scaling conventions (the loss is
-//! the *mean* over the batch); the Rust integration tests assert the
-//! same identities the Python test-suite checks against autodiff.
+//! the *mean* over the batch; DESIGN.md §4); the Rust integration
+//! tests assert the same identities the Python test-suite checks
+//! against autodiff.
 //!
 //! **Batch parallelism.** Every quantity above is a sum or a
 //! concatenation over the batch axis, so the engine shards the batch
 //! into contiguous ranges (`crate::parallel`) and runs the *whole*
 //! forward + backward per shard, normalizing by the **global** batch
-//! size. Reduction is extension-aware:
+//! size. Reduction is extension-aware -- each module declares its own
+//! rule through [`Extension::reduce`] (DESIGN.md §9):
 //!
 //! * `loss`, `grad/*`, `sq_moment/*`, `diag_ggn*/*` and the
 //!   KFAC/KFLR/KFRA factors sum-reduce across shards;
 //! * `batch_grad/*` / `batch_l2/*` concatenate in shard (= sample)
 //!   order;
 //! * `variance/*` is computed exactly from the merged first and
-//!   second moments after the reduction;
+//!   second moments after the reduction ([`Extension::finish`]);
 //! * KFRA's nonlinear `Ḡ` recursion runs once on the merged batch
 //!   averages (`A`, activation second moments, output Hessian mean);
 //! * MC draws are keyed by each sample's global index, so
@@ -53,35 +60,43 @@ use std::ops::Range;
 use anyhow::{bail, ensure, Result};
 
 use super::conv::{conv2d, pool, ConvGeom, PoolGeom, Shape};
+use super::extensions::{
+    Extension, ExtensionSet, FinishCtx, LayerCtx, LayerOp, Quantities,
+    Reduce, ShardCtx, Walk,
+};
 use super::layers::Layer;
 use super::loss::CrossEntropy;
-use crate::linalg::{
-    matmul, matmul_nt, matmul_par, matmul_tn, matmul_tn_par,
-};
+use crate::linalg::{matmul, matmul_nt, matmul_tn};
 use crate::parallel;
 use crate::runtime::{Init, Tensor, TensorData, TensorSpec};
 
 /// Monte-Carlo rank of the DiagGGN-MC / KFAC factorization (paper: 1).
 pub const MC_SAMPLES: usize = 1;
 
-/// Extensions the native engine implements (`diag_h` stays PJRT-only:
-/// its signed residual-factor propagation is the one quantity this
-/// engine has no closed-form walk for). `kfra` is additionally
-/// restricted to fully-connected models (paper footnote 5).
-pub const NATIVE_EXTENSIONS: &[&str] = &[
-    "batch_grad", "batch_l2", "sq_moment", "variance",
-    "diag_ggn", "diag_ggn_mc", "kfac", "kflr", "kfra",
-];
+/// Extensions the native engine ships out of the box (`diag_h` stays
+/// PJRT-only: its signed residual-factor propagation is the one
+/// quantity this engine has no closed-form walk for). `kfra` is
+/// additionally restricted to fully-connected models (paper
+/// footnote 5). The canonical list lives in the extension registry
+/// ([`super::extensions::BUILTIN_NAMES`]); user-defined quantities
+/// register through [`ExtensionSet`] / `NativeBackend`.
+pub use super::extensions::BUILTIN_NAMES as NATIVE_EXTENSIONS;
 
 /// A sequential model with a cross-entropy loss. `in_shape` carries
 /// the image geometry for convolutional models; activations are
 /// stored flat (`in_dim = in_shape.flat()` features per sample).
 #[derive(Debug, Clone)]
 pub struct Model {
+    /// Registry name (`logreg`, `mlp`, `2c2d`, ...).
     pub name: String,
+    /// Flat input feature count (`in_shape.flat()`).
     pub in_dim: usize,
+    /// Input activation geometry (`Shape::flat_vec` for vector
+    /// models).
     pub in_shape: Shape,
+    /// Output class count (the last layer's flat dimension).
     pub classes: usize,
+    /// The module sequence.
     pub layers: Vec<Layer>,
 }
 
@@ -91,20 +106,14 @@ pub struct Model {
 /// `a_dim = in_ch·k²` (the im2col patch length).
 #[derive(Debug, Clone)]
 pub struct ParamBlock {
+    /// Index of the layer in [`Model::layers`].
     pub li: usize,
+    /// Parameter-tensor shape of the weight.
     pub w_shape: Vec<usize>,
+    /// Kronecker `A`-side dimension (`din` / patch length).
     pub a_dim: usize,
+    /// Kronecker `B`-side dimension (output features / channels).
     pub dout: usize,
-}
-
-/// Weight/bias views of one parameterized layer, bound from input
-/// tensors. For `Conv2d`, `w` is the `[dout, din]` im2col matrix view
-/// of the `[out_ch, in_ch, k, k]` tensor (`din = in_ch·k²`).
-struct Lin<'a> {
-    din: usize,
-    dout: usize,
-    w: &'a [f32],
-    b: &'a [f32],
 }
 
 /// Per-layer spatial geometry, resolved once per engine call.
@@ -401,6 +410,7 @@ impl Model {
         specs
     }
 
+    /// Total parameter count across all blocks.
     pub fn num_params(&self) -> usize {
         self.param_specs()
             .iter()
@@ -424,9 +434,15 @@ impl Model {
     }
 
     /// Resolve the flat parameter-tensor list (w, b per parameterized
-    /// layer, in layer order) into per-layer views, validating shapes.
-    fn bind<'a>(&self, params: &'a [Tensor])
-        -> Result<Vec<Option<Lin<'a>>>> {
+    /// layer, in layer order) into per-layer [`LayerOp`] views,
+    /// validating shapes. For `Conv2d`, the weight view is the
+    /// `[dout, din]` im2col matrix of the `[out_ch, in_ch, k, k]`
+    /// tensor (`din = in_ch·k²`).
+    fn bind<'a>(
+        &self,
+        params: &'a [Tensor],
+        geoms: &'a [Geom],
+    ) -> Result<Vec<Option<LayerOp<'a>>>> {
         let blocks: BTreeMap<usize, ParamBlock> = self
             .param_blocks()
             .into_iter()
@@ -454,11 +470,17 @@ impl Model {
                 b.shape == [blk.dout],
                 "param/{li}/b: shape {:?} != [{}]", b.shape, blk.dout
             );
-            out.push(Some(Lin {
-                din: blk.a_dim,
-                dout: blk.dout,
-                w: w.f32s()?,
-                b: b.f32s()?,
+            let (wf, bf) = (w.f32s()?, b.f32s()?);
+            out.push(Some(match &geoms[li] {
+                Geom::Conv(geom) => {
+                    LayerOp::Conv { geom, w: wf, b: bf }
+                }
+                _ => LayerOp::Linear {
+                    din: blk.a_dim,
+                    dout: blk.dout,
+                    w: wf,
+                    b: bf,
+                },
             }));
         }
         ensure!(
@@ -473,7 +495,7 @@ impl Model {
     /// `acts.last() = logits`.
     fn forward_acts(
         &self,
-        lins: &[Option<Lin>],
+        ops: &[Option<LayerOp>],
         geoms: &[Geom],
         x: &[f32],
         n: usize,
@@ -484,19 +506,20 @@ impl Model {
             let inp = acts.last().expect("non-empty");
             let z = match (layer, &geoms[li]) {
                 (Layer::Linear { .. }, _) => {
-                    let lin = lins[li].as_ref().expect("bound");
-                    let mut z =
-                        matmul_nt(inp, lin.w, n, lin.din, lin.dout);
+                    let op = ops[li].expect("bound");
+                    let (din, dout) = (op.a_dim(), op.dout());
+                    let b = op.b();
+                    let mut z = matmul_nt(inp, op.w(), n, din, dout);
                     for s in 0..n {
-                        for o in 0..lin.dout {
-                            z[s * lin.dout + o] += lin.b[o];
+                        for o in 0..dout {
+                            z[s * dout + o] += b[o];
                         }
                     }
                     z
                 }
                 (Layer::Conv2d { .. }, Geom::Conv(geom)) => {
-                    let lin = lins[li].as_ref().expect("bound");
-                    conv2d::forward(geom, lin.w, lin.b, inp, n)
+                    let op = ops[li].expect("bound");
+                    conv2d::forward(geom, op.w(), op.b(), inp, n)
                 }
                 (Layer::MaxPool2d { .. }, Geom::Pool(geom)) => {
                     geom.forward(inp, n)
@@ -528,12 +551,12 @@ impl Model {
         threads: usize,
     ) -> Result<Tensor> {
         let n = self.check_x(x)?;
-        let lins = self.bind(params)?;
         let geoms = self.geoms();
+        let ops = self.bind(params, &geoms)?;
         let xs = x.f32s()?;
         let work = parallel::shards(n, threads);
         if work.len() <= 1 {
-            let mut acts = self.forward_acts(&lins, &geoms, xs, n);
+            let mut acts = self.forward_acts(&ops, &geoms, xs, n);
             return Ok(Tensor::from_f32(
                 &[n, self.classes],
                 acts.pop().expect("non-empty"),
@@ -541,7 +564,7 @@ impl Model {
         }
         let parts = parallel::par_map(&work, |r| {
             let mut acts = self.forward_acts(
-                &lins,
+                &ops,
                 &geoms,
                 &xs[r.start * self.in_dim..r.end * self.in_dim],
                 r.len(),
@@ -578,15 +601,15 @@ impl Model {
         ensure!(y.shape == [n], "y shape {:?} != [{n}]", y.shape);
         let ys = y.i32s()?;
         let xs = x.f32s()?;
-        let lins = self.bind(params)?;
         let geoms = self.geoms();
+        let ops = self.bind(params, &geoms)?;
         let c = self.classes;
         let ce = CrossEntropy;
         let parts =
             parallel::par_map(&parallel::shards(n, threads), |r| {
                 let ns = r.len();
                 let acts = self.forward_acts(
-                    &lins,
+                    &ops,
                     &geoms,
                     &xs[r.start * self.in_dim..r.end * self.in_dim],
                     ns,
@@ -615,8 +638,9 @@ impl Model {
         Ok(out)
     }
 
-    /// The generalized backward pass: returns `loss`, `grad/*`, and
-    /// every requested extension quantity under the manifest naming
+    /// The generalized backward pass over the built-in extension
+    /// registry: returns `loss`, `grad/*`, and every requested
+    /// extension quantity under the manifest naming
     /// (`{extension}/{layer}/{param-or-factor}`).
     pub fn extended_backward(
         &self,
@@ -625,7 +649,7 @@ impl Model {
         y: &Tensor,
         extensions: &[String],
         key: Option<[u32; 2]>,
-    ) -> Result<BTreeMap<String, Tensor>> {
+    ) -> Result<Quantities> {
         self.extended_backward_threads(params, x, y, extensions, key, 1)
     }
 
@@ -641,22 +665,50 @@ impl Model {
         extensions: &[String],
         key: Option<[u32; 2]>,
         threads: usize,
-    ) -> Result<BTreeMap<String, Tensor>> {
-        for e in extensions {
+    ) -> Result<Quantities> {
+        self.extended_backward_with(
+            &ExtensionSet::builtin(),
+            params,
+            x,
+            y,
+            extensions,
+            key,
+            threads,
+        )
+    }
+
+    /// The full engine entry point: run the generalized backward pass
+    /// dispatching through an explicit [`ExtensionSet`] — the hook
+    /// for user-defined quantities (see the registry docs in
+    /// [`crate::backend::extensions`] for a complete example).
+    ///
+    /// `extensions` names the registered modules to activate; the
+    /// engine runs one backward walk per propagated quantity with at
+    /// least one user, shards the batch over `threads` workers, and
+    /// merges shard outputs by each module's [`Extension::reduce`]
+    /// rule before the post-merge [`Extension::finish`] hooks run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn extended_backward_with(
+        &self,
+        set: &ExtensionSet,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        extensions: &[String],
+        key: Option<[u32; 2]>,
+        threads: usize,
+    ) -> Result<Quantities> {
+        let active = set.select(extensions)?;
+        for e in &active {
             ensure!(
-                NATIVE_EXTENSIONS.contains(&e.as_str()),
-                "extension {e:?} is not supported by the native backend"
+                !e.fully_connected_only() || self.is_fully_connected(),
+                "{} is restricted to fully-connected models (paper \
+                 footnote 5); model {:?} contains conv/pool layers",
+                e.name(),
+                self.name
             );
         }
-        let has = |e: &str| extensions.iter().any(|x| x == e);
-        ensure!(
-            !has("kfra") || self.is_fully_connected(),
-            "kfra is restricted to fully-connected models (paper \
-             footnote 5); model {:?} contains conv/pool layers",
-            self.name
-        );
-        let needs_mc = has("diag_ggn_mc") || has("kfac");
-        if needs_mc && key.is_none() {
+        if active.iter().any(|e| e.needs_key()) && key.is_none() {
             bail!("MC extensions require a PRNG key input");
         }
 
@@ -665,30 +717,37 @@ impl Model {
         ensure!(y.shape == [n], "y shape {:?} != [{n}]", y.shape);
         let ys = y.i32s()?;
         let xs = x.f32s()?;
-        let lins = self.bind(params)?;
         let geoms = self.geoms();
+        let ops = self.bind(params, &geoms)?;
         let dims = self.dims();
 
         let work = parallel::shards(n, threads);
         let mut out = if work.len() <= 1 {
             self.backward_range(
-                &lins, &geoms, &dims, xs, ys, 0..n, n, extensions, key,
+                &ops, &geoms, &dims, xs, ys, 0..n, n, &active, key,
             )?
         } else {
             let parts = parallel::par_map(&work, |r| {
                 self.backward_range(
-                    &lins, &geoms, &dims, xs, ys, r, n, extensions, key,
+                    &ops, &geoms, &dims, xs, ys, r, n, &active, key,
                 )
             });
             let mut done = Vec::with_capacity(parts.len());
             for p in parts {
                 done.push(p?);
             }
-            merge_shard_outputs(done)?
+            merge_shard_outputs(done, set)?
         };
-        self.finish_extensions(
-            &lins, &dims, extensions, threads, &mut out,
-        )?;
+        let fctx = FinishCtx {
+            model: self,
+            ops: &ops,
+            dims: &dims,
+            threads,
+            extensions,
+        };
+        for e in &active {
+            e.finish(&fctx, &mut out)?;
+        }
         Ok(out)
     }
 
@@ -697,21 +756,21 @@ impl Model {
     /// `total_n` (so shard outputs sum-reduce exactly) and per-sample
     /// quantities covering only the range (so shard outputs
     /// concatenate). The full-range call `backward_range(.., 0..n, n,
-    /// ..)` is the serial engine.
+    /// ..)` is the serial engine. Extraction dispatches to the active
+    /// extensions' hooks, one walk per propagated quantity.
     #[allow(clippy::too_many_arguments)]
     fn backward_range(
         &self,
-        lins: &[Option<Lin>],
+        ops: &[Option<LayerOp>],
         geoms: &[Geom],
         dims: &[usize],
         xs: &[f32],
         ys: &[i32],
         range: Range<usize>,
         total_n: usize,
-        extensions: &[String],
+        active: &[&dyn Extension],
         key: Option<[u32; 2]>,
-    ) -> Result<BTreeMap<String, Tensor>> {
-        let has = |e: &str| extensions.iter().any(|x| x == e);
+    ) -> Result<Quantities> {
         let ns = range.len();
         let norm = total_n as f32;
         let c = self.classes;
@@ -720,10 +779,10 @@ impl Model {
         let y = &ys[range.start..range.end];
 
         // ---- forward pass, storing every module input --------------
-        let acts = self.forward_acts(lins, geoms, x, ns);
+        let acts = self.forward_acts(ops, geoms, x, ns);
         let logits = acts.last().expect("non-empty");
 
-        let mut out = BTreeMap::new();
+        let mut out = Quantities::new();
         out.insert(
             "loss".to_string(),
             Tensor::scalar_f32(
@@ -731,292 +790,162 @@ impl Model {
             ),
         );
 
-        // ---- first-order backward pass (Eq. 3 + Fig. 4) ------------
+        // ---- first-order backward walk (Eq. 3 + Fig. 4) ------------
+        let fo: Vec<&dyn Extension> = active
+            .iter()
+            .copied()
+            .filter(|e| e.walk() == Walk::Grad)
+            .collect();
         let mut g = ce.grad(logits, y, ns, c); // ∇_f ℓ_n, [ns, C]
         for li in (0..self.layers.len()).rev() {
-            if let Some(lin) = lins[li].as_ref() {
-                match &geoms[li] {
-                    Geom::Conv(geom) => self.conv_first_order_at(
-                        li, geom, &acts[li], &g, ns, norm, extensions,
-                        &mut out,
-                    ),
-                    _ => self.first_order_at(
-                        li, lin, &acts[li], &g, ns, norm, extensions,
-                        &mut out,
-                    ),
+            if let Some(op) = &ops[li] {
+                let ctx = LayerCtx::new(li, *op, &acts[li], ns, norm);
+                self.grad_at(&ctx, &g, !fo.is_empty(), &mut out);
+                for e in &fo {
+                    e.first_order(&ctx, &g, &mut out);
                 }
             }
             if li > 0 {
-                g = self.vjp_input(li, lins, geoms, &acts, g, ns);
+                g = self.vjp_input(li, ops, geoms, &acts, g, ns);
             }
         }
 
-        // ---- second-order backward passes (Eq. 18 / Fig. 5) --------
-        for (ext, exact) in [("diag_ggn", true), ("diag_ggn_mc", false)]
+        // ---- second-order backward walks (Eq. 18 / Fig. 5) ---------
+        // One shared propagation per square-root variant: e.g.
+        // diag_ggn and kflr extract from the same exact-S walk.
+        for (walk, exact) in
+            [(Walk::SqrtGgn, true), (Walk::SqrtGgnMc, false)]
         {
-            if has(ext) {
-                let (s, cols) = self.init_sqrt(
-                    &ce, logits, ns, exact, key, range.start,
-                );
-                self.propagate_diag(
-                    lins, geoms, &acts, dims, s, cols, ns, norm, ext,
-                    &mut out,
-                );
+            let users: Vec<&dyn Extension> = active
+                .iter()
+                .copied()
+                .filter(|e| e.walk() == walk)
+                .collect();
+            if users.is_empty() {
+                continue;
+            }
+            let (mut s, cols) =
+                self.init_sqrt(&ce, logits, ns, exact, key, range.start);
+            for li in (0..self.layers.len()).rev() {
+                if let Some(op) = &ops[li] {
+                    let ctx =
+                        LayerCtx::new(li, *op, &acts[li], ns, norm);
+                    for e in &users {
+                        e.sqrt_ggn(&ctx, &s, cols, &mut out);
+                    }
+                }
+                if li > 0 {
+                    s = self.mat_vjp_input(
+                        li, ops, geoms, &acts, dims, s, ns, cols,
+                    );
+                }
             }
         }
-        for (ext, exact) in [("kflr", true), ("kfac", false)] {
-            if has(ext) {
-                let (s, cols) = self.init_sqrt(
-                    &ce, logits, ns, exact, key, range.start,
-                );
-                self.propagate_kron(
-                    lins, geoms, &acts, dims, s, cols, ns, norm, ext,
-                    &mut out,
-                );
+
+        // ---- whole-shard hooks (Eq. 24: KFRA batch averages) -------
+        let shard_exts: Vec<&dyn Extension> = active
+            .iter()
+            .copied()
+            .filter(|e| e.walk() == Walk::Shard)
+            .collect();
+        if !shard_exts.is_empty() {
+            let sctx = ShardCtx {
+                model: self,
+                ops,
+                acts: &acts,
+                dims,
+                n: ns,
+                norm,
+            };
+            for e in &shard_exts {
+                e.batch_averages(&sctx, &mut out);
             }
-        }
-        if has("kfra") {
-            self.kfra_partials(lins, &acts, dims, ns, norm, &mut out);
         }
         Ok(out)
     }
 
-    /// Post-reduction pass: derive `variance` from the merged moments
-    /// (dropping `sq_moment` if it was only computed as an
-    /// intermediate) and run KFRA's `Ḡ` recursion on the merged batch
-    /// averages.
-    fn finish_extensions(
+    /// Averaged gradient of one parameterized layer (engine-core —
+    /// the extension quantities extract through [`Extension`] hooks).
+    /// When first-order extensions are active at a conv layer, the
+    /// gradient reduces over the shared [`LayerCtx::per_sample_grads`]
+    /// cache so the per-sample `G_n ⟦x⟧_nᵀ` products are computed
+    /// once; otherwise it streams without materializing them.
+    fn grad_at(
         &self,
-        lins: &[Option<Lin>],
-        dims: &[usize],
-        extensions: &[String],
-        threads: usize,
-        out: &mut BTreeMap<String, Tensor>,
-    ) -> Result<()> {
-        let has = |e: &str| extensions.iter().any(|x| x == e);
-        if has("variance") {
-            for blk in self.param_blocks() {
-                let li = blk.li;
-                for part in ["w", "b"] {
-                    let gname = format!("grad/{li}/{part}");
-                    let sname = format!("sq_moment/{li}/{part}");
-                    let (shape, var) = {
-                        let g = out[&gname].f32s()?;
-                        let sq = out[&sname].f32s()?;
-                        let var: Vec<f32> = sq
-                            .iter()
-                            .zip(g)
-                            .map(|(s2, g1)| s2 - g1 * g1)
-                            .collect();
-                        (out[&sname].shape.clone(), var)
-                    };
-                    out.insert(
-                        format!("variance/{li}/{part}"),
-                        Tensor::from_f32(&shape, var),
-                    );
-                    if !has("sq_moment") {
-                        out.remove(&sname);
+        ctx: &LayerCtx,
+        g: &[f32],
+        share_per_sample: bool,
+        out: &mut Quantities,
+    ) {
+        let (li, n, nf) = (ctx.li, ctx.n, ctx.norm);
+        match ctx.op {
+            LayerOp::Linear { din, dout, .. } => {
+                // (1/N) gᵀ x and (1/N) Σ_n g_n.
+                let mut gw = matmul_tn(g, ctx.input, n, dout, din);
+                for v in &mut gw {
+                    *v /= nf;
+                }
+                let mut gb = vec![0.0f32; dout];
+                for s in 0..n {
+                    for o in 0..dout {
+                        gb[o] += g[s * dout + o];
                     }
                 }
+                for v in &mut gb {
+                    *v /= nf;
+                }
+                out.insert(
+                    format!("grad/{li}/w"),
+                    Tensor::from_f32(&[dout, din], gw),
+                );
+                out.insert(
+                    format!("grad/{li}/b"),
+                    Tensor::from_f32(&[dout], gb),
+                );
             }
-        }
-        if has("kfra") {
-            self.kfra_finish(lins, dims, threads, out)?;
-        }
-        Ok(())
-    }
-
-    /// Averaged gradient + requested first-order quantities of one
-    /// `Linear` layer (shard input `inp [n, din]`, unnormalized
-    /// per-sample output gradients `g [n, dout]`, averages normalized
-    /// by the global batch size `norm`). `variance` is not extracted
-    /// here: it is derived from the merged `grad`/`sq_moment` in
-    /// `finish_extensions`.
-    #[allow(clippy::too_many_arguments)]
-    fn first_order_at(
-        &self,
-        li: usize,
-        lin: &Lin,
-        inp: &[f32],
-        g: &[f32],
-        n: usize,
-        norm: f32,
-        extensions: &[String],
-        out: &mut BTreeMap<String, Tensor>,
-    ) {
-        let has = |e: &str| extensions.iter().any(|x| x == e);
-        let (din, dout) = (lin.din, lin.dout);
-        let nf = norm;
-
-        // Averaged gradient: (1/N) gᵀ x and (1/N) Σ_n g_n.
-        let mut gw = matmul_tn(g, inp, n, dout, din);
-        for v in &mut gw {
-            *v /= nf;
-        }
-        let mut gb = vec![0.0f32; dout];
-        for s in 0..n {
-            for o in 0..dout {
-                gb[o] += g[s * dout + o];
-            }
-        }
-        for v in &mut gb {
-            *v /= nf;
-        }
-
-        if has("batch_grad") {
-            // (1/N) ∇ℓ_n: outer products, batch axis kept (Table 1).
-            let mut bw = vec![0.0f32; n * dout * din];
-            for s in 0..n {
-                for o in 0..dout {
-                    let gv = g[s * dout + o] / nf;
-                    let row = (s * dout + o) * din;
-                    for i in 0..din {
-                        bw[row + i] = gv * inp[s * din + i];
+            LayerOp::Conv { geom, .. } => {
+                let (gw, gb) = if share_per_sample {
+                    let ps = ctx.per_sample_grads(g);
+                    let (co, j) =
+                        (geom.out_shape.c, geom.patch_len());
+                    let mut gw = vec![0.0f32; co * j];
+                    let mut gb = vec![0.0f32; co];
+                    for smp in 0..n {
+                        for (acc, v) in
+                            gw.iter_mut().zip(&ps.w[smp * co * j..])
+                        {
+                            *acc += v;
+                        }
+                        for (acc, v) in
+                            gb.iter_mut().zip(&ps.b[smp * co..])
+                        {
+                            *acc += v;
+                        }
                     }
-                }
+                    for v in gw.iter_mut().chain(gb.iter_mut()) {
+                        *v /= nf;
+                    }
+                    (gw, gb)
+                } else {
+                    conv2d::grad(geom, ctx.input, g, n, nf)
+                };
+                out.insert(
+                    format!("grad/{li}/w"),
+                    Tensor::from_f32(&geom.w_shape(), gw),
+                );
+                out.insert(
+                    format!("grad/{li}/b"),
+                    Tensor::from_f32(&[geom.out_shape.c], gb),
+                );
             }
-            out.insert(
-                format!("batch_grad/{li}/w"),
-                Tensor::from_f32(&[n, dout, din], bw),
-            );
-            let bb: Vec<f32> = g.iter().map(|v| v / nf).collect();
-            out.insert(
-                format!("batch_grad/{li}/b"),
-                Tensor::from_f32(&[n, dout], bb),
-            );
         }
-        if has("batch_l2") {
-            // ‖(1/N) ∇ℓ_n‖²; the rank-1 structure gives
-            // ‖g_n x_nᵀ‖² = ‖g_n‖²·‖x_n‖² without materializing
-            // the individual gradients (Appendix A.1).
-            let mut l2w = vec![0.0f32; n];
-            let mut l2b = vec![0.0f32; n];
-            for s in 0..n {
-                let g2: f32 = g[s * dout..(s + 1) * dout]
-                    .iter()
-                    .map(|v| v * v)
-                    .sum();
-                let x2: f32 = inp[s * din..(s + 1) * din]
-                    .iter()
-                    .map(|v| v * v)
-                    .sum();
-                l2w[s] = g2 * x2 / (nf * nf);
-                l2b[s] = g2 / (nf * nf);
-            }
-            out.insert(
-                format!("batch_l2/{li}/w"),
-                Tensor::from_f32(&[n], l2w),
-            );
-            out.insert(
-                format!("batch_l2/{li}/b"),
-                Tensor::from_f32(&[n], l2b),
-            );
-        }
-        if has("sq_moment") || has("variance") {
-            // (1/N) Σ_n [∇ℓ_n]² = (1/N) (g²)ᵀ (x²), again rank-1.
-            // Always emitted when `variance` is requested: the merged
-            // moments are what variance derives from exactly.
-            let g2: Vec<f32> = g.iter().map(|v| v * v).collect();
-            let x2: Vec<f32> = inp.iter().map(|v| v * v).collect();
-            let mut sqw = matmul_tn(&g2, &x2, n, dout, din);
-            for v in &mut sqw {
-                *v /= nf;
-            }
-            let mut sqb = vec![0.0f32; dout];
-            for s in 0..n {
-                for o in 0..dout {
-                    sqb[o] += g2[s * dout + o];
-                }
-            }
-            for v in &mut sqb {
-                *v /= nf;
-            }
-            out.insert(
-                format!("sq_moment/{li}/w"),
-                Tensor::from_f32(&[dout, din], sqw),
-            );
-            out.insert(
-                format!("sq_moment/{li}/b"),
-                Tensor::from_f32(&[dout], sqb),
-            );
-        }
-        out.insert(
-            format!("grad/{li}/w"),
-            Tensor::from_f32(&[dout, din], gw),
-        );
-        out.insert(format!("grad/{li}/b"), Tensor::from_f32(&[dout], gb));
-    }
-
-    /// Conv twin of [`Model::first_order_at`]: extraction through the
-    /// unfolded view (`backend/conv/conv2d.rs`), weight tensors keep
-    /// the `[out_ch, in_ch, k, k]` parameter shape.
-    #[allow(clippy::too_many_arguments)]
-    fn conv_first_order_at(
-        &self,
-        li: usize,
-        geom: &ConvGeom,
-        inp: &[f32],
-        g: &[f32],
-        n: usize,
-        norm: f32,
-        extensions: &[String],
-        out: &mut BTreeMap<String, Tensor>,
-    ) {
-        let has = |e: &str| extensions.iter().any(|x| x == e);
-        let want_sq = has("sq_moment") || has("variance");
-        let fo = conv2d::first_order(
-            geom, inp, g, n, norm,
-            has("batch_grad"), has("batch_l2"), want_sq,
-        );
-        let w_shape = geom.w_shape();
-        let c_out = geom.out_shape.c;
-        if has("batch_grad") {
-            let mut bshape = vec![n];
-            bshape.extend(&w_shape);
-            out.insert(
-                format!("batch_grad/{li}/w"),
-                Tensor::from_f32(&bshape, fo.batch_w),
-            );
-            out.insert(
-                format!("batch_grad/{li}/b"),
-                Tensor::from_f32(&[n, c_out], fo.batch_b),
-            );
-        }
-        if has("batch_l2") {
-            out.insert(
-                format!("batch_l2/{li}/w"),
-                Tensor::from_f32(&[n], fo.l2_w),
-            );
-            out.insert(
-                format!("batch_l2/{li}/b"),
-                Tensor::from_f32(&[n], fo.l2_b),
-            );
-        }
-        if want_sq {
-            out.insert(
-                format!("sq_moment/{li}/w"),
-                Tensor::from_f32(&w_shape, fo.sq_w),
-            );
-            out.insert(
-                format!("sq_moment/{li}/b"),
-                Tensor::from_f32(&[c_out], fo.sq_b),
-            );
-        }
-        out.insert(
-            format!("grad/{li}/w"),
-            Tensor::from_f32(&w_shape, fo.gw),
-        );
-        out.insert(
-            format!("grad/{li}/b"),
-            Tensor::from_f32(&[c_out], fo.gb),
-        );
     }
 
     /// Apply (J_x z)ᵀ per sample: g [N, out] -> [N, in] (Eq. 3).
     fn vjp_input(
         &self,
         li: usize,
-        lins: &[Option<Lin>],
+        ops: &[Option<LayerOp>],
         geoms: &[Geom],
         acts: &[Vec<f32>],
         g: Vec<f32>,
@@ -1024,13 +953,13 @@ impl Model {
     ) -> Vec<f32> {
         match (&self.layers[li], &geoms[li]) {
             (Layer::Linear { .. }, _) => {
-                let lin = lins[li].as_ref().expect("bound");
+                let op = ops[li].expect("bound");
                 // [N, out] x [out, in] -> [N, in]
-                matmul(&g, lin.w, n, lin.dout, lin.din)
+                matmul(&g, op.w(), n, op.dout(), op.a_dim())
             }
             (Layer::Conv2d { .. }, Geom::Conv(geom)) => {
-                let lin = lins[li].as_ref().expect("bound");
-                conv2d::vjp_input(geom, lin.w, &g, n)
+                let op = ops[li].expect("bound");
+                conv2d::vjp_input(geom, op.w(), &g, n)
             }
             (Layer::MaxPool2d { .. }, Geom::Pool(geom)) => {
                 geom.vjp(&acts[li], &g, n, 1)
@@ -1052,7 +981,7 @@ impl Model {
     fn mat_vjp_input(
         &self,
         li: usize,
-        lins: &[Option<Lin>],
+        ops: &[Option<LayerOp>],
         geoms: &[Geom],
         acts: &[Vec<f32>],
         dims: &[usize],
@@ -1062,21 +991,22 @@ impl Model {
     ) -> Vec<f32> {
         match (&self.layers[li], &geoms[li]) {
             (Layer::Linear { .. }, _) => {
-                let lin = lins[li].as_ref().expect("bound");
-                let (din, dout) = (lin.din, lin.dout);
+                let op = ops[li].expect("bound");
+                let (din, dout) = (op.a_dim(), op.dout());
+                let w = op.w();
                 let mut out = vec![0.0f32; n * din * cols];
                 for smp in 0..n {
                     let blk =
                         &s[smp * dout * cols..(smp + 1) * dout * cols];
-                    let t = matmul_tn(lin.w, blk, dout, din, cols);
+                    let t = matmul_tn(w, blk, dout, din, cols);
                     out[smp * din * cols..(smp + 1) * din * cols]
                         .copy_from_slice(&t);
                 }
                 out
             }
             (Layer::Conv2d { .. }, Geom::Conv(geom)) => {
-                let lin = lins[li].as_ref().expect("bound");
-                conv2d::mat_vjp_input(geom, lin.w, &s, n, cols)
+                let op = ops[li].expect("bound");
+                conv2d::mat_vjp_input(geom, op.w(), &s, n, cols)
             }
             (Layer::MaxPool2d { .. }, Geom::Pool(geom)) => {
                 geom.vjp(&acts[li], &s, n, cols)
@@ -1127,285 +1057,16 @@ impl Model {
             )
         }
     }
-
-    /// DiagGGN(-MC): Eq. 18 propagation + Eq. 19 extraction, averaged
-    /// with the global normalizer `norm`.
-    #[allow(clippy::too_many_arguments)]
-    fn propagate_diag(
-        &self,
-        lins: &[Option<Lin>],
-        geoms: &[Geom],
-        acts: &[Vec<f32>],
-        dims: &[usize],
-        mut s: Vec<f32>,
-        cols: usize,
-        n: usize,
-        norm: f32,
-        name: &str,
-        out: &mut BTreeMap<String, Tensor>,
-    ) {
-        let nf = norm;
-        for li in (0..self.layers.len()).rev() {
-            if let Some(lin) = lins[li].as_ref() {
-                if let Geom::Conv(geom) = &geoms[li] {
-                    let (dw, db) = conv2d::diag_sqrt(
-                        geom, &acts[li], &s, n, cols, nf,
-                    );
-                    out.insert(
-                        format!("{name}/{li}/w"),
-                        Tensor::from_f32(&geom.w_shape(), dw),
-                    );
-                    out.insert(
-                        format!("{name}/{li}/b"),
-                        Tensor::from_f32(&[geom.out_shape.c], db),
-                    );
-                } else {
-                    let (din, dout) = (lin.din, lin.dout);
-                    let inp = &acts[li];
-                    // s2[n, o] = Σ_c S[n, o, c]²
-                    let mut s2 = vec![0.0f32; n * dout];
-                    for (row, v) in s2.iter_mut().enumerate() {
-                        let base = row * cols;
-                        *v = s[base..base + cols]
-                            .iter()
-                            .map(|u| u * u)
-                            .sum();
-                    }
-                    let x2: Vec<f32> =
-                        inp.iter().map(|v| v * v).collect();
-                    let mut dw = matmul_tn(&s2, &x2, n, dout, din);
-                    for v in &mut dw {
-                        *v /= nf;
-                    }
-                    let mut db = vec![0.0f32; dout];
-                    for smp in 0..n {
-                        for o in 0..dout {
-                            db[o] += s2[smp * dout + o];
-                        }
-                    }
-                    for v in &mut db {
-                        *v /= nf;
-                    }
-                    out.insert(
-                        format!("{name}/{li}/w"),
-                        Tensor::from_f32(&[dout, din], dw),
-                    );
-                    out.insert(
-                        format!("{name}/{li}/b"),
-                        Tensor::from_f32(&[dout], db),
-                    );
-                }
-            }
-            if li > 0 {
-                s = self.mat_vjp_input(
-                    li, lins, geoms, acts, dims, s, n, cols,
-                );
-            }
-        }
-    }
-
-    /// KFAC / KFLR: same propagation, Kronecker-factor extraction
-    /// (Eq. 23): `A = 1/N Σ x xᵀ`, `B = bias_ggn = 1/N Σ S Sᵀ` for
-    /// `Linear`; the unfolded-input / position-averaged conv factors
-    /// (DESIGN.md §6) for `Conv2d`. Averaged with the global
-    /// normalizer `norm`.
-    #[allow(clippy::too_many_arguments)]
-    fn propagate_kron(
-        &self,
-        lins: &[Option<Lin>],
-        geoms: &[Geom],
-        acts: &[Vec<f32>],
-        dims: &[usize],
-        mut s: Vec<f32>,
-        cols: usize,
-        n: usize,
-        norm: f32,
-        name: &str,
-        out: &mut BTreeMap<String, Tensor>,
-    ) {
-        let nf = norm;
-        for li in (0..self.layers.len()).rev() {
-            if let Some(lin) = lins[li].as_ref() {
-                if let Geom::Conv(geom) = &geoms[li] {
-                    let (a, b, bias) = conv2d::kron_factors(
-                        geom, &acts[li], &s, n, cols, nf,
-                    );
-                    let (j, co) =
-                        (geom.patch_len(), geom.out_shape.c);
-                    out.insert(
-                        format!("{name}/{li}/A"),
-                        Tensor::from_f32(&[j, j], a),
-                    );
-                    out.insert(
-                        format!("{name}/{li}/bias_ggn"),
-                        Tensor::from_f32(&[co, co], bias),
-                    );
-                    out.insert(
-                        format!("{name}/{li}/B"),
-                        Tensor::from_f32(&[co, co], b),
-                    );
-                } else {
-                    let (din, dout) = (lin.din, lin.dout);
-                    let inp = &acts[li];
-                    let mut a = matmul_tn(inp, inp, n, din, din);
-                    for v in &mut a {
-                        *v /= nf;
-                    }
-                    let mut b = vec![0.0f32; dout * dout];
-                    for smp in 0..n {
-                        let blk = &s[smp * dout * cols
-                            ..(smp + 1) * dout * cols];
-                        let bb = matmul_nt(blk, blk, dout, cols, dout);
-                        for (acc, v) in b.iter_mut().zip(&bb) {
-                            *acc += v;
-                        }
-                    }
-                    for v in &mut b {
-                        *v /= nf;
-                    }
-                    out.insert(
-                        format!("{name}/{li}/A"),
-                        Tensor::from_f32(&[din, din], a),
-                    );
-                    out.insert(
-                        format!("{name}/{li}/bias_ggn"),
-                        Tensor::from_f32(&[dout, dout], b.clone()),
-                    );
-                    out.insert(
-                        format!("{name}/{li}/B"),
-                        Tensor::from_f32(&[dout, dout], b),
-                    );
-                }
-            }
-            if li > 0 {
-                s = self.mat_vjp_input(
-                    li, lins, geoms, acts, dims, s, n, cols,
-                );
-            }
-        }
-    }
-
-    /// KFRA shard phase: the batch *averages* its `Ḡ` recursion
-    /// (Eq. 24) consumes -- `A = 1/N Σ x xᵀ` per `Linear`, the
-    /// activation second moments `1/N Σ m_n m_nᵀ` (`m = σ'(x)`), and
-    /// the output Hessian mean -- each normalized by the global batch
-    /// size so shards sum-reduce exactly. The recursion itself is
-    /// nonlinear in these averages, so it runs once on the merged
-    /// values in [`Model::kfra_finish`]. Internal quantities go under
-    /// `__kfra/` keys, consumed (and removed) by the finish pass.
-    /// Fully-connected models only (checked by `extended_backward`).
-    fn kfra_partials(
-        &self,
-        lins: &[Option<Lin>],
-        acts: &[Vec<f32>],
-        dims: &[usize],
-        n: usize,
-        norm: f32,
-        out: &mut BTreeMap<String, Tensor>,
-    ) {
-        let ce = CrossEntropy;
-        let c = self.classes;
-        let logits = acts.last().expect("non-empty");
-        // hessian_mean averages over the shard; reweigh to n/norm so
-        // the full-range (serial) call scales by exactly 1.0.
-        let mut h = ce.hessian_mean(logits, n, c);
-        let w = n as f32 / norm;
-        for v in &mut h {
-            *v *= w;
-        }
-        out.insert(
-            "__kfra/h".to_string(),
-            Tensor::from_f32(&[c, c], h),
-        );
-        for (li, layer) in self.layers.iter().enumerate() {
-            if let Some(lin) = lins[li].as_ref() {
-                let din = lin.din;
-                let mut a = matmul_tn(&acts[li], &acts[li], n, din, din);
-                for v in &mut a {
-                    *v /= norm;
-                }
-                out.insert(
-                    format!("kfra/{li}/A"),
-                    Tensor::from_f32(&[din, din], a),
-                );
-            } else if li > 0 {
-                let f = dims[li];
-                let m = layer.d_act(&acts[li]); // [n, f]
-                let mut mm = matmul_tn(&m, &m, n, f, f);
-                for v in &mut mm {
-                    *v /= norm;
-                }
-                out.insert(
-                    format!("__kfra/mm/{li}"),
-                    Tensor::from_f32(&[f, f], mm),
-                );
-            }
-        }
-    }
-
-    /// KFRA merge phase: propagate `Ḡ` (Eq. 24) through the layers on
-    /// the merged batch averages -- `Linear` maps `Ḡ -> Wᵀ Ḡ W`
-    /// (row-parallel matmuls), activations `Ḡ -> Ḡ ∘ (1/N Σ m m ᵀ)` --
-    /// extracting `B`/`bias_ggn` at every `Linear`.
-    fn kfra_finish(
-        &self,
-        lins: &[Option<Lin>],
-        dims: &[usize],
-        threads: usize,
-        out: &mut BTreeMap<String, Tensor>,
-    ) -> Result<()> {
-        let Some(h) = out.remove("__kfra/h") else {
-            bail!("kfra reduction is missing the output-Hessian mean")
-        };
-        let mut gbar = h.f32s()?.to_vec();
-        for li in (0..self.layers.len()).rev() {
-            if let Some(lin) = lins[li].as_ref() {
-                let dout = lin.dout;
-                out.insert(
-                    format!("kfra/{li}/B"),
-                    Tensor::from_f32(&[dout, dout], gbar.clone()),
-                );
-                out.insert(
-                    format!("kfra/{li}/bias_ggn"),
-                    Tensor::from_f32(&[dout, dout], gbar.clone()),
-                );
-            }
-            if li > 0 {
-                gbar = match &self.layers[li] {
-                    Layer::Linear { .. } => {
-                        let lin = lins[li].as_ref().expect("bound");
-                        let (din, dout) = (lin.din, lin.dout);
-                        // Wᵀ Ḡ W: [din, dout] x [dout, dout] x [dout, din]
-                        let wt_g = matmul_tn_par(
-                            lin.w, &gbar, dout, din, dout, threads,
-                        );
-                        matmul_par(&wt_g, lin.w, din, dout, din, threads)
-                    }
-                    _ => {
-                        let f = dims[li];
-                        let mm = out
-                            .remove(&format!("__kfra/mm/{li}"))
-                            .expect("kfra activation moment partial");
-                        debug_assert_eq!(mm.shape, vec![f, f]);
-                        gbar.iter()
-                            .zip(mm.f32s()?)
-                            .map(|(gv, mv)| gv * mv)
-                            .collect()
-                    }
-                };
-            }
-        }
-        Ok(())
-    }
 }
 
-/// Reduce shard outputs (shards arrive in sample order): per-sample
-/// quantities (`batch_grad/*`, `batch_l2/*`) concatenate along the
-/// batch axis; everything else -- already normalized by the global
-/// batch size -- sums elementwise.
+/// Reduce shard outputs (shards arrive in sample order) by each key's
+/// [`Extension::reduce`] rule: [`Reduce::Concat`] keys concatenate
+/// along the batch axis; everything else -- already normalized by the
+/// global batch size -- sums elementwise.
 fn merge_shard_outputs(
-    parts: Vec<BTreeMap<String, Tensor>>,
-) -> Result<BTreeMap<String, Tensor>> {
+    parts: Vec<Quantities>,
+    set: &ExtensionSet,
+) -> Result<Quantities> {
     let mut it = parts.into_iter();
     let mut out = it.next().expect("at least one shard");
     for part in it {
@@ -1417,11 +1078,9 @@ fn merge_shard_outputs(
             let Some(acc) = out.get_mut(&k) else {
                 bail!("shard output key mismatch: {k:?}")
             };
-            if k.starts_with("batch_grad/") || k.starts_with("batch_l2/")
-            {
-                append_rows(acc, v)?;
-            } else {
-                add_into(acc, &v)?;
+            match set.reduce(&k) {
+                Reduce::Concat => append_rows(acc, v)?,
+                Reduce::Sum => add_into(acc, &v)?,
             }
         }
     }

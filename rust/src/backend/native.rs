@@ -19,7 +19,12 @@
 //! `{model}{side}`). Every problem in `coordinator/problems.rs` is
 //! trainable here with zero external dependencies; `kfra` stays
 //! fully-connected-only (paper footnote 5) and `diag_h` PJRT-only.
-//! Tests can [`NativeBackend::register`] additional models.
+//! Extraction rules live in the extension registry
+//! (`backend/extensions/`): a signature part is valid exactly when an
+//! [`Extension`] with that name is registered, and its output shapes
+//! come from [`Extension::output_specs`]. Tests (and library users)
+//! can [`NativeBackend::register`] additional models and
+//! [`NativeBackend::register_extension`] additional quantities.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -27,7 +32,8 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
-use super::model::{Model, NATIVE_EXTENSIONS};
+use super::extensions::{f32_spec, Extension, ExtensionSet};
+use super::model::Model;
 use super::{Backend, Exec, Outputs};
 use crate::runtime::{ArtifactSpec, Tensor, TensorSpec};
 
@@ -45,6 +51,10 @@ pub struct NativeBackend {
     /// Batch-parallel worker count every loaded [`NativeExec`]
     /// inherits (resolved: >= 1).
     threads: usize,
+    /// Extension registry every loaded [`NativeExec`] dispatches
+    /// through; starts as [`ExtensionSet::builtin`] and grows via
+    /// [`NativeBackend::register_extension`].
+    extensions: ExtensionSet,
 }
 
 impl Default for NativeBackend {
@@ -66,6 +76,7 @@ impl NativeBackend {
         let mut b = NativeBackend {
             models: BTreeMap::new(),
             threads: crate::parallel::resolve_threads(threads),
+            extensions: ExtensionSet::builtin(),
         };
         b.register(Model::logreg());
         b.register(Model::mlp());
@@ -85,6 +96,20 @@ impl NativeBackend {
     /// through the full backend path).
     pub fn register(&mut self, model: Model) {
         self.models.insert(model.name.clone(), model);
+    }
+
+    /// Register a user-defined [`Extension`]: its
+    /// [`Extension::name`] becomes a valid signature part of every
+    /// model's artifact names (`{model}_{name}_n{batch}`, `+`-joined
+    /// with others) and computations loaded afterwards dispatch to
+    /// its hooks. Registering a built-in name replaces that module.
+    pub fn register_extension(&mut self, ext: impl Extension + 'static) {
+        self.extensions.register(ext);
+    }
+
+    /// The extension registry this backend serves.
+    pub fn extensions(&self) -> &ExtensionSet {
+        &self.extensions
     }
 
     fn model_names(&self) -> Vec<&str> {
@@ -114,17 +139,24 @@ impl NativeBackend {
             if rest == "eval" {
                 return Ok((model, Request::Eval { batch }));
             }
-            match parse_sig(rest) {
+            match parse_sig(rest, &self.extensions) {
                 Ok(extensions) => {
                     // Paper footnote 5: KFRA's averaged recursion is
-                    // only defined for fully-connected networks.
-                    ensure!(
-                        !extensions.iter().any(|e| e == "kfra")
-                            || model.is_fully_connected(),
-                        "kfra is restricted to fully-connected models \
-                         (paper footnote 5); {name} has conv/pool \
-                         layers"
-                    );
+                    // only defined for fully-connected networks; any
+                    // registered extension can claim the same guard.
+                    for ename in &extensions {
+                        let ext = self
+                            .extensions
+                            .get(ename)
+                            .expect("validated by parse_sig");
+                        ensure!(
+                            !ext.fully_connected_only()
+                                || model.is_fully_connected(),
+                            "{ename} is restricted to fully-connected \
+                             models (paper footnote 5); {name} has \
+                             conv/pool layers"
+                        );
+                    }
                     return Ok((
                         model,
                         Request::Train { extensions, batch },
@@ -147,9 +179,9 @@ impl NativeBackend {
         let (model, req) = self.resolve(artifact)?;
         let spec = match &req {
             Request::Eval { batch } => eval_spec(model, artifact, *batch),
-            Request::Train { extensions, batch } => {
-                train_spec(model, artifact, extensions, *batch)
-            }
+            Request::Train { extensions, batch } => train_spec(
+                model, artifact, extensions, *batch, &self.extensions,
+            ),
         };
         Ok((spec, model.clone()))
     }
@@ -169,6 +201,7 @@ impl Backend for NativeBackend {
         Ok(Rc::new(NativeExec {
             spec,
             model,
+            extensions: self.extensions.clone(),
             threads: self.threads,
         }))
     }
@@ -203,9 +236,15 @@ impl Backend for NativeBackend {
         for (m, model) in &self.models {
             names.push(format!("{m}_eval_n256"));
             for sig in LISTED_SIGS {
-                if sig.contains("kfra") && !model.is_fully_connected()
-                {
-                    continue; // paper footnote 5
+                // Paper footnote 5: fully-connected-only extensions
+                // (kfra) are never advertised for conv models.
+                let fc_only = sig.split('+').any(|part| {
+                    self.extensions
+                        .get(part)
+                        .is_some_and(|e| e.fully_connected_only())
+                });
+                if fc_only && !model.is_fully_connected() {
+                    continue;
                 }
                 names.push(format!("{m}_{sig}_n64"));
             }
@@ -225,18 +264,19 @@ fn split_batch(artifact: &str) -> Option<(&str, usize)> {
     Some((&artifact[..pos], digits.parse().ok()?))
 }
 
-/// `"diag_ggn"` / `"batch_grad+variance"` -> extension list; `"grad"`
-/// is the empty signature.
-fn parse_sig(sig: &str) -> Result<Vec<String>> {
+/// `"diag_ggn"` / `"batch_grad+variance"` -> extension list validated
+/// against the registry; `"grad"` is the empty signature.
+fn parse_sig(sig: &str, set: &ExtensionSet) -> Result<Vec<String>> {
     if sig == "grad" {
         return Ok(Vec::new());
     }
     let mut exts = Vec::new();
     for part in sig.split('+') {
         ensure!(
-            NATIVE_EXTENSIONS.contains(&part),
+            set.contains(part),
             "extension {part:?} is not supported by the native backend \
-             (supported: {NATIVE_EXTENSIONS:?})"
+             (registered: {:?})",
+            set.names()
         );
         exts.push(part.to_string());
     }
@@ -246,10 +286,6 @@ fn parse_sig(sig: &str) -> Result<Vec<String>> {
 enum Request {
     Eval { batch: usize },
     Train { extensions: Vec<String>, batch: usize },
-}
-
-fn f32_spec(name: String, shape: Vec<usize>) -> TensorSpec {
-    TensorSpec { name, shape, dtype: "f32".to_string(), init: None }
 }
 
 /// Data/key inputs appended after the parameter specs. `x` uses the
@@ -288,70 +324,27 @@ fn train_spec(
     artifact: &str,
     extensions: &[String],
     batch: usize,
+    set: &ExtensionSet,
 ) -> ArtifactSpec {
-    let has = |e: &str| extensions.iter().any(|x| x == e);
-    let has_key = has("diag_ggn_mc") || has("kfac");
+    let has_key = extensions
+        .iter()
+        .any(|e| set.get(e).is_some_and(|x| x.needs_key()));
     let mut inputs = model.param_specs();
     inputs.extend(data_inputs(model, batch, has_key));
 
     let mut outputs = vec![f32_spec("loss".to_string(), vec![])];
     for blk in model.param_blocks() {
-        let (li, dout) = (blk.li, blk.dout);
         let wsh = &blk.w_shape; // [out, in] or [out_ch, in_ch, k, k]
-        outputs.push(f32_spec(format!("grad/{li}/w"), wsh.clone()));
-        outputs.push(f32_spec(format!("grad/{li}/b"), vec![dout]));
-        for ext in extensions {
-            match ext.as_str() {
-                "batch_grad" => {
-                    let mut bsh = vec![batch];
-                    bsh.extend(wsh);
-                    outputs.push(f32_spec(
-                        format!("batch_grad/{li}/w"),
-                        bsh,
-                    ));
-                    outputs.push(f32_spec(
-                        format!("batch_grad/{li}/b"),
-                        vec![batch, dout],
-                    ));
-                }
-                "batch_l2" => {
-                    outputs.push(f32_spec(
-                        format!("batch_l2/{li}/w"),
-                        vec![batch],
-                    ));
-                    outputs.push(f32_spec(
-                        format!("batch_l2/{li}/b"),
-                        vec![batch],
-                    ));
-                }
-                "sq_moment" | "variance" | "diag_ggn"
-                | "diag_ggn_mc" => {
-                    outputs.push(f32_spec(
-                        format!("{ext}/{li}/w"),
-                        wsh.clone(),
-                    ));
-                    outputs.push(f32_spec(
-                        format!("{ext}/{li}/b"),
-                        vec![dout],
-                    ));
-                }
-                "kfac" | "kflr" | "kfra" => {
-                    outputs.push(f32_spec(
-                        format!("{ext}/{li}/A"),
-                        vec![blk.a_dim, blk.a_dim],
-                    ));
-                    outputs.push(f32_spec(
-                        format!("{ext}/{li}/B"),
-                        vec![dout, dout],
-                    ));
-                    outputs.push(f32_spec(
-                        format!("{ext}/{li}/bias_ggn"),
-                        vec![dout, dout],
-                    ));
-                }
-                other => unreachable!("validated extension {other}"),
-            }
-        }
+        outputs
+            .push(f32_spec(format!("grad/{}/w", blk.li), wsh.clone()));
+        outputs
+            .push(f32_spec(format!("grad/{}/b", blk.li), vec![blk.dout]));
+    }
+    // Every extension declares its own output shapes — the engine
+    // never needs per-quantity knowledge here.
+    for ext in extensions {
+        let e = set.get(ext).expect("validated by parse_sig");
+        outputs.extend(e.output_specs(model, batch));
     }
 
     ArtifactSpec {
@@ -393,11 +386,12 @@ fn eval_spec(model: &Model, artifact: &str, batch: usize)
     }
 }
 
-/// A synthesized computation bound to its model, executing
-/// batch-parallel over `threads` scoped workers.
+/// A synthesized computation bound to its model and extension
+/// registry, executing batch-parallel over `threads` scoped workers.
 pub struct NativeExec {
     spec: ArtifactSpec,
     model: Model,
+    extensions: ExtensionSet,
     threads: usize,
 }
 
@@ -447,8 +441,14 @@ impl Exec for NativeExec {
             "eval" => {
                 self.model.evaluate_threads(params, x, y, threads)?
             }
-            _ => self.model.extended_backward_threads(
-                params, x, y, &self.spec.extensions, key, threads,
+            _ => self.model.extended_backward_with(
+                &self.extensions,
+                params,
+                x,
+                y,
+                &self.spec.extensions,
+                key,
+                threads,
             )?,
         };
         Ok(Outputs::new(map, start.elapsed()))
@@ -479,10 +479,11 @@ mod tests {
         );
         assert_eq!(split_batch("logreg_grad"), None);
         assert_eq!(split_batch("logreg_grad_nX"), None);
-        assert!(parse_sig("grad").unwrap().is_empty());
-        assert_eq!(parse_sig("kfac").unwrap(), vec!["kfac"]);
-        assert!(parse_sig("diag_h").is_err());
-        assert!(parse_sig("grad+bogus").is_err());
+        let set = ExtensionSet::builtin();
+        assert!(parse_sig("grad", &set).unwrap().is_empty());
+        assert_eq!(parse_sig("kfac", &set).unwrap(), vec!["kfac"]);
+        assert!(parse_sig("diag_h", &set).is_err());
+        assert!(parse_sig("grad+bogus", &set).is_err());
     }
 
     #[test]
@@ -621,11 +622,21 @@ mod tests {
         // logreg at batch 8: 8 x 2 x 7,850 MACs < MIN_SHARD_MACS --
         // a thread spawn would cost more than the shard's work.
         let (spec, model) = be.synthesize("logreg_grad_n8").unwrap();
-        let exe = NativeExec { spec, model, threads: 16 };
+        let exe = NativeExec {
+            spec,
+            model,
+            extensions: ExtensionSet::builtin(),
+            threads: 16,
+        };
         assert_eq!(exe.effective_threads(), 1);
         // mlp at batch 128 carries ~28M MACs: full parallelism.
         let (spec, model) = be.synthesize("mlp_grad_n128").unwrap();
-        let exe = NativeExec { spec, model, threads: 16 };
+        let exe = NativeExec {
+            spec,
+            model,
+            extensions: ExtensionSet::builtin(),
+            threads: 16,
+        };
         assert_eq!(exe.effective_threads(), 16);
     }
 

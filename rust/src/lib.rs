@@ -1,24 +1,89 @@
 //! backpack-rs: reproduction of "BackPACK: Packing more into Backprop"
-//! (Dangel, Kunstner & Hennig, ICLR 2020) on a Rust + JAX + Pallas stack.
+//! (Dangel, Kunstner & Hennig, ICLR 2020) on a Rust + JAX + Pallas
+//! stack — usable as a library.
 //!
 //! Layer 3 of the three-layer architecture (see DESIGN.md): a training
 //! and benchmarking coordinator that executes training graphs through
-//! a pluggable [`backend::Backend`]:
+//! a pluggable [`Backend`]:
 //!
 //! * **native** (default) -- forward + generalized backward pass with
-//!   every BackPACK first- and second-order extension in pure Rust,
-//!   zero external dependencies;
+//!   every BackPACK first- and second-order quantity in pure Rust,
+//!   zero external dependencies, batch-parallel over all cores. Each
+//!   quantity is an [`Extension`] module dispatched through an
+//!   [`ExtensionSet`] registry ([`backend::extensions`]), so new
+//!   quantities drop in without engine surgery — the paper's §3
+//!   architecture claim, realized;
 //! * **pjrt** (cargo feature `pjrt`) -- AOT-lowered HLO artifacts
 //!   (produced once by `python/compile/aot.py`) executed through the
 //!   PJRT C API. Python never runs on the training path.
+//!
+//! # Quickstart
+//!
+//! The Rust analogue of the paper's Fig. 1: ONE extended backward
+//! pass returns the gradient **and** every requested quantity.
+//!
+//! ```
+//! use backpack_rs::{Backend, Exec, NativeBackend};
+//! use backpack_rs::coordinator::train::{build_inputs, init_params};
+//! use backpack_rs::data::{DatasetSpec, Synthetic};
+//! use backpack_rs::runtime::Tensor;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let be = NativeBackend::new();
+//! // logreg (Linear(784, 10) + CrossEntropy) with every first-order
+//! // extension in one synthesized graph; any batch size works.
+//! let exe =
+//!     be.load("logreg_batch_grad+batch_l2+sq_moment+variance_n32")?;
+//!
+//! // Synthetic MNIST batch (DESIGN.md §3) + fan-in initialized
+//! // parameters from the artifact spec.
+//! let ds = Synthetic::new(DatasetSpec::by_name("mnist").unwrap(), 0);
+//! let idx: Vec<usize> = (0..32).collect();
+//! let (xv, yv) = ds.batch(0, &idx);
+//! let x = Tensor::from_f32(&[32, 784], xv);
+//! let y = Tensor::from_i32(&[32], yv);
+//! let params = init_params(exe.spec(), 0);
+//!
+//! // ONE extended backward pass.
+//! let out = exe.run(&build_inputs(&params, x, y, None))?;
+//!
+//! // param.grad AND param.variance, like Fig. 1's print.
+//! assert!(out.loss()? > 0.0);
+//! assert_eq!(out.get("grad/0/w")?.shape, vec![10, 784]);
+//! assert_eq!(out.get("variance/0/w")?.shape, vec![10, 784]);
+//! assert_eq!(out.get("batch_l2/0/w")?.shape, vec![32]);
+//! // Variance is non-negative by construction.
+//! assert!(out.get("variance/0/w")?.f32s()?.iter().all(|v| *v >= -1e-6));
+//! # Ok(()) }
+//! ```
+//!
+//! Models come from the registry ([`Model::logreg`], [`Model::mlp`],
+//! the conv zoo) or from [`Model::with_input`] over the [`Layer`]
+//! enum; quantities beyond the built-in nine register through
+//! [`ExtensionSet`] (direct engine calls) or
+//! [`NativeBackend::register_extension`] (served as artifact names) —
+//! see [`backend::extensions`] for a complete user-defined extension.
+
 pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod figures;
 pub mod json;
 pub mod linalg;
 pub mod optim;
 pub mod parallel;
 pub mod runtime;
-pub mod figures;
+
+pub use backend::extensions::{
+    Extension, ExtensionSet, FinishCtx, LayerCtx, LayerOp,
+    PerSampleGrads, Quantities, Reduce, ShardCtx, Walk,
+};
+pub use backend::layers::Layer;
+pub use backend::model::{Model, ParamBlock, NATIVE_EXTENSIONS};
+pub use backend::native::NativeBackend;
+pub use backend::{open, open_with, Backend, Exec, Outputs};
+pub use bench::{BaselineCase, Stats, BENCH_SCHEMA};
+pub use json::Json;
+pub use runtime::{ArtifactSpec, Tensor, TensorSpec};

@@ -6,7 +6,7 @@
 //! dimensions (≤ ~1.7k for All-CNN-C), where a cache-blocked scalar
 //! Cholesky is adequate. The dense `matmul*` kernels below dominate
 //! the native backend's hot call sites; they are cache-blocked
-//! ([`BLOCK`]) and have `*_par` row-split variants (see
+//! (`BLOCK`) and have `*_par` row-split variants (see
 //! `crate::parallel`) that are bit-for-bit equal to the serial
 //! kernels for any thread count.
 
@@ -255,7 +255,7 @@ where
 
 /// [`matmul_tn`] with the output rows split across `threads` scoped
 /// threads (bit-for-bit identical to serial; serial below
-/// [`PAR_MIN_MACS`]).
+/// `PAR_MIN_MACS`).
 pub fn matmul_tn_par(
     a: &[f32], b: &[f32], n: usize, p: usize, q: usize, threads: usize,
 ) -> Vec<f32> {
@@ -315,7 +315,7 @@ fn matmul_nt_rows(
 }
 
 /// [`matmul_nt`] with the output rows split across scoped threads
-/// (bit-for-bit identical to serial; serial below [`PAR_MIN_MACS`]).
+/// (bit-for-bit identical to serial; serial below `PAR_MIN_MACS`).
 pub fn matmul_nt_par(
     a: &[f32], b: &[f32], p: usize, n: usize, q: usize, threads: usize,
 ) -> Vec<f32> {
@@ -371,7 +371,7 @@ fn matmul_rows(
 }
 
 /// [`matmul`] with the output rows split across scoped threads
-/// (bit-for-bit identical to serial; serial below [`PAR_MIN_MACS`]).
+/// (bit-for-bit identical to serial; serial below `PAR_MIN_MACS`).
 pub fn matmul_par(
     a: &[f32], b: &[f32], p: usize, q: usize, r: usize, threads: usize,
 ) -> Vec<f32> {

@@ -19,8 +19,8 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use backpack_rs::backend::{self, Backend as _};
 use backpack_rs::cli::Args;
+use backpack_rs::{open_with, Backend as _};
 use backpack_rs::coordinator::gridsearch::GridPreset;
 use backpack_rs::coordinator::metrics::write_csv;
 use backpack_rs::coordinator::{problems, train, TrainConfig};
@@ -71,7 +71,7 @@ fn main() -> Result<()> {
     let threads = backpack_rs::parallel::resolve_threads(
         args.get_usize("threads", 0)?,
     );
-    let be = backend::open_with(args.get_or("backend", "native"), threads)?;
+    let be = open_with(args.get_or("backend", "native"), threads)?;
     let be = be.as_ref();
     match args.subcommand.as_str() {
         "list" => {
