@@ -1,12 +1,13 @@
 //! Bench: paper Fig. 9 -- exact Hessian diagonal vs GGN diagonal when
-//! the network contains a single sigmoid (residual-factor propagation,
-//! Appendix A.3). Run: `cargo bench --bench fig9_hessian_diag`
+//! the network contains a single sigmoid (signed residual-factor
+//! propagation, Appendix A.3 / DESIGN.md §11). Runs on the default
+//! native backend; `BACKPACK_THREADS=1` gives the serial reference.
+//! Run: `cargo bench --bench fig9_hessian_diag`
 use backpack_rs::figures::timing;
-use backpack_rs::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::open_default()?;
+    let be = backpack_rs::open("native")?;
     let iters = std::env::var("BENCH_ITERS")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(3);
-    timing::fig9(&rt, iters, std::path::Path::new("results"))
+    timing::fig9(be.as_ref(), iters, std::path::Path::new("results"))
 }

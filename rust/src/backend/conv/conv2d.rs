@@ -13,6 +13,12 @@
 //! * gradient         `(1/N) Σ_n G_n U_nᵀ`, bias `(1/N) Σ_n G_n 1`;
 //! * DiagGGN          `(1/N) Σ_{n,c} (Jᵀ S)²` with
 //!                    `(Jᵀ S)[o,j,c] = Σ_p U[j,p] S[(o,p),c]`;
+//! * DiagH residual   the same contraction with a per-(sample,
+//!                    column) sign weight (`diag_sqrt_signed`): the
+//!                    full Hessian's residual factors are indefinite,
+//!                    so each squared column carries the sign of the
+//!                    `σ''(x) ⊙ g` entry it was born from
+//!                    (DESIGN.md §11);
 //! * KFAC/KFLR        `A = (1/N) Σ_n U_n U_nᵀ` (positions folded into
 //!                    the contraction), `B = (1/(N·P)) Σ_n S_n S_nᵀ`
 //!                    (position-averaged), bias GGN from the
@@ -172,10 +178,31 @@ pub fn diag_sqrt(
     cols: usize,
     norm: f32,
 ) -> (Vec<f32>, Vec<f32>) {
+    diag_sqrt_signed(geom, inp, s, ns, cols, norm, None)
+}
+
+/// [`diag_sqrt`] with an optional per-(sample, column) sign weight
+/// `signs [ns · cols]` — the conv extraction rule of `diag_h`'s
+/// residual factors (DESIGN.md §11). Each squared column contributes
+/// `signs[smp·cols + c] · (Jᵀ S)²`; `None` weights every column `+1`
+/// (the PSD square-root-GGN case). The signed sum can be negative:
+/// the full Hessian is indefinite.
+pub fn diag_sqrt_signed(
+    geom: &ConvGeom,
+    inp: &[f32],
+    s: &[f32],
+    ns: usize,
+    cols: usize,
+    norm: f32,
+    signs: Option<&[f32]>,
+) -> (Vec<f32>, Vec<f32>) {
     let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
     let (j, p) = (geom.patch_len(), geom.positions());
     let c_out = geom.out_shape.c;
     debug_assert_eq!(s.len(), ns * fout * cols);
+    if let Some(sg) = signs {
+        debug_assert_eq!(sg.len(), ns * cols);
+    }
     let mut dw = vec![0.0f32; c_out * j];
     let mut db = vec![0.0f32; c_out];
     let mut st = vec![0.0f32; c_out * cols * p];
@@ -195,16 +222,18 @@ pub fn diag_sqrt(
         let v = matmul_nt(&st, &u, c_out * cols, p, j);
         for o in 0..c_out {
             for cc in 0..cols {
+                let w = signs
+                    .map_or(1.0, |sg| sg[smp * cols + cc]);
                 let row = &v[(o * cols + cc) * j..(o * cols + cc + 1) * j];
                 let dst = &mut dw[o * j..(o + 1) * j];
                 for (acc, x) in dst.iter_mut().zip(row) {
-                    *acc += x * x;
+                    *acc += w * x * x;
                 }
                 // Bias Jacobian sums S over positions.
                 let sbar: f32 = (0..p)
                     .map(|q| st[(o * cols + cc) * p + q])
                     .sum();
-                db[o] += sbar * sbar;
+                db[o] += w * sbar * sbar;
             }
         }
     }

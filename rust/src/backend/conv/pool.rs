@@ -2,8 +2,12 @@
 //!
 //! Max pooling's Jacobian is a per-sample selection matrix (one 1 per
 //! output at the window argmax), so every propagation the engine needs
-//! — first-order VJP and the column-carrying square-root-GGN VJP — is
-//! index routing via [`PoolGeom::for_each_max`]. Windows *clip* at the
+//! — first-order VJP and the column-carrying matrix VJPs (square-root
+//! GGN, and `diag_h`'s signed residual factors, which ride the same
+//! `cols` axis) — is index routing via [`PoolGeom::for_each_max`].
+//! Both pooling layers are piecewise linear, so they contribute no
+//! residual term of their own to the full-Hessian recursion
+//! (DESIGN.md §11); they only route factors born above them. Windows *clip* at the
 //! borders instead of padding (equivalent to −∞ padding; TF "same"
 //! pooling), and `ceil` selects the TF/ceil output-size rule
 //! `out = ⌈(in − k)/stride⌉ + 1` the 3c3d net relies on. Ties resolve

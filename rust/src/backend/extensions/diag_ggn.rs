@@ -22,6 +22,66 @@ use super::{f32_spec, Extension, LayerCtx, LayerOp, Quantities, Walk};
 use crate::backend::conv::conv2d;
 use crate::backend::model::Model;
 
+/// The `Linear` diagonal extraction shared by `diag_ggn`(-`_mc`) and
+/// `diag_h` — the FC twin of [`conv2d::diag_sqrt_signed`]: with the
+/// rank-1 Jacobian structure (Eq. 19) the weight diagonal is
+/// `s2ᵀ x² / N` where `s2[n, o] = Σ_c w_c · S[n, o, c]²`, and the
+/// bias diagonal the column sum of `s2 / N`. The per-(sample, column)
+/// weights `signs [n · cols]` carry the residual factors' signs
+/// (DESIGN.md §11); `None` weights every column `+1` (the PSD
+/// square-root-GGN case).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn linear_diag_sqrt_signed(
+    input: &[f32],
+    s: &[f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    cols: usize,
+    norm: f32,
+    signs: Option<&[f32]>,
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(s.len(), n * dout * cols);
+    if let Some(sg) = signs {
+        debug_assert_eq!(sg.len(), n * cols);
+    }
+    // s2[n, o] = Σ_c w_c · S[n, o, c]²
+    let mut s2 = vec![0.0f32; n * dout];
+    for (row, v) in s2.iter_mut().enumerate() {
+        let base = row * cols;
+        *v = match signs {
+            None => {
+                s[base..base + cols].iter().map(|u| u * u).sum()
+            }
+            Some(sg) => {
+                let smp = row / dout;
+                (0..cols)
+                    .map(|c| {
+                        sg[smp * cols + c]
+                            * s[base + c]
+                            * s[base + c]
+                    })
+                    .sum()
+            }
+        };
+    }
+    let x2: Vec<f32> = input.iter().map(|v| v * v).collect();
+    let mut dw = matmul_tn(&s2, &x2, n, dout, din);
+    for v in &mut dw {
+        *v /= norm;
+    }
+    let mut db = vec![0.0f32; dout];
+    for smp in 0..n {
+        for o in 0..dout {
+            db[o] += s2[smp * dout + o];
+        }
+    }
+    for v in &mut db {
+        *v /= norm;
+    }
+    (dw, db)
+}
+
 /// Exact (`diag_ggn`) or Monte-Carlo (`diag_ggn_mc`) GGN diagonal.
 pub struct DiagGgn {
     mc: bool,
@@ -82,31 +142,9 @@ impl Extension for DiagGgn {
                 );
             }
             LayerOp::Linear { din, dout, .. } => {
-                let inp = ctx.input;
-                // s2[n, o] = Σ_c S[n, o, c]²
-                let mut s2 = vec![0.0f32; n * dout];
-                for (row, v) in s2.iter_mut().enumerate() {
-                    let base = row * cols;
-                    *v = s[base..base + cols]
-                        .iter()
-                        .map(|u| u * u)
-                        .sum();
-                }
-                let x2: Vec<f32> =
-                    inp.iter().map(|v| v * v).collect();
-                let mut dw = matmul_tn(&s2, &x2, n, dout, din);
-                for v in &mut dw {
-                    *v /= nf;
-                }
-                let mut db = vec![0.0f32; dout];
-                for smp in 0..n {
-                    for o in 0..dout {
-                        db[o] += s2[smp * dout + o];
-                    }
-                }
-                for v in &mut db {
-                    *v /= nf;
-                }
+                let (dw, db) = linear_diag_sqrt_signed(
+                    ctx.input, s, n, din, dout, cols, nf, None,
+                );
                 out.insert(
                     format!("{name}/{li}/w"),
                     Tensor::from_f32(&[dout, din], dw),

@@ -1,0 +1,251 @@
+//! Exact Hessian diagonal (`diag_h`, paper Fig. 9 / Appendix A.3) via
+//! second-order residual propagation.
+//!
+//! The full Hessian of the batch-mean loss decomposes per sample into
+//! the GGN plus one residual term per module (the HBP recursion,
+//! DESIGN.md §11):
+//!
+//! ```text
+//! ∇²_x ℓ = Jᵀ (∇²_z ℓ) J + Σ_k (∇²_x z_k) · (∇_z ℓ)_k
+//! ```
+//!
+//! Affine maps (`Linear`, `Conv2d`), `Flatten`, the pooling layers and
+//! ReLU are (piecewise) linear — their residual vanishes — so the only
+//! residual terms are the elementwise `diag(σ''(x) ⊙ g)` of curved
+//! activations (sigmoid). Each such term is an indefinite diagonal
+//! matrix; writing it as a signed square `diag(√|r|) · diag(sign r) ·
+//! diag(√|r|)ᵀ` lets the engine push it through the *same* transposed
+//! Jacobians as the exact square-root GGN, one column per feature,
+//! carrying the per-(sample, column) sign on the side
+//! ([`Extension::residual`]).
+//!
+//! `DiagH` therefore declares [`Walk::SqrtGgn`] (its GGN part shares
+//! the exact-`S` propagation with `diag_ggn`/`kflr` — one walk, no
+//! duplicate work) and [`Extension::needs_residual`]; its two hooks
+//! accumulate into the same `diag_h/{layer}/{w|b}` keys:
+//!
+//! * [`Extension::sqrt_ggn`] — the PSD part, the DiagGGN contraction
+//!   (Eq. 19) written into `diag_h/*`;
+//! * [`Extension::residual`] — the same contraction per signed factor,
+//!   with each squared column weighted by its sign.
+//!
+//! Both hooks funnel into one extraction per layer family, shared
+//! with `diag_ggn` so the Eq.-19 rules live in exactly one place:
+//! `diag_ggn::linear_diag_sqrt_signed` for `Linear`,
+//! [`conv2d::diag_sqrt_signed`] for `Conv2d`.
+//!
+//! Convention (DESIGN.md §4): `diag(H)` with `H = (1/N) Σ_n ∇²ℓ_n` —
+//! the `1/N` inside, matching `diag_ggn`, so shard outputs sum-reduce
+//! (DESIGN.md §9). On all-ReLU networks every residual is zero and
+//! `diag_h` coincides with `diag_ggn` (asserted in
+//! `tests/conv_native.rs`); the Fig. 9 cost gap appears exactly when a
+//! sigmoid inserts factors whose column count is the activation width.
+
+use crate::runtime::{Tensor, TensorSpec};
+
+use super::{
+    diag_ggn, f32_spec, Extension, LayerCtx, LayerOp, Quantities,
+    Walk,
+};
+use crate::backend::conv::conv2d;
+use crate::backend::model::Model;
+
+/// Exact Hessian diagonal: GGN part + signed residual recursion.
+pub struct DiagH;
+
+/// `out[key] += vals`, inserting on first touch — the GGN hook fires
+/// before the residual hooks at each layer, so both accumulate into
+/// one tensor.
+fn accumulate(
+    out: &mut Quantities,
+    key: String,
+    shape: &[usize],
+    vals: Vec<f32>,
+) {
+    match out.get_mut(&key) {
+        Some(acc) => {
+            for (a, v) in acc
+                .f32s_mut()
+                .expect("diag_h tensors are f32")
+                .iter_mut()
+                .zip(&vals)
+            {
+                *a += v;
+            }
+        }
+        None => {
+            out.insert(key, Tensor::from_f32(shape, vals));
+        }
+    }
+}
+
+impl DiagH {
+    /// Shared extraction of one propagated factor: column-squared
+    /// contraction against the layer input, each column weighted by
+    /// `signs` (`None` = all `+1`, the PSD main walk).
+    fn contract(
+        &self,
+        ctx: &LayerCtx,
+        s: &[f32],
+        cols: usize,
+        signs: Option<&[f32]>,
+        out: &mut Quantities,
+    ) {
+        let (li, n, nf) = (ctx.li, ctx.n, ctx.norm);
+        match ctx.op {
+            LayerOp::Conv { geom, .. } => {
+                let (dw, db) = conv2d::diag_sqrt_signed(
+                    geom, ctx.input, s, n, cols, nf, signs,
+                );
+                accumulate(
+                    out,
+                    format!("diag_h/{li}/w"),
+                    &geom.w_shape(),
+                    dw,
+                );
+                accumulate(
+                    out,
+                    format!("diag_h/{li}/b"),
+                    &[geom.out_shape.c],
+                    db,
+                );
+            }
+            LayerOp::Linear { din, dout, .. } => {
+                let (dw, db) = diag_ggn::linear_diag_sqrt_signed(
+                    ctx.input, s, n, din, dout, cols, nf, signs,
+                );
+                accumulate(
+                    out,
+                    format!("diag_h/{li}/w"),
+                    &[dout, din],
+                    dw,
+                );
+                accumulate(out, format!("diag_h/{li}/b"), &[dout], db);
+            }
+        }
+    }
+}
+
+impl Extension for DiagH {
+    fn name(&self) -> &str {
+        "diag_h"
+    }
+
+    fn walk(&self) -> Walk {
+        Walk::SqrtGgn
+    }
+
+    fn needs_residual(&self) -> bool {
+        true
+    }
+
+    fn sqrt_ggn(
+        &self,
+        ctx: &LayerCtx,
+        s: &[f32],
+        cols: usize,
+        out: &mut Quantities,
+    ) {
+        self.contract(ctx, s, cols, None, out);
+    }
+
+    fn residual(
+        &self,
+        ctx: &LayerCtx,
+        s: &[f32],
+        cols: usize,
+        signs: &[f32],
+        out: &mut Quantities,
+    ) {
+        self.contract(ctx, s, cols, Some(signs), out);
+    }
+
+    fn output_specs(&self, model: &Model, _batch: usize) -> Vec<TensorSpec> {
+        let mut specs = Vec::new();
+        for blk in model.param_blocks() {
+            specs.push(f32_spec(
+                format!("diag_h/{}/w", blk.li),
+                blk.w_shape.clone(),
+            ));
+            specs.push(f32_spec(
+                format!("diag_h/{}/b", blk.li),
+                vec![blk.dout],
+            ));
+        }
+        specs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_inserts_then_adds() {
+        let mut out = Quantities::new();
+        accumulate(&mut out, "diag_h/0/b".into(), &[2], vec![1.0, 2.0]);
+        accumulate(
+            &mut out,
+            "diag_h/0/b".into(),
+            &[2],
+            vec![0.5, -2.5],
+        );
+        let t = out.get("diag_h/0/b").unwrap();
+        assert_eq!(t.shape, vec![2]);
+        // The residual part may drive entries negative: the full
+        // Hessian is indefinite.
+        assert_eq!(t.f32s().unwrap(), &[1.5, -0.5]);
+    }
+
+    #[test]
+    fn linear_contraction_matches_dense_reference_with_signs() {
+        // 2 samples, dout=2, cols=2, din=3: check the signed s2
+        // contraction against explicit loops.
+        let ctx_input = [
+            1.0f32, -2.0, 0.5, // sample 0
+            0.0, 1.0, 2.0, // sample 1
+        ];
+        let op = LayerOp::Linear {
+            din: 3,
+            dout: 2,
+            w: &[0.0; 6],
+            b: &[0.0; 2],
+        };
+        let ctx = LayerCtx::new(4, op, &ctx_input, 2, 2.0);
+        let s = [
+            0.3f32, -0.1, // s0 o0
+            0.2, 0.4, // s0 o1
+            -0.5, 0.6, // s1 o0
+            0.1, 0.0, // s1 o1
+        ];
+        let signs = [1.0f32, -1.0, -1.0, 1.0];
+        let mut out = Quantities::new();
+        DiagH.residual(&ctx, &s, 2, &signs, &mut out);
+        let dw = out.get("diag_h/4/w").unwrap().f32s().unwrap();
+        let db = out.get("diag_h/4/b").unwrap().f32s().unwrap();
+        // Dense reference.
+        let mut want_w = vec![0.0f32; 6];
+        let mut want_b = vec![0.0f32; 2];
+        for smp in 0..2usize {
+            for o in 0..2usize {
+                let s2: f32 = (0..2)
+                    .map(|c| {
+                        signs[smp * 2 + c]
+                            * s[(smp * 2 + o) * 2 + c].powi(2)
+                    })
+                    .sum();
+                want_b[o] += s2 / 2.0;
+                for i in 0..3usize {
+                    want_w[o * 3 + i] +=
+                        s2 * ctx_input[smp * 3 + i].powi(2) / 2.0;
+                }
+            }
+        }
+        for (got, want) in dw.iter().zip(&want_w) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+        for (got, want) in db.iter().zip(&want_b) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+}

@@ -14,7 +14,11 @@
 //! * which backward [`Walk`] feeds it (the per-sample output
 //!   gradients `g [N, F]` of Eq. 3, the exact or Monte-Carlo
 //!   square-root GGN `S [N, F, C]` of Eqs. 18/20, or KFRA's
-//!   whole-shard batch averages of Eq. 24);
+//!   whole-shard batch averages of Eq. 24) — and, via
+//!   [`Extension::needs_residual`], whether the exact walk should
+//!   additionally carry the full Hessian's signed residual factors
+//!   (`diag_h`, DESIGN.md §11), delivered per layer through the
+//!   [`Extension::residual`] hook;
 //! * a per-layer hook ([`Extension::first_order`] /
 //!   [`Extension::sqrt_ggn`]) receiving a [`LayerCtx`] — the layer's
 //!   operator view, its saved forward input, and the shard/global
@@ -40,6 +44,7 @@
 //! | `variance`   | [`first_order`] | `(1/N)Σ_n [∇ℓ_n]² − [∇L]²` |
 //! | `diag_ggn`   | [`diag_ggn`]    | `diag(G)`, `G = (1/N)Σ JᵀHJ` (Eq. 19) |
 //! | `diag_ggn_mc`| [`diag_ggn`]    | Monte-Carlo `diag(G)` (Eq. 20) |
+//! | `diag_h`     | [`diag_h`]      | `diag(H)`, `H = (1/N)Σ ∇²ℓ_n` (Fig. 9) |
 //! | `kfac`       | [`kron`]        | `G ≈ A ⊗ B`, MC-sampled `B` (Eq. 23) |
 //! | `kflr`       | [`kron`]        | `G ≈ A ⊗ B`, exact full-rank `B` |
 //! | `kfra`       | [`kron`]        | batch-averaged `Ḡ` recursion (Eq. 24) |
@@ -142,10 +147,12 @@ use super::model::Model;
 use crate::runtime::{Tensor, TensorSpec};
 
 pub mod diag_ggn;
+pub mod diag_h;
 pub mod first_order;
 pub mod kron;
 
 pub use diag_ggn::DiagGgn;
+pub use diag_h::DiagH;
 pub use first_order::{BatchGrad, BatchL2, SqMoment, Variance};
 pub use kron::{Kfac, Kflr, Kfra};
 
@@ -154,12 +161,12 @@ pub use kron::{Kfac, Kflr, Kfra};
 pub type Quantities = BTreeMap<String, Tensor>;
 
 /// Extension names built into [`ExtensionSet::builtin`] — the paper's
-/// nine quantities, in registry (hook-dispatch) order. `diag_h` stays
-/// PJRT-only: its signed residual-factor propagation is the one
-/// quantity the native engine has no closed-form walk for.
+/// ten quantities, in registry (hook-dispatch) order. `diag_h` rides
+/// the exact square-root-GGN walk and additionally consumes the signed
+/// residual factors of the full-Hessian recursion (DESIGN.md §11).
 pub const BUILTIN_NAMES: &[&str] = &[
     "batch_grad", "batch_l2", "sq_moment", "variance",
-    "diag_ggn", "diag_ggn_mc", "kfac", "kflr", "kfra",
+    "diag_ggn", "diag_ggn_mc", "diag_h", "kfac", "kflr", "kfra",
 ];
 
 /// Which propagated backward quantity feeds an extension's layer
@@ -436,6 +443,17 @@ pub trait Extension: Send + Sync {
         self.walk() == Walk::SqrtGgnMc
     }
 
+    /// True when the extension consumes the signed residual factors of
+    /// the full-Hessian recursion (`diag_h`, DESIGN.md §11). Only
+    /// meaningful for [`Walk::SqrtGgn`] extensions: the engine then
+    /// records `σ''(x) ⊙ g` at every curved activation during the
+    /// first-order walk, propagates one signed diagonal square-root
+    /// factor per such layer alongside the exact `S`, and delivers
+    /// each factor through [`Extension::residual`].
+    fn needs_residual(&self) -> bool {
+        false
+    }
+
     /// Layer hook for [`Walk::Grad`] extensions: `g [n, dout_feat]`
     /// are the (unnormalized) per-sample gradients of the loss w.r.t.
     /// this layer's output.
@@ -459,6 +477,25 @@ pub trait Extension: Send + Sync {
         out: &mut Quantities,
     ) {
         let _ = (ctx, s, cols, out);
+    }
+
+    /// Layer hook for [`Extension::needs_residual`] extensions: one
+    /// signed residual factor of the full-Hessian recursion, in the
+    /// same `[n, dout_feat, cols]` layout as [`Extension::sqrt_ggn`]'s
+    /// `s`, plus the per-(sample, column) sign weights
+    /// `signs [n · cols]` (±1; the factor value already carries
+    /// `√|σ''(x) ⊙ g|`). Called once per live factor per parameterized
+    /// layer, *after* `sqrt_ggn` at the same layer, so implementations
+    /// accumulate into the keys the main walk created.
+    fn residual(
+        &self,
+        ctx: &LayerCtx,
+        s: &[f32],
+        cols: usize,
+        signs: &[f32],
+        out: &mut Quantities,
+    ) {
+        let _ = (ctx, s, cols, signs, out);
     }
 
     /// Whole-shard hook for [`Walk::Shard`] extensions, called once
@@ -520,7 +557,7 @@ impl ExtensionSet {
         ExtensionSet { exts: Vec::new() }
     }
 
-    /// The paper's nine quantities ([`BUILTIN_NAMES`], in that order).
+    /// The paper's ten quantities ([`BUILTIN_NAMES`], in that order).
     pub fn builtin() -> ExtensionSet {
         let mut set = ExtensionSet::empty();
         set.register(BatchGrad);
@@ -529,6 +566,7 @@ impl ExtensionSet {
         set.register(Variance);
         set.register(DiagGgn::exact());
         set.register(DiagGgn::mc());
+        set.register(DiagH);
         set.register(Kfac);
         set.register(Kflr);
         set.register(Kfra);
@@ -641,12 +679,19 @@ mod tests {
         let set = ExtensionSet::builtin();
         assert_eq!(set.names(), BUILTIN_NAMES.to_vec());
         assert!(set.contains("kfac"));
-        assert!(!set.contains("diag_h"));
+        assert!(set.contains("diag_h"));
         assert!(set.get("kfra").unwrap().fully_connected_only());
         assert!(set.get("kfac").unwrap().needs_key());
         assert!(set.get("diag_ggn_mc").unwrap().needs_key());
         assert!(!set.get("diag_ggn").unwrap().needs_key());
         assert!(!set.get("batch_grad").unwrap().needs_key());
+        // diag_h: exact walk + residual factors, no MC key.
+        let dh = set.get("diag_h").unwrap();
+        assert_eq!(dh.walk(), Walk::SqrtGgn);
+        assert!(dh.needs_residual());
+        assert!(!dh.needs_key());
+        assert!(!dh.fully_connected_only());
+        assert!(!set.get("diag_ggn").unwrap().needs_residual());
     }
 
     #[test]
@@ -661,7 +706,7 @@ mod tests {
             vec!["batch_grad", "kfac"]
         );
         let err = set
-            .select(&["diag_h".to_string()])
+            .select(&["hessian".to_string()])
             .unwrap_err()
             .to_string();
         assert!(err.contains("not supported"), "{err}");
@@ -674,6 +719,7 @@ mod tests {
         assert_eq!(set.reduce("batch_l2/2/b"), Reduce::Concat);
         assert_eq!(set.reduce("grad/0/w"), Reduce::Sum);
         assert_eq!(set.reduce("sq_moment/0/w"), Reduce::Sum);
+        assert_eq!(set.reduce("diag_h/0/w"), Reduce::Sum);
         assert_eq!(set.reduce("kfac/0/A"), Reduce::Sum);
         assert_eq!(set.reduce("__kfra/h"), Reduce::Sum);
         assert_eq!(set.reduce("loss"), Reduce::Sum);

@@ -115,6 +115,30 @@ impl Layer {
             _ => unreachable!("only activations have σ'"),
         }
     }
+
+    /// True when σ''(x) is not identically zero — the layers whose
+    /// residual term `diag(σ''(x) ⊙ g)` feeds the full-Hessian
+    /// recursion behind `diag_h` (DESIGN.md §11). ReLU is piecewise
+    /// linear (σ'' = 0 almost everywhere, the autodiff convention), so
+    /// on all-ReLU networks DiagH coincides with DiagGGN.
+    pub fn has_curvature(&self) -> bool {
+        matches!(self, Layer::Sigmoid)
+    }
+
+    /// Elementwise second derivative σ''(x) at the layer *input*.
+    pub fn d2_act(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            Layer::Relu => vec![0.0; x.len()],
+            Layer::Sigmoid => x
+                .iter()
+                .map(|&v| {
+                    let s = sigmoid(v);
+                    s * (1.0 - s) * (1.0 - 2.0 * s)
+                })
+                .collect(),
+            _ => unreachable!("only activations have σ''"),
+        }
+    }
 }
 
 #[inline]
@@ -189,5 +213,28 @@ mod tests {
             let fd = (sigmoid(v + eps) - sigmoid(v - eps)) / (2.0 * eps);
             assert!((d[i] - fd).abs() < 1e-4, "σ'({v}): {} vs {fd}", d[i]);
         }
+    }
+
+    #[test]
+    fn second_derivatives_match_finite_differences_of_the_first() {
+        let x = [-2.0f32, -0.3, 0.4, 1.7];
+        let d2 = Layer::Sigmoid.d2_act(&x);
+        let eps = 1e-3f32;
+        for (i, &v) in x.iter().enumerate() {
+            let sp = Layer::Sigmoid.d_act(&[v + eps])[0];
+            let sm = Layer::Sigmoid.d_act(&[v - eps])[0];
+            let fd = (sp - sm) / (2.0 * eps);
+            assert!(
+                (d2[i] - fd).abs() < 1e-4,
+                "σ''({v}): {} vs fd {fd}",
+                d2[i]
+            );
+        }
+        // σ'' changes sign at 0 — the reason diag_h factors are signed.
+        assert!(d2[0] > 0.0 && d2[3] < 0.0);
+        assert!(Layer::Sigmoid.has_curvature());
+        // ReLU is piecewise linear: zero curvature everywhere.
+        assert!(!Layer::Relu.has_curvature());
+        assert_eq!(Layer::Relu.d2_act(&x), vec![0.0; 4]);
     }
 }

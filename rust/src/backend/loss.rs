@@ -11,6 +11,14 @@
 //!                        E[S̃ S̃ᵀ] = ∇²_f ℓ_n: ŷ ~ Cat(p),
 //!                        s̃ = (p − e_ŷ)/√M (Eq. 20-21),
 //! * `hessian_mean`    -- 1/N Σ_n ∇²_f ℓ_n (Eq. 24b, KFRA's Ḡ^(L)).
+//!
+//! `sqrt_hessian` is also the root of the full-Hessian (`diag_h`)
+//! recursion (DESIGN.md §11): softmax cross-entropy is twice
+//! differentiable in the logits and `S Sᵀ` *is* its complete second
+//! derivative -- the loss contributes no residual term of its own, so
+//! the exact square-root walk seeds DiagH and the only signed residual
+//! factors are born at curved activations
+//! ([`crate::backend::layers::Layer::d2_act`]).
 
 use crate::data::{splitmix64, Rng};
 

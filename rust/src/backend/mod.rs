@@ -15,11 +15,13 @@
 //!   an [`ExtensionSet`](extensions::ExtensionSet) registry --
 //!   user-defined quantities drop in without engine changes. Every
 //!   problem in
-//!   `coordinator::problems::PROBLEMS` is servable. Zero external
-//!   dependencies; the default.
+//!   `coordinator::problems::PROBLEMS` and all ten paper quantities
+//!   (including `diag_h`'s second-order residual propagation,
+//!   DESIGN.md §11) are servable. Zero external dependencies; the
+//!   default.
 //! * `runtime::Runtime` (behind the `pjrt` cargo feature) -- executes
-//!   AOT-lowered HLO artifacts through the PJRT C API (and the
-//!   `diag_h` extension, which has no native walk).
+//!   AOT-lowered HLO artifacts through the PJRT C API; a cross-check
+//!   path for the same quantity grid.
 //!
 //! Both return the same named [`Outputs`]: `loss`, `grad/*`, and the
 //! extension quantities (`batch_grad/*`, `sq_moment/*`, `variance/*`,

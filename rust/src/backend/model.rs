@@ -14,10 +14,16 @@
 //!    moment, variance -- Table 1 / Appendix A.1);
 //! 2. **second-order** backward walks (Fig. 5) propagating the
 //!    symmetric loss-Hessian factorization `S [N, F, C]` (Eq. 18) --
-//!    exact ([`Walk::SqrtGgn`]: DiagGGN, KFLR) or Monte-Carlo
+//!    exact ([`Walk::SqrtGgn`]: DiagGGN, KFLR, DiagH) or Monte-Carlo
 //!    ([`Walk::SqrtGgnMc`]: DiagGGN-MC, KFAC), one shared propagation
 //!    per variant -- and a whole-shard hook for KFRA's batch-averaged
-//!    curvature `Ḡ [h, h]` (Eq. 24, [`Walk::Shard`]).
+//!    curvature `Ḡ [h, h]` (Eq. 24, [`Walk::Shard`]). When a
+//!    [`Extension::needs_residual`] module is active (`diag_h`), the
+//!    exact walk additionally carries the full Hessian's signed
+//!    residual factors: the first-order walk records `σ''(x) ⊙ g` at
+//!    every curved activation, each such layer births one signed
+//!    diagonal square-root factor, and the factors ride the same
+//!    transposed Jacobians as `S` (DESIGN.md §11).
 //!
 //! Convolutions lower to the linear case by im2col
 //! (`backend/conv/`, DESIGN.md §6); pooling layers propagate by index
@@ -73,11 +79,11 @@ use crate::runtime::{Init, Tensor, TensorData, TensorSpec};
 /// Monte-Carlo rank of the DiagGGN-MC / KFAC factorization (paper: 1).
 pub const MC_SAMPLES: usize = 1;
 
-/// Extensions the native engine ships out of the box (`diag_h` stays
-/// PJRT-only: its signed residual-factor propagation is the one
-/// quantity this engine has no closed-form walk for). `kfra` is
-/// additionally restricted to fully-connected models (paper
-/// footnote 5). The canonical list lives in the extension registry
+/// Extensions the native engine ships out of the box — all ten paper
+/// quantities, including `diag_h`'s signed residual-factor
+/// propagation (DESIGN.md §11). `kfra` is restricted to
+/// fully-connected models (paper footnote 5). The canonical list
+/// lives in the extension registry
 /// ([`super::extensions::BUILTIN_NAMES`]); user-defined quantities
 /// register through [`ExtensionSet`] / `NativeBackend`.
 pub use super::extensions::BUILTIN_NAMES as NATIVE_EXTENSIONS;
@@ -236,6 +242,23 @@ impl Model {
             ],
         )
         .expect("static model")
+    }
+
+    /// The paper's Fig. 9 variant of 3c3d: "a single sigmoid
+    /// activation function before the last classification layer"
+    /// (same 895,210 parameters; the ReLU after `Linear(512, 256)`
+    /// becomes `Sigmoid`). The sigmoid's nonzero second derivative is
+    /// what makes DiagH propagate residual factors — on the all-ReLU
+    /// `3c3d`, DiagH and DiagGGN coincide.
+    pub fn conv_3c3d_sigmoid() -> Model {
+        let base = Model::conv_3c3d();
+        let mut layers = base.layers;
+        // The activation between the last two Linear layers.
+        let pos = layers.len() - 2;
+        assert_eq!(layers[pos], Layer::Relu);
+        layers[pos] = Layer::Sigmoid;
+        Model::with_input("3c3d_sigmoid", Shape::new(3, 32, 32), layers)
+            .expect("static model")
     }
 
     /// All-CNN-C on CIFAR-100 (1,387,108 parameters at any input
@@ -796,8 +819,23 @@ impl Model {
             .copied()
             .filter(|e| e.walk() == Walk::Grad)
             .collect();
+        // Residual seeds of the full-Hessian recursion (diag_h,
+        // DESIGN.md §11): at every curved activation record
+        // r = σ''(x) ⊙ g, where g is the loss gradient w.r.t. the
+        // activation *output* (the walk state at the top of the
+        // iteration) and σ'' is evaluated at its input. The exact
+        // walk below births one signed factor per recorded layer.
+        let need_res = active.iter().any(|e| e.needs_residual());
+        let mut res_seeds: Vec<Option<Vec<f32>>> =
+            vec![None; self.layers.len()];
         let mut g = ce.grad(logits, y, ns, c); // ∇_f ℓ_n, [ns, C]
         for li in (0..self.layers.len()).rev() {
+            if need_res && self.layers[li].has_curvature() {
+                let d2 = self.layers[li].d2_act(&acts[li]);
+                res_seeds[li] = Some(
+                    d2.iter().zip(&g).map(|(a, b)| a * b).collect(),
+                );
+            }
             if let Some(op) = &ops[li] {
                 let ctx = LayerCtx::new(li, *op, &acts[li], ns, norm);
                 self.grad_at(&ctx, &g, !fo.is_empty(), &mut out);
@@ -812,7 +850,10 @@ impl Model {
 
         // ---- second-order backward walks (Eq. 18 / Fig. 5) ---------
         // One shared propagation per square-root variant: e.g.
-        // diag_ggn and kflr extract from the same exact-S walk.
+        // diag_ggn, kflr and diag_h's GGN part extract from the same
+        // exact-S walk. Residual factors (diag_h) ride the exact walk
+        // only: they are born at curved activations from the recorded
+        // seeds and propagate through the same transposed Jacobians.
         for (walk, exact) in
             [(Walk::SqrtGgn, true), (Walk::SqrtGgnMc, false)]
         {
@@ -824,6 +865,16 @@ impl Model {
             if users.is_empty() {
                 continue;
             }
+            let res_users: Vec<&dyn Extension> = if exact {
+                users
+                    .iter()
+                    .copied()
+                    .filter(|e| e.needs_residual())
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let mut extras: Vec<ResidualFactor> = Vec::new();
             let (mut s, cols) =
                 self.init_sqrt(&ce, logits, ns, exact, key, range.start);
             for li in (0..self.layers.len()).rev() {
@@ -833,11 +884,34 @@ impl Model {
                     for e in &users {
                         e.sqrt_ggn(&ctx, &s, cols, &mut out);
                     }
+                    for e in &res_users {
+                        for f in &extras {
+                            e.residual(
+                                &ctx, &f.s, f.cols, &f.signs, &mut out,
+                            );
+                        }
+                    }
                 }
                 if li > 0 {
                     s = self.mat_vjp_input(
                         li, ops, geoms, &acts, dims, s, ns, cols,
                     );
+                    for f in &mut extras {
+                        let fs = std::mem::take(&mut f.s);
+                        f.s = self.mat_vjp_input(
+                            li, ops, geoms, &acts, dims, fs, ns,
+                            f.cols,
+                        );
+                    }
+                    if !res_users.is_empty() {
+                        if let Some(r) = &res_seeds[li] {
+                            // Born at the activation's *input* — the
+                            // coordinates the walk state now lives in.
+                            extras.push(ResidualFactor::diag(
+                                r, ns, dims[li],
+                            ));
+                        }
+                    }
                 }
             }
         }
@@ -1059,6 +1133,37 @@ impl Model {
     }
 }
 
+/// One signed residual factor of the full-Hessian recursion
+/// (DESIGN.md §11), in flight during the exact square-root walk: the
+/// factor matrix `s [n, F, cols]` (layout identical to the propagated
+/// `S`) and the per-(sample, column) signs it was born with. The
+/// represented Hessian component is
+/// `Σ_c signs[n,c] · s[n,·,c] s[n,·,c]ᵀ`; transposed Jacobians act on
+/// `s` columnwise and never mix columns, so the signs are invariant
+/// along the walk.
+struct ResidualFactor {
+    s: Vec<f32>,
+    cols: usize,
+    signs: Vec<f32>,
+}
+
+impl ResidualFactor {
+    /// Factor for one curved activation's residual `diag(r)` with
+    /// `r = σ''(x) ⊙ g [ns·f]`: a diagonal square root `√|r|` with
+    /// `cols = f` columns plus the signs of `r` (`signum`; zero
+    /// entries keep a zero factor value, so their sign is inert).
+    fn diag(r: &[f32], ns: usize, f: usize) -> ResidualFactor {
+        debug_assert_eq!(r.len(), ns * f);
+        let mut s = vec![0.0f32; ns * f * f];
+        let mut signs = vec![0.0f32; ns * f];
+        for (idx, &rv) in r.iter().enumerate() {
+            s[idx * f + idx % f] = rv.abs().sqrt();
+            signs[idx] = rv.signum();
+        }
+        ResidualFactor { s, cols: f, signs }
+    }
+}
+
 /// Reduce shard outputs (shards arrive in sample order) by each key's
 /// [`Extension::reduce`] rule: [`Reduce::Concat`] keys concatenate
 /// along the batch axis; everything else -- already normalized by the
@@ -1188,6 +1293,17 @@ mod tests {
         let m = Model::conv_3c3d();
         assert_eq!(m.num_params(), 895_210);
         assert_eq!((m.classes, m.in_dim), (10, 3072));
+        // The Fig. 9 variant swaps one activation, not one parameter.
+        let m = Model::conv_3c3d_sigmoid();
+        assert_eq!(m.num_params(), 895_210);
+        assert_eq!(m.name, "3c3d_sigmoid");
+        let pos = m.layers.len() - 2;
+        assert_eq!(m.layers[pos], Layer::Sigmoid);
+        assert_eq!(
+            m.layers.iter().filter(|l| l.has_curvature()).count(),
+            1,
+            "exactly one sigmoid (Fig. 9 configuration)"
+        );
         // All-CNN-C's count is spatial-size-invariant.
         for side in [16usize, 32] {
             let m = Model::allcnnc(side);
@@ -1332,12 +1448,89 @@ mod tests {
         let m = tiny();
         let params = tiny_params(&m, 2);
         let (x, y) = batch(&m, 4, 2);
-        let exts = vec!["diag_h".to_string()];
+        let exts = vec!["hessian".to_string()];
         let err = m
             .extended_backward(&params, &x, &y, &exts, None)
             .unwrap_err()
             .to_string();
         assert!(err.contains("not supported"), "{err}");
+    }
+
+    #[test]
+    fn diag_h_equals_diag_ggn_on_piecewise_linear_models() {
+        // ReLU's σ'' is identically zero, so no residual factors are
+        // born and the Hessian diagonal IS the GGN diagonal — the
+        // identity DESIGN.md §11 documents.
+        let m = Model::new(
+            "tinyrelu",
+            5,
+            vec![
+                Layer::Linear { in_dim: 5, out_dim: 4 },
+                Layer::Relu,
+                Layer::Linear { in_dim: 4, out_dim: 3 },
+            ],
+        )
+        .unwrap();
+        let params = tiny_params(&m, 21);
+        let (x, y) = batch(&m, 6, 21);
+        let exts =
+            vec!["diag_h".to_string(), "diag_ggn".to_string()];
+        let out = m
+            .extended_backward(&params, &x, &y, &exts, None)
+            .unwrap();
+        for li in [0usize, 2] {
+            for part in ["w", "b"] {
+                let h = out[&format!("diag_h/{li}/{part}")]
+                    .f32s()
+                    .unwrap();
+                let g = out[&format!("diag_ggn/{li}/{part}")]
+                    .f32s()
+                    .unwrap();
+                for (u, v) in h.iter().zip(g) {
+                    assert!(
+                        (u - v).abs() <= 1e-6 * (1.0 + u.abs()),
+                        "diag_h/{li}/{part}: {u} vs diag_ggn {v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diag_h_differs_from_diag_ggn_past_a_sigmoid() {
+        // Below tiny()'s sigmoid the residual term is active: layers
+        // 0's Hessian diagonal must NOT equal its GGN diagonal, while
+        // layer 2 (above the sigmoid, linear in its own weights) must
+        // agree exactly.
+        let m = tiny();
+        let params = tiny_params(&m, 22);
+        let (x, y) = batch(&m, 6, 22);
+        let exts =
+            vec!["diag_h".to_string(), "diag_ggn".to_string()];
+        let out = m
+            .extended_backward(&params, &x, &y, &exts, None)
+            .unwrap();
+        let h0 = out["diag_h/0/w"].f32s().unwrap();
+        let g0 = out["diag_ggn/0/w"].f32s().unwrap();
+        let max_rel = h0
+            .iter()
+            .zip(g0)
+            .map(|(u, v)| (u - v).abs() / (1.0 + v.abs()))
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_rel > 1e-4,
+            "residual term had no effect below the sigmoid \
+             (max rel diff {max_rel})"
+        );
+        let h2 = out["diag_h/2/w"].f32s().unwrap();
+        let g2 = out["diag_ggn/2/w"].f32s().unwrap();
+        for (u, v) in h2.iter().zip(g2) {
+            assert!(
+                (u - v).abs() <= 1e-6 * (1.0 + u.abs()),
+                "above the sigmoid diag_h must equal diag_ggn: \
+                 {u} vs {v}"
+            );
+        }
     }
 
     #[test]
@@ -1347,7 +1540,7 @@ mod tests {
         let (x, y) = batch(&m, 7, 9); // 7 samples: uneven shards
         let exts: Vec<String> =
             ["batch_grad", "batch_l2", "variance", "diag_ggn_mc",
-             "kfac", "kfra"]
+             "diag_h", "kfac", "kfra"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect();

@@ -13,12 +13,14 @@
 //! Because graphs are synthesized, *any* batch size works and there is
 //! no compile step: `load` is O(1) and `run` does the actual math via
 //! `model::Model::extended_backward`. The registry ships the paper's
-//! full model zoo: the fully-connected `logreg` and `mlp`, and the
+//! full model zoo: the fully-connected `logreg` and `mlp`, the
 //! convolutional `2c2d`, `3c3d` and `allcnnc{16,32}` (im2col lowering
 //! in `backend/conv/`; side-parameterized models are keyed
-//! `{model}{side}`). Every problem in `coordinator/problems.rs` is
-//! trainable here with zero external dependencies; `kfra` stays
-//! fully-connected-only (paper footnote 5) and `diag_h` PJRT-only.
+//! `{model}{side}`), and the Fig. 9 variant `3c3d_sigmoid`. Every
+//! problem in `coordinator/problems.rs` and every one of the ten
+//! paper quantities — including `diag_h`'s residual recursion — is
+//! servable here with zero external dependencies; `kfra` stays
+//! fully-connected-only (paper footnote 5).
 //! Extraction rules live in the extension registry
 //! (`backend/extensions/`): a signature part is valid exactly when an
 //! [`Extension`] with that name is registered, and its output shapes
@@ -41,7 +43,7 @@ use crate::runtime::{ArtifactSpec, Tensor, TensorSpec};
 /// extensions plus the Fig. 1 combined first-order graph).
 const LISTED_SIGS: &[&str] = &[
     "grad", "batch_grad", "batch_l2", "sq_moment", "variance",
-    "diag_ggn", "diag_ggn_mc", "kfac", "kflr", "kfra",
+    "diag_ggn", "diag_ggn_mc", "diag_h", "kfac", "kflr", "kfra",
     "batch_grad+batch_l2+sq_moment+variance",
 ];
 
@@ -82,6 +84,7 @@ impl NativeBackend {
         b.register(Model::mlp());
         b.register(Model::conv_2c2d());
         b.register(Model::conv_3c3d());
+        b.register(Model::conv_3c3d_sigmoid()); // Fig. 9 (diag_h)
         b.register(Model::allcnnc(16)); // CPU-scaled cifar100 problem
         b.register(Model::allcnnc(32)); // paper-sized overhead benches
         b
@@ -482,7 +485,11 @@ mod tests {
         let set = ExtensionSet::builtin();
         assert!(parse_sig("grad", &set).unwrap().is_empty());
         assert_eq!(parse_sig("kfac", &set).unwrap(), vec!["kfac"]);
-        assert!(parse_sig("diag_h", &set).is_err());
+        assert_eq!(
+            parse_sig("diag_h", &set).unwrap(),
+            vec!["diag_h"]
+        );
+        assert!(parse_sig("hessian", &set).is_err());
         assert!(parse_sig("grad+bogus", &set).is_err());
     }
 
@@ -498,8 +505,14 @@ mod tests {
         assert!(be.spec("3c3d_eval_n128").is_ok());
         assert!(be.spec("allcnnc16_diag_ggn_mc_n8").is_ok());
         assert!(be.spec("allcnnc32_grad_n4").is_ok());
+        // diag_h is a native quantity on every model, and the Fig. 9
+        // model resolves through the "3c3d"-prefix fallthrough.
+        assert!(be.spec("logreg_diag_h_n8").is_ok());
+        assert!(be.spec("mlp_diag_h_n8").is_ok());
+        assert!(be.spec("3c3d_sigmoid_diag_h_n8").is_ok());
+        assert!(be.spec("3c3d_sigmoid_grad_n8").is_ok());
         assert!(be.spec("4c4d_grad_n64").is_err());
-        assert!(be.spec("logreg_diag_h_n8").is_err());
+        assert!(be.spec("logreg_hessian_n8").is_err());
     }
 
     #[test]
@@ -539,7 +552,11 @@ mod tests {
         assert_eq!(name, "allcnnc16_grad_n8");
         assert!(be.find_train("logreg", 16, "grad", 16).is_err());
         assert!(be.find_train("allcnnc", 0, "grad", 16).is_err());
-        assert!(be.find_train("logreg", 0, "diag_h", 16).is_err());
+        assert_eq!(
+            be.find_train("3c3d_sigmoid", 0, "diag_h", 8).unwrap(),
+            "3c3d_sigmoid_diag_h_n8"
+        );
+        assert!(be.find_train("logreg", 0, "hessian", 16).is_err());
     }
 
     #[test]
@@ -603,6 +620,37 @@ mod tests {
         let only_params: Vec<Tensor> =
             params.iter().map(|p| p.tensor.clone()).collect();
         assert!(exe.run(&only_params).is_err());
+    }
+
+    #[test]
+    fn diag_h_serves_natively_and_matches_diag_ggn_on_logreg() {
+        // logreg is purely linear: the Hessian IS the GGN, so the two
+        // quantities must agree through the full backend path.
+        let be = NativeBackend::new();
+        let exe = be.load("logreg_diag_h+diag_ggn_n16").unwrap();
+        assert!(!exe.spec().has_key);
+        let params = init_params(exe.spec(), 3);
+        let (x, y) = logreg_batch(16, 3);
+        let out =
+            exe.run(&build_inputs(&params, x, y, None)).unwrap();
+        for part in ["0/w", "0/b"] {
+            let h = out
+                .get(&format!("diag_h/{part}"))
+                .unwrap()
+                .f32s()
+                .unwrap();
+            let g = out
+                .get(&format!("diag_ggn/{part}"))
+                .unwrap()
+                .f32s()
+                .unwrap();
+            for (u, v) in h.iter().zip(g) {
+                assert!(
+                    (u - v).abs() <= 1e-6 * (1.0 + u.abs()),
+                    "diag_h/{part}: {u} vs diag_ggn {v}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Micro-benchmark harness (substrate; criterion is unavailable
 //! offline). Warmup + fixed-count sampling, robust summary statistics,
 //! criterion-like console output, CSV export for the figure
-//! regenerators, and the machine-readable perf baseline
+//! regenerators, the machine-readable perf baseline
 //! ([`perf_baseline`] -> `BENCH_native.json`) that CI uploads on every
-//! push so the repo carries a perf trajectory.
+//! push so the repo carries a perf trajectory, and the regression gate
+//! ([`compare_baselines`] / `bench --compare`) the CI `bench` job runs
+//! against the baseline committed at the repo root (`docs/bench.md`).
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -135,9 +137,15 @@ pub struct BaselineCase {
 /// The perf-baseline grid: the paper's native problems under the
 /// plain gradient plus every applicable extension signature (Fig. 6's
 /// overhead story, on this backend). Fully-connected models carry all
-/// nine extensions; the conv models drop `kfra` (paper footnote 5)
-/// and run at `batch / 8` -- the conv overhead *trajectory* is what
-/// the baseline records, not paper-scale absolute cost.
+/// ten extensions -- `diag_h` included, whose residual walk fires on
+/// `mlp` (it has a sigmoid); the conv models drop `kfra` (paper
+/// footnote 5) and run at `batch / 8` -- the conv overhead
+/// *trajectory* is what the baseline records, not paper-scale
+/// absolute cost. One dedicated `3c3d_sigmoid` diag_h case (at
+/// `batch / 32`: the factor born at the sigmoid carries 256 columns
+/// through the whole conv stack, making this by far the most
+/// expensive walk in the grid -- the Fig. 9 story) keeps the conv
+/// residual path in the recorded trajectory too.
 pub fn baseline_cases() -> Vec<BaselineCase> {
     let grid = [
         ("logreg", "mnist", 1usize),
@@ -163,6 +171,12 @@ pub fn baseline_cases() -> Vec<BaselineCase> {
             });
         }
     }
+    cases.push(BaselineCase {
+        model: "3c3d_sigmoid",
+        dataset: "cifar10",
+        signature: "diag_h",
+        batch_div: 32,
+    });
     cases
 }
 
@@ -277,6 +291,127 @@ pub fn perf_baseline_with(
     Ok(())
 }
 
+/// Compare two `backpack-bench/v1` files on disk: fail when any case
+/// shared by both regressed past `max_ratio`, or when a baseline case
+/// vanished from `current` (silent coverage loss). See
+/// [`compare_baselines`] for the exact rule; `docs/bench.md` for the
+/// CI recipe.
+pub fn compare_files(
+    baseline: &Path,
+    current: &Path,
+    max_ratio: f64,
+) -> Result<()> {
+    let read = |p: &Path| -> Result<Json> {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("read {}", p.display()))?;
+        Json::parse(&text)
+            .with_context(|| format!("parse {}", p.display()))
+    };
+    println!(
+        "== bench compare: {} (baseline) vs {} (current), \
+         max p50 regression {max_ratio}x ==",
+        baseline.display(),
+        current.display()
+    );
+    compare_baselines(&read(baseline)?, &read(current)?, max_ratio)
+}
+
+/// The perf regression gate: for every case of `baseline` (matched to
+/// `current` by `name`), fail when `current_p50 / baseline_p50 >
+/// max_ratio`. The factor is deliberately generous (CI default 3x):
+/// shared runners are noisy and the committed baseline is a coarse
+/// envelope, so the gate exists to catch order-of-magnitude
+/// regressions, not percent-level drift. Cases only present in
+/// `current` are reported but never fail (the grid may grow ahead of
+/// a baseline refresh); cases missing *from* `current` fail, so grid
+/// shrinkage needs an explicit baseline update.
+pub fn compare_baselines(
+    baseline: &Json,
+    current: &Json,
+    max_ratio: f64,
+) -> Result<()> {
+    for (label, v) in
+        [("baseline", baseline), ("current", current)]
+    {
+        let schema = v.get("schema")?.as_str()?;
+        anyhow::ensure!(
+            schema == BENCH_SCHEMA,
+            "{label} schema {schema:?} != {BENCH_SCHEMA:?}"
+        );
+    }
+    // Case names embed the batch (`{model}_{sig}_n{batch}`), so runs
+    // at different --batch values share no names; fail that up front
+    // with the real cause instead of a misleading per-case
+    // missing-from-run error.
+    if let (Some(b), Some(c)) =
+        (baseline.opt("batch"), current.opt("batch"))
+    {
+        let (b, c) = (b.as_f64()?, c.as_f64()?);
+        anyhow::ensure!(
+            b == c,
+            "baseline was recorded at --batch {b} but the current \
+             run used --batch {c}; rerun with a matching --batch or \
+             refresh the baseline (docs/bench.md)"
+        );
+    }
+    let mut base = std::collections::BTreeMap::new();
+    for c in baseline.get("cases")?.as_arr()? {
+        base.insert(
+            c.get("name")?.as_str()?.to_string(),
+            c.get("p50_s")?.as_f64()?,
+        );
+    }
+    let mut offenders = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for c in current.get("cases")?.as_arr()? {
+        let name = c.get("name")?.as_str()?;
+        let p50 = c.get("p50_s")?.as_f64()?;
+        seen.insert(name.to_string());
+        match base.get(name) {
+            None => {
+                println!(
+                    "{name:42} {:>10}  (new case, no baseline)",
+                    fmt_time(p50)
+                );
+            }
+            Some(&b) => {
+                let ratio = p50 / b.max(1e-12);
+                let flag = if ratio > max_ratio { "  << REGRESSED" }
+                           else { "" };
+                println!(
+                    "{name:42} {:>10} vs {:>10}  ({ratio:5.2}x){flag}",
+                    fmt_time(p50),
+                    fmt_time(b)
+                );
+                if ratio > max_ratio {
+                    offenders.push(format!(
+                        "{name}: p50 {} vs baseline {} \
+                         ({ratio:.2}x > {max_ratio}x)",
+                        fmt_time(p50),
+                        fmt_time(b)
+                    ));
+                }
+            }
+        }
+    }
+    let missing: Vec<&String> =
+        base.keys().filter(|k| !seen.contains(*k)).collect();
+    anyhow::ensure!(
+        missing.is_empty(),
+        "baseline cases missing from the current run (grid \
+         shrinkage needs a baseline refresh): {missing:?}"
+    );
+    anyhow::ensure!(
+        offenders.is_empty(),
+        "perf regression gate failed ({} case(s) past {max_ratio}x):\
+         \n  {}",
+        offenders.len(),
+        offenders.join("\n  ")
+    );
+    println!("bench compare OK ({} cases)", seen.len());
+    Ok(())
+}
+
 /// Git revision for the baseline provenance: `GITHUB_SHA` when CI
 /// sets it, else `git rev-parse`, else `"unknown"`. Always truncated
 /// to 12 hex chars so CI- and locally-produced baselines compare
@@ -339,8 +474,9 @@ mod tests {
     #[test]
     fn baseline_grid_covers_all_models_and_signatures() {
         let cases = baseline_cases();
-        // FC: grad + 9 extensions; conv: grad + 8 (no kfra).
-        assert_eq!(cases.len(), 2 * 10 + 2 * 9);
+        // FC: grad + 10 extensions; conv: grad + 9 (no kfra); plus
+        // the dedicated conv-residual case (3c3d_sigmoid diag_h).
+        assert_eq!(cases.len(), 2 * 11 + 2 * 10 + 1);
         let has = |m: &str, s: &str| {
             cases
                 .iter()
@@ -350,13 +486,32 @@ mod tests {
         assert!(has("logreg", "kfra"));
         assert!(has("2c2d", "kfac"));
         assert!(has("3c3d", "diag_ggn"));
+        // diag_h enters the recorded trajectory on every model.
+        assert!(has("logreg", "diag_h"));
+        assert!(has("mlp", "diag_h"));
+        assert!(has("2c2d", "diag_h"));
+        assert!(has("3c3d", "diag_h"));
         assert!(!has("2c2d", "kfra"), "kfra is FC-only");
         assert!(!has("3c3d", "kfra"), "kfra is FC-only");
+        // The conv residual path (Fig. 9 walk) is in the trajectory:
+        // one 3c3d_sigmoid case, diag_h only, deeply batch-reduced.
+        assert!(has("3c3d_sigmoid", "diag_h"));
+        assert_eq!(
+            cases
+                .iter()
+                .filter(|c| c.model == "3c3d_sigmoid")
+                .count(),
+            1
+        );
         // Conv cases scale the batch down; their datasets match the
         // model input dims.
         for c in &cases {
-            let conv = matches!(c.model, "2c2d" | "3c3d");
-            assert_eq!(c.batch_div, if conv { 8 } else { 1 }, "{c:?}");
+            let want = match c.model {
+                "2c2d" | "3c3d" => 8,
+                "3c3d_sigmoid" => 32,
+                _ => 1,
+            };
+            assert_eq!(c.batch_div, want, "{c:?}");
         }
     }
 
@@ -415,6 +570,134 @@ mod tests {
             .unwrap();
         assert_eq!(conv.get("batch").unwrap().as_usize().unwrap(), 4);
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// A minimal `backpack-bench/v1` document for the compare tests.
+    fn doc(cases: &[(&str, f64)]) -> Json {
+        let mut arr = Vec::new();
+        for (name, p50) in cases {
+            let mut c = std::collections::BTreeMap::new();
+            c.insert("name".to_string(), Json::Str(name.to_string()));
+            c.insert("p50_s".to_string(), Json::Num(*p50));
+            arr.push(Json::Obj(c));
+        }
+        let mut root = std::collections::BTreeMap::new();
+        root.insert(
+            "schema".to_string(),
+            Json::Str(BENCH_SCHEMA.to_string()),
+        );
+        root.insert("cases".to_string(), Json::Arr(arr));
+        Json::Obj(root)
+    }
+
+    #[test]
+    fn compare_passes_within_the_noise_factor() {
+        let base = doc(&[("a_grad_n8", 0.010), ("b_grad_n8", 0.020)]);
+        // 2x slower and 10x faster both sit inside a 3x gate; a new
+        // case without a baseline is reported, not failed.
+        let cur = doc(&[
+            ("a_grad_n8", 0.020),
+            ("b_grad_n8", 0.002),
+            ("c_grad_n8", 9.000),
+        ]);
+        compare_baselines(&base, &cur, 3.0).unwrap();
+    }
+
+    #[test]
+    fn compare_fails_on_a_synthetic_10x_slowdown() {
+        // The acceptance scenario: scale every p50 of the baseline by
+        // 10 and present it as the current run -- the 3x gate must
+        // trip and name the offender.
+        let base = doc(&[("a_grad_n8", 0.010), ("b_kfac_n8", 0.050)]);
+        let slow =
+            doc(&[("a_grad_n8", 0.100), ("b_kfac_n8", 0.500)]);
+        let err = compare_baselines(&base, &slow, 3.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("regression gate failed"), "{err}");
+        assert!(err.contains("a_grad_n8"), "{err}");
+        assert!(err.contains("b_kfac_n8"), "{err}");
+    }
+
+    #[test]
+    fn compare_fails_when_a_baseline_case_vanishes() {
+        let base = doc(&[("a_grad_n8", 0.010), ("b_kfac_n8", 0.050)]);
+        let cur = doc(&[("a_grad_n8", 0.010)]);
+        let err = compare_baselines(&base, &cur, 3.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing from the current run"), "{err}");
+        assert!(err.contains("b_kfac_n8"), "{err}");
+    }
+
+    #[test]
+    fn compare_rejects_mismatched_base_batches_up_front() {
+        // Case names embed the batch, so a --batch mismatch would
+        // otherwise surface as a bogus "grid shrinkage" failure.
+        let with_batch = |batch: f64, p50: f64| -> Json {
+            let Json::Obj(mut root) = doc(&[("a_grad_n8", p50)])
+            else {
+                unreachable!()
+            };
+            root.insert("batch".to_string(), Json::Num(batch));
+            Json::Obj(root)
+        };
+        let err = compare_baselines(
+            &with_batch(128.0, 0.01),
+            &with_batch(64.0, 0.01),
+            3.0,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--batch"), "{err}");
+        assert!(!err.contains("missing from the current run"), "{err}");
+        compare_baselines(
+            &with_batch(128.0, 0.01),
+            &with_batch(128.0, 0.01),
+            3.0,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn compare_rejects_foreign_schemas() {
+        let base = doc(&[("a_grad_n8", 0.010)]);
+        let mut bad = std::collections::BTreeMap::new();
+        bad.insert(
+            "schema".to_string(),
+            Json::Str("backpack-bench/v0".to_string()),
+        );
+        bad.insert("cases".to_string(), Json::Arr(Vec::new()));
+        assert!(
+            compare_baselines(&base, &Json::Obj(bad), 3.0).is_err()
+        );
+    }
+
+    #[test]
+    fn compare_files_round_trips_through_disk() {
+        let dir = std::env::temp_dir().join("backpack_bench_cmp");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bp = dir.join("base.json");
+        let cp = dir.join("cur.json");
+        let base = doc(&[("a_grad_n8", 0.010)]);
+        std::fs::write(&bp, base.to_string_json()).unwrap();
+        std::fs::write(
+            &cp,
+            doc(&[("a_grad_n8", 0.012)]).to_string_json(),
+        )
+        .unwrap();
+        compare_files(&bp, &cp, 3.0).unwrap();
+        std::fs::write(
+            &cp,
+            doc(&[("a_grad_n8", 0.200)]).to_string_json(),
+        )
+        .unwrap();
+        assert!(compare_files(&bp, &cp, 3.0).is_err());
+        assert!(compare_files(
+            &dir.join("nope.json"), &cp, 3.0
+        )
+        .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -3,10 +3,11 @@
 //! (Hessian diagonal vs GGN diagonal).
 //!
 //! The paper's claims are *relative* costs (extension time / gradient
-//! time); we report the same ratios on this testbed. Figs. 3, 6 and 8
-//! run on the native backend (the conv subsystem serves 3c3d and
-//! allcnnc32); Fig. 9's `diag_h` residual propagation remains
-//! pjrt-only.
+//! time); we report the same ratios on this testbed. All four figures
+//! run on the default native backend: the conv subsystem serves 3c3d
+//! and allcnnc32, and Fig. 9's `diag_h` residual propagation runs
+//! natively on the registered `3c3d_sigmoid` model (DESIGN.md §11) —
+//! no pjrt fallback anywhere.
 
 use std::path::Path;
 use std::time::Duration;
@@ -191,7 +192,10 @@ pub fn fig8(be: &dyn Backend, iters: usize, out_dir: &Path) -> Result<()> {
 }
 
 /// Fig. 9: Hessian diagonal vs GGN diagonal when the network has one
-/// sigmoid (residual propagation makes DiagH much more expensive).
+/// sigmoid (residual propagation makes DiagH much more expensive: the
+/// factor born at the sigmoid carries one column per activation
+/// feature down the rest of the net). Runs on the native backend —
+/// `3c3d_sigmoid` and `diag_h` are registry citizens like any other.
 pub fn fig9(be: &dyn Backend, iters: usize, out_dir: &Path) -> Result<()> {
     println!("== Fig. 9: DiagH vs DiagGGN, 3c3d+sigmoid (N=8) ==");
     let table = [

@@ -58,8 +58,10 @@
 //! ```
 //!
 //! Models come from the registry ([`Model::logreg`], [`Model::mlp`],
-//! the conv zoo) or from [`Model::with_input`] over the [`Layer`]
-//! enum; quantities beyond the built-in nine register through
+//! the conv zoo incl. the Fig. 9 [`Model::conv_3c3d_sigmoid`]) or
+//! from [`Model::with_input`] over the [`Layer`] enum; quantities
+//! beyond the built-in ten (which include `diag_h`'s full-Hessian
+//! residual recursion, DESIGN.md §11) register through
 //! [`ExtensionSet`] (direct engine calls) or
 //! [`NativeBackend::register_extension`] (served as artifact names) —
 //! see [`backend::extensions`] for a complete user-defined extension.
@@ -84,6 +86,9 @@ pub use backend::layers::Layer;
 pub use backend::model::{Model, ParamBlock, NATIVE_EXTENSIONS};
 pub use backend::native::NativeBackend;
 pub use backend::{open, open_with, Backend, Exec, Outputs};
-pub use bench::{BaselineCase, Stats, BENCH_SCHEMA};
+pub use bench::{
+    compare_baselines, compare_files, BaselineCase, Stats,
+    BENCH_SCHEMA,
+};
 pub use json::Json;
 pub use runtime::{ArtifactSpec, Tensor, TensorSpec};

@@ -34,6 +34,8 @@ usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N] [flags]
          [--damping 0.01] [--steps 200] [--seed 0] [--eval-every 25]
          [--inv-every 1] [--verbose]
   bench  [--quick] [--batch 128] [--out BENCH_native.json]
+         [--compare BASELINE.json [--current RUN.json]]
+         [--max-regression 3.0]
   fig3 | fig6 | fig8 | fig9      [--iters 10]
   fig7a | fig7b | fig10 | fig11  [--grid small|paper]
          [--search-steps N] [--steps N] [--seeds K] [--verbose]
@@ -42,12 +44,15 @@ usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N] [flags]
 
 The default `native` backend serves every registered problem --
 fully-connected (mnist_logreg, mnist_mlp) and convolutional
-(fmnist_2c2d, cifar10_3c3d, cifar100_allcnnc) -- with zero external
-dependencies, and runs batch-parallel on all cores (`--threads N` or
-BACKPACK_THREADS=N override; `--threads 1` is the serial reference).
-`bench` writes the machine-readable perf baseline CI uploads on every
-push. Only fig9's diag_h comparison still needs `--backend pjrt`
-(build with `--features pjrt` and run `make artifacts` first).
+(fmnist_2c2d, cifar10_3c3d, cifar100_allcnnc) -- and all ten paper
+quantities, including fig9's diag_h residual propagation, with zero
+external dependencies; it runs batch-parallel on all cores
+(`--threads N` or BACKPACK_THREADS=N override; `--threads 1` is the
+serial reference). `bench` writes the machine-readable perf baseline
+CI uploads on every push; `bench --compare BASELINE.json` gates the
+fresh run against a committed baseline (fail when any case's p50
+regresses past --max-regression, default 3x), and adding
+`--current RUN.json` compares two existing files without re-running.
 ";
 
 fn grid_preset(args: &Args) -> Result<GridPreset> {
@@ -130,13 +135,36 @@ fn main() -> Result<()> {
         "bench" => {
             let default_out = format!("BENCH_{}.json", be.name());
             let out = args.get_or("out", &default_out);
-            backpack_rs::bench::perf_baseline(
-                be,
-                threads,
-                args.has("quick"),
-                args.get_usize("batch", 128)?,
-                Path::new(out),
-            )?;
+            let max_ratio =
+                args.get_f32("max-regression", 3.0)? as f64;
+            if let Some(current) = args.flag("current") {
+                // Pure file-vs-file mode: no fresh run.
+                let baseline = args.flag("compare").ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--current requires --compare BASELINE.json"
+                    )
+                })?;
+                backpack_rs::bench::compare_files(
+                    Path::new(baseline),
+                    Path::new(current),
+                    max_ratio,
+                )?;
+            } else {
+                backpack_rs::bench::perf_baseline(
+                    be,
+                    threads,
+                    args.has("quick"),
+                    args.get_usize("batch", 128)?,
+                    Path::new(out),
+                )?;
+                if let Some(baseline) = args.flag("compare") {
+                    backpack_rs::bench::compare_files(
+                        Path::new(baseline),
+                        Path::new(out),
+                        max_ratio,
+                    )?;
+                }
+            }
         }
         "fig3" => timing::fig3(
             be, args.get_usize("iters", 10)?, out_dir)?,

@@ -1,10 +1,12 @@
 //! Integration tests for the native convolution subsystem
 //! (`backend/conv/`): finite-difference oracles for `Conv2d` /
-//! `MaxPool2d` / `GlobalAvgPool`, a brute-force GGN check through a
-//! conv+pool stack, the paper's Table-1 identities on a conv model,
-//! the 1x1-conv ≡ Linear reduction of every extraction rule, the
-//! KFRA fully-connected-only invariant, and one-step servability of
-//! all five registered problems on the native backend.
+//! `MaxPool2d` / `GlobalAvgPool`, brute-force GGN and full-Hessian
+//! (`diag_h`, dense f64 residual recursion) checks through conv
+//! stacks, the diag_h ≡ diag_ggn coincidence on piecewise-linear
+//! models, the paper's Table-1 identities on a conv model, the
+//! 1x1-conv ≡ Linear reduction of every extraction rule, the KFRA
+//! fully-connected-only invariant, and one-step servability of all
+//! registered problems on the native backend.
 //!
 //! Models here are tiny (debug-build test budget); the real 2c2d /
 //! 3c3d / allcnnc registry models are exercised at the spec level and
@@ -236,6 +238,307 @@ fn conv_diag_ggn_matches_brute_force_ggn() {
             );
         }
     }
+}
+
+/// `diag_h` through conv + sigmoid + 1x1-conv + GAP vs a brute-force
+/// Hessian diagonal from an independent dense f64 recursion: exact
+/// softmax Hessian at the logits, dense `Jᵀ H J` chain rule through
+/// GAP and the 1x1 conv, an explicit `diag(σ'' ⊙ g)` residual at the
+/// sigmoid, and the conv weight diagonal from an explicit-index
+/// im2col double contraction — no square-root factors anywhere. The
+/// engine's factored f32 walk must agree to ≤ 1e-5.
+#[test]
+fn conv_diag_h_matches_brute_force_hessian_on_conv_gap() {
+    let be = backend_with_test_models();
+    let exe = be.load("tinygap_diag_h_n3").unwrap();
+    let params = init_params(exe.spec(), 13);
+    let (x, y) = spec_batch(exe.spec(), 13);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+
+    // tiny_gap geometry: conv0 (2,4,4)->(4,2,2) k3 s2 p1 (J0=18,
+    // P=4), sigmoid, conv1x1 (4,2,2)->(3,2,2) (J1=4), GAP -> 3.
+    let (n, cin, hw, p_n) = (3usize, 2usize, 4usize, 4usize);
+    let (c0, c1) = (4usize, 3usize);
+    let (j0, f0) = (18usize, 16usize);
+    let f64s = |t: &Tensor| -> Vec<f64> {
+        t.f32s().unwrap().iter().map(|&v| v as f64).collect()
+    };
+    let w0 = f64s(&params[0].tensor); // [4, 2, 3, 3] -> [4, 18]
+    let b0 = f64s(&params[1].tensor);
+    let w1 = f64s(&params[2].tensor); // [3, 4, 1, 1] -> [3, 4]
+    let b1 = f64s(&params[3].tensor);
+    let xs = f64s(&x);
+    let ys = y.i32s().unwrap();
+
+    // Explicit-index im2col for conv0: U0[j, p] with j = ci·9 +
+    // ky·3 + kx, p = oy·2 + ox, input pixel (oy·2+ky−1, ox·2+kx−1).
+    let unfold0 = |xv: &[f64]| -> Vec<f64> {
+        let mut u = vec![0.0f64; j0 * p_n];
+        for ci in 0..cin {
+            for ky in 0..3usize {
+                for kx in 0..3usize {
+                    let j = ci * 9 + ky * 3 + kx;
+                    for oy in 0..2usize {
+                        for ox in 0..2usize {
+                            let (iy, ix) = (
+                                (oy * 2 + ky) as isize - 1,
+                                (ox * 2 + kx) as isize - 1,
+                            );
+                            if (0..hw as isize).contains(&iy)
+                                && (0..hw as isize).contains(&ix)
+                            {
+                                u[j * p_n + oy * 2 + ox] = xv[ci
+                                    * hw
+                                    * hw
+                                    + iy as usize * hw
+                                    + ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        u
+    };
+
+    let mut want_w0 = vec![0.0f64; c0 * j0];
+    let mut want_b0 = vec![0.0f64; c0];
+    let mut want_w1 = vec![0.0f64; c1 * c0];
+    let mut want_b1 = vec![0.0f64; c1];
+    for s in 0..n {
+        let xv = &xs[s * cin * hw * hw..(s + 1) * cin * hw * hw];
+        let u0 = unfold0(xv);
+        // Forward in f64.
+        let mut z0 = vec![0.0f64; f0]; // [(o, p)]
+        for o in 0..c0 {
+            for p in 0..p_n {
+                z0[o * p_n + p] = b0[o]
+                    + (0..j0)
+                        .map(|j| w0[o * j0 + j] * u0[j * p_n + p])
+                        .sum::<f64>();
+            }
+        }
+        let a: Vec<f64> =
+            z0.iter().map(|&v| 1.0 / (1.0 + (-v).exp())).collect();
+        let mut z1 = vec![0.0f64; c1 * p_n];
+        for o in 0..c1 {
+            for p in 0..p_n {
+                z1[o * p_n + p] = b1[o]
+                    + (0..c0)
+                        .map(|i| w1[o * c0 + i] * a[i * p_n + p])
+                        .sum::<f64>();
+            }
+        }
+        let f: Vec<f64> = (0..c1)
+            .map(|o| {
+                z1[o * p_n..(o + 1) * p_n].iter().sum::<f64>()
+                    / p_n as f64
+            })
+            .collect();
+        let m = f.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let z: f64 = f.iter().map(|v| (v - m).exp()).sum();
+        let prob: Vec<f64> =
+            f.iter().map(|v| (v - m).exp() / z).collect();
+        let mut hl = vec![0.0f64; c1 * c1];
+        for aa in 0..c1 {
+            for bb in 0..c1 {
+                hl[aa * c1 + bb] = if aa == bb {
+                    prob[aa] - prob[aa] * prob[bb]
+                } else {
+                    -prob[aa] * prob[bb]
+                };
+            }
+        }
+        let mut gf = prob.clone();
+        gf[ys[s] as usize] -= 1.0;
+        // GAP is linear: H at z1 and the gradient there.
+        let hz1 = |o: usize, p: usize, o2: usize, p2: usize| -> f64 {
+            let _ = (p, p2);
+            hl[o * c1 + o2] / (p_n * p_n) as f64
+        };
+        // 1x1-conv weight diagonal (U1[i, p] = a[(i, p)]).
+        for o in 0..c1 {
+            for i in 0..c0 {
+                let mut acc = 0.0;
+                for p in 0..p_n {
+                    for p2 in 0..p_n {
+                        acc += a[i * p_n + p]
+                            * a[i * p_n + p2]
+                            * hz1(o, p, o, p2);
+                    }
+                }
+                want_w1[o * c0 + i] += acc;
+            }
+            let mut acc = 0.0;
+            for p in 0..p_n {
+                for p2 in 0..p_n {
+                    acc += hz1(o, p, o, p2);
+                }
+            }
+            want_b1[o] += acc;
+        }
+        // Dense H and gradient at the sigmoid output a [(i, p)].
+        let mut ha = vec![0.0f64; f0 * f0];
+        for i in 0..c0 {
+            for p in 0..p_n {
+                for i2 in 0..c0 {
+                    for p2 in 0..p_n {
+                        let mut acc = 0.0;
+                        for o in 0..c1 {
+                            for o2 in 0..c1 {
+                                acc += w1[o * c0 + i]
+                                    * w1[o2 * c0 + i2]
+                                    * hz1(o, p, o2, p2);
+                            }
+                        }
+                        ha[(i * p_n + p) * f0 + i2 * p_n + p2] = acc;
+                    }
+                }
+            }
+        }
+        // GAP broadcasts the logit gradient evenly: g_a is
+        // position-independent per channel.
+        let ga: Vec<f64> = (0..f0)
+            .map(|up| {
+                let i = up / p_n;
+                (0..c1)
+                    .map(|o| w1[o * c0 + i] * gf[o] / p_n as f64)
+                    .sum()
+            })
+            .collect();
+        // Sigmoid: PSD part plus the signed residual on the diagonal.
+        let d1: Vec<f64> = a
+            .iter()
+            .map(|&s| s * (1.0 - s))
+            .collect();
+        let d2: Vec<f64> = a
+            .iter()
+            .map(|&s| s * (1.0 - s) * (1.0 - 2.0 * s))
+            .collect();
+        let mut hz0 = vec![0.0f64; f0 * f0];
+        for u in 0..f0 {
+            for v in 0..f0 {
+                hz0[u * f0 + v] = d1[u] * ha[u * f0 + v] * d1[v];
+            }
+            hz0[u * f0 + u] += d2[u] * ga[u];
+        }
+        // conv0 weight/bias diagonal: double contraction against U0.
+        for o in 0..c0 {
+            for j in 0..j0 {
+                let mut acc = 0.0;
+                for p in 0..p_n {
+                    for p2 in 0..p_n {
+                        acc += u0[j * p_n + p]
+                            * u0[j * p_n + p2]
+                            * hz0[(o * p_n + p) * f0
+                                + o * p_n
+                                + p2];
+                    }
+                }
+                want_w0[o * j0 + j] += acc;
+            }
+            let mut acc = 0.0;
+            for p in 0..p_n {
+                for p2 in 0..p_n {
+                    acc +=
+                        hz0[(o * p_n + p) * f0 + o * p_n + p2];
+                }
+            }
+            want_b0[o] += acc;
+        }
+    }
+    for (name, want) in [
+        ("diag_h/0/w", &want_w0),
+        ("diag_h/0/b", &want_b0),
+        ("diag_h/2/w", &want_w1),
+        ("diag_h/2/b", &want_b1),
+    ] {
+        let got = out.get(name).unwrap().f32s().unwrap();
+        assert_eq!(got.len(), want.len(), "{name}");
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            let w = w / n as f64;
+            assert!(
+                ((*g as f64) - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                "{name}[{i}]: engine {g} vs brute-force {w}"
+            );
+        }
+    }
+}
+
+/// Table-1-style identity: on a piecewise-linear conv stack (ReLU +
+/// max-pool) every residual vanishes, so `diag_h` must coincide with
+/// `diag_ggn` — and on the sigmoid model it must not (the residual
+/// below the sigmoid is the whole point of Fig. 9).
+#[test]
+fn conv_diag_h_coincides_with_diag_ggn_exactly_when_relu() {
+    let relu = Model::with_input(
+        "tinyrelu",
+        Shape::new(2, 5, 5),
+        vec![
+            Layer::Conv2d {
+                in_ch: 2, out_ch: 3, kernel: 3, stride: 1, pad: 1,
+            },
+            Layer::Relu,
+            Layer::MaxPool2d { kernel: 2, stride: 2, ceil: true },
+            Layer::Flatten,
+            Layer::Linear { in_dim: 27, out_dim: 4 },
+        ],
+    )
+    .unwrap();
+    let mut rng = Rng::new(31);
+    let mk_params = |m: &Model| -> Vec<Tensor> {
+        let mut rng = Rng::new(77);
+        m.param_specs()
+            .iter()
+            .map(|t| {
+                let k: usize = t.shape.iter().product();
+                Tensor::from_f32(
+                    &t.shape,
+                    (0..k).map(|_| rng.normal() * 0.3).collect(),
+                )
+            })
+            .collect()
+    };
+    let x: Vec<f32> = (0..6 * 50).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..6).map(|_| rng.below(4) as i32).collect();
+    let x = Tensor::from_f32(&[6, 50], x);
+    let y = Tensor::from_i32(&[6], y);
+    let exts = vec!["diag_h".to_string(), "diag_ggn".to_string()];
+    let out = relu
+        .extended_backward(&mk_params(&relu), &x, &y, &exts, None)
+        .unwrap();
+    for li in [0usize, 4] {
+        for part in ["w", "b"] {
+            let h =
+                out[&format!("diag_h/{li}/{part}")].f32s().unwrap();
+            let g = out[&format!("diag_ggn/{li}/{part}")]
+                .f32s()
+                .unwrap();
+            for (u, v) in h.iter().zip(g) {
+                assert!(
+                    (u - v).abs() <= 1e-7 * (1.0 + u.abs()),
+                    "relu model diag_h/{li}/{part}: {u} vs {v}"
+                );
+            }
+        }
+    }
+    // The sigmoid twin (tiny_conv) must disagree below the sigmoid.
+    let sig = tiny_conv();
+    let out = sig
+        .extended_backward(&mk_params(&sig), &x, &y, &exts, None)
+        .unwrap();
+    let h = out["diag_h/0/w"].f32s().unwrap();
+    let g = out["diag_ggn/0/w"].f32s().unwrap();
+    let max_rel = h
+        .iter()
+        .zip(g)
+        .map(|(u, v)| (u - v).abs() / (1.0 + v.abs()))
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_rel > 1e-4,
+        "sigmoid residual had no effect on the conv diagonal \
+         (max rel diff {max_rel})"
+    );
 }
 
 /// Paper Table 1 identities on one combined first-order conv graph:

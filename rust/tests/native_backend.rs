@@ -222,6 +222,141 @@ fn diag_ggn_matches_brute_force_ggn_on_mlp() {
     }
 }
 
+/// `diag_h` on the sigmoid MLP vs a brute-force Hessian diagonal from
+/// an independent dense f64 recursion (per sample: exact softmax
+/// Hessian at the logits, dense `Wᵀ H W` chain rule through the
+/// layers, explicit `diag(σ'') ⊙ g` residual at the sigmoid — no
+/// square-root factors, no column tricks). The engine's factored f32
+/// walk must agree to ≤ 1e-5.
+#[test]
+fn diag_h_matches_brute_force_hessian_on_sigmoid_mlp() {
+    let be = backend_with_test_models();
+    let exe = be.load("tinymlp_diag_h_n8").unwrap();
+    let params = init_params(exe.spec(), 11);
+    let (x, y) = random_batch(8, 6, 3, 11);
+    let out = run_at(exe.as_ref(), &params, &x, &y);
+    let (n, din, hid, c) = (8usize, 6usize, 5usize, 3usize);
+
+    let w0: Vec<f64> = params[0].tensor.f32s().unwrap().iter()
+        .map(|&v| v as f64).collect(); // [5, 6]
+    let b0: Vec<f64> = params[1].tensor.f32s().unwrap().iter()
+        .map(|&v| v as f64).collect();
+    let w1: Vec<f64> = params[2].tensor.f32s().unwrap().iter()
+        .map(|&v| v as f64).collect(); // [3, 5]
+    let b1: Vec<f64> = params[3].tensor.f32s().unwrap().iter()
+        .map(|&v| v as f64).collect();
+    let xs: Vec<f64> =
+        x.f32s().unwrap().iter().map(|&v| v as f64).collect();
+    let ys = y.i32s().unwrap();
+
+    let mut want_w0 = vec![0.0f64; hid * din];
+    let mut want_b0 = vec![0.0f64; hid];
+    let mut want_w1 = vec![0.0f64; c * hid];
+    let mut want_b1 = vec![0.0f64; c];
+    for s in 0..n {
+        let xv = &xs[s * din..(s + 1) * din];
+        // Forward in f64.
+        let z0: Vec<f64> = (0..hid)
+            .map(|o| {
+                b0[o]
+                    + (0..din)
+                        .map(|i| w0[o * din + i] * xv[i])
+                        .sum::<f64>()
+            })
+            .collect();
+        let a: Vec<f64> =
+            z0.iter().map(|&v| 1.0 / (1.0 + (-v).exp())).collect();
+        let f: Vec<f64> = (0..c)
+            .map(|o| {
+                b1[o]
+                    + (0..hid)
+                        .map(|i| w1[o * hid + i] * a[i])
+                        .sum::<f64>()
+            })
+            .collect();
+        let m = f.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let z: f64 = f.iter().map(|v| (v - m).exp()).sum();
+        let p: Vec<f64> =
+            f.iter().map(|v| (v - m).exp() / z).collect();
+        // Exact softmax Hessian at the logits.
+        let mut hl = vec![0.0f64; c * c];
+        for aa in 0..c {
+            for bb in 0..c {
+                hl[aa * c + bb] = if aa == bb {
+                    p[aa] - p[aa] * p[bb]
+                } else {
+                    -p[aa] * p[bb]
+                };
+            }
+        }
+        // Top linear layer: diag H_W1[o,i] = H_L[o,o] · a_i².
+        for o in 0..c {
+            want_b1[o] += hl[o * c + o];
+            for i in 0..hid {
+                want_w1[o * hid + i] += hl[o * c + o] * a[i] * a[i];
+            }
+        }
+        // Dense chain rule to the sigmoid input: H_a = W1ᵀ H_L W1,
+        // then H_z0 = σ' H_a σ' + diag(σ'' ⊙ g_a).
+        let mut gl = p.clone();
+        gl[ys[s] as usize] -= 1.0;
+        let ga: Vec<f64> = (0..hid)
+            .map(|i| (0..c).map(|o| w1[o * hid + i] * gl[o]).sum())
+            .collect();
+        let mut ha = vec![0.0f64; hid * hid];
+        for i in 0..hid {
+            for j in 0..hid {
+                let mut acc = 0.0;
+                for o in 0..c {
+                    for q in 0..c {
+                        acc += w1[o * hid + i]
+                            * hl[o * c + q]
+                            * w1[q * hid + j];
+                    }
+                }
+                ha[i * hid + j] = acc;
+            }
+        }
+        let d1: Vec<f64> =
+            a.iter().map(|&s| s * (1.0 - s)).collect();
+        let d2: Vec<f64> = a
+            .iter()
+            .map(|&s| s * (1.0 - s) * (1.0 - 2.0 * s))
+            .collect();
+        let mut hz0 = vec![0.0f64; hid * hid];
+        for i in 0..hid {
+            for j in 0..hid {
+                hz0[i * hid + j] = d1[i] * ha[i * hid + j] * d1[j];
+            }
+            hz0[i * hid + i] += d2[i] * ga[i];
+        }
+        // Bottom linear layer: diag H_W0[o,i] = H_z0[o,o] · x_i².
+        for o in 0..hid {
+            want_b0[o] += hz0[o * hid + o];
+            for i in 0..din {
+                want_w0[o * din + i] +=
+                    hz0[o * hid + o] * xv[i] * xv[i];
+            }
+        }
+    }
+    for (name, want) in [
+        ("diag_h/0/w", &want_w0),
+        ("diag_h/0/b", &want_b0),
+        ("diag_h/2/w", &want_w1),
+        ("diag_h/2/b", &want_b1),
+    ] {
+        let got = out.get(name).unwrap().f32s().unwrap();
+        assert_eq!(got.len(), want.len(), "{name}");
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            let w = w / n as f64;
+            assert!(
+                ((*g as f64) - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                "{name}[{i}]: engine {g} vs brute-force {w}"
+            );
+        }
+    }
+}
+
 /// Paper Table 1 identities on one combined first-order graph:
 /// batch_grad rows sum to grad, sq_moment matches the per-sample
 /// squares, variance = sq_moment − grad², batch_l2 = ‖row‖².

@@ -6,6 +6,8 @@
 //! proptests-style seeded driver as `tests/proptests.rs`: every case
 //! is a pure function of its seed, and failures report it.
 
+use backpack_rs::backend::conv::Shape;
+use backpack_rs::backend::layers::Layer;
 use backpack_rs::backend::model::{Model, NATIVE_EXTENSIONS};
 use backpack_rs::backend::native::NativeBackend;
 use backpack_rs::backend::Backend;
@@ -180,6 +182,85 @@ fn conv_3c3d_signatures_agree_across_thread_counts() {
             }
         }
     }
+}
+
+/// `diag_h`'s residual factors are born per shard from shard-local
+/// activations and gradients, normalized by the global batch size:
+/// 1 thread vs several (uneven shards included) must agree ≤ 1e-5 on
+/// a conv + sigmoid + GAP model where the factors propagate through
+/// conv, pooling and linear layers. (The fully-connected diag_h case
+/// is covered by the all-signature sweep above, which iterates
+/// `NATIVE_EXTENSIONS` — diag_h included — on logreg and mlp.)
+#[test]
+fn diag_h_residual_factors_agree_across_thread_counts() {
+    let m = Model::with_input(
+        "tinysig",
+        Shape::new(2, 4, 4),
+        vec![
+            Layer::Conv2d {
+                in_ch: 2, out_ch: 4, kernel: 3, stride: 2, pad: 1,
+            },
+            Layer::Sigmoid,
+            Layer::Conv2d {
+                in_ch: 4, out_ch: 3, kernel: 1, stride: 1, pad: 0,
+            },
+            Layer::GlobalAvgPool,
+        ],
+    )
+    .unwrap();
+    check("diag_h_thread_equiv", 2, |rng, _seed| {
+        let n = 5 + rng.below(5); // uneven shards at 3 threads
+        let (params, x, y) = problem(&m, n, rng);
+        let exts =
+            vec!["diag_h".to_string(), "diag_ggn".to_string()];
+        let serial = m
+            .extended_backward(&params, &x, &y, &exts, None)
+            .map_err(|e| e.to_string())?;
+        // Sanity: the residual actually fires (diag_h != diag_ggn
+        // below the sigmoid), otherwise this test proves nothing.
+        let h = serial["diag_h/0/w"]
+            .f32s()
+            .map_err(|e| e.to_string())?;
+        let g = serial["diag_ggn/0/w"]
+            .f32s()
+            .map_err(|e| e.to_string())?;
+        let max_rel = h
+            .iter()
+            .zip(g)
+            .map(|(u, v)| (u - v).abs() / (1.0 + v.abs()))
+            .fold(0.0f32, f32::max);
+        if max_rel <= 1e-6 {
+            return Err(format!(
+                "residual term inert (max rel diff {max_rel})"
+            ));
+        }
+        for threads in [2usize, 3, 5] {
+            let par = m
+                .extended_backward_threads(
+                    &params, &x, &y, &exts, None, threads,
+                )
+                .map_err(|e| e.to_string())?;
+            if serial.len() != par.len() {
+                return Err(format!(
+                    "{} vs {} outputs",
+                    serial.len(),
+                    par.len()
+                ));
+            }
+            for (k, want) in &serial {
+                let got = par.get(k).ok_or_else(|| {
+                    format!("threads={threads}: missing {k}")
+                })?;
+                assert_close(
+                    &format!("{k} threads={threads}"),
+                    want,
+                    got,
+                    1e-5,
+                )?;
+            }
+        }
+        Ok(())
+    });
 }
 
 /// `batch_grad` keeps sample order under sharding: row `s` of the
