@@ -88,6 +88,10 @@ impl ConvGeom {
         let (oh, ow) = (self.out_shape.h, self.out_shape.w);
         let p = oh * ow;
         let k = self.kernel;
+        crate::obs::add(
+            crate::obs::Counter::Im2colBytes,
+            (self.patch_len() * p * std::mem::size_of::<f32>()) as u64,
+        );
         let mut u = vec![0.0f32; self.patch_len() * p];
         for ci in 0..c {
             for ki in 0..k {

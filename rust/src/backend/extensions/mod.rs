@@ -540,6 +540,20 @@ pub(crate) fn f32_spec(name: String, shape: Vec<usize>) -> TensorSpec {
     TensorSpec { name, shape, dtype: "f32".to_string(), init: None }
 }
 
+/// Open an observability span for one hook dispatch, named
+/// `{quantity}/{hook}` (e.g. `diag_ggn/sqrt_ggn`) under
+/// [`crate::obs::CAT_EXT`] — the engine wraps every [`Extension`]
+/// hook call in one of these, which is what makes per-quantity time
+/// attribution possible. Free when the recorder is disabled.
+pub(crate) fn hook_span(
+    e: &dyn Extension,
+    hook: &'static str,
+) -> crate::obs::Span {
+    crate::obs::span_with(crate::obs::CAT_EXT, || {
+        format!("{}/{hook}", e.name())
+    })
+}
+
 /// A registry of [`Extension`] modules, dispatched through by the
 /// engine ([`Model::extended_backward_with`]) and by artifact
 /// synthesis ([`crate::backend::native::NativeBackend`]).

@@ -67,12 +67,13 @@ use anyhow::{bail, ensure, Result};
 
 use super::conv::{conv2d, pool, ConvGeom, PoolGeom, Shape};
 use super::extensions::{
-    Extension, ExtensionSet, FinishCtx, LayerCtx, LayerOp, Quantities,
-    Reduce, ShardCtx, Walk,
+    self as extensions_mod, Extension, ExtensionSet, FinishCtx,
+    LayerCtx, LayerOp, Quantities, Reduce, ShardCtx, Walk,
 };
 use super::layers::Layer;
 use super::loss::CrossEntropy;
 use crate::linalg::{matmul, matmul_nt, matmul_tn};
+use crate::obs;
 use crate::parallel;
 use crate::runtime::{Init, Tensor, TensorData, TensorSpec};
 
@@ -523,9 +524,12 @@ impl Model {
         x: &[f32],
         n: usize,
     ) -> Vec<Vec<f32>> {
+        let _fwd = obs::span(obs::CAT_PHASE, "forward");
         let mut acts = Vec::with_capacity(self.layers.len() + 1);
         acts.push(x.to_vec());
         for (li, layer) in self.layers.iter().enumerate() {
+            let _layer =
+                obs::span_with(obs::CAT_LAYER, || format!("fwd/{li}"));
             let inp = acts.last().expect("non-empty");
             let z = match (layer, &geoms[li]) {
                 (Layer::Linear { .. }, _) => {
@@ -721,6 +725,7 @@ impl Model {
         key: Option<[u32; 2]>,
         threads: usize,
     ) -> Result<Quantities> {
+        let setup = obs::span(obs::CAT_PHASE, "setup");
         let active = set.select(extensions)?;
         for e in &active {
             ensure!(
@@ -743,6 +748,7 @@ impl Model {
         let geoms = self.geoms();
         let ops = self.bind(params, &geoms)?;
         let dims = self.dims();
+        drop(setup);
 
         let work = parallel::shards(n, threads);
         let mut out = if work.len() <= 1 {
@@ -750,17 +756,21 @@ impl Model {
                 &ops, &geoms, &dims, xs, ys, 0..n, n, &active, key,
             )?
         } else {
+            let fork = obs::span(obs::CAT_ENGINE, "fork_join");
             let parts = parallel::par_map(&work, |r| {
                 self.backward_range(
                     &ops, &geoms, &dims, xs, ys, r, n, &active, key,
                 )
             });
+            drop(fork);
             let mut done = Vec::with_capacity(parts.len());
             for p in parts {
                 done.push(p?);
             }
+            let _reduce = obs::span(obs::CAT_PHASE, "reduce");
             merge_shard_outputs(done, set)?
         };
+        let _finish = obs::span(obs::CAT_PHASE, "finish");
         let fctx = FinishCtx {
             model: self,
             ops: &ops,
@@ -769,6 +779,7 @@ impl Model {
             extensions,
         };
         for e in &active {
+            let _hook = extensions_mod::hook_span(*e, "finish");
             e.finish(&fctx, &mut out)?;
         }
         Ok(out)
@@ -806,12 +817,14 @@ impl Model {
         let logits = acts.last().expect("non-empty");
 
         let mut out = Quantities::new();
+        let loss_span = obs::span(obs::CAT_PHASE, "loss");
         out.insert(
             "loss".to_string(),
             Tensor::scalar_f32(
                 (ce.nll_sum(logits, y, ns, c) / total_n as f64) as f32,
             ),
         );
+        drop(loss_span);
 
         // ---- first-order backward walk (Eq. 3 + Fig. 4) ------------
         let fo: Vec<&dyn Extension> = active
@@ -828,6 +841,7 @@ impl Model {
         let need_res = active.iter().any(|e| e.needs_residual());
         let mut res_seeds: Vec<Option<Vec<f32>>> =
             vec![None; self.layers.len()];
+        let grad_span = obs::span(obs::CAT_PHASE, "grad_walk");
         let mut g = ce.grad(logits, y, ns, c); // ∇_f ℓ_n, [ns, C]
         for li in (0..self.layers.len()).rev() {
             if need_res && self.layers[li].has_curvature() {
@@ -840,6 +854,8 @@ impl Model {
                 let ctx = LayerCtx::new(li, *op, &acts[li], ns, norm);
                 self.grad_at(&ctx, &g, !fo.is_empty(), &mut out);
                 for e in &fo {
+                    let _hook =
+                        extensions_mod::hook_span(*e, "first_order");
                     e.first_order(&ctx, &g, &mut out);
                 }
             }
@@ -847,6 +863,7 @@ impl Model {
                 g = self.vjp_input(li, ops, geoms, &acts, g, ns);
             }
         }
+        drop(grad_span);
 
         // ---- second-order backward walks (Eq. 18 / Fig. 5) ---------
         // One shared propagation per square-root variant: e.g.
@@ -874,6 +891,10 @@ impl Model {
             } else {
                 Vec::new()
             };
+            let _walk = obs::span(
+                obs::CAT_PHASE,
+                if exact { "sqrt_exact_walk" } else { "sqrt_mc_walk" },
+            );
             let mut extras: Vec<ResidualFactor> = Vec::new();
             let (mut s, cols) =
                 self.init_sqrt(&ce, logits, ns, exact, key, range.start);
@@ -882,9 +903,13 @@ impl Model {
                     let ctx =
                         LayerCtx::new(li, *op, &acts[li], ns, norm);
                     for e in &users {
+                        let _hook =
+                            extensions_mod::hook_span(*e, "sqrt_ggn");
                         e.sqrt_ggn(&ctx, &s, cols, &mut out);
                     }
                     for e in &res_users {
+                        let _hook =
+                            extensions_mod::hook_span(*e, "residual");
                         for f in &extras {
                             e.residual(
                                 &ctx, &f.s, f.cols, &f.signs, &mut out,
@@ -896,12 +921,18 @@ impl Model {
                     s = self.mat_vjp_input(
                         li, ops, geoms, &acts, dims, s, ns, cols,
                     );
-                    for f in &mut extras {
-                        let fs = std::mem::take(&mut f.s);
-                        f.s = self.mat_vjp_input(
-                            li, ops, geoms, &acts, dims, fs, ns,
-                            f.cols,
+                    if !extras.is_empty() {
+                        let _prop = obs::span(
+                            obs::CAT_DETAIL,
+                            "residual/propagate",
                         );
+                        for f in &mut extras {
+                            let fs = std::mem::take(&mut f.s);
+                            f.s = self.mat_vjp_input(
+                                li, ops, geoms, &acts, dims, fs, ns,
+                                f.cols,
+                            );
+                        }
                     }
                     if !res_users.is_empty() {
                         if let Some(r) = &res_seeds[li] {
@@ -923,6 +954,7 @@ impl Model {
             .filter(|e| e.walk() == Walk::Shard)
             .collect();
         if !shard_exts.is_empty() {
+            let _shard = obs::span(obs::CAT_PHASE, "shard_hooks");
             let sctx = ShardCtx {
                 model: self,
                 ops,
@@ -932,6 +964,8 @@ impl Model {
                 norm,
             };
             for e in &shard_exts {
+                let _hook =
+                    extensions_mod::hook_span(*e, "batch_averages");
                 e.batch_averages(&sctx, &mut out);
             }
         }

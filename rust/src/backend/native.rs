@@ -428,6 +428,9 @@ impl Exec for NativeExec {
     }
 
     fn run(&self, inputs: &[Tensor]) -> Result<Outputs> {
+        let _root = crate::obs::span_with(crate::obs::CAT_ENGINE, || {
+            format!("run/{}", self.spec.name)
+        });
         super::validate_inputs(&self.spec, inputs)?;
         let p = self.spec.param_inputs().len();
         let params = &inputs[..p];

@@ -14,6 +14,7 @@ use super::problems::Problem;
 use super::train::{train, TrainConfig};
 use crate::backend::Backend;
 use crate::coordinator::metrics::RunLog;
+use crate::obs;
 use crate::optim::Hyper;
 
 /// Appendix C.2 grids.
@@ -123,6 +124,7 @@ pub fn run_protocol(
             // An optimizer failure at one grid point (e.g. a curvature
             // factor collapsing under an unstable (α, λ)) counts as a
             // diverged run, not a failed figure.
+            obs::add(obs::Counter::GridPoints, 1);
             let pt = match train(be, problem, &cfg) {
                 Ok(log) => GridPoint {
                     lr,
@@ -136,9 +138,12 @@ pub fn run_protocol(
                     diverged: log.diverged,
                 },
                 Err(e) => {
+                    obs::add(obs::Counter::GridFailures, 1);
                     if verbose {
-                        eprintln!("  grid {optimizer} lr={lr:.0e} \
-                                   λ={damping:.0e} failed: {e}");
+                        obs::progress(format_args!(
+                            "  grid {optimizer} lr={lr:.0e} \
+                             λ={damping:.0e} failed: {e}"
+                        ));
                     }
                     GridPoint {
                         lr,
@@ -150,12 +155,12 @@ pub fn run_protocol(
                 }
             };
             if verbose {
-                eprintln!(
+                obs::progress(format_args!(
                     "  grid {optimizer} lr={lr:.0e} λ={damping:.0e} \
                      acc={:.3}{}",
                     pt.final_accuracy,
                     if pt.diverged { " (diverged)" } else { "" }
-                );
+                ));
             }
             points.push(pt);
         }

@@ -11,6 +11,7 @@ use super::metrics::{EvalPoint, RunLog};
 use super::problems::Problem;
 use crate::backend::{Backend, Exec};
 use crate::data::{Batcher, Rng};
+use crate::obs;
 use crate::optim::{self, Hyper, NamedParam};
 use crate::runtime::{ArtifactSpec, Init, Tensor};
 
@@ -120,8 +121,11 @@ pub fn train(be: &dyn Backend, problem: &Problem, cfg: &TrainConfig)
         let loss = out.loss()?;
         if !loss.is_finite() {
             log.diverged = true;
+            obs::add(obs::Counter::TrainDivergences, 1);
             if cfg.verbose {
-                eprintln!("  diverged at step {step} (loss={loss})");
+                obs::progress(format_args!(
+                    "  diverged at step {step} (loss={loss})"
+                ));
             }
             break;
         }
@@ -132,11 +136,11 @@ pub fn train(be: &dyn Backend, problem: &Problem, cfg: &TrainConfig)
             let ev =
                 evaluate(eval_exe.as_ref(), &params, &mut batcher, step)?;
             if cfg.verbose {
-                eprintln!(
+                obs::progress(format_args!(
                     "  step {step:4} loss {loss:.4} \
                      test_loss {:.4} test_acc {:.3}",
                     ev.test_loss, ev.test_accuracy
-                );
+                ));
             }
             log.evals.push(ev);
         }

@@ -53,7 +53,7 @@ pub fn time_artifact(
     let inputs = build_inputs(&params, x, y, key);
     // compile+first-run outside the measurement
     exe.run(&inputs)?;
-    Ok(bench(
+    let mut stats = bench(
         name,
         1,
         iters,
@@ -61,7 +61,17 @@ pub fn time_artifact(
         || {
             exe.run(&inputs).expect("execute");
         },
-    ))
+    );
+    // Per-phase p50 from a few *traced* extra iterations, recorded as
+    // additive fields: the untraced headline numbers above are what
+    // the regression gate compares.
+    stats.phase_p50_s = crate::bench::phase_breakdown(
+        || {
+            exe.run(&inputs).expect("execute");
+        },
+        (iters / 2).clamp(1, 3),
+    );
+    Ok(stats)
 }
 
 /// Fig. 3: computing individual gradients -- for-loop (N separate

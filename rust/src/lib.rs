@@ -74,6 +74,7 @@ pub mod data;
 pub mod figures;
 pub mod json;
 pub mod linalg;
+pub mod obs;
 pub mod optim;
 pub mod parallel;
 pub mod runtime;
@@ -87,8 +88,9 @@ pub use backend::model::{Model, ParamBlock, NATIVE_EXTENSIONS};
 pub use backend::native::NativeBackend;
 pub use backend::{open, open_with, Backend, Exec, Outputs};
 pub use bench::{
-    compare_baselines, compare_files, BaselineCase, Stats,
-    BENCH_SCHEMA,
+    compare_baselines, compare_files, BaselineCase, CompareReport,
+    Stats, BENCH_SCHEMA, COMPARE_SCHEMA,
 };
 pub use json::Json;
+pub use obs::{Trace, METRICS_SCHEMA, TRACE_SCHEMA};
 pub use runtime::{ArtifactSpec, Tensor, TensorSpec};

@@ -180,6 +180,16 @@ const BLOCK: usize = 64;
 /// the speedup.
 const PAR_MIN_MACS: usize = 1 << 20;
 
+/// Credit one dense contraction (`macs` multiply-adds = 2x FLOPs) to
+/// the observability counter. Every matmul entry point below reports
+/// here exactly once: the serial functions at their head, the `*_par`
+/// drivers only on the parallel path (their serial fallback delegates
+/// to a counting function).
+#[inline]
+fn count_macs(macs: usize) {
+    crate::obs::add(crate::obs::Counter::MatmulFlops, 2 * macs as u64);
+}
+
 /// Dense `C = Aᵀ B` with a shared leading (batch) axis: A is [n, p],
 /// B is [n, q], C is [p, q] -- the contraction the native backend's
 /// gradient/factor extractions reduce to (mirror of the Python
@@ -190,6 +200,7 @@ pub fn matmul_tn(
 ) -> Vec<f32> {
     assert_eq!(a.len(), n * p);
     assert_eq!(b.len(), n * q);
+    count_macs(n * p * q);
     let mut c = vec![0.0f32; p * q];
     matmul_tn_rows(a, b, n, p, q, 0..p, &mut c);
     c
@@ -264,6 +275,7 @@ pub fn matmul_tn_par(
     }
     assert_eq!(a.len(), n * p);
     assert_eq!(b.len(), n * q);
+    count_macs(n * p * q);
     par_rows(p, q, threads, |rows, c| {
         matmul_tn_rows(a, b, n, p, q, rows, c)
     })
@@ -277,6 +289,7 @@ pub fn matmul_nt(
 ) -> Vec<f32> {
     assert_eq!(a.len(), p * n);
     assert_eq!(b.len(), q * n);
+    count_macs(p * n * q);
     let mut c = vec![0.0f32; p * q];
     matmul_nt_rows(a, b, n, q, 0..p, &mut c);
     c
@@ -324,6 +337,7 @@ pub fn matmul_nt_par(
     }
     assert_eq!(a.len(), p * n);
     assert_eq!(b.len(), q * n);
+    count_macs(p * n * q);
     par_rows(p, q, threads, |rows, c| {
         matmul_nt_rows(a, b, n, q, rows, c)
     })
@@ -334,6 +348,7 @@ pub fn matmul_nt_par(
 pub fn matmul(a: &[f32], b: &[f32], p: usize, q: usize, r: usize) -> Vec<f32> {
     assert_eq!(a.len(), p * q);
     assert_eq!(b.len(), q * r);
+    count_macs(p * q * r);
     let mut c = vec![0.0f32; p * r];
     matmul_rows(a, b, q, r, 0..p, &mut c);
     c
@@ -380,6 +395,7 @@ pub fn matmul_par(
     }
     assert_eq!(a.len(), p * q);
     assert_eq!(b.len(), q * r);
+    count_macs(p * q * r);
     par_rows(p, r, threads, |rows, c| {
         matmul_rows(a, b, q, r, rows, c)
     })

@@ -16,26 +16,28 @@
 //! artifacts`). Results land in `results/*.csv`.
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use backpack_rs::cli::Args;
-use backpack_rs::{open_with, Backend as _};
 use backpack_rs::coordinator::gridsearch::GridPreset;
 use backpack_rs::coordinator::metrics::write_csv;
 use backpack_rs::coordinator::{problems, train, TrainConfig};
 use backpack_rs::figures::{curves, tables, timing};
 use backpack_rs::optim::Hyper;
+use backpack_rs::{open_with, Backend};
 
 const USAGE: &str = "\
-usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N] [flags]
+usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N]
+                [--trace FILE] [--metrics] [--quiet] [flags]
   list
   train  --problem mnist_logreg --optimizer kfac [--lr 0.01]
          [--damping 0.01] [--steps 200] [--seed 0] [--eval-every 25]
          [--inv-every 1] [--verbose]
   bench  [--quick] [--batch 128] [--out BENCH_native.json]
          [--compare BASELINE.json [--current RUN.json]]
-         [--max-regression 3.0]
+         [--compare-out COMPARE.json] [--max-regression 3.0]
   fig3 | fig6 | fig8 | fig9      [--iters 10]
   fig7a | fig7b | fig10 | fig11  [--grid small|paper]
          [--search-steps N] [--steps N] [--seeds K] [--verbose]
@@ -51,8 +53,18 @@ external dependencies; it runs batch-parallel on all cores
 serial reference). `bench` writes the machine-readable perf baseline
 CI uploads on every push; `bench --compare BASELINE.json` gates the
 fresh run against a committed baseline (fail when any case's p50
-regresses past --max-regression, default 3x), and adding
-`--current RUN.json` compares two existing files without re-running.
+regresses past --max-regression, default 3x), adding
+`--current RUN.json` compares two existing files without re-running,
+and `--compare-out COMPARE.json` writes the machine-readable
+compare result (written even when the gate fails).
+
+Observability (any subcommand; docs/observability.md):
+  --trace FILE   record walk-level spans and write Chrome trace-event
+                 JSON (backpack-trace/v1; load in ui.perfetto.dev)
+  --metrics      print an aggregated backpack-metrics/v1 summary
+                 (per-phase/per-quantity totals, counters, shard
+                 balance, overhead-vs-grad ratio) on stdout
+  --quiet        suppress progress diagnostics on stderr
 ";
 
 fn grid_preset(args: &Args) -> Result<GridPreset> {
@@ -76,8 +88,60 @@ fn main() -> Result<()> {
     let threads = backpack_rs::parallel::resolve_threads(
         args.get_usize("threads", 0)?,
     );
+    backpack_rs::obs::set_quiet(args.has("quiet"));
+    let trace_path = args.flag("trace").map(std::path::PathBuf::from);
+    let want_metrics = args.has("metrics");
+    let collecting = trace_path.is_some() || want_metrics;
+    if collecting {
+        backpack_rs::obs::start();
+    }
+    let run_started = Instant::now();
     let be = open_with(args.get_or("backend", "native"), threads)?;
-    let be = be.as_ref();
+    // The subcommand runs through `dispatch` so the trace/metrics
+    // below are emitted even when it errors (a partial trace of a
+    // failing run is exactly when you want one).
+    let outcome = dispatch(&args, be.as_ref(), threads, out_dir);
+    if !collecting {
+        return outcome;
+    }
+    let wall_s = run_started.elapsed().as_secs_f64();
+    let trace = backpack_rs::obs::stop();
+    let emit =
+        emit_trace(&trace, trace_path.as_deref(), want_metrics, wall_s);
+    outcome.and(emit)
+}
+
+/// Write `--trace` / print `--metrics` output from a stopped
+/// recording. Runs after `dispatch` even when it errored.
+fn emit_trace(
+    trace: &backpack_rs::Trace,
+    trace_path: Option<&Path>,
+    want_metrics: bool,
+    wall_s: f64,
+) -> Result<()> {
+    if let Some(path) = trace_path {
+        std::fs::write(
+            path,
+            trace.chrome_trace().to_string_json() + "\n",
+        )?;
+        println!(
+            "wrote trace {} ({} events)",
+            path.display(),
+            trace.events.len()
+        );
+    }
+    if want_metrics {
+        println!("{}", trace.metrics(wall_s).to_string_json());
+    }
+    Ok(())
+}
+
+fn dispatch(
+    args: &Args,
+    be: &dyn Backend,
+    threads: usize,
+    out_dir: &Path,
+) -> Result<()> {
     match args.subcommand.as_str() {
         "list" => {
             for name in be.artifact_names() {
@@ -137,6 +201,8 @@ fn main() -> Result<()> {
             let out = args.get_or("out", &default_out);
             let max_ratio =
                 args.get_f32("max-regression", 3.0)? as f64;
+            let compare_out =
+                args.flag("compare-out").map(Path::new);
             if let Some(current) = args.flag("current") {
                 // Pure file-vs-file mode: no fresh run.
                 let baseline = args.flag("compare").ok_or_else(|| {
@@ -148,6 +214,7 @@ fn main() -> Result<()> {
                     Path::new(baseline),
                     Path::new(current),
                     max_ratio,
+                    compare_out,
                 )?;
             } else {
                 backpack_rs::bench::perf_baseline(
@@ -162,6 +229,7 @@ fn main() -> Result<()> {
                         Path::new(baseline),
                         Path::new(out),
                         max_ratio,
+                        compare_out,
                     )?;
                 }
             }
@@ -178,7 +246,7 @@ fn main() -> Result<()> {
             let (problem, opts) = curves::figure_spec(fig).unwrap();
             let heavy = fig == "fig7b";
             let budget = curves::CurveBudget {
-                preset: grid_preset(&args)?,
+                preset: grid_preset(args)?,
                 search_steps: args.get_usize(
                     "search-steps", if heavy { 30 } else { 60 })?,
                 final_steps: args.get_usize(
@@ -196,7 +264,7 @@ fn main() -> Result<()> {
             tables::table4(
                 be,
                 problem,
-                grid_preset(&args)?,
+                grid_preset(args)?,
                 args.get_usize("search-steps", 80)?,
                 args.get_usize("steps", 250)?,
                 args.get_usize("seeds", 3)?,

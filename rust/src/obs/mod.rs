@@ -1,0 +1,391 @@
+//! Walk-level observability: spans, counters, structured progress
+//! (zero dependencies; DESIGN.md §12).
+//!
+//! The bench layer times a whole [`crate::backend::Exec::run`] from
+//! outside; this module sees *inside* it. Three pieces:
+//!
+//! * a **thread-aware span recorder** -- [`span`] / [`span_with`]
+//!   record complete intervals into a per-thread (lock-free) buffer;
+//!   [`shard_scope`] tags a `par_map` worker's events with its shard
+//!   lane, times the shard's wall-clock, and flushes the worker's
+//!   buffer into the global sink at the fork/join boundary, so
+//!   recording itself never takes a lock;
+//! * **named counters** ([`add`] / [`Counter`]) -- matmul FLOPs,
+//!   im2col bytes materialized, per-shard wall-clock, training
+//!   divergences, grid-search progress;
+//! * a **structured progress helper** ([`progress`] / [`set_quiet`])
+//!   replacing the coordinator's ad-hoc `eprintln!` diagnostics, so
+//!   serving-mode callers can suppress or scrape them.
+//!
+//! **Disabled-path cost.** Everything is gated on one relaxed atomic
+//! load ([`enabled`]): a disabled [`span`] allocates nothing and
+//! returns an inert guard, a disabled [`add`] is a load + branch, and
+//! [`shard_scope`] collapses to a direct call. The engine therefore
+//! stays instrumented permanently; `--trace FILE` / `--metrics` turn
+//! collection on per process (see `main.rs`).
+//!
+//! Span **categories** keep aggregation honest:
+//!
+//! * [`CAT_PHASE`] -- non-overlapping engine sections (`setup`,
+//!   `forward`, `loss`, `grad_walk`, `sqrt_exact_walk`,
+//!   `sqrt_mc_walk`, `shard_hooks`, `reduce`, `finish`). Per lane
+//!   they tile the run, so their per-lane sum is comparable to the
+//!   measured wall-clock;
+//! * [`CAT_EXT`] -- one span per [`crate::Extension`] hook dispatch,
+//!   named `{quantity}/{hook}`;
+//! * [`CAT_LAYER`] -- per-layer forward spans (`fwd/{li}`), nested
+//!   inside the `forward` phase;
+//! * [`CAT_DETAIL`] -- nested fine-grain sections (the diag_h
+//!   residual-factor propagation), inside a walk phase;
+//! * [`CAT_SHARD`] -- one span per `par_map` worker (`shard/{i}`),
+//!   the load-imbalance signal;
+//! * [`CAT_ENGINE`] -- structural spans that contain others
+//!   (`run/{artifact}`, `fork_join`), excluded from totals.
+
+pub mod report;
+
+pub use report::{Trace, METRICS_SCHEMA, TRACE_SCHEMA};
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Non-overlapping engine phases; per-lane sums tile the run.
+pub const CAT_PHASE: &str = "phase";
+/// Extension hook dispatches, named `{quantity}/{hook}`.
+pub const CAT_EXT: &str = "ext";
+/// Per-layer forward spans, nested inside the `forward` phase.
+pub const CAT_LAYER: &str = "layer";
+/// Fine-grain sections nested inside a phase (residual propagation).
+pub const CAT_DETAIL: &str = "detail";
+/// One span per `par_map` worker: per-shard wall-clock.
+pub const CAT_SHARD: &str = "shard";
+/// Structural container spans (whole runs, fork/join regions).
+pub const CAT_ENGINE: &str = "engine";
+
+/// One recorded complete span (Chrome trace-event `ph: "X"`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    /// Span name (e.g. `forward`, `diag_ggn/sqrt_ggn`, `shard/2`).
+    pub name: String,
+    /// Category constant (`CAT_*`), driving aggregation rules.
+    pub cat: &'static str,
+    /// Worker lane: the `par_map` shard index, 0 on the caller.
+    pub lane: usize,
+    /// Start offset from the process trace epoch, nanoseconds.
+    pub start_ns: u64,
+    /// Duration, nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// Named monotonic counters, accumulated while the recorder is
+/// enabled. Fixed set: the hot paths add by enum index, never by
+/// string lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Floating-point operations issued by the `linalg` matmul
+    /// kernels (2 x multiply-adds).
+    MatmulFlops = 0,
+    /// Bytes materialized by `im2col` patch extraction.
+    Im2colBytes = 1,
+    /// Summed `par_map` worker wall-clock, nanoseconds.
+    ShardNs = 2,
+    /// Training runs aborted on a non-finite loss.
+    TrainDivergences = 3,
+    /// Hyperparameter grid points evaluated.
+    GridPoints = 4,
+    /// Grid points whose training run returned an error.
+    GridFailures = 5,
+}
+
+/// Counter names, indexed by the [`Counter`] discriminant -- the keys
+/// of the `counters` object in both output schemas.
+pub const COUNTER_NAMES: [&str; COUNTER_COUNT] = [
+    "matmul_flops",
+    "im2col_bytes",
+    "shard_ns",
+    "train_divergences",
+    "grid_points",
+    "grid_failures",
+];
+
+/// Number of named counters.
+pub const COUNTER_COUNT: usize = 6;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static QUIET: AtomicBool = AtomicBool::new(false);
+
+struct Sink {
+    epoch: Instant,
+    events: Mutex<Vec<Event>>,
+    counters: [AtomicU64; COUNTER_COUNT],
+}
+
+fn sink() -> &'static Sink {
+    static SINK: OnceLock<Sink> = OnceLock::new();
+    SINK.get_or_init(|| Sink {
+        epoch: Instant::now(),
+        events: Mutex::new(Vec::new()),
+        counters: std::array::from_fn(|_| AtomicU64::new(0)),
+    })
+}
+
+thread_local! {
+    /// Per-thread span buffer: recording pushes here without locking;
+    /// [`flush_local`] moves it into the global sink (at `par_map`
+    /// join for workers, at drain points for the caller).
+    static LOCAL: RefCell<Vec<Event>> = const { RefCell::new(Vec::new()) };
+    /// The worker lane events on this thread are tagged with.
+    static LANE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Whether the recorder is collecting. One relaxed atomic load: the
+/// instrumented hot paths branch on this and nothing else when
+/// tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable collection after clearing previously recorded events and
+/// counters: begins a fresh collection region ([`stop`] ends it).
+pub fn start() {
+    let s = sink();
+    flush_local();
+    s.events.lock().expect("obs sink").clear();
+    for c in &s.counters {
+        c.store(0, Ordering::Relaxed);
+    }
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Enable collection *without* clearing -- for nested measurement
+/// regions (the bench per-phase breakdown) that must not destroy a
+/// surrounding `--trace` collection. Use [`mark`]/[`since`] to read
+/// deltas.
+pub fn resume() {
+    sink(); // pin the epoch before the first span lands
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Disable collection and drain everything recorded since [`start`].
+pub fn stop() -> Trace {
+    ENABLED.store(false, Ordering::Relaxed);
+    flush_local();
+    let s = sink();
+    let events = std::mem::take(&mut *s.events.lock().expect("obs sink"));
+    let counters =
+        std::array::from_fn(|i| s.counters[i].load(Ordering::Relaxed));
+    Trace { events, counters }
+}
+
+/// A position in the recorded stream; [`since`] reads the delta.
+pub struct Mark {
+    idx: usize,
+    counters: [u64; COUNTER_COUNT],
+}
+
+/// Snapshot the current recording position (flushes this thread's
+/// buffer first). Valid on a disabled recorder: the later [`since`]
+/// then returns an empty [`Trace`].
+pub fn mark() -> Mark {
+    flush_local();
+    let s = sink();
+    Mark {
+        idx: s.events.lock().expect("obs sink").len(),
+        counters: std::array::from_fn(|i| {
+            s.counters[i].load(Ordering::Relaxed)
+        }),
+    }
+}
+
+/// Everything recorded since `m` (events copied, counters as deltas).
+/// All `par_map` forks started after `m` must have joined, so their
+/// buffers are already merged. Robust against a concurrent [`stop`]
+/// having drained the sink (returns what remains instead of
+/// panicking).
+pub fn since(m: &Mark) -> Trace {
+    flush_local();
+    let s = sink();
+    let events = s
+        .events
+        .lock()
+        .expect("obs sink")
+        .get(m.idx..)
+        .map(<[Event]>::to_vec)
+        .unwrap_or_default();
+    let counters = std::array::from_fn(|i| {
+        s.counters[i]
+            .load(Ordering::Relaxed)
+            .saturating_sub(m.counters[i])
+    });
+    Trace { events, counters }
+}
+
+/// Move this thread's span buffer into the global sink.
+pub(crate) fn flush_local() {
+    LOCAL.with(|b| {
+        let mut b = b.borrow_mut();
+        if !b.is_empty() {
+            sink()
+                .events
+                .lock()
+                .expect("obs sink")
+                .append(&mut b);
+        }
+    });
+}
+
+/// An in-flight span; records one [`Event`] when dropped. Inert (no
+/// allocation, no clock read) when the recorder was disabled at
+/// creation.
+#[must_use = "a span records its interval when dropped"]
+pub struct Span(Option<SpanInner>);
+
+struct SpanInner {
+    name: String,
+    cat: &'static str,
+    start: Instant,
+}
+
+/// Open a span with a static name. Disabled recorder: returns an
+/// inert guard after the single atomic branch.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanInner {
+        name: name.to_string(),
+        cat,
+        start: Instant::now(),
+    }))
+}
+
+/// Open a span whose name is built lazily -- the closure (and its
+/// allocation) only runs when the recorder is enabled.
+#[inline]
+pub fn span_with<F: FnOnce() -> String>(cat: &'static str, f: F) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanInner { name: f(), cat, start: Instant::now() }))
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(inner) = self.0.take() else { return };
+        let s = sink();
+        // `duration_since` saturates to zero, so a span opened before
+        // the lazily pinned epoch cannot panic.
+        let start_ns =
+            inner.start.duration_since(s.epoch).as_nanos() as u64;
+        let dur_ns = inner.start.elapsed().as_nanos() as u64;
+        LOCAL.with(|b| {
+            b.borrow_mut().push(Event {
+                name: inner.name,
+                cat: inner.cat,
+                lane: LANE.with(|l| l.get()),
+                start_ns,
+                dur_ns,
+            })
+        });
+    }
+}
+
+/// Add `v` to a named counter (no-op when disabled).
+#[inline]
+pub fn add(c: Counter, v: u64) {
+    if !enabled() {
+        return;
+    }
+    sink().counters[c as usize].fetch_add(v, Ordering::Relaxed);
+}
+
+/// Run `f` as `par_map` shard `i`: tag the thread's events with lane
+/// `i`, record a `shard/{i}` wall-clock span plus the
+/// [`Counter::ShardNs`] total, and flush the thread-local buffer into
+/// the global sink on return -- the "merge at join" half of the
+/// lock-free recording scheme. Disabled recorder: a direct call.
+pub fn shard_scope<T>(i: usize, f: impl FnOnce() -> T) -> T {
+    if !enabled() {
+        return f();
+    }
+    let prev = LANE.with(|l| l.replace(i));
+    let start = Instant::now();
+    let sp = span_with(CAT_SHARD, || format!("shard/{i}"));
+    let out = f();
+    drop(sp);
+    add(Counter::ShardNs, start.elapsed().as_nanos() as u64);
+    LANE.with(|l| l.set(prev));
+    flush_local();
+    out
+}
+
+/// Suppress (`true`) or restore (`false`) [`progress`] output.
+pub fn set_quiet(q: bool) {
+    QUIET.store(q, Ordering::Relaxed);
+}
+
+/// Whether progress output is suppressed (`--quiet`).
+pub fn quiet() -> bool {
+    QUIET.load(Ordering::Relaxed)
+}
+
+/// One structured progress line on stderr, suppressed by `--quiet`.
+/// The coordinator's diagnostics route through here (paired with a
+/// [`Counter`] where the event matters machine-side), so serving-mode
+/// callers can silence the human stream without losing the signal.
+pub fn progress(args: std::fmt::Arguments<'_>) {
+    if !quiet() {
+        eprintln!("{args}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_names_cover_every_discriminant() {
+        assert_eq!(COUNTER_NAMES.len(), COUNTER_COUNT);
+        for (i, c) in [
+            Counter::MatmulFlops,
+            Counter::Im2colBytes,
+            Counter::ShardNs,
+            Counter::TrainDivergences,
+            Counter::GridPoints,
+            Counter::GridFailures,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            assert_eq!(c as usize, i);
+        }
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // Other tests may race the global flag; only assert when this
+        // thread observes the recorder off for the whole window.
+        if enabled() {
+            return;
+        }
+        let sp = span(CAT_PHASE, "nothing");
+        assert!(sp.0.is_none());
+        drop(sp);
+        let sp = span_with(CAT_EXT, || unreachable!("must stay lazy"));
+        assert!(sp.0.is_none());
+    }
+
+    #[test]
+    fn quiet_gates_progress() {
+        set_quiet(true);
+        assert!(quiet());
+        progress(format_args!("suppressed"));
+        set_quiet(false);
+        assert!(!quiet());
+    }
+}

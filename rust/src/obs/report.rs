@@ -1,0 +1,443 @@
+//! Trace aggregation + the two output schemas
+//! (`backpack-trace/v1`, `backpack-metrics/v1`).
+//!
+//! A [`Trace`] is the drained result of one collection region
+//! ([`super::stop`] / [`super::since`]): the recorded events plus the
+//! counter deltas. It serializes two ways:
+//!
+//! * [`Trace::chrome_trace`] -- Chrome trace-event JSON (`ph: "X"`
+//!   complete events, microsecond timestamps, one `tid` per worker
+//!   lane), loadable in Perfetto / `chrome://tracing`;
+//! * [`Trace::metrics`] -- an aggregated per-phase / per-quantity
+//!   summary with the paper's Fig.-6-style overhead-vs-grad ratio
+//!   attributed to phases.
+//!
+//! `docs/observability.md` documents both schemas and how to read
+//! them; phase spans never overlap within a lane, so per-phase totals
+//! are additive (multi-lane runs sum CPU-time-like across shards).
+
+use std::collections::BTreeMap;
+
+use super::{
+    Counter, Event, CAT_DETAIL, CAT_EXT, CAT_PHASE, CAT_SHARD,
+    COUNTER_COUNT, COUNTER_NAMES,
+};
+use crate::json::Json;
+
+/// Schema identifier of [`Trace::chrome_trace`] output (stored in
+/// `otherData.schema`); bump on any breaking layout change.
+pub const TRACE_SCHEMA: &str = "backpack-trace/v1";
+
+/// Schema identifier of [`Trace::metrics`] output; bump on any
+/// breaking layout change.
+pub const METRICS_SCHEMA: &str = "backpack-metrics/v1";
+
+/// Everything recorded in one collection region.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    /// Recorded spans, in sink (flush) order.
+    pub events: Vec<Event>,
+    /// Counter values, indexed by the [`Counter`] discriminant.
+    pub counters: [u64; COUNTER_COUNT],
+}
+
+/// `(count, total seconds)` aggregate of one span name.
+pub type SpanTotal = (usize, f64);
+
+impl Trace {
+    /// No spans recorded and every counter zero.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.counters.iter().all(|c| *c == 0)
+    }
+
+    /// One counter's value.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// Per-phase `(count, total_s)` over [`CAT_PHASE`] spans. Phases
+    /// never overlap within a lane, so the totals are additive; on a
+    /// multi-lane run they sum across shards (CPU-time-like).
+    pub fn phase_totals(&self) -> BTreeMap<String, SpanTotal> {
+        self.totals_by(|e| {
+            (e.cat == CAT_PHASE).then(|| e.name.clone())
+        })
+    }
+
+    /// Per-quantity `(count, total_s)` over [`CAT_EXT`] hook spans,
+    /// grouped by the quantity name before the `/{hook}` suffix.
+    pub fn quantity_totals(&self) -> BTreeMap<String, SpanTotal> {
+        self.totals_by(|e| {
+            (e.cat == CAT_EXT).then(|| {
+                e.name
+                    .split_once('/')
+                    .map_or(e.name.as_str(), |(q, _)| q)
+                    .to_string()
+            })
+        })
+    }
+
+    /// Per-name `(count, total_s)` over [`CAT_DETAIL`] spans (nested
+    /// sections like the residual-factor propagation).
+    pub fn detail_totals(&self) -> BTreeMap<String, SpanTotal> {
+        self.totals_by(|e| {
+            (e.cat == CAT_DETAIL).then(|| e.name.clone())
+        })
+    }
+
+    fn totals_by<F: Fn(&Event) -> Option<String>>(
+        &self,
+        key: F,
+    ) -> BTreeMap<String, SpanTotal> {
+        let mut out: BTreeMap<String, SpanTotal> = BTreeMap::new();
+        for e in &self.events {
+            if let Some(k) = key(e) {
+                let t = out.entry(k).or_insert((0, 0.0));
+                t.0 += 1;
+                t.1 += e.dur_ns as f64 * 1e-9;
+            }
+        }
+        out
+    }
+
+    /// Durations (seconds) of every [`CAT_SHARD`] span -- the raw
+    /// load-imbalance signal.
+    pub fn shard_durations(&self) -> Vec<f64> {
+        self.events
+            .iter()
+            .filter(|e| e.cat == CAT_SHARD)
+            .map(|e| e.dur_ns as f64 * 1e-9)
+            .collect()
+    }
+
+    /// Chrome trace-event JSON ([`TRACE_SCHEMA`]): complete (`"X"`)
+    /// events with microsecond `ts`/`dur`, `pid` 1, and the worker
+    /// lane as `tid`; counters ride in `otherData`. Load the written
+    /// file directly in <https://ui.perfetto.dev> or
+    /// `chrome://tracing`.
+    pub fn chrome_trace(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(e.name.clone()));
+                o.insert("cat".into(), Json::Str(e.cat.to_string()));
+                o.insert("ph".into(), Json::Str("X".into()));
+                o.insert("pid".into(), Json::Num(1.0));
+                o.insert("tid".into(), Json::Num(e.lane as f64));
+                o.insert(
+                    "ts".into(),
+                    Json::Num(e.start_ns as f64 * 1e-3),
+                );
+                o.insert(
+                    "dur".into(),
+                    Json::Num(e.dur_ns as f64 * 1e-3),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut other = BTreeMap::new();
+        other.insert(
+            "schema".into(),
+            Json::Str(TRACE_SCHEMA.to_string()),
+        );
+        other.insert("counters".into(), self.counters_json());
+        let mut root = BTreeMap::new();
+        root.insert(
+            "displayTimeUnit".into(),
+            Json::Str("ms".into()),
+        );
+        root.insert("otherData".into(), Json::Obj(other));
+        root.insert("traceEvents".into(), Json::Arr(events));
+        Json::Obj(root)
+    }
+
+    /// Aggregated summary ([`METRICS_SCHEMA`]): per-phase and
+    /// per-quantity totals, counters, shard balance, and the
+    /// Fig.-6-style overhead attribution. `wall_s` is the measured
+    /// wall-clock of the collection region (the caller owns that
+    /// clock); phase sums on a multi-lane run exceed it by up to the
+    /// worker-lane count, like CPU time vs wall time.
+    ///
+    /// `overhead.grad_s` is the gradient's own pipeline (`forward` +
+    /// `loss` + `grad_walk`); `overhead.vs_grad` divides the total
+    /// phase time by it -- the in-run analogue of the paper's
+    /// "extension time / gradient time" ratio, now attributed to
+    /// phases instead of inferred from two separate timings.
+    pub fn metrics(&self, wall_s: f64) -> Json {
+        let totals_json = |m: &BTreeMap<String, SpanTotal>| {
+            Json::Obj(
+                m.iter()
+                    .map(|(k, (count, total_s))| {
+                        let mut o = BTreeMap::new();
+                        o.insert(
+                            "count".into(),
+                            Json::Num(*count as f64),
+                        );
+                        o.insert(
+                            "total_s".into(),
+                            Json::Num(*total_s),
+                        );
+                        (k.clone(), Json::Obj(o))
+                    })
+                    .collect(),
+            )
+        };
+        let phases = self.phase_totals();
+        let grad_s: f64 = ["forward", "loss", "grad_walk"]
+            .iter()
+            .filter_map(|p| phases.get(*p))
+            .map(|t| t.1)
+            .sum();
+        let total_s: f64 = phases.values().map(|t| t.1).sum();
+        let mut overhead = BTreeMap::new();
+        overhead.insert("grad_s".into(), Json::Num(grad_s));
+        overhead.insert("total_s".into(), Json::Num(total_s));
+        overhead.insert(
+            "vs_grad".into(),
+            if grad_s > 0.0 {
+                Json::Num(total_s / grad_s)
+            } else {
+                Json::Null
+            },
+        );
+
+        let shards = self.shard_durations();
+        let mut sh = BTreeMap::new();
+        sh.insert("count".into(), Json::Num(shards.len() as f64));
+        sh.insert(
+            "total_s".into(),
+            Json::Num(shards.iter().sum::<f64>()),
+        );
+        if !shards.is_empty() {
+            let max = shards.iter().cloned().fold(0.0, f64::max);
+            let min =
+                shards.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mean =
+                shards.iter().sum::<f64>() / shards.len() as f64;
+            sh.insert("max_s".into(), Json::Num(max));
+            sh.insert("min_s".into(), Json::Num(min));
+            sh.insert(
+                "imbalance".into(),
+                if mean > 0.0 {
+                    Json::Num(max / mean)
+                } else {
+                    Json::Null
+                },
+            );
+        }
+
+        let mut root = BTreeMap::new();
+        root.insert(
+            "schema".into(),
+            Json::Str(METRICS_SCHEMA.to_string()),
+        );
+        root.insert("wall_s".into(), Json::Num(wall_s));
+        root.insert("phases".into(), totals_json(&phases));
+        root.insert(
+            "quantities".into(),
+            totals_json(&self.quantity_totals()),
+        );
+        root.insert(
+            "details".into(),
+            totals_json(&self.detail_totals()),
+        );
+        root.insert("counters".into(), self.counters_json());
+        root.insert("shards".into(), Json::Obj(sh));
+        root.insert("overhead".into(), Json::Obj(overhead));
+        Json::Obj(root)
+    }
+
+    fn counters_json(&self) -> Json {
+        Json::Obj(
+            COUNTER_NAMES
+                .iter()
+                .zip(self.counters.iter())
+                .map(|(n, v)| (n.to_string(), Json::Num(*v as f64)))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{CAT_ENGINE, CAT_LAYER};
+
+    fn ev(
+        name: &str,
+        cat: &'static str,
+        lane: usize,
+        start_ns: u64,
+        dur_ns: u64,
+    ) -> Event {
+        Event { name: name.to_string(), cat, lane, start_ns, dur_ns }
+    }
+
+    /// A deterministic hand-built trace: one two-lane engine call.
+    fn sample_trace() -> Trace {
+        let mut counters = [0u64; COUNTER_COUNT];
+        counters[Counter::MatmulFlops as usize] = 4096;
+        counters[Counter::Im2colBytes as usize] = 512;
+        counters[Counter::ShardNs as usize] = 9_000;
+        Trace {
+            events: vec![
+                ev("run/mlp_diag_ggn_n8", CAT_ENGINE, 0, 0, 10_000),
+                ev("shard/0", CAT_SHARD, 0, 500, 5_000),
+                ev("shard/1", CAT_SHARD, 1, 500, 4_000),
+                ev("forward", CAT_PHASE, 0, 600, 1_000),
+                ev("fwd/0", CAT_LAYER, 0, 650, 400),
+                ev("forward", CAT_PHASE, 1, 600, 800),
+                ev("loss", CAT_PHASE, 0, 1_700, 200),
+                ev("grad_walk", CAT_PHASE, 0, 2_000, 1_800),
+                ev("sqrt_exact_walk", CAT_PHASE, 0, 4_000, 1_500),
+                ev("residual/propagate", CAT_DETAIL, 0, 4_200, 300),
+                ev("diag_ggn/sqrt_ggn", CAT_EXT, 0, 4_400, 250),
+                ev("diag_ggn/sqrt_ggn", CAT_EXT, 1, 4_400, 350),
+                ev("reduce", CAT_PHASE, 0, 6_000, 400),
+                ev("diag_ggn/finish", CAT_EXT, 0, 6_500, 100),
+                ev("finish", CAT_PHASE, 0, 6_450, 200),
+            ],
+            counters,
+        }
+    }
+
+    #[test]
+    fn phase_totals_sum_per_name_across_lanes() {
+        let t = sample_trace();
+        let p = t.phase_totals();
+        let fwd = p.get("forward").unwrap();
+        assert_eq!(fwd.0, 2);
+        assert!((fwd.1 - 1.8e-6).abs() < 1e-12);
+        assert_eq!(p.get("loss").unwrap().0, 1);
+        // Layer/detail/ext/engine spans never leak into phases.
+        assert!(!p.contains_key("fwd/0"));
+        assert!(!p.contains_key("residual/propagate"));
+        assert!(p.keys().all(|k| !k.contains('/')), "{p:?}");
+    }
+
+    #[test]
+    fn quantity_totals_group_hooks_by_extension_name() {
+        let t = sample_trace();
+        let q = t.quantity_totals();
+        let d = q.get("diag_ggn").unwrap();
+        assert_eq!(d.0, 3, "sqrt_ggn x2 + finish");
+        assert!((d.1 - 700e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_durations_and_counters() {
+        let t = sample_trace();
+        let sh = t.shard_durations();
+        assert_eq!(sh.len(), 2);
+        assert_eq!(t.counter(Counter::MatmulFlops), 4096);
+        assert_eq!(t.counter(Counter::GridPoints), 0);
+        assert!(!t.is_empty());
+        assert!(Trace::default().is_empty());
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_perfetto_json() {
+        let t = sample_trace();
+        let doc = t.chrome_trace();
+        // Round-trips through the parser (what the CI smoke checks).
+        let doc =
+            Json::parse(&doc.to_string_json()).unwrap();
+        assert_eq!(
+            doc.get("otherData")
+                .unwrap()
+                .get("schema")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            TRACE_SCHEMA
+        );
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), t.events.len());
+        for e in evs {
+            assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+            assert_eq!(e.get("pid").unwrap().as_usize().unwrap(), 1);
+            assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            e.get("name").unwrap().as_str().unwrap();
+            e.get("cat").unwrap().as_str().unwrap();
+            e.get("tid").unwrap().as_usize().unwrap();
+        }
+        // Microsecond unit: the 10µs engine span serializes as 10.
+        let run = evs
+            .iter()
+            .find(|e| {
+                e.get("name").unwrap().as_str().unwrap()
+                    == "run/mlp_diag_ggn_n8"
+            })
+            .unwrap();
+        assert!(
+            (run.get("dur").unwrap().as_f64().unwrap() - 10.0).abs()
+                < 1e-9
+        );
+    }
+
+    /// Golden shape of the `backpack-metrics/v1` summary: pins the
+    /// top-level keys, the per-entry layout, and the overhead
+    /// attribution arithmetic.
+    #[test]
+    fn metrics_summary_golden_shape() {
+        let t = sample_trace();
+        let m = Json::parse(
+            &t.metrics(12.5e-6).to_string_json(),
+        )
+        .unwrap();
+        assert_eq!(
+            m.get("schema").unwrap().as_str().unwrap(),
+            METRICS_SCHEMA
+        );
+        let keys: Vec<&str> =
+            m.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            [
+                "counters", "details", "overhead", "phases",
+                "quantities", "schema", "shards", "wall_s"
+            ]
+        );
+        // Per-entry layout: {count, total_s}.
+        let fwd = m.get("phases").unwrap().get("forward").unwrap();
+        assert_eq!(fwd.get("count").unwrap().as_usize().unwrap(), 2);
+        assert!(fwd.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+        // Every counter name appears, even when zero.
+        let counters = m.get("counters").unwrap().as_obj().unwrap();
+        for name in COUNTER_NAMES {
+            assert!(counters.contains_key(name), "{name}");
+        }
+        // Overhead attribution: grad_s = forward + loss + grad_walk
+        // = (1000 + 800 + 200 + 1800) ns; total adds the exact walk,
+        // reduce and finish.
+        let ov = m.get("overhead").unwrap();
+        let grad_s = ov.get("grad_s").unwrap().as_f64().unwrap();
+        assert!((grad_s - 3.8e-6).abs() < 1e-12);
+        let total_s = ov.get("total_s").unwrap().as_f64().unwrap();
+        assert!((total_s - 5.9e-6).abs() < 1e-12);
+        let ratio = ov.get("vs_grad").unwrap().as_f64().unwrap();
+        assert!((ratio - total_s / grad_s).abs() < 1e-12);
+        // Shard balance: max 5µs over mean 4.5µs.
+        let sh = m.get("shards").unwrap();
+        assert_eq!(sh.get("count").unwrap().as_usize().unwrap(), 2);
+        let imb = sh.get("imbalance").unwrap().as_f64().unwrap();
+        assert!((imb - 5.0 / 4.5).abs() < 1e-9);
+        // Empty trace: overhead ratio is null, shards carry count 0.
+        let empty = Trace::default().metrics(0.0);
+        assert_eq!(empty.get("overhead").unwrap().get("vs_grad")
+                       .unwrap(), &Json::Null);
+        assert_eq!(
+            empty
+                .get("shards")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            0
+        );
+    }
+}

@@ -30,19 +30,36 @@ pub fn available_threads() -> usize {
 
 /// Resolve a requested thread count: `0` means auto (`BACKPACK_THREADS`
 /// if set to a positive integer, else all cores); any positive request
-/// is taken verbatim.
+/// is taken verbatim. A malformed `BACKPACK_THREADS` value falls back
+/// to auto-detect with a one-time stderr warning.
 pub fn resolve_threads(requested: usize) -> usize {
     if requested > 0 {
         return requested;
     }
     if let Ok(v) = std::env::var(THREADS_ENV) {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            if n > 0 {
-                return n;
-            }
+        match parse_threads(&v) {
+            Some(n) => return n,
+            None => warn_bad_threads(&v),
         }
     }
     available_threads()
+}
+
+/// Parse a `BACKPACK_THREADS` value: a positive integer, or `None` for
+/// anything else (empty, zero, negative, non-numeric).
+fn parse_threads(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().filter(|n| *n > 0)
+}
+
+/// Warn (once per process) that `BACKPACK_THREADS` was ignored.
+fn warn_bad_threads(v: &str) {
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    WARNED.call_once(|| {
+        eprintln!(
+            "warning: ignoring {THREADS_ENV}={v:?} \
+             (expected a positive integer); auto-detecting threads"
+        );
+    });
 }
 
 /// Split `0..n` into at most `threads` contiguous shards whose lengths
@@ -81,13 +98,16 @@ where
     std::thread::scope(|scope| {
         let handles: Vec<_> = work[1..]
             .iter()
-            .map(|r| {
+            .enumerate()
+            .map(|(i, r)| {
                 let (f, r) = (&f, r.clone());
-                scope.spawn(move || f(r))
+                scope.spawn(move || {
+                    crate::obs::shard_scope(i + 1, || f(r))
+                })
             })
             .collect();
         let mut out = Vec::with_capacity(work.len());
-        out.push(f(work[0].clone()));
+        out.push(crate::obs::shard_scope(0, || f(work[0].clone())));
         out.extend(
             handles
                 .into_iter()
@@ -150,5 +170,30 @@ mod tests {
     fn resolve_threads_prefers_explicit_request() {
         assert_eq!(resolve_threads(3), 3);
         assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn parse_threads_accepts_only_positive_integers() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 12\n"), Some(12));
+        for bad in ["", "0", "-2", "2.5", "two", "4x", "18446744073709551616"]
+        {
+            assert_eq!(parse_threads(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_threads_env_falls_back_to_auto_detect() {
+        // The env var is process-global, so exercise the same
+        // fallback logic resolve_threads() applies to it.
+        let fallback = match parse_threads("not-a-number") {
+            Some(n) => n,
+            None => {
+                warn_bad_threads("not-a-number");
+                available_threads()
+            }
+        };
+        assert_eq!(fallback, available_threads());
+        assert!(fallback >= 1);
     }
 }
