@@ -23,14 +23,22 @@ use anyhow::Result;
 use backpack_rs::coordinator::train::{build_inputs, init_params};
 use backpack_rs::data::{DatasetSpec, Synthetic};
 use backpack_rs::runtime::Tensor;
-use backpack_rs::{Backend, Exec, NativeBackend};
+use backpack_rs::{ArtifactId, Backend, Exec, NativeBackend, Signature};
 
 fn main() -> Result<()> {
     let be = NativeBackend::new();
     // logreg (Linear(784, 10) + CrossEntropy) with every first-order
-    // extension in one graph.
-    let exe =
-        be.load("logreg_batch_grad+batch_l2+sq_moment+variance_n64")?;
+    // extension in one graph, addressed through the typed artifact
+    // API (the string form `be.load("logreg_batch_grad+..._n64")`
+    // still works and round-trips with `ArtifactId`).
+    let sig = Signature::extract([
+        "batch_grad",
+        "batch_l2",
+        "sq_moment",
+        "variance",
+    ])?;
+    let id = ArtifactId::new("logreg", sig, 64)?;
+    let exe = be.load_id(&id)?;
     let spec = exe.spec();
     println!(
         "artifact: {} ({} inputs, {} outputs)",

@@ -1,0 +1,515 @@
+//! Typed artifact addressing: [`Signature`] + [`ArtifactId`].
+//!
+//! The whole coordinator historically spoke artifact names as raw
+//! strings (`"mnist_mlp_diag_ggn+kfac_n128"`), with the grammar
+//! scattered across private helpers (`parse_sig`, `split_batch`).
+//! This module promotes the two halves of that grammar to public
+//! types with `FromStr`/`Display` round-trips:
+//!
+//! * [`Signature`] -- what sits between the model name and the batch
+//!   suffix: `eval`, `grad` (the empty extension list), or a
+//!   `+`-joined list of extension names;
+//! * [`ArtifactId`] -- the full address `{model}_{sig}_n{batch}`.
+//!
+//! The string forms remain the canonical wire/manifest spelling; the
+//! typed forms are what the native backend, the CLI, the bench grid
+//! and the `serve` daemon construct and pass around. Nothing here
+//! consults an extension registry: [`Signature`] validates the
+//! *grammar* (which names are representable), while registries
+//! ([`crate::backend::extensions::ExtensionSet`],
+//! [`crate::backend::native::NativeBackend`]) validate *membership*
+//! and use [`suggest`] to offer nearest-match candidates on failure.
+//!
+//! ```
+//! use backpack_rs::{ArtifactId, Signature};
+//!
+//! let sig: Signature = "diag_ggn+kfac".parse()?;
+//! assert_eq!(sig.extensions(), ["diag_ggn", "kfac"]);
+//!
+//! let id = ArtifactId::new("mlp", sig, 128)?;
+//! assert_eq!(id.to_string(), "mlp_diag_ggn+kfac_n128");
+//!
+//! // Round-trip: parsing the display form restores the id.
+//! let back: ArtifactId = id.to_string().parse()?;
+//! assert_eq!(back, id);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Result};
+
+use super::extensions::BUILTIN_NAMES;
+
+/// The extension-signature position of an artifact name: `eval`,
+/// `grad`, or a `+`-joined extension list.
+///
+/// `Extract(vec![])` is the gradient-only training graph and displays
+/// as `"grad"`; [`Signature::Eval`] is the evaluation graph (`loss` +
+/// `accuracy`). Parsing validates the grammar of each part (the same
+/// rules [`ExtensionSet::register`] enforces), not registry
+/// membership.
+///
+/// [`ExtensionSet::register`]: crate::backend::extensions::ExtensionSet::register
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Signature {
+    /// Evaluation graph: `loss` + `accuracy`, no extensions.
+    Eval,
+    /// Training graph returning `loss`, `grad/*` and the listed
+    /// extension quantities (empty list = gradient only, spelled
+    /// `grad`).
+    Extract(Vec<String>),
+}
+
+impl Signature {
+    /// The gradient-only training signature (`"grad"`).
+    pub fn grad() -> Signature {
+        Signature::Extract(Vec::new())
+    }
+
+    /// A training signature over validated extension names.
+    pub fn extract<I, S>(parts: I) -> Result<Signature>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let parts: Vec<String> =
+            parts.into_iter().map(Into::into).collect();
+        for p in &parts {
+            Self::check_part(p)?;
+        }
+        Ok(Signature::Extract(parts))
+    }
+
+    /// The requested extension names (empty for `grad` and `eval`).
+    pub fn extensions(&self) -> &[String] {
+        match self {
+            Signature::Eval => &[],
+            Signature::Extract(parts) => parts,
+        }
+    }
+
+    /// True for the evaluation signature.
+    pub fn is_eval(&self) -> bool {
+        matches!(self, Signature::Eval)
+    }
+
+    /// True for the gradient-only training signature.
+    pub fn is_grad(&self) -> bool {
+        matches!(self, Signature::Extract(p) if p.is_empty())
+    }
+
+    /// Validate one extension name against the signature/output-key
+    /// grammar: non-empty, no `+` (the signature separator), no `/`
+    /// (the output-key separator), no whitespace, not the reserved
+    /// words `grad`/`eval`, and no trailing `_n<digits>` (the batch
+    /// suffix [`ArtifactId::split_batch`] would strip). This is the
+    /// single authority both [`Signature`] parsing and
+    /// [`ExtensionSet::register`] consult.
+    ///
+    /// [`ExtensionSet::register`]: crate::backend::extensions::ExtensionSet::register
+    pub fn check_part(name: &str) -> Result<()> {
+        ensure!(
+            !name.is_empty()
+                && !name.contains('+')
+                && !name.contains('/')
+                && !name.contains(char::is_whitespace)
+                && name != "grad"
+                && name != "eval",
+            "extension name {name:?} is not a valid signature part \
+             (empty, reserved, or contains '+'/'/'/' ')"
+        );
+        if let Some(pos) = name.rfind("_n") {
+            let digits = &name[pos + 2..];
+            ensure!(
+                digits.is_empty()
+                    || !digits.bytes().all(|b| b.is_ascii_digit()),
+                "extension name {name:?} ends in a _n<digits> batch \
+                 suffix, which artifact-name parsing would strip"
+            );
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Signature {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Signature::Eval => f.write_str("eval"),
+            Signature::Extract(parts) if parts.is_empty() => {
+                f.write_str("grad")
+            }
+            Signature::Extract(parts) => {
+                f.write_str(&parts.join("+"))
+            }
+        }
+    }
+}
+
+impl FromStr for Signature {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Signature> {
+        match s {
+            "eval" => Ok(Signature::Eval),
+            "grad" => Ok(Signature::grad()),
+            _ => Signature::extract(s.split('+')),
+        }
+    }
+}
+
+/// A fully qualified artifact address: `{model}_{sig}_n{batch}`.
+///
+/// `Display` produces the canonical manifest/wire spelling; `FromStr`
+/// parses it back against the built-in extension vocabulary (see
+/// [`ArtifactId::parse_with`] for custom vocabularies, and
+/// [`NativeBackend`]'s registry-aware resolution for the
+/// authoritative model split).
+///
+/// [`NativeBackend`]: crate::backend::native::NativeBackend
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArtifactId {
+    /// Registered model name (may itself contain `_`, e.g.
+    /// `3c3d_sigmoid`).
+    pub model: String,
+    /// The extension-signature position (`eval`, `grad`, or a
+    /// `+`-joined list).
+    pub sig: Signature,
+    /// Batch size (> 0).
+    pub batch: usize,
+}
+
+impl ArtifactId {
+    /// A validated id. The model name must be representable in the
+    /// artifact grammar: non-empty, no `+`/`/`/whitespace, not a
+    /// reserved word, and no trailing `_n<digits>` (which the batch
+    /// split would swallow).
+    pub fn new(
+        model: impl Into<String>,
+        sig: Signature,
+        batch: usize,
+    ) -> Result<ArtifactId> {
+        let model = model.into();
+        ensure!(batch > 0, "artifact batch must be > 0");
+        ensure!(
+            !model.contains('_') || Self::split_batch(&model).is_none(),
+            "model name {model:?} ends in a _n<digits> batch suffix"
+        );
+        ensure!(
+            !model.is_empty()
+                && !model.contains('+')
+                && !model.contains('/')
+                && !model.contains(char::is_whitespace)
+                && model != "grad"
+                && model != "eval",
+            "model name {model:?} is not representable in the \
+             artifact grammar"
+        );
+        Ok(ArtifactId { model, sig, batch })
+    }
+
+    /// Split the trailing batch suffix:
+    /// `"logreg_grad_n64"` -> `("logreg_grad", 64)`.
+    pub fn split_batch(artifact: &str) -> Option<(&str, usize)> {
+        let pos = artifact.rfind("_n")?;
+        let digits = &artifact[pos + 2..];
+        if digits.is_empty()
+            || !digits.bytes().all(|b| b.is_ascii_digit())
+        {
+            return None;
+        }
+        Some((&artifact[..pos], digits.parse().ok()?))
+    }
+
+    /// Parse an artifact name against an explicit extension
+    /// vocabulary. Model names and extension names may both contain
+    /// `_`, so the model/signature split is resolved by scanning `_`
+    /// boundaries left to right and taking the first split whose
+    /// remainder is a valid signature over `is_part` -- i.e. the
+    /// **longest signature** wins (`"mlp_batch_grad_n8"` splits as
+    /// `mlp` + `batch_grad`, never `mlp_batch` + `grad`). Backends
+    /// that know their registered models resolve the split
+    /// authoritatively instead (longest registered model-name prefix);
+    /// this parse is the registry-free fallback used by `FromStr`.
+    pub fn parse_with(
+        artifact: &str,
+        is_part: &dyn Fn(&str) -> bool,
+    ) -> Result<ArtifactId> {
+        let Some((stem, batch)) = Self::split_batch(artifact) else {
+            bail!(
+                "artifact name {artifact:?} does not end in _n<batch>"
+            )
+        };
+        ensure!(batch > 0, "artifact {artifact:?}: batch must be > 0");
+        for (i, b) in stem.bytes().enumerate() {
+            if b != b'_' || i == 0 || i + 1 == stem.len() {
+                continue;
+            }
+            let (model, rest) = (&stem[..i], &stem[i + 1..]);
+            let Ok(sig) = rest.parse::<Signature>() else {
+                continue;
+            };
+            if sig.extensions().iter().all(|p| is_part(p)) {
+                return ArtifactId::new(model, sig, batch);
+            }
+        }
+        bail!(
+            "artifact name {artifact:?} has no model_signature split \
+             over the known extension vocabulary"
+        )
+    }
+}
+
+impl fmt::Display for ArtifactId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}_{}_n{}", self.model, self.sig, self.batch)
+    }
+}
+
+impl FromStr for ArtifactId {
+    type Err = anyhow::Error;
+
+    /// Parse against the built-in extension vocabulary
+    /// ([`BUILTIN_NAMES`]). Backends with user-registered extensions
+    /// or ambiguous model names should use [`ArtifactId::parse_with`]
+    /// or their registry-aware resolution.
+    fn from_str(s: &str) -> Result<ArtifactId> {
+        ArtifactId::parse_with(s, &|p| BUILTIN_NAMES.contains(&p))
+    }
+}
+
+/// Nearest-match candidates for an unknown name: every candidate
+/// within a small edit distance of `target`, closest first (ties
+/// alphabetical), capped at three. Powers the "did you mean ...?"
+/// suffix of the resolver's error messages.
+pub fn suggest<I, S>(target: &str, candidates: I) -> Vec<String>
+where
+    I: IntoIterator<Item = S>,
+    S: AsRef<str>,
+{
+    let cutoff = 2.max(target.len() / 3);
+    let mut scored: Vec<(usize, String)> = candidates
+        .into_iter()
+        .filter_map(|c| {
+            let c = c.as_ref();
+            let d = levenshtein(target, c);
+            (d <= cutoff).then(|| (d, c.to_string()))
+        })
+        .collect();
+    scored.sort();
+    scored.dedup();
+    scored.truncate(3);
+    scored.into_iter().map(|(_, c)| c).collect()
+}
+
+/// Format a suggestion list as an error-message suffix:
+/// `"" | " (did you mean \"kfac\"?)" | " (did you mean one of ...)"`.
+pub(crate) fn did_you_mean(suggestions: &[String]) -> String {
+    match suggestions {
+        [] => String::new(),
+        [one] => format!(" (did you mean {one:?}?)"),
+        many => format!(" (did you mean one of {many:?}?)"),
+    }
+}
+
+/// Classic two-row Levenshtein edit distance.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) =
+        (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_parse_display_round_trip() {
+        for s in [
+            "grad", "eval", "batch_grad", "diag_ggn_mc",
+            "diag_ggn+kfac", "batch_grad+batch_l2+sq_moment+variance",
+        ] {
+            let sig: Signature = s.parse().unwrap();
+            assert_eq!(sig.to_string(), s, "round trip of {s:?}");
+            let again: Signature = sig.to_string().parse().unwrap();
+            assert_eq!(again, sig);
+        }
+        assert!("eval".parse::<Signature>().unwrap().is_eval());
+        assert!("grad".parse::<Signature>().unwrap().is_grad());
+        assert_eq!(
+            "diag_ggn+kfac"
+                .parse::<Signature>()
+                .unwrap()
+                .extensions(),
+            ["diag_ggn", "kfac"]
+        );
+    }
+
+    #[test]
+    fn signature_rejects_grammar_violations() {
+        for bad in [
+            "", "+", "a++b", "grad+kfac", "kfac+grad", "a b",
+            "a/b", "kfac+eval", "mine_n64",
+        ] {
+            assert!(
+                bad.parse::<Signature>().is_err(),
+                "{bad:?} must not parse"
+            );
+        }
+        // `_n` without a digit tail is fine (not a batch suffix).
+        assert!("my_norm".parse::<Signature>().is_ok());
+        assert!(Signature::check_part("diag_h").is_ok());
+        assert!(Signature::check_part("grad").is_err());
+    }
+
+    #[test]
+    fn artifact_id_round_trips_builtin_grid() {
+        let models =
+            ["logreg", "mlp", "2c2d", "3c3d", "3c3d_sigmoid",
+             "allcnnc16"];
+        let sigs = [
+            "grad", "eval", "batch_grad", "diag_ggn", "diag_ggn_mc",
+            "diag_h", "kfac", "kflr", "kfra",
+            "batch_grad+batch_l2+sq_moment+variance",
+        ];
+        for m in models {
+            for s in sigs {
+                for batch in [1usize, 8, 128] {
+                    let id = ArtifactId::new(
+                        m,
+                        s.parse().unwrap(),
+                        batch,
+                    )
+                    .unwrap();
+                    let name = id.to_string();
+                    assert_eq!(
+                        name,
+                        format!("{m}_{s}_n{batch}")
+                    );
+                    let back: ArtifactId = name.parse().unwrap();
+                    assert_eq!(back, id, "round trip of {name:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_id_split_prefers_the_longest_signature() {
+        // "mlp_batch_grad_n8" must split mlp + batch_grad, not
+        // mlp_batch + grad.
+        let id: ArtifactId = "mlp_batch_grad_n8".parse().unwrap();
+        assert_eq!(id.model, "mlp");
+        assert_eq!(id.sig.extensions(), ["batch_grad"]);
+        // Fig. 9 model: the underscore belongs to the model.
+        let id: ArtifactId =
+            "3c3d_sigmoid_diag_h_n8".parse().unwrap();
+        assert_eq!(id.model, "3c3d_sigmoid");
+        assert_eq!(id.sig.extensions(), ["diag_h"]);
+    }
+
+    #[test]
+    fn artifact_id_rejects_malformed_names() {
+        assert!("logreg_grad".parse::<ArtifactId>().is_err());
+        assert!("logreg_grad_nX".parse::<ArtifactId>().is_err());
+        assert!("logreg_grad_n0".parse::<ArtifactId>().is_err());
+        assert!("grad_n8".parse::<ArtifactId>().is_err());
+        // Unknown extension vocabulary: no valid split exists.
+        assert!("logreg_hessian_n8".parse::<ArtifactId>().is_err());
+        assert!(ArtifactId::new("", Signature::grad(), 8).is_err());
+        assert!(
+            ArtifactId::new("m+x", Signature::grad(), 8).is_err()
+        );
+        assert!(
+            ArtifactId::new("mlp", Signature::grad(), 0).is_err()
+        );
+        assert!(
+            ArtifactId::new("mlp_n64", Signature::grad(), 8).is_err()
+        );
+    }
+
+    #[test]
+    fn parse_with_honors_custom_vocabularies() {
+        let vocab = |p: &str| p == "bias_l2" || p == "diag_ggn";
+        let id = ArtifactId::parse_with(
+            "tiny_mlp_bias_l2+diag_ggn_n4",
+            &vocab,
+        )
+        .unwrap();
+        assert_eq!(id.model, "tiny_mlp");
+        assert_eq!(id.sig.extensions(), ["bias_l2", "diag_ggn"]);
+        assert!(ArtifactId::parse_with(
+            "tiny_mlp_kfac_n4",
+            &vocab
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn split_batch_matches_the_historical_grammar() {
+        assert_eq!(
+            ArtifactId::split_batch("logreg_grad_n64"),
+            Some(("logreg_grad", 64))
+        );
+        assert_eq!(
+            ArtifactId::split_batch("logreg_batch_grad+variance_n8"),
+            Some(("logreg_batch_grad+variance", 8))
+        );
+        assert_eq!(ArtifactId::split_batch("logreg_grad"), None);
+        assert_eq!(ArtifactId::split_batch("logreg_grad_nX"), None);
+    }
+
+    #[test]
+    fn suggest_ranks_by_edit_distance() {
+        let names = BUILTIN_NAMES;
+        assert_eq!(suggest("diag_gnn", names), ["diag_ggn"]);
+        // "kfca" is edit-1 from "kfra" (c->r) but edit-2 from
+        // "kfac" (plain Levenshtein counts a transposition as 2).
+        assert_eq!(suggest("kfca", names)[0], "kfra");
+        let s = suggest("kfc", names);
+        assert_eq!(s[0], "kfac", "{s:?}");
+        // Hopeless inputs suggest nothing.
+        assert!(suggest(
+            "completely_unrelated_quantity",
+            names
+        )
+        .is_empty());
+        assert_eq!(
+            suggest("logrge", ["logreg", "mlp", "2c2d"]),
+            ["logreg"]
+        );
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("kfac", "kfca"), 2);
+    }
+
+    #[test]
+    fn did_you_mean_formats() {
+        assert_eq!(did_you_mean(&[]), "");
+        assert_eq!(
+            did_you_mean(&["kfac".to_string()]),
+            " (did you mean \"kfac\"?)"
+        );
+        assert!(did_you_mean(&[
+            "kfac".to_string(),
+            "kfra".to_string()
+        ])
+        .contains("one of"));
+    }
+}

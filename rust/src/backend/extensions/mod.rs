@@ -63,7 +63,7 @@
 //! use backpack_rs::backend::extensions::{
 //!     Extension, ExtensionSet, LayerCtx, Quantities, Reduce, Walk,
 //! };
-//! use backpack_rs::backend::model::Model;
+//! use backpack_rs::backend::model::{ExtractOptions, Model};
 //! use backpack_rs::runtime::Tensor;
 //!
 //! /// `‖(1/N) ∇_b ℓ_n‖²` per sample — a quantity the engine has
@@ -119,14 +119,16 @@
 //! let x = Tensor::from_f32(&[4, 784], vec![0.1; 4 * 784]);
 //! let y = Tensor::from_i32(&[4], vec![0, 1, 2, 3]);
 //! let out = m
-//!     .extended_backward_with(
-//!         &set,
+//!     .extended_backward(
 //!         &params,
 //!         &x,
 //!         &y,
 //!         &["bias_l2".to_string()],
-//!         None,
-//!         2, // sharded over 2 threads: Reduce::Concat applies
+//!         &ExtractOptions {
+//!             registry: Some(set.clone()),
+//!             threads: 2, // sharded: Reduce::Concat applies
+//!             ..ExtractOptions::default()
+//!         },
 //!     )
 //!     .unwrap();
 //! assert_eq!(out["bias_l2/0/b"].shape, vec![4]);
@@ -595,31 +597,20 @@ impl ExtensionSet {
     /// # Panics
     ///
     /// Panics on names the output-key and artifact-name grammars
-    /// cannot represent: empty, containing `+` (the signature
+    /// cannot represent ([`Signature::check_part`], the single
+    /// grammar authority): empty, containing `+` (the signature
     /// separator), `/` (the output-key separator) or whitespace, the
     /// reserved words `grad` / `eval`, or a trailing `_n<digits>`
-    /// (the batch suffix `split_batch` would strip).
+    /// (the batch suffix [`ArtifactId::split_batch`] would strip).
+    ///
+    /// [`Signature::check_part`]: crate::backend::api::Signature::check_part
+    /// [`ArtifactId::split_batch`]: crate::backend::api::ArtifactId::split_batch
     pub fn register(&mut self, ext: impl Extension + 'static) {
         let ext: Arc<dyn Extension> = Arc::new(ext);
-        let name = ext.name();
-        assert!(
-            !name.is_empty()
-                && !name.contains('+')
-                && !name.contains('/')
-                && !name.contains(char::is_whitespace)
-                && name != "grad"
-                && name != "eval",
-            "extension name {name:?} is not a valid signature part \
-             (empty, reserved, or contains '+'/'/'/' ')"
-        );
-        if let Some(pos) = name.rfind("_n") {
-            let digits = &name[pos + 2..];
-            assert!(
-                digits.is_empty()
-                    || !digits.bytes().all(|b| b.is_ascii_digit()),
-                "extension name {name:?} ends in a _n<digits> batch \
-                 suffix, which artifact-name parsing would strip"
-            );
+        if let Err(e) =
+            crate::backend::api::Signature::check_part(ext.name())
+        {
+            panic!("{e}");
         }
         if let Some(slot) =
             self.exts.iter_mut().find(|e| e.name() == ext.name())
@@ -655,8 +646,11 @@ impl ExtensionSet {
             ensure!(
                 self.contains(name),
                 "extension {name:?} is not supported by the native \
-                 backend (registered: {:?})",
-                self.names()
+                 backend (registered: {:?}){}",
+                self.names(),
+                crate::backend::api::did_you_mean(
+                    &crate::backend::api::suggest(name, self.names())
+                )
             );
         }
         Ok(self

@@ -29,6 +29,7 @@
 //! consume, so everything above this layer (training loop, grid
 //! search, figures, CLI) is backend-agnostic.
 
+pub mod api;
 pub mod conv;
 pub mod extensions;
 pub mod layers;
@@ -38,9 +39,12 @@ pub mod native;
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
+use std::str::FromStr;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
+
+pub use api::{ArtifactId, Signature};
 
 use crate::runtime::{ArtifactSpec, Tensor};
 
@@ -118,6 +122,19 @@ pub trait Backend {
     /// Artifact names this backend can serve (representative set for
     /// backends that synthesize graphs on demand).
     fn artifact_names(&self) -> Vec<String>;
+
+    /// Typed [`spec`](Backend::spec): describe an artifact by
+    /// [`ArtifactId`] instead of its string spelling.
+    fn spec_id(&self, id: &ArtifactId) -> Result<ArtifactSpec> {
+        self.spec(&id.to_string())
+    }
+
+    /// Typed [`load`](Backend::load): resolve an [`ArtifactId`]
+    /// directly, skipping the string round-trip for backends that
+    /// don't override it.
+    fn load_id(&self, id: &ArtifactId) -> Result<Rc<dyn Exec>> {
+        self.load(&id.to_string())
+    }
 }
 
 /// Validate an input vector against a spec (count + per-input shape);
@@ -143,24 +160,55 @@ pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[Tensor])
     Ok(())
 }
 
-/// Construct a backend by CLI name (`--backend native|pjrt`) with
-/// auto-sized batch parallelism (all cores, `BACKPACK_THREADS`
-/// override).
-pub fn open(kind: &str) -> Result<Box<dyn Backend>> {
-    open_with(kind, 0)
+/// The set of compiled-in backends, the typed form of the CLI's
+/// `--backend native|pjrt` string. [`open`]/[`open_with`] remain as
+/// thin string-keyed wrappers for callers that haven't migrated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust graphs synthesized on demand (the default).
+    Native,
+    /// AOT HLO artifacts through the PJRT C API (`pjrt` feature).
+    Pjrt,
 }
 
-/// [`open`] with an explicit batch-parallel worker count (`0` = auto,
-/// `1` = serial). The pjrt runtime schedules its own intra-op
-/// parallelism, so `threads` only shapes the native backend.
-pub fn open_with(kind: &str, threads: usize) -> Result<Box<dyn Backend>> {
+impl FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?} (native|pjrt)"),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+        -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        })
+    }
+}
+
+/// Construct a backend from its typed kind with an explicit
+/// batch-parallel worker count (`0` = auto, `1` = serial). The pjrt
+/// runtime schedules its own intra-op parallelism, so `threads` only
+/// shapes the native backend.
+pub fn open_kind(
+    kind: BackendKind,
+    threads: usize,
+) -> Result<Box<dyn Backend>> {
     match kind {
-        "native" => {
+        BackendKind::Native => {
             Ok(Box::new(native::NativeBackend::with_threads(threads)))
         }
-        "pjrt" => {
+        BackendKind::Pjrt => {
             #[cfg(feature = "pjrt")]
             {
+                let _ = threads;
                 Ok(Box::new(crate::runtime::Runtime::open_default()?))
             }
             #[cfg(not(feature = "pjrt"))]
@@ -172,8 +220,21 @@ pub fn open_with(kind: &str, threads: usize) -> Result<Box<dyn Backend>> {
                 )
             }
         }
-        other => bail!("unknown backend {other:?} (native|pjrt)"),
     }
+}
+
+/// Construct a backend by CLI name (`--backend native|pjrt`) with
+/// auto-sized batch parallelism (all cores, `BACKPACK_THREADS`
+/// override). Thin string-keyed wrapper over [`open_kind`]; prefer
+/// the typed entry point in new code.
+pub fn open(kind: &str) -> Result<Box<dyn Backend>> {
+    open_with(kind, 0)
+}
+
+/// [`open`] with an explicit batch-parallel worker count. Thin
+/// string-keyed wrapper over [`open_kind`].
+pub fn open_with(kind: &str, threads: usize) -> Result<Box<dyn Backend>> {
+    open_kind(kind.parse()?, threads)
 }
 
 #[cfg(test)]
@@ -198,6 +259,16 @@ mod tests {
     fn open_native_works_and_unknown_fails() {
         assert!(open("native").is_ok());
         assert!(open("tpu").is_err());
+    }
+
+    #[test]
+    fn backend_kind_round_trips() {
+        for kind in [BackendKind::Native, BackendKind::Pjrt] {
+            let s = kind.to_string();
+            assert_eq!(s.parse::<BackendKind>().unwrap(), kind);
+        }
+        assert!("tpu".parse::<BackendKind>().is_err());
+        assert!(open_kind(BackendKind::Native, 1).is_ok());
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -123,6 +123,44 @@ pub struct ParamBlock {
     pub dout: usize,
 }
 
+/// Options for one [`Model::extended_backward`] engine call. The
+/// defaults are the serial reference configuration: built-in
+/// registry, one thread, no PRNG key, no engine span. Construct with
+/// struct-update syntax over [`ExtractOptions::default`]:
+///
+/// ```
+/// use backpack_rs::ExtractOptions;
+///
+/// let opts = ExtractOptions {
+///     threads: 4,
+///     key: Some([7, 9]),
+///     ..ExtractOptions::default()
+/// };
+/// assert!(opts.registry.is_none()); // None = built-in registry
+/// ```
+#[derive(Clone, Default)]
+pub struct ExtractOptions {
+    /// Extension registry to dispatch through; `None` selects
+    /// [`ExtensionSet::builtin`] (the ten paper quantities). Note
+    /// `Some(ExtensionSet::default())` is the *empty* registry, which
+    /// rejects every extension name -- always spell "the default
+    /// modules" as `None`.
+    pub registry: Option<ExtensionSet>,
+    /// Batch-parallel worker count; `0` and `1` both mean the serial
+    /// reference path. (Resolve "all cores" with
+    /// [`crate::parallel::resolve_threads`] before constructing the
+    /// options -- the engine does not consult the environment.)
+    pub threads: usize,
+    /// PRNG key for Monte-Carlo extensions (`diag_ggn_mc`, `kfac`);
+    /// draws are keyed by global sample index, so results are
+    /// invariant to `threads`.
+    pub key: Option<[u32; 2]>,
+    /// When set, the whole engine call is wrapped in a named
+    /// `engine`-category span -- how the serve daemon attributes
+    /// batches in `--trace` output.
+    pub trace_label: Option<String>,
+}
+
 /// Per-layer spatial geometry, resolved once per engine call.
 enum Geom {
     None,
@@ -665,66 +703,54 @@ impl Model {
         Ok(out)
     }
 
-    /// The generalized backward pass over the built-in extension
-    /// registry: returns `loss`, `grad/*`, and every requested
+    /// The single engine entry point: run the generalized backward
+    /// pass, returning `loss`, `grad/*`, and every requested
     /// extension quantity under the manifest naming
     /// (`{extension}/{layer}/{param-or-factor}`).
+    ///
+    /// `extensions` names the registered modules to activate; the
+    /// engine runs one backward walk per propagated quantity with at
+    /// least one user, shards the batch over
+    /// [`ExtractOptions::threads`] workers, and merges shard outputs
+    /// by each module's [`Extension::reduce`] rule before the
+    /// post-merge [`Extension::finish`] hooks run. Everything else --
+    /// registry, PRNG key, tracing -- rides in the options struct:
+    ///
+    /// ```ignore
+    /// // Serial, built-in registry, gradient-only:
+    /// model.extended_backward(&params, &x, &y, &[],
+    ///                         &ExtractOptions::default())?;
+    /// // Sharded with an MC key:
+    /// model.extended_backward(&params, &x, &y, &exts,
+    ///     &ExtractOptions {
+    ///         threads: 8,
+    ///         key: Some([7, 9]),
+    ///         ..ExtractOptions::default()
+    ///     })?;
+    /// ```
     pub fn extended_backward(
         &self,
         params: &[Tensor],
         x: &Tensor,
         y: &Tensor,
         extensions: &[String],
-        key: Option<[u32; 2]>,
+        opts: &ExtractOptions,
     ) -> Result<Quantities> {
-        self.extended_backward_threads(params, x, y, extensions, key, 1)
-    }
-
-    /// [`Model::extended_backward`] sharded over the batch axis across
-    /// `threads` scoped threads, with the extension-aware reduction
-    /// described in the module docs. `threads = 1` is the serial
-    /// reference path.
-    pub fn extended_backward_threads(
-        &self,
-        params: &[Tensor],
-        x: &Tensor,
-        y: &Tensor,
-        extensions: &[String],
-        key: Option<[u32; 2]>,
-        threads: usize,
-    ) -> Result<Quantities> {
-        self.extended_backward_with(
-            &ExtensionSet::builtin(),
-            params,
-            x,
-            y,
-            extensions,
-            key,
-            threads,
-        )
-    }
-
-    /// The full engine entry point: run the generalized backward pass
-    /// dispatching through an explicit [`ExtensionSet`] — the hook
-    /// for user-defined quantities (see the registry docs in
-    /// [`crate::backend::extensions`] for a complete example).
-    ///
-    /// `extensions` names the registered modules to activate; the
-    /// engine runs one backward walk per propagated quantity with at
-    /// least one user, shards the batch over `threads` workers, and
-    /// merges shard outputs by each module's [`Extension::reduce`]
-    /// rule before the post-merge [`Extension::finish`] hooks run.
-    #[allow(clippy::too_many_arguments)]
-    pub fn extended_backward_with(
-        &self,
-        set: &ExtensionSet,
-        params: &[Tensor],
-        x: &Tensor,
-        y: &Tensor,
-        extensions: &[String],
-        key: Option<[u32; 2]>,
-        threads: usize,
-    ) -> Result<Quantities> {
+        let builtin;
+        let set = match &opts.registry {
+            Some(set) => set,
+            None => {
+                builtin = ExtensionSet::builtin();
+                &builtin
+            }
+        };
+        let key = opts.key;
+        let threads = opts.threads.max(1);
+        let _engine: Option<obs::Span> =
+            opts.trace_label.as_ref().map(|label| {
+                let label = label.clone();
+                obs::span_with(obs::CAT_ENGINE, move || label)
+            });
         let setup = obs::span(obs::CAT_PHASE, "setup");
         let active = set.select(extensions)?;
         for e in &active {
@@ -783,6 +809,59 @@ impl Model {
             e.finish(&fctx, &mut out)?;
         }
         Ok(out)
+    }
+
+    /// Soft-deprecated positional-argument shim over
+    /// [`Model::extended_backward`]: built-in registry, explicit
+    /// `threads`. Prefer the options-struct entry point in new code.
+    pub fn extended_backward_threads(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        extensions: &[String],
+        key: Option<[u32; 2]>,
+        threads: usize,
+    ) -> Result<Quantities> {
+        self.extended_backward(
+            params,
+            x,
+            y,
+            extensions,
+            &ExtractOptions { threads, key, ..ExtractOptions::default() },
+        )
+    }
+
+    /// Soft-deprecated positional-argument shim over
+    /// [`Model::extended_backward`] with an explicit registry -- the
+    /// hook for user-defined quantities (see the registry docs in
+    /// [`crate::backend::extensions`] for a complete example).
+    /// Equivalent to passing `registry: Some(set.clone())` in
+    /// [`ExtractOptions`]; registry clones are cheap (shared `Arc`
+    /// modules).
+    #[allow(clippy::too_many_arguments)]
+    pub fn extended_backward_with(
+        &self,
+        set: &ExtensionSet,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        extensions: &[String],
+        key: Option<[u32; 2]>,
+        threads: usize,
+    ) -> Result<Quantities> {
+        self.extended_backward(
+            params,
+            x,
+            y,
+            extensions,
+            &ExtractOptions {
+                registry: Some(set.clone()),
+                threads,
+                key,
+                trace_label: None,
+            },
+        )
     }
 
     /// Forward + backward over one contiguous sample range, with every
@@ -1385,7 +1464,7 @@ mod tests {
         let (x, y) = batch(&m, 4, 1);
         let exts = vec!["kfra".to_string()];
         let err = m
-            .extended_backward(&params, &x, &y, &exts, None)
+            .extended_backward(&params, &x, &y, &exts, &ExtractOptions::default())
             .unwrap_err()
             .to_string();
         assert!(err.contains("fully-connected"), "{err}");
@@ -1413,7 +1492,7 @@ mod tests {
             .collect();
         let (x, y) = batch(&m, 16, 0);
         let out = m
-            .extended_backward(&params, &x, &y, &[], None)
+            .extended_backward(&params, &x, &y, &[], &ExtractOptions::default())
             .unwrap();
         let loss = out.get("loss").unwrap().item_f32().unwrap();
         assert!((0.7..1.6).contains(&loss), "loss {loss}");
@@ -1425,7 +1504,7 @@ mod tests {
         let mut params = tiny_params(&m, 1);
         let (x, y) = batch(&m, 6, 1);
         let out = m
-            .extended_backward(&params, &x, &y, &[], None)
+            .extended_backward(&params, &x, &y, &[], &ExtractOptions::default())
             .unwrap();
         let eps = 1e-2f32;
         for (pi, spec) in m.param_specs().iter().enumerate() {
@@ -1438,7 +1517,7 @@ mod tests {
                 let orig = params[pi].f32s().unwrap()[idx];
                 params[pi].f32s_mut().unwrap()[idx] = orig + eps;
                 let lp = m
-                    .extended_backward(&params, &x, &y, &[], None)
+                    .extended_backward(&params, &x, &y, &[], &ExtractOptions::default())
                     .unwrap()
                     .get("loss")
                     .unwrap()
@@ -1446,7 +1525,7 @@ mod tests {
                     .unwrap();
                 params[pi].f32s_mut().unwrap()[idx] = orig - eps;
                 let lm = m
-                    .extended_backward(&params, &x, &y, &[], None)
+                    .extended_backward(&params, &x, &y, &[], &ExtractOptions::default())
                     .unwrap()
                     .get("loss")
                     .unwrap()
@@ -1470,10 +1549,19 @@ mod tests {
         let (x, y) = batch(&m, 4, 2);
         let exts = vec!["diag_ggn_mc".to_string()];
         assert!(m
-            .extended_backward(&params, &x, &y, &exts, None)
+            .extended_backward(&params, &x, &y, &exts, &ExtractOptions::default())
             .is_err());
         assert!(m
-            .extended_backward(&params, &x, &y, &exts, Some([1, 2]))
+            .extended_backward(
+                &params,
+                &x,
+                &y,
+                &exts,
+                &ExtractOptions {
+                    key: Some([1, 2]),
+                    ..ExtractOptions::default()
+                },
+            )
             .is_ok());
     }
 
@@ -1484,7 +1572,7 @@ mod tests {
         let (x, y) = batch(&m, 4, 2);
         let exts = vec!["hessian".to_string()];
         let err = m
-            .extended_backward(&params, &x, &y, &exts, None)
+            .extended_backward(&params, &x, &y, &exts, &ExtractOptions::default())
             .unwrap_err()
             .to_string();
         assert!(err.contains("not supported"), "{err}");
@@ -1510,7 +1598,7 @@ mod tests {
         let exts =
             vec!["diag_h".to_string(), "diag_ggn".to_string()];
         let out = m
-            .extended_backward(&params, &x, &y, &exts, None)
+            .extended_backward(&params, &x, &y, &exts, &ExtractOptions::default())
             .unwrap();
         for li in [0usize, 2] {
             for part in ["w", "b"] {
@@ -1542,7 +1630,7 @@ mod tests {
         let exts =
             vec!["diag_h".to_string(), "diag_ggn".to_string()];
         let out = m
-            .extended_backward(&params, &x, &y, &exts, None)
+            .extended_backward(&params, &x, &y, &exts, &ExtractOptions::default())
             .unwrap();
         let h0 = out["diag_h/0/w"].f32s().unwrap();
         let g0 = out["diag_ggn/0/w"].f32s().unwrap();
@@ -1580,7 +1668,13 @@ mod tests {
                 .collect();
         let key = Some([3, 4]);
         let serial = m
-            .extended_backward(&params, &x, &y, &exts, key)
+            .extended_backward(
+                &params,
+                &x,
+                &y,
+                &exts,
+                &ExtractOptions { key, ..ExtractOptions::default() },
+            )
             .unwrap();
         // variance was requested without sq_moment: the intermediate
         // moments must not leak, nor the internal __kfra partials.

@@ -34,8 +34,9 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
+use super::api::{did_you_mean, suggest, ArtifactId, Signature};
 use super::extensions::{f32_spec, Extension, ExtensionSet};
-use super::model::Model;
+use super::model::{ExtractOptions, Model};
 use super::{Backend, Exec, Outputs};
 use crate::runtime::{ArtifactSpec, Tensor, TensorSpec};
 
@@ -119,9 +120,31 @@ impl NativeBackend {
         self.models.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Resolve an artifact name to (model, parsed request).
-    fn resolve(&self, artifact: &str) -> Result<(&Model, Request)> {
-        let Some((stem, batch)) = split_batch(artifact) else {
+    /// Parse a signature string against this backend's extension
+    /// registry, with nearest-match suggestions on unknown parts.
+    fn parse_signature(&self, sig: &str) -> Result<Signature> {
+        let sig: Signature = sig.parse()?;
+        for part in sig.extensions() {
+            ensure!(
+                self.extensions.contains(part),
+                "extension {part:?} is not supported by the native \
+                 backend (registered: {:?}){}",
+                self.extensions.names(),
+                did_you_mean(&suggest(part, self.extensions.names()))
+            );
+        }
+        Ok(sig)
+    }
+
+    /// Parse an artifact name to a typed [`ArtifactId`] against this
+    /// backend's registered models and extension registry -- the
+    /// authoritative model/signature split (registered model names
+    /// decide where the model ends, unlike the vocabulary-only
+    /// [`ArtifactId::from_str`](std::str::FromStr)). On failure the
+    /// error names the nearest registered model or extension.
+    pub fn parse_artifact(&self, artifact: &str) -> Result<ArtifactId> {
+        let Some((stem, batch)) = ArtifactId::split_batch(artifact)
+        else {
             bail!(
                 "artifact name {artifact:?} does not end in _n<batch>"
             )
@@ -132,38 +155,16 @@ impl NativeBackend {
         // signature parse falls through to the next candidate; the
         // error is only surfaced when no model matches.
         let mut sig_err = None;
-        for (name, model) in &self.models {
+        for name in self.models.keys() {
             let Some(rest) = stem
                 .strip_prefix(name.as_str())
                 .and_then(|r| r.strip_prefix('_'))
             else {
                 continue;
             };
-            if rest == "eval" {
-                return Ok((model, Request::Eval { batch }));
-            }
-            match parse_sig(rest, &self.extensions) {
-                Ok(extensions) => {
-                    // Paper footnote 5: KFRA's averaged recursion is
-                    // only defined for fully-connected networks; any
-                    // registered extension can claim the same guard.
-                    for ename in &extensions {
-                        let ext = self
-                            .extensions
-                            .get(ename)
-                            .expect("validated by parse_sig");
-                        ensure!(
-                            !ext.fully_connected_only()
-                                || model.is_fully_connected(),
-                            "{ename} is restricted to fully-connected \
-                             models (paper footnote 5); {name} has \
-                             conv/pool layers"
-                        );
-                    }
-                    return Ok((
-                        model,
-                        Request::Train { extensions, batch },
-                    ));
+            match self.parse_signature(rest) {
+                Ok(sig) => {
+                    return ArtifactId::new(name.as_str(), sig, batch)
                 }
                 Err(e) => sig_err = Some(e),
             }
@@ -171,22 +172,97 @@ impl NativeBackend {
         if let Some(e) = sig_err {
             return Err(e);
         }
+        // No registered model prefixes the stem. Isolate the most
+        // plausible model head -- the leftmost '_'-split whose tail
+        // is a valid signature -- and suggest nearest models.
+        let mut head = stem;
+        for (i, b) in stem.bytes().enumerate() {
+            if b == b'_'
+                && i > 0
+                && i + 1 < stem.len()
+                && self.parse_signature(&stem[i + 1..]).is_ok()
+            {
+                head = &stem[..i];
+                break;
+            }
+        }
         bail!(
             "native backend has no model serving artifact {artifact:?} \
-             (native models: {:?})",
-            self.model_names()
+             (native models: {:?}){}",
+            self.model_names(),
+            did_you_mean(&suggest(head, self.model_names()))
         )
     }
 
-    fn synthesize(&self, artifact: &str) -> Result<(ArtifactSpec, Model)> {
-        let (model, req) = self.resolve(artifact)?;
+    /// Resolve a typed id to (model, request): registry lookup plus
+    /// the per-model constraints a bare parse cannot check.
+    fn resolve_id(&self, id: &ArtifactId) -> Result<(&Model, Request)> {
+        let Some(model) = self.models.get(&id.model) else {
+            bail!(
+                "model {:?} is not in the native registry {:?}{}",
+                id.model,
+                self.model_names(),
+                did_you_mean(&suggest(&id.model, self.model_names()))
+            )
+        };
+        ensure!(id.batch > 0, "artifact {id}: batch must be > 0");
+        if id.sig.is_eval() {
+            return Ok((model, Request::Eval { batch: id.batch }));
+        }
+        let mut extensions = Vec::new();
+        for part in id.sig.extensions() {
+            let Some(ext) = self.extensions.get(part) else {
+                bail!(
+                    "extension {part:?} is not supported by the \
+                     native backend (registered: {:?}){}",
+                    self.extensions.names(),
+                    did_you_mean(&suggest(
+                        part,
+                        self.extensions.names()
+                    ))
+                )
+            };
+            // Paper footnote 5: KFRA's averaged recursion is only
+            // defined for fully-connected networks; any registered
+            // extension can claim the same guard.
+            ensure!(
+                !ext.fully_connected_only()
+                    || model.is_fully_connected(),
+                "{part} is restricted to fully-connected models \
+                 (paper footnote 5); {} has conv/pool layers",
+                id.model
+            );
+            extensions.push(part.clone());
+        }
+        Ok((model, Request::Train { extensions, batch: id.batch }))
+    }
+
+    /// Resolve an artifact name to (model, parsed request). Thin
+    /// string-keyed wrapper over [`NativeBackend::parse_artifact`] +
+    /// the typed resolution.
+    fn resolve(&self, artifact: &str) -> Result<(&Model, Request)> {
+        self.resolve_id(&self.parse_artifact(artifact)?)
+    }
+
+    fn synthesize_id(
+        &self,
+        id: &ArtifactId,
+    ) -> Result<(ArtifactSpec, Model)> {
+        let (model, req) = self.resolve_id(id)?;
+        let artifact = id.to_string();
         let spec = match &req {
-            Request::Eval { batch } => eval_spec(model, artifact, *batch),
+            Request::Eval { batch } => {
+                eval_spec(model, &artifact, *batch)
+            }
             Request::Train { extensions, batch } => train_spec(
-                model, artifact, extensions, *batch, &self.extensions,
+                model, &artifact, extensions, *batch, &self.extensions,
             ),
         };
         Ok((spec, model.clone()))
+    }
+
+    fn synthesize(&self, artifact: &str) -> Result<(ArtifactSpec, Model)> {
+        self.synthesize_id(&self.parse_artifact(artifact)?)
     }
 }
 
@@ -200,7 +276,15 @@ impl Backend for NativeBackend {
     }
 
     fn load(&self, artifact: &str) -> Result<Rc<dyn Exec>> {
-        let (spec, model) = self.synthesize(artifact)?;
+        self.load_id(&self.parse_artifact(artifact)?)
+    }
+
+    fn spec_id(&self, id: &ArtifactId) -> Result<ArtifactSpec> {
+        Ok(self.synthesize_id(id)?.0)
+    }
+
+    fn load_id(&self, id: &ArtifactId) -> Result<Rc<dyn Exec>> {
+        let (spec, model) = self.synthesize_id(id)?;
         Ok(Rc::new(NativeExec {
             spec,
             model,
@@ -226,12 +310,19 @@ impl Backend for NativeBackend {
         };
         ensure!(
             self.models.contains_key(&key),
-            "model {key:?} is not in the native registry {:?}",
-            self.model_names()
+            "model {key:?} is not in the native registry {:?}{}",
+            self.model_names(),
+            did_you_mean(&suggest(&key, self.model_names()))
         );
-        let name = format!("{key}_{ext_sig}_n{batch}");
-        self.resolve(&name)?; // validate the signature/batch
-        Ok(name)
+        let sig = self.parse_signature(ext_sig)?;
+        ensure!(
+            !sig.is_eval(),
+            "find_train resolves training graphs; load \
+             {key}_eval_n{batch} directly for evaluation"
+        );
+        let id = ArtifactId::new(key, sig, batch)?;
+        self.resolve_id(&id)?; // per-model constraints (footnote 5)
+        Ok(id.to_string())
     }
 
     fn artifact_names(&self) -> Vec<String> {
@@ -254,36 +345,6 @@ impl Backend for NativeBackend {
         }
         names
     }
-}
-
-/// `"logreg_grad_n64"` -> `("logreg_grad", 64)`.
-fn split_batch(artifact: &str) -> Option<(&str, usize)> {
-    let pos = artifact.rfind("_n")?;
-    let digits = &artifact[pos + 2..];
-    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit())
-    {
-        return None;
-    }
-    Some((&artifact[..pos], digits.parse().ok()?))
-}
-
-/// `"diag_ggn"` / `"batch_grad+variance"` -> extension list validated
-/// against the registry; `"grad"` is the empty signature.
-fn parse_sig(sig: &str, set: &ExtensionSet) -> Result<Vec<String>> {
-    if sig == "grad" {
-        return Ok(Vec::new());
-    }
-    let mut exts = Vec::new();
-    for part in sig.split('+') {
-        ensure!(
-            set.contains(part),
-            "extension {part:?} is not supported by the native backend \
-             (registered: {:?})",
-            set.names()
-        );
-        exts.push(part.to_string());
-    }
-    Ok(exts)
 }
 
 enum Request {
@@ -346,7 +407,7 @@ fn train_spec(
     // Every extension declares its own output shapes — the engine
     // never needs per-quantity knowledge here.
     for ext in extensions {
-        let e = set.get(ext).expect("validated by parse_sig");
+        let e = set.get(ext).expect("validated by resolve_id");
         outputs.extend(e.output_specs(model, batch));
     }
 
@@ -447,14 +508,17 @@ impl Exec for NativeExec {
             "eval" => {
                 self.model.evaluate_threads(params, x, y, threads)?
             }
-            _ => self.model.extended_backward_with(
-                &self.extensions,
+            _ => self.model.extended_backward(
                 params,
                 x,
                 y,
                 &self.spec.extensions,
-                key,
-                threads,
+                &ExtractOptions {
+                    registry: Some(self.extensions.clone()),
+                    threads,
+                    key,
+                    trace_label: None,
+                },
             )?,
         };
         Ok(Outputs::new(map, start.elapsed()))
@@ -477,23 +541,76 @@ mod tests {
 
     #[test]
     fn name_parsing() {
-        assert_eq!(split_batch("logreg_grad_n64"),
-                   Some(("logreg_grad", 64)));
-        assert_eq!(
-            split_batch("logreg_batch_grad+variance_n8"),
-            Some(("logreg_batch_grad+variance", 8))
+        let be = NativeBackend::new();
+        let id = be.parse_artifact("logreg_grad_n64").unwrap();
+        assert_eq!(id.model, "logreg");
+        assert!(id.sig.is_grad());
+        assert_eq!(id.batch, 64);
+        assert_eq!(id.to_string(), "logreg_grad_n64");
+        let id = be
+            .parse_artifact("logreg_batch_grad+variance_n8")
+            .unwrap();
+        assert_eq!(id.sig.extensions(), ["batch_grad", "variance"]);
+        let id = be.parse_artifact("3c3d_sigmoid_diag_h_n8").unwrap();
+        assert_eq!(id.model, "3c3d_sigmoid");
+        assert_eq!(id.sig.extensions(), ["diag_h"]);
+        let id = be.parse_artifact("mlp_eval_n256").unwrap();
+        assert!(id.sig.is_eval());
+        assert!(be.parse_artifact("logreg_grad").is_err());
+        assert!(be.parse_artifact("logreg_grad_nX").is_err());
+        assert!(be.parse_artifact("logreg_hessian_n8").is_err());
+        assert!(be.parse_artifact("logreg_grad+bogus_n8").is_err());
+    }
+
+    #[test]
+    fn resolve_errors_suggest_nearest_matches() {
+        let be = NativeBackend::new();
+        // Unknown model, one transposition away from "logreg".
+        let err =
+            be.spec("logrge_grad_n64").unwrap_err().to_string();
+        assert!(
+            err.contains("did you mean") && err.contains("logreg"),
+            "{err}"
         );
-        assert_eq!(split_batch("logreg_grad"), None);
-        assert_eq!(split_batch("logreg_grad_nX"), None);
-        let set = ExtensionSet::builtin();
-        assert!(parse_sig("grad", &set).unwrap().is_empty());
-        assert_eq!(parse_sig("kfac", &set).unwrap(), vec!["kfac"]);
-        assert_eq!(
-            parse_sig("diag_h", &set).unwrap(),
-            vec!["diag_h"]
+        // Unknown extension, one substitution from "diag_ggn".
+        let err =
+            be.spec("mlp_diag_gnn_n8").unwrap_err().to_string();
+        assert!(
+            err.contains("did you mean") && err.contains("diag_ggn"),
+            "{err}"
         );
-        assert!(parse_sig("hessian", &set).is_err());
-        assert!(parse_sig("grad+bogus", &set).is_err());
+        // find_train surfaces the same suggestions.
+        let err = be
+            .find_train("logrge", 0, "grad", 8)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"logreg\""), "{err}");
+        let err = be
+            .find_train("mlp", 0, "kfca", 8)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean"), "{err}");
+        // Hopeless names still error cleanly, without a suggestion.
+        let err = be
+            .spec("zzzzzz_grad_n8")
+            .unwrap_err()
+            .to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn typed_load_matches_string_load() {
+        let be = NativeBackend::new();
+        let id: ArtifactId = "logreg_diag_ggn_n16".parse().unwrap();
+        let a = be.spec_id(&id).unwrap();
+        let b = be.spec("logreg_diag_ggn_n16").unwrap();
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.outputs.len(), b.outputs.len());
+        assert!(be.load_id(&id).is_ok());
+        // Typed resolution enforces footnote 5 like the string path.
+        let conv: ArtifactId = "2c2d_kfra_n8".parse().unwrap();
+        let err = be.spec_id(&conv).unwrap_err().to_string();
+        assert!(err.contains("footnote 5"), "{err}");
     }
 
     #[test]

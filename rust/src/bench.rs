@@ -273,8 +273,14 @@ pub fn perf_baseline_with(
         } else {
             batch
         };
-        let name =
-            format!("{}_{}_n{case_batch}", case.model, case.signature);
+        // Typed construction validates the case grid (model grammar,
+        // signature spelling) before any timing runs.
+        let name = crate::backend::api::ArtifactId::new(
+            case.model,
+            case.signature.parse()?,
+            case_batch,
+        )?
+        .to_string();
         let stats = crate::figures::timing::time_artifact(
             be, &name, case.dataset, iters, budget_s,
         )

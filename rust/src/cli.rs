@@ -10,7 +10,7 @@ use anyhow::{bail, Result};
 /// Flags that never take a value (needed to disambiguate
 /// `--verbose positional` without clap-style per-command schemas).
 const BOOL_SWITCHES: &[&str] =
-    &["verbose", "help", "force", "quiet", "quick", "metrics"];
+    &["verbose", "help", "force", "quiet", "quick", "metrics", "stdio"];
 
 #[derive(Debug, Default)]
 pub struct Args {

@@ -21,9 +21,14 @@
 //!
 //! The Rust analogue of the paper's Fig. 1: ONE extended backward
 //! pass returns the gradient **and** every requested quantity.
+//! Artifacts are addressed through the typed API ([`ArtifactId`] /
+//! [`Signature`]), which round-trips with the string naming scheme
+//! (`"logreg_batch_grad+variance_n32".parse()` works too).
 //!
 //! ```
-//! use backpack_rs::{Backend, Exec, NativeBackend};
+//! use backpack_rs::{
+//!     ArtifactId, Backend, Exec, NativeBackend, Signature,
+//! };
 //! use backpack_rs::coordinator::train::{build_inputs, init_params};
 //! use backpack_rs::data::{DatasetSpec, Synthetic};
 //! use backpack_rs::runtime::Tensor;
@@ -32,8 +37,11 @@
 //! let be = NativeBackend::new();
 //! // logreg (Linear(784, 10) + CrossEntropy) with every first-order
 //! // extension in one synthesized graph; any batch size works.
-//! let exe =
-//!     be.load("logreg_batch_grad+batch_l2+sq_moment+variance_n32")?;
+//! let sig = Signature::extract([
+//!     "batch_grad", "batch_l2", "sq_moment", "variance",
+//! ])?;
+//! let id = ArtifactId::new("logreg", sig, 32)?;
+//! let exe = be.load_id(&id)?;
 //!
 //! // Synthetic MNIST batch (DESIGN.md §3) + fan-in initialized
 //! // parameters from the artifact spec.
@@ -65,6 +73,10 @@
 //! [`ExtensionSet`] (direct engine calls) or
 //! [`NativeBackend::register_extension`] (served as artifact names) —
 //! see [`backend::extensions`] for a complete user-defined extension.
+//!
+//! For extraction as a *service* — many clients, one engine — the
+//! [`serve`] module runs the same typed API behind a batching daemon
+//! (`backpack serve`, protocol `backpack-serve/v1`, docs/serve.md).
 
 pub mod backend;
 pub mod bench;
@@ -78,19 +90,26 @@ pub mod obs;
 pub mod optim;
 pub mod parallel;
 pub mod runtime;
+pub mod serve;
 
+pub use backend::api::{suggest, ArtifactId, Signature};
 pub use backend::extensions::{
     Extension, ExtensionSet, FinishCtx, LayerCtx, LayerOp,
     PerSampleGrads, Quantities, Reduce, ShardCtx, Walk,
 };
 pub use backend::layers::Layer;
-pub use backend::model::{Model, ParamBlock, NATIVE_EXTENSIONS};
+pub use backend::model::{
+    ExtractOptions, Model, ParamBlock, NATIVE_EXTENSIONS,
+};
 pub use backend::native::NativeBackend;
-pub use backend::{open, open_with, Backend, Exec, Outputs};
+pub use backend::{
+    open, open_kind, open_with, Backend, BackendKind, Exec, Outputs,
+};
 pub use bench::{
     compare_baselines, compare_files, BaselineCase, CompareReport,
     Stats, BENCH_SCHEMA, COMPARE_SCHEMA,
 };
 pub use json::Json;
-pub use obs::{Trace, METRICS_SCHEMA, TRACE_SCHEMA};
+pub use obs::{MetricsAgg, Trace, METRICS_SCHEMA, TRACE_SCHEMA};
 pub use runtime::{ArtifactSpec, Tensor, TensorSpec};
+pub use serve::{ServeConfig, Server, ServerHandle};

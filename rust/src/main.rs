@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   list                         show artifacts the backend serves
 //!   train    --problem P --opt O train one configuration
+//!   serve    [--addr A] [--stdio] batching extraction daemon
 //!   bench    [--quick]           machine-readable perf baseline
 //!   fig3|fig6|fig8|fig9          timing figure regenerators
 //!   fig7a|fig7b|fig10|fig11      optimizer-comparison figures
@@ -35,6 +36,8 @@ usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N]
   train  --problem mnist_logreg --optimizer kfac [--lr 0.01]
          [--damping 0.01] [--steps 200] [--seed 0] [--eval-every 25]
          [--inv-every 1] [--verbose]
+  serve  [--addr 127.0.0.1:4417] [--stdio] [--queue-cap 64]
+         [--linger-ms 2] [--max-batch 1024]
   bench  [--quick] [--batch 128] [--out BENCH_native.json]
          [--compare BASELINE.json [--current RUN.json]]
          [--compare-out COMPARE.json] [--max-regression 3.0]
@@ -57,6 +60,16 @@ regresses past --max-regression, default 3x), adding
 `--current RUN.json` compares two existing files without re-running,
 and `--compare-out COMPARE.json` writes the machine-readable
 compare result (written even when the gate fails).
+
+`serve` runs the batching extraction daemon (protocol
+backpack-serve/v1; docs/serve.md): length-prefixed JSON frames over
+TCP (or stdin/stdout with --stdio), coalescing compatible concurrent
+requests -- same model, signature, seed, key -- into one sharded
+extended-backward call, with a bounded request queue (--queue-cap)
+for backpressure and a `metrics` request serving live
+backpack-metrics/v1 aggregates. Port 0 binds an ephemeral port; the
+bound address is printed on the first stdout line. Stop it with a
+`shutdown` request or SIGTERM.
 
 Observability (any subcommand; docs/observability.md):
   --trace FILE   record walk-level spans and write Chrome trace-event
@@ -195,6 +208,41 @@ fn dispatch(
             ));
             write_csv(&path, "step,train_loss", &rows)?;
             println!("wrote {}", path.display());
+        }
+        "serve" => {
+            // The daemon's scheduler thread owns its own native
+            // backend (compiled plans are deliberately not Send);
+            // the CLI-opened backend is not used.
+            anyhow::ensure!(
+                args.get_or("backend", "native") == "native",
+                "serve supports the native backend only"
+            );
+            let cfg = backpack_rs::serve::ServeConfig {
+                addr: args
+                    .get_or("addr", "127.0.0.1:4417")
+                    .to_string(),
+                threads,
+                queue_cap: args.get_usize("queue-cap", 64)?,
+                linger_ms: args.get_u64("linger-ms", 2)?,
+                max_batch: args.get_usize("max-batch", 1024)?,
+                // When the CLI records (--trace/--metrics), batch
+                // windows must not drain the global recorder.
+                retain_trace: args.flag("trace").is_some()
+                    || args.has("metrics"),
+            };
+            if args.has("stdio") {
+                backpack_rs::serve::run_stdio(cfg)?;
+            } else {
+                let server = backpack_rs::serve::Server::bind(cfg)?;
+                println!(
+                    "{} listening on {}",
+                    backpack_rs::serve::PROTOCOL_SCHEMA,
+                    server.local_addr()
+                );
+                use std::io::Write as _;
+                std::io::stdout().flush()?;
+                server.run()?;
+            }
         }
         "bench" => {
             let default_out = format!("BENCH_{}.json", be.name());

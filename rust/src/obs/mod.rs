@@ -44,7 +44,7 @@
 
 pub mod report;
 
-pub use report::{Trace, METRICS_SCHEMA, TRACE_SCHEMA};
+pub use report::{MetricsAgg, Trace, METRICS_SCHEMA, TRACE_SCHEMA};
 
 use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

@@ -165,7 +165,119 @@ impl Trace {
     /// phase time by it -- the in-run analogue of the paper's
     /// "extension time / gradient time" ratio, now attributed to
     /// phases instead of inferred from two separate timings.
+    ///
+    /// Equivalent to `MetricsAgg::from_trace(self).to_json(wall_s)`
+    /// -- long-running callers (the serve daemon) aggregate through
+    /// [`MetricsAgg`] instead so events never accumulate.
     pub fn metrics(&self, wall_s: f64) -> Json {
+        MetricsAgg::from_trace(self).to_json(wall_s)
+    }
+
+    fn counters_json(&self) -> Json {
+        counters_json(&self.counters)
+    }
+}
+
+/// Event-free aggregate of one or more collection regions -- the
+/// state behind the [`METRICS_SCHEMA`] summary, separated from the
+/// events so a long-running process (the `serve` daemon) can absorb
+/// each request's window and drop its events instead of retaining an
+/// unbounded span log.
+///
+/// [`MetricsAgg::from_trace`] aggregates one [`Trace`];
+/// [`MetricsAgg::absorb`] merges aggregates (totals add, shard
+/// extrema widen); [`MetricsAgg::to_json`] emits the same
+/// `backpack-metrics/v1` document as [`Trace::metrics`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsAgg {
+    /// Per-phase `(count, total_s)` ([`Trace::phase_totals`]).
+    pub phases: BTreeMap<String, SpanTotal>,
+    /// Per-quantity `(count, total_s)` ([`Trace::quantity_totals`]).
+    pub quantities: BTreeMap<String, SpanTotal>,
+    /// Per-detail `(count, total_s)` ([`Trace::detail_totals`]).
+    pub details: BTreeMap<String, SpanTotal>,
+    /// Counter sums, indexed by the [`Counter`] discriminant.
+    pub counters: [u64; COUNTER_COUNT],
+    /// Number of shard spans observed.
+    pub shard_count: usize,
+    /// Total seconds across shard spans.
+    pub shard_total_s: f64,
+    /// Longest shard span (0 when none observed).
+    pub shard_max_s: f64,
+    /// Shortest shard span (+inf when none observed).
+    pub shard_min_s: f64,
+}
+
+impl Default for MetricsAgg {
+    fn default() -> MetricsAgg {
+        MetricsAgg {
+            phases: BTreeMap::new(),
+            quantities: BTreeMap::new(),
+            details: BTreeMap::new(),
+            counters: [0; COUNTER_COUNT],
+            shard_count: 0,
+            shard_total_s: 0.0,
+            shard_max_s: 0.0,
+            shard_min_s: f64::INFINITY,
+        }
+    }
+}
+
+impl MetricsAgg {
+    /// Aggregate one collection region's trace.
+    pub fn from_trace(t: &Trace) -> MetricsAgg {
+        let shards = t.shard_durations();
+        MetricsAgg {
+            phases: t.phase_totals(),
+            quantities: t.quantity_totals(),
+            details: t.detail_totals(),
+            counters: t.counters,
+            shard_count: shards.len(),
+            shard_total_s: shards.iter().sum(),
+            shard_max_s: shards.iter().cloned().fold(0.0, f64::max),
+            shard_min_s: shards
+                .iter()
+                .cloned()
+                .fold(f64::INFINITY, f64::min),
+        }
+    }
+
+    /// Nothing observed yet.
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+            && self.quantities.is_empty()
+            && self.details.is_empty()
+            && self.shard_count == 0
+            && self.counters.iter().all(|c| *c == 0)
+    }
+
+    /// Merge another aggregate into this one: counts and totals add,
+    /// shard extrema widen. The daemon calls this once per served
+    /// batch, so the running totals stay O(distinct span names).
+    pub fn absorb(&mut self, other: &MetricsAgg) {
+        let merge = |into: &mut BTreeMap<String, SpanTotal>,
+                     from: &BTreeMap<String, SpanTotal>| {
+            for (k, (count, total_s)) in from {
+                let t = into.entry(k.clone()).or_insert((0, 0.0));
+                t.0 += count;
+                t.1 += total_s;
+            }
+        };
+        merge(&mut self.phases, &other.phases);
+        merge(&mut self.quantities, &other.quantities);
+        merge(&mut self.details, &other.details);
+        for (c, o) in self.counters.iter_mut().zip(&other.counters) {
+            *c += o;
+        }
+        self.shard_count += other.shard_count;
+        self.shard_total_s += other.shard_total_s;
+        self.shard_max_s = self.shard_max_s.max(other.shard_max_s);
+        self.shard_min_s = self.shard_min_s.min(other.shard_min_s);
+    }
+
+    /// The `backpack-metrics/v1` document (see [`Trace::metrics`] for
+    /// the field semantics).
+    pub fn to_json(&self, wall_s: f64) -> Json {
         let totals_json = |m: &BTreeMap<String, SpanTotal>| {
             Json::Obj(
                 m.iter()
@@ -184,13 +296,13 @@ impl Trace {
                     .collect(),
             )
         };
-        let phases = self.phase_totals();
         let grad_s: f64 = ["forward", "loss", "grad_walk"]
             .iter()
-            .filter_map(|p| phases.get(*p))
+            .filter_map(|p| self.phases.get(*p))
             .map(|t| t.1)
             .sum();
-        let total_s: f64 = phases.values().map(|t| t.1).sum();
+        let total_s: f64 =
+            self.phases.values().map(|t| t.1).sum();
         let mut overhead = BTreeMap::new();
         overhead.insert("grad_s".into(), Json::Num(grad_s));
         overhead.insert("total_s".into(), Json::Num(total_s));
@@ -203,25 +315,20 @@ impl Trace {
             },
         );
 
-        let shards = self.shard_durations();
         let mut sh = BTreeMap::new();
-        sh.insert("count".into(), Json::Num(shards.len() as f64));
         sh.insert(
-            "total_s".into(),
-            Json::Num(shards.iter().sum::<f64>()),
+            "count".into(),
+            Json::Num(self.shard_count as f64),
         );
-        if !shards.is_empty() {
-            let max = shards.iter().cloned().fold(0.0, f64::max);
-            let min =
-                shards.iter().cloned().fold(f64::INFINITY, f64::min);
-            let mean =
-                shards.iter().sum::<f64>() / shards.len() as f64;
-            sh.insert("max_s".into(), Json::Num(max));
-            sh.insert("min_s".into(), Json::Num(min));
+        sh.insert("total_s".into(), Json::Num(self.shard_total_s));
+        if self.shard_count > 0 {
+            let mean = self.shard_total_s / self.shard_count as f64;
+            sh.insert("max_s".into(), Json::Num(self.shard_max_s));
+            sh.insert("min_s".into(), Json::Num(self.shard_min_s));
             sh.insert(
                 "imbalance".into(),
                 if mean > 0.0 {
-                    Json::Num(max / mean)
+                    Json::Num(self.shard_max_s / mean)
                 } else {
                     Json::Null
                 },
@@ -234,30 +341,27 @@ impl Trace {
             Json::Str(METRICS_SCHEMA.to_string()),
         );
         root.insert("wall_s".into(), Json::Num(wall_s));
-        root.insert("phases".into(), totals_json(&phases));
+        root.insert("phases".into(), totals_json(&self.phases));
         root.insert(
             "quantities".into(),
-            totals_json(&self.quantity_totals()),
+            totals_json(&self.quantities),
         );
-        root.insert(
-            "details".into(),
-            totals_json(&self.detail_totals()),
-        );
-        root.insert("counters".into(), self.counters_json());
+        root.insert("details".into(), totals_json(&self.details));
+        root.insert("counters".into(), counters_json(&self.counters));
         root.insert("shards".into(), Json::Obj(sh));
         root.insert("overhead".into(), Json::Obj(overhead));
         Json::Obj(root)
     }
+}
 
-    fn counters_json(&self) -> Json {
-        Json::Obj(
-            COUNTER_NAMES
-                .iter()
-                .zip(self.counters.iter())
-                .map(|(n, v)| (n.to_string(), Json::Num(*v as f64)))
-                .collect(),
-        )
-    }
+fn counters_json(counters: &[u64; COUNTER_COUNT]) -> Json {
+    Json::Obj(
+        COUNTER_NAMES
+            .iter()
+            .zip(counters.iter())
+            .map(|(n, v)| (n.to_string(), Json::Num(*v as f64)))
+            .collect(),
+    )
 }
 
 #[cfg(test)]
@@ -425,6 +529,11 @@ mod tests {
         assert_eq!(sh.get("count").unwrap().as_usize().unwrap(), 2);
         let imb = sh.get("imbalance").unwrap().as_f64().unwrap();
         assert!((imb - 5.0 / 4.5).abs() < 1e-9);
+        // The event-free aggregate emits the identical document.
+        assert_eq!(
+            MetricsAgg::from_trace(&t).to_json(12.5e-6).to_string_json(),
+            t.metrics(12.5e-6).to_string_json()
+        );
         // Empty trace: overhead ratio is null, shards carry count 0.
         let empty = Trace::default().metrics(0.0);
         assert_eq!(empty.get("overhead").unwrap().get("vs_grad")
@@ -439,5 +548,37 @@ mod tests {
                 .unwrap(),
             0
         );
+    }
+
+    /// Window-by-window aggregation (how the serve daemon keeps
+    /// totals) must match one big-window aggregation exactly.
+    #[test]
+    fn metrics_agg_absorb_matches_single_window() {
+        let t = sample_trace();
+        // Split the trace in two arbitrary windows.
+        let (a_ev, b_ev) = t.events.split_at(7);
+        let mut ca = [0u64; COUNTER_COUNT];
+        ca[Counter::MatmulFlops as usize] = 4000;
+        let mut cb = t.counters;
+        cb[Counter::MatmulFlops as usize] -= 4000;
+        let a = Trace { events: a_ev.to_vec(), counters: ca };
+        let b = Trace { events: b_ev.to_vec(), counters: cb };
+
+        let mut agg = MetricsAgg::default();
+        assert!(agg.is_empty());
+        agg.absorb(&MetricsAgg::from_trace(&a));
+        agg.absorb(&MetricsAgg::from_trace(&b));
+        assert!(!agg.is_empty());
+
+        let whole = MetricsAgg::from_trace(&t);
+        assert_eq!(agg.phases, whole.phases);
+        assert_eq!(agg.quantities, whole.quantities);
+        assert_eq!(agg.details, whole.details);
+        assert_eq!(agg.counters, whole.counters);
+        assert_eq!(agg.shard_count, whole.shard_count);
+        assert!((agg.shard_total_s - whole.shard_total_s).abs()
+            < 1e-15);
+        assert_eq!(agg.shard_max_s, whole.shard_max_s);
+        assert_eq!(agg.shard_min_s, whole.shard_min_s);
     }
 }

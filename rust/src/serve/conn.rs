@@ -1,0 +1,95 @@
+//! Per-connection session loop, generic over the transport so TCP
+//! sockets and stdin/stdout share one implementation.
+//!
+//! Each session runs a reader loop on the calling thread and a
+//! writer thread draining an `mpsc` channel of reply frames. The
+//! channel sender is cloned into every queued request, so replies
+//! for in-flight extractions still reach the client after its read
+//! side hits EOF, and the writer thread only exits once every
+//! pending reply has been delivered (or the socket has died -- a
+//! mid-batch disconnect just makes the scheduler's send fail, which
+//! is counted, tolerated, and does not disturb the rest of the
+//! batch).
+
+use std::io::{Read, Write};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+
+use super::protocol::{
+    self, error_reply, pong_reply, shutdown_reply, Request,
+};
+use super::scheduler::Pending;
+use super::Shared;
+
+/// Serve one client session until EOF, a malformed frame, or
+/// shutdown.
+pub(crate) fn serve_session<R, W>(shared: Arc<Shared>, mut r: R, w: W)
+where
+    R: Read,
+    W: Write + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer = std::thread::spawn(move || {
+        let mut w = w;
+        for frame in rx {
+            if protocol::write_frame(&mut w, &frame).is_err() {
+                // Client gone; drain silently so senders never
+                // block (mpsc sends are non-blocking anyway).
+                break;
+            }
+        }
+    });
+
+    loop {
+        let frame = match protocol::read_frame(&mut r) {
+            Ok(Some(f)) => f,
+            // Clean EOF between frames: session over.
+            Ok(None) => break,
+            Err(e) => {
+                // Framing is broken; report once and hang up (no id
+                // is recoverable from a bad frame).
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(error_reply(0, &format!("{e:#}")));
+                break;
+            }
+        };
+        shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+        match Request::parse(&frame) {
+            Err(e) => {
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(error_reply(0, &format!("{e:#}")));
+            }
+            Ok(Request::Ping { id }) => {
+                let _ = tx.send(pong_reply(id));
+            }
+            Ok(Request::Metrics { id }) => {
+                let _ = tx.send(shared.metrics_reply(id));
+            }
+            Ok(Request::Shutdown { id }) => {
+                let _ = tx.send(shutdown_reply(id));
+                shared.begin_shutdown();
+                break;
+            }
+            Ok(Request::Extract(req)) => {
+                shared.stats.extracts.fetch_add(1, Ordering::Relaxed);
+                let pending = Pending { req, reply: tx.clone() };
+                // Blocking push: a full queue parks this thread,
+                // which stops frame reads -- backpressure reaches
+                // the client as TCP flow control.
+                if let Err(p) = shared.queue.push(pending) {
+                    shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(error_reply(
+                        p.req.id,
+                        "server is shutting down",
+                    ));
+                }
+            }
+        }
+    }
+
+    // Drop our sender; the writer exits once the scheduler has
+    // delivered (and dropped) every clone held by in-flight
+    // requests, flushing all outstanding replies first.
+    drop(tx);
+    let _ = writer.join();
+}

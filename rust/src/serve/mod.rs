@@ -1,0 +1,378 @@
+//! `backpack serve`: extraction-as-a-service.
+//!
+//! A long-running daemon that accepts extraction requests over a
+//! length-prefixed JSON protocol ([`protocol`], `backpack-serve/v1`)
+//! on TCP or stdin/stdout, and answers them through the typed
+//! artifact API ([`crate::ArtifactId`] / [`crate::Signature`]).
+//! Compatible requests -- same model, signature, seed and
+//! Monte-Carlo key -- arriving from many clients within a short
+//! linger window are **coalesced** into one sharded
+//! `extended_backward` call (the scheduler thread); per-sample results
+//! (`Concat`-reduced keys) are sliced back per client while
+//! `Sum`-reduced aggregates are broadcast to every participant. A
+//! bounded request queue ([`queue::BoundedQueue`]) provides
+//! backpressure: when it fills, connection threads stop reading
+//! frames and clients feel TCP flow control, not server OOM.
+//!
+//! A `metrics` request returns live `backpack-metrics/v1` aggregates
+//! (accumulated per-batch via [`MetricsAgg`]) plus serve counters.
+//!
+//! See `docs/serve.md` for the byte-level frame layout, the batching
+//! and backpressure semantics, and an example session transcript.
+//!
+//! ```no_run
+//! use backpack_rs::serve::{ServeConfig, Server};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let server = Server::bind(ServeConfig::default())?;
+//! println!("listening on {}", server.local_addr());
+//! server.run()?; // blocks until a shutdown request
+//! # Ok(()) }
+//! ```
+
+pub mod protocol;
+pub mod queue;
+
+mod conn;
+mod scheduler;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+use crate::obs::MetricsAgg;
+
+use queue::BoundedQueue;
+use scheduler::Pending;
+
+pub use protocol::{
+    BatchMeta, ExtractReply, ExtractRequest, Request, MAX_FRAME,
+    PROTOCOL_SCHEMA,
+};
+
+/// Daemon configuration; `Default` is a sensible local setup
+/// (ephemeral port, all cores, small linger).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address; port 0 binds an ephemeral port (read it back
+    /// from [`Server::local_addr`]).
+    pub addr: String,
+    /// Engine threads per extraction call (0 = all cores).
+    pub threads: usize,
+    /// Bounded request-queue capacity: the backpressure valve.
+    pub queue_cap: usize,
+    /// How long the scheduler lingers for compatible requests
+    /// before running a batch.
+    pub linger_ms: u64,
+    /// Soft cap on coalesced union-batch samples: gathering stops
+    /// once a batch reaches this many.
+    pub max_batch: usize,
+    /// True when the embedding process owns a running obs recorder
+    /// (CLI `--trace`): per-batch windows then use non-draining
+    /// mark/since so the final trace survives. When false the
+    /// scheduler runs its own start/stop window per batch.
+    pub retain_trace: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 0,
+            queue_cap: 64,
+            linger_ms: 2,
+            max_batch: 1024,
+            retain_trace: false,
+        }
+    }
+}
+
+/// Monotone serve counters (all relaxed; they feed metrics, not
+/// control flow).
+#[derive(Default)]
+pub(crate) struct Stats {
+    /// Frames parsed as requests (any op).
+    pub requests: AtomicU64,
+    /// Extract requests accepted into the queue.
+    pub extracts: AtomicU64,
+    /// Engine calls run.
+    pub batches: AtomicU64,
+    /// Largest number of requests coalesced into one call.
+    pub coalesced_max: AtomicU64,
+    /// Error replies sent (bad frames, rejected requests, failures).
+    pub errors: AtomicU64,
+    /// Replies dropped because the client had disconnected.
+    pub disconnects: AtomicU64,
+}
+
+struct Totals {
+    agg: MetricsAgg,
+    wall_s: f64,
+}
+
+/// State shared between the accept loop, connection threads, and
+/// the scheduler.
+pub(crate) struct Shared {
+    pub cfg: ServeConfig,
+    pub queue: BoundedQueue<Pending>,
+    pub stats: Stats,
+    shutdown: AtomicBool,
+    boot: Instant,
+    /// Bound TCP address, if any: shutdown pokes it to unblock the
+    /// accept loop.
+    addr: Mutex<Option<SocketAddr>>,
+    totals: Mutex<Totals>,
+}
+
+impl Shared {
+    fn new(cfg: ServeConfig) -> Arc<Shared> {
+        let queue = BoundedQueue::new(cfg.queue_cap);
+        Arc::new(Shared {
+            cfg,
+            queue,
+            stats: Stats::default(),
+            shutdown: AtomicBool::new(false),
+            boot: Instant::now(),
+            addr: Mutex::new(None),
+            totals: Mutex::new(Totals {
+                agg: MetricsAgg::default(),
+                wall_s: 0.0,
+            }),
+        })
+    }
+
+    /// Fold one batch's metrics window into the live aggregates.
+    pub(crate) fn absorb_window(&self, agg: &MetricsAgg, wall_s: f64) {
+        let mut t = self.totals.lock().unwrap();
+        t.agg.absorb(agg);
+        t.wall_s += wall_s;
+    }
+
+    /// The `metrics` reply: a schema-pure `backpack-metrics/v1`
+    /// object over everything served so far, plus serve counters.
+    pub(crate) fn metrics_reply(&self, id: u64) -> String {
+        let metrics = {
+            let t = self.totals.lock().unwrap();
+            t.agg.to_json(t.wall_s)
+        };
+        protocol::metrics_reply(id, metrics, self.serve_json())
+    }
+
+    fn serve_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        let num = |v: u64| Json::Num(v as f64);
+        o.insert(
+            "schema".into(),
+            Json::Str(PROTOCOL_SCHEMA.to_string()),
+        );
+        o.insert(
+            "uptime_s".into(),
+            Json::Num(self.boot.elapsed().as_secs_f64()),
+        );
+        o.insert(
+            "queue_depth".into(),
+            num(self.queue.len() as u64),
+        );
+        o.insert(
+            "queue_cap".into(),
+            num(self.cfg.queue_cap as u64),
+        );
+        let s = &self.stats;
+        let r = Ordering::Relaxed;
+        o.insert("requests".into(), num(s.requests.load(r)));
+        o.insert("extracts".into(), num(s.extracts.load(r)));
+        o.insert("batches".into(), num(s.batches.load(r)));
+        o.insert(
+            "coalesced_max".into(),
+            num(s.coalesced_max.load(r)),
+        );
+        o.insert("errors".into(), num(s.errors.load(r)));
+        o.insert("disconnects".into(), num(s.disconnects.load(r)));
+        Json::Obj(o)
+    }
+
+    /// Initiate graceful shutdown: refuse new work, let the
+    /// scheduler drain what is queued, unblock the accept loop.
+    /// Idempotent.
+    pub(crate) fn begin_shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.queue.close();
+        if let Some(addr) = *self.addr.lock().unwrap() {
+            // Self-connect so the blocking accept() observes the
+            // flag; the connection is dropped unused.
+            let _ = TcpStream::connect_timeout(
+                &addr,
+                Duration::from_millis(200),
+            );
+        }
+    }
+}
+
+/// Handle for stopping a running [`Server`] from another thread
+/// (tests, signal bridges).
+#[derive(Clone)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// The bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Trigger the same graceful shutdown as a `shutdown` request.
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+}
+
+/// A bound-but-not-yet-running TCP server.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Bind `cfg.addr`.
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("cannot bind {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let shared = Shared::new(cfg);
+        *shared.addr.lock().unwrap() = Some(addr);
+        Ok(Server { listener, addr, shared })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A shutdown handle, cloneable across threads.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            addr: self.addr,
+            shared: Arc::clone(&self.shared),
+        }
+    }
+
+    /// Run the accept loop until shutdown. Spawns the scheduler
+    /// thread and one thread per connection; returns after the
+    /// scheduler has drained every queued request.
+    pub fn run(self) -> Result<()> {
+        let sched_shared = Arc::clone(&self.shared);
+        let scheduler = std::thread::Builder::new()
+            .name("backpack-sched".to_string())
+            .spawn(move || scheduler::run(sched_shared))?;
+        for stream in self.listener.incoming() {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let _ = stream.set_nodelay(true);
+            let shared = Arc::clone(&self.shared);
+            let _ = std::thread::Builder::new()
+                .name("backpack-conn".to_string())
+                .spawn(move || {
+                    let Ok(r) = stream.try_clone() else { return };
+                    conn::serve_session(shared, r, stream);
+                });
+        }
+        self.shared.queue.close();
+        let _ = scheduler.join();
+        Ok(())
+    }
+}
+
+/// Serve a single session over stdin/stdout (the `--stdio` CLI
+/// mode): same protocol, same scheduler, no socket.
+pub fn run_stdio(cfg: ServeConfig) -> Result<()> {
+    let shared = Shared::new(cfg);
+    let sched_shared = Arc::clone(&shared);
+    let scheduler = std::thread::Builder::new()
+        .name("backpack-sched".to_string())
+        .spawn(move || scheduler::run(sched_shared))?;
+    conn::serve_session(
+        Arc::clone(&shared),
+        std::io::stdin().lock(),
+        std::io::stdout(),
+    );
+    shared.queue.close();
+    let _ = scheduler.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::protocol::{
+        read_frame, write_frame, ExtractReply,
+    };
+    use super::*;
+
+    /// Fast control-plane smoke: ping, metrics shape, graceful
+    /// shutdown. The extraction/coalescing suite lives in
+    /// `tests/serve.rs`.
+    #[test]
+    fn ping_metrics_and_shutdown_over_tcp() {
+        let server = Server::bind(ServeConfig {
+            linger_ms: 1,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = server.local_addr();
+        let running =
+            std::thread::spawn(move || server.run().unwrap());
+
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, "{\"op\":\"ping\",\"id\":1}").unwrap();
+        let r = ExtractReply::parse(
+            &read_frame(&mut c).unwrap().unwrap(),
+        )
+        .unwrap();
+        assert!(r.ok);
+        assert_eq!(r.id, 1);
+
+        write_frame(&mut c, "{\"op\":\"metrics\",\"id\":2}")
+            .unwrap();
+        let raw = read_frame(&mut c).unwrap().unwrap();
+        let v = Json::parse(&raw).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap());
+        // The metrics object is schema-pure backpack-metrics/v1
+        // even before any batch has run.
+        let m = v.get("metrics").unwrap();
+        assert_eq!(
+            m.get("schema").unwrap().as_str().unwrap(),
+            crate::obs::METRICS_SCHEMA
+        );
+        let s = v.get("serve").unwrap();
+        assert_eq!(
+            s.get("schema").unwrap().as_str().unwrap(),
+            PROTOCOL_SCHEMA
+        );
+        assert_eq!(
+            s.get("queue_cap").unwrap().as_usize().unwrap(),
+            64
+        );
+
+        write_frame(&mut c, "{\"op\":\"shutdown\",\"id\":3}")
+            .unwrap();
+        let r = ExtractReply::parse(
+            &read_frame(&mut c).unwrap().unwrap(),
+        )
+        .unwrap();
+        assert!(r.ok);
+        running.join().unwrap();
+    }
+}

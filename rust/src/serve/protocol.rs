@@ -1,0 +1,602 @@
+//! The `backpack-serve/v1` wire protocol: length-prefixed JSON
+//! frames carrying typed requests and replies.
+//!
+//! # Frame layout
+//!
+//! Every message -- both directions -- is one frame:
+//!
+//! ```text
+//! +----+----+----+----+----------------------+
+//! | length (u32, big-endian)  | payload      |
+//! +----+----+----+----+----------------------+
+//!   4 bytes                     `length` bytes, UTF-8 JSON
+//! ```
+//!
+//! Frames larger than [`MAX_FRAME`] are rejected (a malformed length
+//! prefix must not make the server allocate gigabytes). A clean EOF
+//! *between* frames ends the session; EOF inside a frame is an error.
+//!
+//! # Requests
+//!
+//! The payload is a JSON object dispatched on `"op"`:
+//!
+//! * `extract` -- run one extraction ([`ExtractRequest`]); `sig` uses
+//!   the [`Signature`] spelling (`"grad"`, `"eval"`,
+//!   `"diag_ggn+kfac"`, ...), `x` is the row-major flat input batch,
+//!   `y` the labels (the batch size is `y.len()`);
+//! * `metrics` -- the live `backpack-metrics/v1` aggregates over
+//!   everything served so far, plus serve counters;
+//! * `ping` -- liveness probe;
+//! * `shutdown` -- graceful stop: drains the queue, then the server
+//!   exits.
+//!
+//! Replies always carry the request's `id` and `"ok"`; failures put
+//! the message in `"error"`. Tensors serialize as
+//! `{"shape": [...], "data": [...]}` with non-finite values encoded
+//! as `null` (JSON has no NaN) and decoded back to NaN.
+//!
+//! docs/serve.md documents the protocol with an example session.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::api::Signature;
+use crate::json::Json;
+use crate::runtime::Tensor;
+
+/// Protocol identifier, echoed on the startup banner and in
+/// `metrics` replies; bump on any breaking frame/layout change.
+pub const PROTOCOL_SCHEMA: &str = "backpack-serve/v1";
+
+/// Maximum frame payload size (64 MiB): caps the allocation a length
+/// prefix can demand.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// Read one frame. `Ok(None)` is a clean EOF before any length byte
+/// (the peer closed between frames); EOF inside a frame errors.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<String>> {
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < len.len() {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("EOF inside a frame length prefix"),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let n = u32::from_be_bytes(len) as usize;
+    ensure!(
+        n <= MAX_FRAME,
+        "frame of {n} bytes exceeds the {MAX_FRAME}-byte limit"
+    );
+    let mut payload = vec![0u8; n];
+    r.read_exact(&mut payload)
+        .context("EOF inside a frame payload")?;
+    Ok(Some(String::from_utf8(payload).context("frame is not UTF-8")?))
+}
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME,
+        "frame of {} bytes exceeds the {MAX_FRAME}-byte limit",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// One extraction request: which graph to run and this client's
+/// slice of data. Requests with the same `(model, sig, seed, key)`
+/// are **compatible** and may be coalesced into one engine call; see
+/// the batching semantics in `docs/serve.md`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExtractRequest {
+    /// Client-chosen correlation id, echoed on the reply.
+    pub id: u64,
+    /// Registered model name (`logreg`, `mlp`, `2c2d`, ...).
+    pub model: String,
+    /// Extension signature (`grad`, `eval`, `diag_ggn+kfac`, ...).
+    pub sig: Signature,
+    /// Parameter seed: participants sharing a seed share parameters
+    /// (`init_params(spec, seed)`), which is what makes coalescing
+    /// exact.
+    pub seed: u64,
+    /// Row-major flat input batch, `y.len() * in_numel` values.
+    pub x: Vec<f32>,
+    /// Labels in `[0, classes)`; the batch size is `y.len()`.
+    pub y: Vec<i32>,
+    /// PRNG key for Monte-Carlo signatures (`diag_ggn_mc`, `kfac`).
+    pub key: Option<[u32; 2]>,
+    /// When true the reply carries this batch's
+    /// `backpack-metrics/v1` window under `"metrics"`.
+    pub want_metrics: bool,
+}
+
+impl ExtractRequest {
+    /// The wire form (`op: "extract"`); the client half of the
+    /// round-trip [`Request::parse`] tests pin.
+    pub fn to_json(&self) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("op".into(), Json::Str("extract".into()));
+        o.insert("id".into(), Json::Num(self.id as f64));
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("sig".into(), Json::Str(self.sig.to_string()));
+        o.insert("seed".into(), Json::Num(self.seed as f64));
+        o.insert(
+            "x".into(),
+            Json::Arr(
+                self.x.iter().map(|v| num_or_null(*v as f64)).collect(),
+            ),
+        );
+        o.insert(
+            "y".into(),
+            Json::Arr(
+                self.y.iter().map(|v| Json::Num(*v as f64)).collect(),
+            ),
+        );
+        if let Some([a, b]) = self.key {
+            o.insert(
+                "key".into(),
+                Json::Arr(vec![
+                    Json::Num(a as f64),
+                    Json::Num(b as f64),
+                ]),
+            );
+        }
+        if self.want_metrics {
+            o.insert("metrics".into(), Json::Bool(true));
+        }
+        Json::Obj(o).to_string_json()
+    }
+}
+
+/// A parsed request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Run one extraction.
+    Extract(ExtractRequest),
+    /// Live aggregates + serve counters.
+    Metrics { id: u64 },
+    /// Liveness probe.
+    Ping { id: u64 },
+    /// Graceful stop.
+    Shutdown { id: u64 },
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64> {
+    let x = v.get(key)?.as_f64()?;
+    ensure!(
+        x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64,
+        "{key} must be a non-negative integer, got {x}"
+    );
+    Ok(x as u64)
+}
+
+impl Request {
+    /// Parse one request payload.
+    pub fn parse(text: &str) -> Result<Request> {
+        let v = Json::parse(text).context("request is not JSON")?;
+        let op = v.get("op")?.as_str()?.to_string();
+        let id = get_u64(&v, "id")?;
+        match op.as_str() {
+            "ping" => Ok(Request::Ping { id }),
+            "metrics" => Ok(Request::Metrics { id }),
+            "shutdown" => Ok(Request::Shutdown { id }),
+            "extract" => {
+                let model = v.get("model")?.as_str()?.to_string();
+                let sig: Signature = v.get("sig")?.as_str()?.parse()?;
+                let seed = match v.opt("seed") {
+                    Some(_) => get_u64(&v, "seed")?,
+                    None => 0,
+                };
+                let x = v
+                    .get("x")?
+                    .as_arr()?
+                    .iter()
+                    .map(|e| match e {
+                        Json::Null => Ok(f32::NAN),
+                        other => Ok(other.as_f64()? as f32),
+                    })
+                    .collect::<Result<Vec<f32>>>()?;
+                let y = v
+                    .get("y")?
+                    .as_arr()?
+                    .iter()
+                    .map(|e| {
+                        let l = e.as_f64()?;
+                        ensure!(
+                            l.fract() == 0.0
+                                && (i32::MIN as f64..=i32::MAX as f64)
+                                    .contains(&l),
+                            "label {l} is not an i32"
+                        );
+                        Ok(l as i32)
+                    })
+                    .collect::<Result<Vec<i32>>>()?;
+                let key = match v.opt("key") {
+                    None | Some(Json::Null) => None,
+                    Some(k) => {
+                        let k = k.as_arr()?;
+                        ensure!(
+                            k.len() == 2,
+                            "key must be a [u32, u32] pair"
+                        );
+                        let part = |e: &Json| -> Result<u32> {
+                            let x = e.as_f64()?;
+                            ensure!(
+                                x >= 0.0
+                                    && x.fract() == 0.0
+                                    && x <= u32::MAX as f64,
+                                "key part {x} is not a u32"
+                            );
+                            Ok(x as u32)
+                        };
+                        Some([part(&k[0])?, part(&k[1])?])
+                    }
+                };
+                let want_metrics = match v.opt("metrics") {
+                    None | Some(Json::Null) => false,
+                    Some(m) => m.as_bool()?,
+                };
+                Ok(Request::Extract(ExtractRequest {
+                    id,
+                    model,
+                    sig,
+                    seed,
+                    x,
+                    y,
+                    key,
+                    want_metrics,
+                }))
+            }
+            other => bail!(
+                "unknown op {other:?} \
+                 (extract|metrics|ping|shutdown)"
+            ),
+        }
+    }
+}
+
+/// f64 -> JSON number, with non-finite values as `null` (decoded
+/// back to NaN). f32 payloads survive the f32 -> f64 -> shortest
+/// decimal -> f64 -> f32 round trip bitwise (the widening is exact
+/// and Rust prints shortest-round-trip decimals).
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// `{"shape": [...], "data": [...]}` for an output tensor.
+pub fn tensor_to_json(t: &Tensor) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "shape".into(),
+        Json::Arr(
+            t.shape.iter().map(|d| Json::Num(*d as f64)).collect(),
+        ),
+    );
+    let data: Vec<Json> = if let Ok(f) = t.f32s() {
+        f.iter().map(|v| num_or_null(*v as f64)).collect()
+    } else if let Ok(i) = t.i32s() {
+        i.iter().map(|v| Json::Num(*v as f64)).collect()
+    } else {
+        t.u32s()
+            .expect("f32|i32|u32 tensor")
+            .iter()
+            .map(|v| Json::Num(*v as f64))
+            .collect()
+    };
+    o.insert("data".into(), Json::Arr(data));
+    Json::Obj(o)
+}
+
+/// Parse a `{"shape": [...], "data": [...]}` tensor (always f32 on
+/// the way back in; every served output is f32).
+pub fn tensor_from_json(v: &Json) -> Result<Tensor> {
+    let shape: Vec<usize> = v
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<_>>()?;
+    let data: Vec<f32> = v
+        .get("data")?
+        .as_arr()?
+        .iter()
+        .map(|e| match e {
+            Json::Null => Ok(f32::NAN),
+            other => Ok(other.as_f64()? as f32),
+        })
+        .collect::<Result<_>>()?;
+    ensure!(
+        shape.iter().product::<usize>() == data.len(),
+        "tensor data length {} does not match shape {shape:?}",
+        data.len()
+    );
+    Ok(Tensor::from_f32(&shape, data))
+}
+
+fn reply_base(id: u64, ok: bool) -> BTreeMap<String, Json> {
+    let mut o = BTreeMap::new();
+    o.insert("id".into(), Json::Num(id as f64));
+    o.insert("ok".into(), Json::Bool(ok));
+    o
+}
+
+/// `{"id", "ok": false, "error"}`.
+pub fn error_reply(id: u64, msg: &str) -> String {
+    let mut o = reply_base(id, false);
+    o.insert("error".into(), Json::Str(msg.to_string()));
+    Json::Obj(o).to_string_json()
+}
+
+/// `{"id", "ok": true, "pong": true}`.
+pub fn pong_reply(id: u64) -> String {
+    let mut o = reply_base(id, true);
+    o.insert("pong".into(), Json::Bool(true));
+    Json::Obj(o).to_string_json()
+}
+
+/// `{"id", "ok": true, "shutdown": true}` -- acknowledged before the
+/// drain begins.
+pub fn shutdown_reply(id: u64) -> String {
+    let mut o = reply_base(id, true);
+    o.insert("shutdown".into(), Json::Bool(true));
+    Json::Obj(o).to_string_json()
+}
+
+/// `{"id", "ok": true, "metrics": <backpack-metrics/v1>, "serve":
+/// <counters>}`. The `metrics` object is schema-pure so existing
+/// `backpack-metrics/v1` checkers validate it unchanged.
+pub fn metrics_reply(id: u64, metrics: Json, serve: Json) -> String {
+    let mut o = reply_base(id, true);
+    o.insert("metrics".into(), metrics);
+    o.insert("serve".into(), serve);
+    Json::Obj(o).to_string_json()
+}
+
+/// Batch placement of one request inside a coalesced engine call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchMeta {
+    /// Union batch size of the engine call.
+    pub batch_n: usize,
+    /// Number of client requests coalesced into the call.
+    pub coalesced: usize,
+    /// This request's first sample row in the union batch.
+    pub offset: usize,
+    /// This request's sample count.
+    pub n: usize,
+}
+
+impl BatchMeta {
+    fn to_json(self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("batch_n".into(), Json::Num(self.batch_n as f64));
+        o.insert(
+            "coalesced".into(),
+            Json::Num(self.coalesced as f64),
+        );
+        o.insert("offset".into(), Json::Num(self.offset as f64));
+        o.insert("n".into(), Json::Num(self.n as f64));
+        Json::Obj(o)
+    }
+}
+
+/// Successful extraction reply: per-key results (`Concat` keys
+/// sliced to this client's rows, `Sum` keys broadcast), placement
+/// meta, and optionally this batch's metrics window.
+pub fn extract_reply(
+    id: u64,
+    results: &BTreeMap<String, Tensor>,
+    meta: BatchMeta,
+    metrics: Option<Json>,
+) -> String {
+    let mut o = reply_base(id, true);
+    o.insert(
+        "results".into(),
+        Json::Obj(
+            results
+                .iter()
+                .map(|(k, t)| (k.clone(), tensor_to_json(t)))
+                .collect(),
+        ),
+    );
+    o.insert("meta".into(), meta.to_json());
+    if let Some(m) = metrics {
+        o.insert("metrics".into(), m);
+    }
+    Json::Obj(o).to_string_json()
+}
+
+/// Client-side view of any reply frame (the test/scripting half of
+/// the protocol).
+#[derive(Debug, Clone)]
+pub struct ExtractReply {
+    /// Echoed request id.
+    pub id: u64,
+    /// Whether the request succeeded.
+    pub ok: bool,
+    /// Failure message when `ok` is false.
+    pub error: Option<String>,
+    /// Named result tensors (extraction replies).
+    pub results: BTreeMap<String, Tensor>,
+    /// Batch placement (extraction replies).
+    pub meta: Option<BatchMeta>,
+    /// `backpack-metrics/v1` window/aggregates, when requested.
+    pub metrics: Option<Json>,
+}
+
+impl ExtractReply {
+    /// Parse one reply payload.
+    pub fn parse(text: &str) -> Result<ExtractReply> {
+        let v = Json::parse(text).context("reply is not JSON")?;
+        let id = get_u64(&v, "id")?;
+        let ok = v.get("ok")?.as_bool()?;
+        let error = match v.opt("error") {
+            Some(e) => Some(e.as_str()?.to_string()),
+            None => None,
+        };
+        let mut results = BTreeMap::new();
+        if let Some(r) = v.opt("results") {
+            for (k, t) in r.as_obj()? {
+                results.insert(k.clone(), tensor_from_json(t)?);
+            }
+        }
+        let meta = match v.opt("meta") {
+            Some(m) => Some(BatchMeta {
+                batch_n: m.get("batch_n")?.as_usize()?,
+                coalesced: m.get("coalesced")?.as_usize()?,
+                offset: m.get("offset")?.as_usize()?,
+                n: m.get("n")?.as_usize()?,
+            }),
+            None => None,
+        };
+        let metrics = v.opt("metrics").cloned();
+        Ok(ExtractReply { id, ok, error, results, meta, metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_over_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "{\"op\":\"ping\",\"id\":1}").unwrap();
+        write_frame(&mut buf, "second").unwrap();
+        assert_eq!(&buf[..4], &[0, 0, 0, 20]);
+        let mut r = &buf[..];
+        assert_eq!(
+            read_frame(&mut r).unwrap().unwrap(),
+            "{\"op\":\"ping\",\"id\":1}"
+        );
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), "second");
+        // Clean EOF between frames.
+        assert!(read_frame(&mut r).unwrap().is_none());
+        // EOF inside a frame errors.
+        let mut r = &buf[..7];
+        assert!(read_frame(&mut r).is_err());
+        let mut r = &buf[..2];
+        assert!(read_frame(&mut r).is_err());
+        // Oversized length prefix rejected without allocating.
+        let huge = (MAX_FRAME as u32 + 1).to_be_bytes();
+        let mut r = &huge[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn extract_request_round_trips() {
+        let req = ExtractRequest {
+            id: 7,
+            model: "logreg".into(),
+            sig: "batch_grad+diag_ggn".parse().unwrap(),
+            seed: 3,
+            x: vec![0.25, -1.5e-7, f32::NAN],
+            y: vec![0, 9, 4],
+            key: Some([11, 12]),
+            want_metrics: true,
+        };
+        let parsed = Request::parse(&req.to_json()).unwrap();
+        let Request::Extract(got) = parsed else {
+            panic!("not an extract request")
+        };
+        assert_eq!(got.id, req.id);
+        assert_eq!(got.model, req.model);
+        assert_eq!(got.sig, req.sig);
+        assert_eq!(got.seed, req.seed);
+        assert_eq!(got.y, req.y);
+        assert_eq!(got.key, req.key);
+        assert!(got.want_metrics);
+        // Finite values round-trip bitwise; NaN survives as NaN.
+        assert_eq!(got.x[..2], req.x[..2]);
+        assert!(got.x[2].is_nan());
+    }
+
+    #[test]
+    fn control_requests_parse() {
+        assert_eq!(
+            Request::parse("{\"op\":\"ping\",\"id\":4}").unwrap(),
+            Request::Ping { id: 4 }
+        );
+        assert_eq!(
+            Request::parse("{\"op\":\"metrics\",\"id\":0}").unwrap(),
+            Request::Metrics { id: 0 }
+        );
+        assert_eq!(
+            Request::parse("{\"op\":\"shutdown\",\"id\":9}").unwrap(),
+            Request::Shutdown { id: 9 }
+        );
+        assert!(Request::parse("{\"op\":\"nope\",\"id\":1}").is_err());
+        assert!(Request::parse("{\"id\":1}").is_err());
+        assert!(Request::parse("not json").is_err());
+        // Bad signature strings fail at parse, not at serve time.
+        assert!(Request::parse(
+            "{\"op\":\"extract\",\"id\":1,\"model\":\"logreg\",\
+             \"sig\":\"grad+\",\"x\":[],\"y\":[]}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tensors_round_trip_bitwise() {
+        let t = Tensor::from_f32(
+            &[2, 3],
+            vec![0.1, -2.5e-8, 3.0, f32::NAN, f32::INFINITY, 0.0],
+        );
+        let back =
+            tensor_from_json(&tensor_to_json(&t)).unwrap();
+        assert_eq!(back.shape, vec![2, 3]);
+        let (a, b) = (t.f32s().unwrap(), back.f32s().unwrap());
+        for (u, v) in a.iter().zip(b) {
+            if u.is_finite() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{u} vs {v}");
+            } else {
+                // Non-finite flattens to null -> NaN.
+                assert!(v.is_nan());
+            }
+        }
+        // Shape/data mismatch rejected.
+        assert!(tensor_from_json(
+            &Json::parse("{\"shape\":[3],\"data\":[1,2]}").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn replies_round_trip() {
+        let mut results = BTreeMap::new();
+        results.insert(
+            "grad/0/w".to_string(),
+            Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+        );
+        let meta =
+            BatchMeta { batch_n: 16, coalesced: 4, offset: 4, n: 4 };
+        let text = extract_reply(3, &results, meta, None);
+        let r = ExtractReply::parse(&text).unwrap();
+        assert!(r.ok && r.error.is_none());
+        assert_eq!(r.id, 3);
+        assert_eq!(r.meta, Some(meta));
+        assert_eq!(r.results["grad/0/w"].shape, vec![2, 2]);
+        assert!(r.metrics.is_none());
+
+        let r =
+            ExtractReply::parse(&error_reply(8, "nope")).unwrap();
+        assert!(!r.ok);
+        assert_eq!(r.id, 8);
+        assert_eq!(r.error.as_deref(), Some("nope"));
+
+        let r = ExtractReply::parse(&pong_reply(1)).unwrap();
+        assert!(r.ok && r.results.is_empty());
+    }
+}

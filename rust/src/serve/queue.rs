@@ -1,0 +1,251 @@
+//! A bounded MPMC queue with blocking push: the server's
+//! backpressure valve.
+//!
+//! Connection threads `push` incoming extraction requests; the
+//! scheduler thread `pop`s a leader and then `take_where`-scavenges
+//! compatible requests to coalesce. When the queue is full, `push`
+//! blocks the connection thread -- which stops reading frames from
+//! its socket -- so backpressure propagates to clients as TCP flow
+//! control instead of unbounded server memory.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    /// Monotone push counter; lets waiters distinguish "a new item
+    /// arrived" from "the queue is non-empty but unchanged" (e.g.
+    /// only incompatible requests are parked) without spinning.
+    pushes: u64,
+}
+
+/// Bounded blocking queue. All methods take `&self`; share it via
+/// `Arc`.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to at
+    /// least 1 so `push` can always make progress).
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+                pushes: 0,
+            }),
+            cap: cap.max(1),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Blocking push: waits while the queue is full. Returns the
+    /// item back if the queue was closed (before or while waiting).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        while !g.closed && g.items.len() >= self.cap {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        g.pushes += 1;
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    /// Blocking pop: waits while the queue is empty and open.
+    /// `None` means closed *and* drained -- the consumer's exit
+    /// signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.not_full.notify_all();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Remove and return every queued item matching `pred`,
+    /// preserving arrival order. Non-matching items stay queued in
+    /// order.
+    pub fn take_where<F: FnMut(&T) -> bool>(
+        &self,
+        mut pred: F,
+    ) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let mut taken = Vec::new();
+        let mut kept = VecDeque::with_capacity(g.items.len());
+        for item in g.items.drain(..) {
+            if pred(&item) {
+                taken.push(item);
+            } else {
+                kept.push_back(item);
+            }
+        }
+        g.items = kept;
+        if !taken.is_empty() {
+            self.not_full.notify_all();
+        }
+        taken
+    }
+
+    /// Block until a *new* item is pushed, the queue closes, or
+    /// `deadline` passes. Returns true iff a push happened -- the
+    /// scheduler's linger wait (a queue that is merely non-empty
+    /// with incompatible requests does not wake it, so the wait
+    /// never spins).
+    pub fn wait_push_until(&self, deadline: Instant) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let seen = g.pushes;
+        loop {
+            if g.pushes != seen {
+                return true;
+            }
+            if g.closed {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, timeout) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = guard;
+            if timeout.timed_out() && g.pushes == seen {
+                return false;
+            }
+        }
+    }
+
+    /// Close the queue: subsequent `push`es fail, blocked waiters
+    /// wake, `pop` drains what remains then returns `None`.
+    /// Idempotent.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Remove and return everything queued (used to error-reply
+    /// leftovers on shutdown).
+    pub fn drain(&self) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let out: Vec<T> = g.items.drain(..).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Current depth (racy; for metrics only).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty (racy; for metrics
+    /// only).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_and_take_where() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        // take_where preserves order on both sides of the split.
+        assert_eq!(q.take_where(|i| i % 2 == 0), vec![0, 2, 4]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(3));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn push_blocks_when_full_until_pop() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.push(3).is_ok());
+        // The pusher must be parked: depth stays at capacity.
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(t.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn close_wakes_blocked_pushers_and_drains_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(7).unwrap();
+        let q2 = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || q2.push(8));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        // The parked pusher gets its item back.
+        assert_eq!(pusher.join().unwrap(), Err(8));
+        // Pop drains the remaining item, then reports closed.
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        // Pushing after close fails immediately.
+        assert_eq!(q.push(9), Err(9));
+    }
+
+    #[test]
+    fn wait_push_until_sees_new_items_not_stale_ones() {
+        let q = Arc::new(BoundedQueue::new(8));
+        // A parked (incompatible) item must NOT satisfy the wait.
+        q.push(1).unwrap();
+        let deadline = Instant::now() + Duration::from_millis(40);
+        assert!(!q.wait_push_until(deadline));
+        assert!(Instant::now() >= deadline);
+        // A fresh push does.
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.push(2).unwrap();
+        });
+        assert!(q.wait_push_until(
+            Instant::now() + Duration::from_secs(5)
+        ));
+        t.join().unwrap();
+        // Close wakes the wait with false.
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.close();
+        });
+        assert!(!q.wait_push_until(
+            Instant::now() + Duration::from_secs(5)
+        ));
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,368 @@
+//! The batching scheduler: one thread that owns the backend and
+//! turns many queued client requests into few engine calls.
+//!
+//! The scheduler pops a *leader* request, then lingers briefly
+//! (`linger_ms`) scavenging the queue for **compatible** requests --
+//! same `(model, signature, seed, key)` -- and concatenates their
+//! sample batches into one sharded `extended_backward` call. Results
+//! split back per client: `Concat`-reduced keys (per-sample
+//! quantities) are sliced to each client's rows, everything else
+//! (`Sum`-reduced aggregates, Kronecker factors, the loss) is
+//! broadcast to every participant, so a coalesced batch behaves as
+//! one collective extraction over the union batch.
+//!
+//! Exactness: with matching seed the participants share parameters,
+//! and Monte-Carlo draws are keyed by *global sample index* in the
+//! union batch, so a coalesced call is bit-identical to one serial
+//! `extended_backward` over the concatenated data (the equivalence
+//! `tests/serve.rs` pins at `threads = 1`).
+//!
+//! The scheduler thread owns its `NativeBackend` and plan cache
+//! outright (compiled plans are `Rc`, deliberately not `Send`);
+//! replies travel back to connection threads over `mpsc` channels.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::backend::{Backend, Exec};
+use crate::backend::api::{ArtifactId, Signature};
+use crate::backend::native::NativeBackend;
+use crate::coordinator::train::{build_inputs, init_params};
+use crate::obs;
+use crate::obs::MetricsAgg;
+use crate::optim::NamedParam;
+use crate::runtime::Tensor;
+
+use super::protocol::{
+    error_reply, extract_reply, BatchMeta, ExtractRequest,
+};
+use super::Shared;
+
+/// Soft cap on cached compiled plans; synthesis is cheap, so on
+/// overflow the cache is simply cleared.
+const PLAN_CACHE_CAP: usize = 64;
+
+/// One admitted extraction waiting for (or riding in) a batch. The
+/// sender is the owning connection's writer channel.
+pub(crate) struct Pending {
+    pub req: ExtractRequest,
+    pub reply: mpsc::Sender<String>,
+}
+
+/// Coalescing compatibility key: requests agreeing on all four
+/// fields run as one union batch. Seed equality makes parameters
+/// shared; key equality makes the Monte-Carlo draw stream shared.
+#[derive(Clone, PartialEq, Eq)]
+struct BatchKey {
+    model: String,
+    sig: Signature,
+    seed: u64,
+    key: Option<[u32; 2]>,
+}
+
+impl BatchKey {
+    fn of(req: &ExtractRequest) -> BatchKey {
+        BatchKey {
+            model: req.model.clone(),
+            sig: req.sig.clone(),
+            seed: req.seed,
+            key: req.key,
+        }
+    }
+
+    fn matches(&self, req: &ExtractRequest) -> bool {
+        self.model == req.model
+            && self.sig == req.sig
+            && self.seed == req.seed
+            && self.key == req.key
+    }
+}
+
+/// Scheduler entry point; runs until the queue closes *and* drains,
+/// so a graceful shutdown still answers everything already queued.
+pub(crate) fn run(shared: Arc<Shared>) {
+    let backend = NativeBackend::with_threads(shared.cfg.threads);
+    let mut plans: BTreeMap<String, Rc<dyn Exec>> = BTreeMap::new();
+    let mut params: BTreeMap<(String, u64), Vec<NamedParam>> =
+        BTreeMap::new();
+
+    while let Some(first) = shared.queue.pop() {
+        let Some(leader) = admit(&backend, first, &shared) else {
+            continue;
+        };
+        let key = BatchKey::of(&leader.req);
+        let mut total = leader.req.y.len();
+        let mut batch = vec![leader];
+        // Linger: scavenge compatible requests until the window
+        // closes or the soft batch cap is reached. `max_batch` is a
+        // soft cap -- one scavenge may overshoot it, but gathering
+        // stops as soon as it is crossed.
+        let deadline = Instant::now()
+            + Duration::from_millis(shared.cfg.linger_ms);
+        loop {
+            for cand in
+                shared.queue.take_where(|p| key.matches(&p.req))
+            {
+                if let Some(p) = admit(&backend, cand, &shared) {
+                    total += p.req.y.len();
+                    batch.push(p);
+                }
+            }
+            if total >= shared.cfg.max_batch
+                || !shared.queue.wait_push_until(deadline)
+            {
+                break;
+            }
+        }
+        run_batch(
+            &backend,
+            &mut plans,
+            &mut params,
+            &shared,
+            batch,
+            total,
+        );
+    }
+}
+
+/// Validate one request against the backend before it may join a
+/// batch. On rejection the client gets an individual error reply
+/// (with the typed API's nearest-match suggestions) and the batch
+/// proceeds without it.
+fn admit(
+    backend: &NativeBackend,
+    p: Pending,
+    shared: &Shared,
+) -> Option<Pending> {
+    match check(backend, &p.req) {
+        Ok(()) => Some(p),
+        Err(e) => {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            if p.reply
+                .send(error_reply(p.req.id, &format!("{e:#}")))
+                .is_err()
+            {
+                shared
+                    .stats
+                    .disconnects
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            None
+        }
+    }
+}
+
+fn check(
+    backend: &NativeBackend,
+    req: &ExtractRequest,
+) -> anyhow::Result<()> {
+    let n = req.y.len();
+    let id =
+        ArtifactId::new(req.model.clone(), req.sig.clone(), n)?;
+    // Resolves model + extensions with did-you-mean suggestions and
+    // enforces the fully-connected-only restriction (footnote 5).
+    let spec = backend.spec_id(&id)?;
+    let in_numel: usize = spec.in_shape.iter().product();
+    anyhow::ensure!(
+        req.x.len() == n * in_numel,
+        "x has {} values but {} samples of {} need {}",
+        req.x.len(),
+        n,
+        spec.model,
+        n * in_numel
+    );
+    for &l in &req.y {
+        anyhow::ensure!(
+            (0..spec.num_classes as i32).contains(&l),
+            "label {l} is outside [0, {})",
+            spec.num_classes
+        );
+    }
+    if spec.has_key {
+        anyhow::ensure!(
+            req.key.is_some(),
+            "signature {} draws Monte-Carlo samples; supply \
+             \"key\": [a, b]",
+            req.sig
+        );
+    }
+    Ok(())
+}
+
+/// Execute one coalesced batch and split the results back per
+/// client.
+fn run_batch(
+    backend: &NativeBackend,
+    plans: &mut BTreeMap<String, Rc<dyn Exec>>,
+    params: &mut BTreeMap<(String, u64), Vec<NamedParam>>,
+    shared: &Shared,
+    batch: Vec<Pending>,
+    total: usize,
+) {
+    let req0 = &batch[0].req;
+    let coalesced = batch.len();
+    let result = execute(
+        backend, plans, params, shared, &batch, total,
+    );
+    shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+    shared
+        .stats
+        .coalesced_max
+        .fetch_max(coalesced as u64, Ordering::Relaxed);
+    match result {
+        Ok(replies) => {
+            for (p, reply) in batch.iter().zip(replies) {
+                if p.reply.send(reply).is_err() {
+                    shared
+                        .stats
+                        .disconnects
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Err(e) => {
+            // A whole-batch failure (it passed admission, so this
+            // is unexpected) errors every participant.
+            let msg = format!(
+                "batch {}_{}_n{total} failed: {e:#}",
+                req0.model, req0.sig
+            );
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            for p in &batch {
+                if p.reply
+                    .send(error_reply(p.req.id, &msg))
+                    .is_err()
+                {
+                    shared
+                        .stats
+                        .disconnects
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+fn execute(
+    backend: &NativeBackend,
+    plans: &mut BTreeMap<String, Rc<dyn Exec>>,
+    params: &mut BTreeMap<(String, u64), Vec<NamedParam>>,
+    shared: &Shared,
+    batch: &[Pending],
+    total: usize,
+) -> anyhow::Result<Vec<String>> {
+    let req0 = &batch[0].req;
+    let id = ArtifactId::new(
+        req0.model.clone(),
+        req0.sig.clone(),
+        total,
+    )?;
+    let name = id.to_string();
+
+    // Per-signature plan cache: one compiled plan per (model, sig,
+    // union batch size).
+    let exe = match plans.get(&name) {
+        Some(exe) => exe.clone(),
+        None => {
+            if plans.len() >= PLAN_CACHE_CAP {
+                plans.clear();
+            }
+            let exe = backend.load_id(&id)?;
+            plans.insert(name.clone(), exe.clone());
+            exe
+        }
+    };
+    let spec = exe.spec().clone();
+
+    // Participants sharing a seed share parameters.
+    let ps = params
+        .entry((req0.model.clone(), req0.seed))
+        .or_insert_with(|| init_params(&spec, req0.seed));
+
+    // Union batch, concatenated in arrival order.
+    let in_numel: usize = spec.in_shape.iter().product();
+    let mut xs = Vec::with_capacity(total * in_numel);
+    let mut ys = Vec::with_capacity(total);
+    for p in batch {
+        xs.extend_from_slice(&p.req.x);
+        ys.extend_from_slice(&p.req.y);
+    }
+    let mut x_shape = vec![total];
+    x_shape.extend_from_slice(&spec.in_shape);
+    let x = Tensor::from_f32(&x_shape, xs);
+    let y = Tensor::from_i32(&[total], ys);
+    // A key is forwarded only when the graph actually draws
+    // Monte-Carlo samples; a client supplying one defensively for a
+    // deterministic signature must not change the input layout.
+    let key = if spec.has_key { req0.key } else { None };
+    let inputs = build_inputs(ps, x, y, key);
+
+    // Per-batch observability window. With `retain_trace` the CLI
+    // owns a running recorder, so the window is a non-draining
+    // mark/since pair; otherwise the scheduler runs its own
+    // start/stop window per batch.
+    let mark = if shared.cfg.retain_trace {
+        Some(obs::mark())
+    } else {
+        obs::start();
+        None
+    };
+    let t0 = Instant::now();
+    let out = exe.run(&inputs);
+    let wall = t0.elapsed().as_secs_f64();
+    let trace = match &mark {
+        Some(m) => obs::since(m),
+        None => obs::stop(),
+    };
+    let out = out?;
+
+    let agg = MetricsAgg::from_trace(&trace);
+    shared.absorb_window(&agg, wall);
+    let window = agg.to_json(wall);
+
+    // Split per client: Concat-reduced keys by sample rows,
+    // everything else broadcast.
+    let exts = backend.extensions();
+    let mut replies = Vec::with_capacity(batch.len());
+    let mut off = 0usize;
+    for p in batch {
+        let n = p.req.y.len();
+        let mut results = BTreeMap::new();
+        for key in out.names() {
+            let t = out.get(key)?;
+            let per_sample = matches!(
+                exts.reduce(key),
+                crate::backend::extensions::Reduce::Concat
+            ) && t.shape.first() == Some(&total);
+            let sliced = if per_sample {
+                let rows = t.numel() / total;
+                let data = t.f32s()?;
+                let mut shape = t.shape.clone();
+                shape[0] = n;
+                Tensor::from_f32(
+                    &shape,
+                    data[off * rows..(off + n) * rows].to_vec(),
+                )
+            } else {
+                t.clone()
+            };
+            results.insert(key.clone(), sliced);
+        }
+        let meta = BatchMeta {
+            batch_n: total,
+            coalesced: batch.len(),
+            offset: off,
+            n,
+        };
+        let metrics =
+            p.req.want_metrics.then(|| window.clone());
+        replies.push(extract_reply(
+            p.req.id, &results, meta, metrics,
+        ));
+        off += n;
+    }
+    Ok(replies)
+}

@@ -14,7 +14,7 @@
 
 use backpack_rs::backend::conv::Shape;
 use backpack_rs::backend::layers::Layer;
-use backpack_rs::backend::model::Model;
+use backpack_rs::backend::model::{ExtractOptions, Model};
 use backpack_rs::backend::native::NativeBackend;
 use backpack_rs::backend::{Backend, Exec, Outputs};
 use backpack_rs::coordinator::problems::PROBLEMS;
@@ -505,7 +505,10 @@ fn conv_diag_h_coincides_with_diag_ggn_exactly_when_relu() {
     let y = Tensor::from_i32(&[6], y);
     let exts = vec!["diag_h".to_string(), "diag_ggn".to_string()];
     let out = relu
-        .extended_backward(&mk_params(&relu), &x, &y, &exts, None)
+        .extended_backward(
+            &mk_params(&relu), &x, &y, &exts,
+            &ExtractOptions::default(),
+        )
         .unwrap();
     for li in [0usize, 4] {
         for part in ["w", "b"] {
@@ -525,7 +528,10 @@ fn conv_diag_h_coincides_with_diag_ggn_exactly_when_relu() {
     // The sigmoid twin (tiny_conv) must disagree below the sigmoid.
     let sig = tiny_conv();
     let out = sig
-        .extended_backward(&mk_params(&sig), &x, &y, &exts, None)
+        .extended_backward(
+            &mk_params(&sig), &x, &y, &exts,
+            &ExtractOptions::default(),
+        )
         .unwrap();
     let h = out["diag_h/0/w"].f32s().unwrap();
     let g = out["diag_ggn/0/w"].f32s().unwrap();
@@ -657,12 +663,15 @@ fn one_by_one_conv_model_matches_linear_twin() {
     .iter()
     .map(|s| s.to_string())
     .collect();
-    let key = Some([11, 12]);
+    let opts = ExtractOptions {
+        key: Some([11, 12]),
+        ..ExtractOptions::default()
+    };
     let a = conv
-        .extended_backward(&conv_params, &x, &y, &exts, key)
+        .extended_backward(&conv_params, &x, &y, &exts, &opts)
         .unwrap();
     let b = lin
-        .extended_backward(&lin_params, &x, &y, &exts, key)
+        .extended_backward(&lin_params, &x, &y, &exts, &opts)
         .unwrap();
     assert_eq!(
         a.keys().collect::<Vec<_>>(),

@@ -8,7 +8,9 @@
 
 use backpack_rs::backend::conv::Shape;
 use backpack_rs::backend::layers::Layer;
-use backpack_rs::backend::model::{Model, NATIVE_EXTENSIONS};
+use backpack_rs::backend::model::{
+    ExtractOptions, Model, NATIVE_EXTENSIONS,
+};
 use backpack_rs::backend::native::NativeBackend;
 use backpack_rs::backend::Backend;
 use backpack_rs::coordinator::train::{build_inputs, init_params};
@@ -103,9 +105,11 @@ fn all_signatures_agree_across_thread_counts() {
             let n = 11 + rng.below(10); // odd sizes: uneven shards
             let (params, x, y) = problem(&m, n, rng);
             let key = Some([seed as u32, 0xC0FE]);
+            let opts =
+                ExtractOptions { key, ..ExtractOptions::default() };
             for exts in &signatures {
                 let serial = m
-                    .extended_backward(&params, &x, &y, exts, key)
+                    .extended_backward(&params, &x, &y, exts, &opts)
                     .map_err(|e| e.to_string())?;
                 for threads in [2usize, 3, 7] {
                     let par = m
@@ -160,9 +164,10 @@ fn conv_3c3d_signatures_agree_across_thread_counts() {
         vec!["batch_grad".into(), "batch_l2".into(),
              "variance".into()],
     ];
+    let opts = ExtractOptions { key, ..ExtractOptions::default() };
     for exts in &signatures {
         let serial = m
-            .extended_backward(&params, &x, &y, exts, key)
+            .extended_backward(&params, &x, &y, exts, &opts)
             .unwrap();
         for threads in [2usize, 3] {
             let par = m
@@ -214,7 +219,9 @@ fn diag_h_residual_factors_agree_across_thread_counts() {
         let exts =
             vec!["diag_h".to_string(), "diag_ggn".to_string()];
         let serial = m
-            .extended_backward(&params, &x, &y, &exts, None)
+            .extended_backward(
+                &params, &x, &y, &exts, &ExtractOptions::default(),
+            )
             .map_err(|e| e.to_string())?;
         // Sanity: the residual actually fires (diag_h != diag_ggn
         // below the sigmoid), otherwise this test proves nothing.
@@ -285,7 +292,10 @@ fn batch_grad_sample_order_is_preserved() {
             );
             let yi = Tensor::from_i32(&[1], vec![ys[s]]);
             let single = m
-                .extended_backward(&params, &xi, &yi, &exts, None)
+                .extended_backward(
+                    &params, &xi, &yi, &exts,
+                    &ExtractOptions::default(),
+                )
                 .map_err(|e| e.to_string())?;
             for (li, din, dout) in m.linear_dims() {
                 for (part, d) in [("w", dout * din), ("b", dout)] {

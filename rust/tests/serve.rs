@@ -1,0 +1,488 @@
+//! End-to-end tests for `backpack serve`: N concurrent clients
+//! against one daemon, with the exactness contract pinned at
+//! `threads = 1` -- every coalesced reply must be **bitwise** equal
+//! to one serial `extended_backward` over the union batch (Concat
+//! keys sliced to the client's rows, Sum keys broadcast).
+//!
+//! Determinism recipe: clients rendezvous on a barrier before
+//! sending, `max_batch` is set to the exact union size so the
+//! scheduler closes the batch as soon as every participant has
+//! arrived, and a generous linger window is the flake guard.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+
+use backpack_rs::coordinator::train::{build_inputs, init_params};
+use backpack_rs::data::{DatasetSpec, Synthetic};
+use backpack_rs::runtime::Tensor;
+use backpack_rs::serve::protocol::{
+    read_frame, write_frame, ExtractReply, ExtractRequest,
+};
+use backpack_rs::serve::{ServeConfig, Server, ServerHandle};
+use backpack_rs::{
+    ArtifactId, Backend, Exec, ExtensionSet, Json, NativeBackend,
+    Reduce, METRICS_SCHEMA,
+};
+
+/// Samples each client contributes.
+const PER: usize = 4;
+/// logreg input size (mnist 28*28).
+const IN: usize = 784;
+
+fn start(
+    cfg: ServeConfig,
+) -> (SocketAddr, ServerHandle, std::thread::JoinHandle<()>) {
+    let server = Server::bind(cfg).unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle, join)
+}
+
+/// Client `i`'s deterministic synthetic-MNIST slice.
+fn slice_of(i: usize) -> (Vec<f32>, Vec<i32>) {
+    let ds =
+        Synthetic::new(DatasetSpec::by_name("mnist").unwrap(), 0);
+    let idx: Vec<usize> = (i * PER..(i + 1) * PER).collect();
+    ds.batch(0, &idx)
+}
+
+fn request(i: usize, sig: &str, seed: u64) -> ExtractRequest {
+    let (x, y) = slice_of(i);
+    ExtractRequest {
+        id: i as u64,
+        model: "logreg".into(),
+        sig: sig.parse().unwrap(),
+        seed,
+        x,
+        y,
+        key: Some([7, 9]),
+        want_metrics: false,
+    }
+}
+
+fn roundtrip(c: &mut TcpStream, frame: &str) -> ExtractReply {
+    write_frame(c, frame).unwrap();
+    ExtractReply::parse(&read_frame(c).unwrap().unwrap()).unwrap()
+}
+
+/// One serial library call over the union batch: the exactness
+/// reference the daemon must reproduce bit-for-bit.
+fn serial_reference(
+    sig: &str,
+    xs: Vec<f32>,
+    ys: Vec<i32>,
+    seed: u64,
+    key: Option<[u32; 2]>,
+) -> BTreeMap<String, Tensor> {
+    let be = NativeBackend::with_threads(1);
+    let n = ys.len();
+    let id =
+        ArtifactId::new("logreg", sig.parse().unwrap(), n).unwrap();
+    let exe = be.load_id(&id).unwrap();
+    let spec = exe.spec().clone();
+    let params = init_params(&spec, seed);
+    let mut x_shape = vec![n];
+    x_shape.extend_from_slice(&spec.in_shape);
+    let x = Tensor::from_f32(&x_shape, xs);
+    let y = Tensor::from_i32(&[n], ys);
+    let key = if spec.has_key { key } else { None };
+    let out = exe.run(&build_inputs(&params, x, y, key)).unwrap();
+    out.names()
+        .map(|k| (k.clone(), out.get(k).unwrap().clone()))
+        .collect()
+}
+
+/// Assert one client's reply equals its view of the union
+/// reference: Concat-reduced keys sliced to its rows, everything
+/// else broadcast -- bitwise.
+fn assert_matches_reference(
+    sig: &str,
+    reply: &ExtractReply,
+    reference: &BTreeMap<String, Tensor>,
+    total: usize,
+) {
+    let exts = ExtensionSet::builtin();
+    let meta = reply.meta.unwrap();
+    assert_eq!(meta.batch_n, total, "{sig}");
+    let (off, n) = (meta.offset, meta.n);
+    assert_eq!(reply.results.len(), reference.len(), "{sig}");
+    for (k, got) in &reply.results {
+        let full = &reference[k];
+        let per_sample = matches!(exts.reduce(k), Reduce::Concat)
+            && full.shape.first() == Some(&total);
+        let (want_shape, want) = if per_sample {
+            let rows = full.numel() / total;
+            let mut s = full.shape.clone();
+            s[0] = n;
+            (
+                s,
+                full.f32s().unwrap()[off * rows..(off + n) * rows]
+                    .to_vec(),
+            )
+        } else {
+            (full.shape.clone(), full.f32s().unwrap().to_vec())
+        };
+        assert_eq!(got.shape, want_shape, "{sig} {k}");
+        for (a, b) in got.f32s().unwrap().iter().zip(&want) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{sig} {k}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// Fan `CLIENTS` concurrent requests at the daemon and collect
+/// `(client, reply)` pairs. Each client opens its own connection,
+/// rendezvouses on the barrier, then sends.
+fn fan_out(
+    addr: SocketAddr,
+    reqs: Vec<ExtractRequest>,
+) -> Vec<(usize, ExtractReply)> {
+    let barrier = Arc::new(Barrier::new(reqs.len()));
+    std::thread::scope(|s| {
+        let handles: Vec<_> = reqs
+            .into_iter()
+            .enumerate()
+            .map(|(i, req)| {
+                let barrier = Arc::clone(&barrier);
+                s.spawn(move || {
+                    let mut c = TcpStream::connect(addr).unwrap();
+                    barrier.wait();
+                    (i, roundtrip(&mut c, &req.to_json()))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Rebuild the union batch the daemon actually ran from the reply
+/// offsets (arrival order is the daemon's choice, not ours).
+fn union_from_offsets(
+    placed: &[(usize, usize)], // (client, offset)
+    total: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = vec![0.0f32; total * IN];
+    let mut ys = vec![0i32; total];
+    for &(client, off) in placed {
+        let (x, y) = slice_of(client);
+        xs[off * IN..(off + PER) * IN].copy_from_slice(&x);
+        ys[off..off + PER].copy_from_slice(&y);
+    }
+    (xs, ys)
+}
+
+#[test]
+fn coalesced_daemon_matches_serial_for_every_builtin_signature() {
+    const CLIENTS: usize = 4;
+    let total = CLIENTS * PER;
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        linger_ms: 2_000,
+        max_batch: total,
+        ..ServeConfig::default()
+    });
+    let sigs = [
+        "eval",
+        "grad",
+        "batch_grad",
+        "batch_l2",
+        "sq_moment",
+        "variance",
+        "diag_ggn",
+        "diag_ggn_mc",
+        "diag_h",
+        "kfac",
+        "kflr",
+        "kfra",
+    ];
+    for sig in sigs {
+        let replies = fan_out(
+            addr,
+            (0..CLIENTS).map(|i| request(i, sig, 3)).collect(),
+        );
+        let mut placed = Vec::new();
+        for (i, r) in &replies {
+            assert!(r.ok, "sig {sig} client {i}: {:?}", r.error);
+            let meta = r.meta.unwrap();
+            assert_eq!(meta.coalesced, CLIENTS, "sig {sig}");
+            placed.push((*i, meta.offset));
+        }
+        let mut offsets: Vec<usize> =
+            placed.iter().map(|p| p.1).collect();
+        offsets.sort_unstable();
+        assert_eq!(offsets, vec![0, 4, 8, 12], "sig {sig}");
+        let (xs, ys) = union_from_offsets(&placed, total);
+        let reference =
+            serial_reference(sig, xs, ys, 3, Some([7, 9]));
+        for (_, r) in &replies {
+            assert_matches_reference(sig, r, &reference, total);
+        }
+    }
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn interleaved_mixed_signature_traffic_batches_per_signature() {
+    let total = 2 * PER;
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        linger_ms: 2_000,
+        max_batch: total,
+        ..ServeConfig::default()
+    });
+    // Clients 0,2 ask for grad; clients 1,3 for diag_ggn+batch_l2 --
+    // interleaved arrival, two independent batches.
+    let sig_of = |i: usize| {
+        if i % 2 == 0 {
+            "grad"
+        } else {
+            "diag_ggn+batch_l2"
+        }
+    };
+    let replies = fan_out(
+        addr,
+        (0..4).map(|i| request(i, sig_of(i), 11)).collect(),
+    );
+    for group in ["grad", "diag_ggn+batch_l2"] {
+        let members: Vec<&(usize, ExtractReply)> = replies
+            .iter()
+            .filter(|(i, _)| sig_of(*i) == group)
+            .collect();
+        assert_eq!(members.len(), 2);
+        let mut placed = Vec::new();
+        for (i, r) in &members {
+            assert!(r.ok, "{group} client {i}: {:?}", r.error);
+            let meta = r.meta.unwrap();
+            // Only same-signature requests coalesce.
+            assert_eq!(meta.coalesced, 2, "{group}");
+            assert_eq!(meta.batch_n, total, "{group}");
+            placed.push((*i, meta.offset));
+        }
+        let (xs, ys) = union_from_offsets(&placed, total);
+        let reference =
+            serial_reference(group, xs, ys, 11, Some([7, 9]));
+        for (_, r) in &members {
+            assert_matches_reference(group, r, &reference, total);
+        }
+    }
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn client_disconnect_mid_batch_does_not_disturb_the_rest() {
+    const CLIENTS: usize = 3;
+    let total = CLIENTS * PER;
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        linger_ms: 2_000,
+        max_batch: total,
+        ..ServeConfig::default()
+    });
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let replies: Vec<Option<(usize, ExtractReply)>> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|i| {
+                    let barrier = Arc::clone(&barrier);
+                    s.spawn(move || {
+                        let req = request(i, "batch_grad", 5);
+                        let mut c =
+                            TcpStream::connect(addr).unwrap();
+                        barrier.wait();
+                        write_frame(&mut c, &req.to_json())
+                            .unwrap();
+                        if i == 0 {
+                            // Vanish mid-batch: the daemon must
+                            // tolerate the dead reply channel.
+                            drop(c);
+                            return None;
+                        }
+                        Some((
+                            i,
+                            ExtractReply::parse(
+                                &read_frame(&mut c)
+                                    .unwrap()
+                                    .unwrap(),
+                            )
+                            .unwrap(),
+                        ))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+    let survivors: Vec<&(usize, ExtractReply)> =
+        replies.iter().flatten().collect();
+    assert_eq!(survivors.len(), CLIENTS - 1);
+    let mut placed = Vec::new();
+    let mut seen = vec![false; CLIENTS];
+    for (i, r) in &survivors {
+        assert!(r.ok, "client {i}: {:?}", r.error);
+        let meta = r.meta.unwrap();
+        // The ghost still rode in the batch...
+        assert_eq!(meta.coalesced, CLIENTS);
+        assert_eq!(meta.batch_n, total);
+        placed.push((*i, meta.offset));
+        seen[meta.offset / PER] = true;
+    }
+    // ...at the one offset no survivor occupies.
+    let ghost_off =
+        seen.iter().position(|s| !s).unwrap() * PER;
+    placed.push((0, ghost_off));
+    let (xs, ys) = union_from_offsets(&placed, total);
+    let reference = serial_reference("batch_grad", xs, ys, 5, None);
+    for (_, r) in &survivors {
+        assert_matches_reference("batch_grad", r, &reference, total);
+    }
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn bounded_queue_drains_an_incompatible_flood() {
+    // 8 concurrent clients with pairwise-different seeds: nothing
+    // can coalesce, the queue (capacity 2) must cycle blocking
+    // pushes, and every client still gets its exact solo result.
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        queue_cap: 2,
+        linger_ms: 1,
+        max_batch: 64,
+        ..ServeConfig::default()
+    });
+    let replies = fan_out(
+        addr,
+        (0..8)
+            .map(|i| request(i % 4, "variance", i as u64))
+            .collect(),
+    );
+    for (i, r) in &replies {
+        assert!(r.ok, "client {i}: {:?}", r.error);
+        let (xs, ys) = slice_of(i % 4);
+        let reference = serial_reference(
+            "variance",
+            xs,
+            ys,
+            *i as u64,
+            None,
+        );
+        assert_matches_reference("variance", r, &reference, PER);
+    }
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn wire_errors_carry_nearest_match_suggestions() {
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        linger_ms: 1,
+        ..ServeConfig::default()
+    });
+    let mut c = TcpStream::connect(addr).unwrap();
+    let expect_err = |c: &mut TcpStream, req: ExtractRequest| {
+        let r = roundtrip(c, &req.to_json());
+        assert!(!r.ok, "expected failure, got ok");
+        r.error.unwrap()
+    };
+
+    // Misspelled model: nearest registered model suggested.
+    let mut req = request(0, "grad", 0);
+    req.model = "logrge".into();
+    let e = expect_err(&mut c, req);
+    assert!(e.contains("did you mean"), "{e}");
+    assert!(e.contains("logreg"), "{e}");
+
+    // Misspelled extension: nearest builtin suggested.
+    let e = expect_err(&mut c, request(0, "diag_gnn", 0));
+    assert!(e.contains("did you mean"), "{e}");
+    assert!(e.contains("diag_ggn"), "{e}");
+
+    // Monte-Carlo signature without a key.
+    let mut req = request(0, "kfac", 0);
+    req.key = None;
+    let e = expect_err(&mut c, req);
+    assert!(e.contains("key"), "{e}");
+
+    // Wrong input volume.
+    let mut req = request(0, "grad", 0);
+    req.x.truncate(10);
+    let e = expect_err(&mut c, req);
+    assert!(e.contains("values"), "{e}");
+
+    // Label out of range.
+    let mut req = request(0, "grad", 0);
+    req.y[0] = 99;
+    let e = expect_err(&mut c, req);
+    assert!(e.contains("outside"), "{e}");
+
+    // A healthy request on the same connection still succeeds:
+    // rejections are per-request, not per-session.
+    let r = roundtrip(&mut c, &request(0, "grad", 0).to_json());
+    assert!(r.ok, "{:?}", r.error);
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn metrics_are_schema_valid_per_request_and_aggregate() {
+    let golden = [
+        "counters",
+        "details",
+        "overhead",
+        "phases",
+        "quantities",
+        "schema",
+        "shards",
+        "wall_s",
+    ];
+    let assert_metrics_shape = |m: &Json| {
+        let keys: Vec<&str> = m
+            .as_obj()
+            .unwrap()
+            .keys()
+            .map(|k| k.as_str())
+            .collect();
+        assert_eq!(keys, golden);
+        assert_eq!(
+            m.get("schema").unwrap().as_str().unwrap(),
+            METRICS_SCHEMA
+        );
+    };
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        linger_ms: 1,
+        ..ServeConfig::default()
+    });
+    let mut c = TcpStream::connect(addr).unwrap();
+
+    // Per-request window: `"metrics": true` rides on the reply.
+    let mut req = request(0, "diag_ggn", 0);
+    req.want_metrics = true;
+    let r = roundtrip(&mut c, &req.to_json());
+    assert!(r.ok, "{:?}", r.error);
+    assert_metrics_shape(r.metrics.as_ref().unwrap());
+
+    // Aggregate endpoint: schema-pure metrics + serve counters.
+    write_frame(&mut c, "{\"op\":\"metrics\",\"id\":42}").unwrap();
+    let v =
+        Json::parse(&read_frame(&mut c).unwrap().unwrap()).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap());
+    assert_metrics_shape(v.get("metrics").unwrap());
+    let s = v.get("serve").unwrap();
+    assert_eq!(
+        s.get("schema").unwrap().as_str().unwrap(),
+        "backpack-serve/v1"
+    );
+    assert!(s.get("batches").unwrap().as_usize().unwrap() >= 1);
+    assert!(s.get("extracts").unwrap().as_usize().unwrap() >= 1);
+    handle.shutdown();
+    join.join().unwrap();
+}

@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""CI smoke test for `backpack serve` (protocol backpack-serve/v1).
+
+Pure stdlib. Starts the daemon on an ephemeral port, fires 8
+concurrent scripted clients at logreg grad+diag_ggn extractions
+(the mnist_logreg problem's model), validates every reply and the
+live metrics against the backpack-metrics/v1 schema, then checks a
+clean SIGTERM shutdown.
+
+Usage: python3 scripts/serve_smoke.py [path/to/backpack]
+"""
+
+import json
+import signal
+import socket
+import struct
+import subprocess
+import sys
+import threading
+
+CLIENTS = 8
+PER = 4          # samples per client
+IN_NUMEL = 784   # mnist 28*28
+CLASSES = 10
+
+METRICS_KEYS = [
+    "counters", "details", "overhead", "phases",
+    "quantities", "schema", "shards", "wall_s",
+]
+
+
+def send_frame(sock, payload):
+    data = json.dumps(payload).encode()
+    sock.sendall(struct.pack(">I", len(data)) + data)
+
+
+def read_exact(sock, n):
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise EOFError("connection closed mid-frame")
+        buf += chunk
+    return buf
+
+
+def read_frame(sock):
+    (n,) = struct.unpack(">I", read_exact(sock, 4))
+    return json.loads(read_exact(sock, n))
+
+
+def check_metrics_object(m):
+    assert sorted(m.keys()) == METRICS_KEYS, sorted(m.keys())
+    assert m["schema"] == "backpack-metrics/v1", m["schema"]
+    assert isinstance(m["phases"], dict)
+    assert isinstance(m["counters"], dict)
+    assert {"count", "total_s"} <= set(m["shards"].keys())
+
+
+def client(addr, i, barrier, results):
+    # Deterministic per-client batch: distinct data, shared seed so
+    # requests are compatible and may coalesce.
+    x = [((i * 131 + j * 7) % 97) / 97.0
+         for j in range(PER * IN_NUMEL)]
+    y = [(i + j) % CLASSES for j in range(PER)]
+    with socket.create_connection(addr, timeout=30) as sock:
+        barrier.wait()
+        send_frame(sock, {
+            "op": "extract", "id": i, "model": "logreg",
+            "sig": "grad+diag_ggn", "seed": 0, "x": x, "y": y,
+            "metrics": i == 0,
+        })
+        results[i] = read_frame(sock)
+
+
+def main():
+    binary = sys.argv[1] if len(sys.argv) > 1 else \
+        "rust/target/release/backpack"
+    proc = subprocess.Popen(
+        [binary, "serve", "--addr", "127.0.0.1:0",
+         "--linger-ms", "300", "--max-batch", str(CLIENTS * PER)],
+        stdout=subprocess.PIPE, text=True,
+    )
+    try:
+        banner = proc.stdout.readline().strip()
+        print(banner)
+        assert banner.startswith("backpack-serve/v1 listening on "), \
+            banner
+        host, port = banner.rsplit(" ", 1)[1].rsplit(":", 1)
+        addr = (host, int(port))
+
+        # 8 concurrent clients, rendezvousing so the linger window
+        # can coalesce them.
+        barrier = threading.Barrier(CLIENTS)
+        results = {}
+        threads = [
+            threading.Thread(
+                target=client, args=(addr, i, barrier, results))
+            for i in range(CLIENTS)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+            assert not t.is_alive(), "client timed out"
+
+        assert len(results) == CLIENTS
+        for i, r in sorted(results.items()):
+            assert r["ok"], (i, r.get("error"))
+            assert r["id"] == i
+            res = r["results"]
+            assert res["grad/0/w"]["shape"] == [10, IN_NUMEL]
+            assert res["grad/0/b"]["shape"] == [10]
+            assert res["diag_ggn/0/w"]["shape"] == [10, IN_NUMEL]
+            loss = res["loss"]["data"][0]
+            assert loss is not None and loss > 0.0, loss
+            meta = r["meta"]
+            assert meta["n"] == PER
+            assert meta["batch_n"] == meta["coalesced"] * PER
+            assert 1 <= meta["coalesced"] <= CLIENTS
+        # Every request rode in some batch; same-batch members agree
+        # on broadcast aggregates.
+        by_batch = {}
+        for i, r in sorted(results.items()):
+            key = json.dumps(r["results"]["grad/0/w"]["data"][:8])
+            by_batch.setdefault(key, []).append(r["meta"])
+        for metas in by_batch.values():
+            offs = sorted(m["offset"] for m in metas)
+            assert len(set(offs)) == len(offs), offs
+        window = results[0].get("metrics")
+        assert window is not None, "client 0 asked for metrics"
+        check_metrics_object(window)
+
+        # Aggregate metrics endpoint.
+        with socket.create_connection(addr, timeout=30) as sock:
+            send_frame(sock, {"op": "metrics", "id": 99})
+            m = read_frame(sock)
+        assert m["ok"] and m["id"] == 99
+        check_metrics_object(m["metrics"])
+        serve = m["serve"]
+        assert serve["schema"] == "backpack-serve/v1"
+        assert serve["extracts"] == CLIENTS, serve
+        assert serve["batches"] >= 1, serve
+        assert serve["coalesced_max"] >= 2, \
+            f"no dynamic batching observed: {serve}"
+        assert serve["errors"] == 0, serve
+        print("serve counters:", json.dumps(serve))
+
+        # Clean SIGTERM shutdown.
+        proc.send_signal(signal.SIGTERM)
+        proc.wait(timeout=30)
+        print("serve smoke OK "
+              f"(coalesced_max={serve['coalesced_max']}, "
+              f"batches={serve['batches']})")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+
+if __name__ == "__main__":
+    main()
