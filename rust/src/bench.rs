@@ -577,15 +577,25 @@ pub fn compare_report(
     current: &Json,
     max_ratio: f64,
 ) -> Result<CompareReport> {
-    for (label, v) in
-        [("baseline", baseline), ("current", current)]
-    {
-        let schema = v.get("schema")?.as_str()?;
-        anyhow::ensure!(
-            schema == BENCH_SCHEMA,
-            "{label} schema {schema:?} != {BENCH_SCHEMA:?}"
-        );
-    }
+    // Two comparable document kinds: single-run bench baselines and
+    // loadgen serve benchmarks. Both carry `cases[]` rows with
+    // `name` + `p50_s`, so the gate logic is shared; mixing the two
+    // kinds is refused up front.
+    let allowed =
+        [BENCH_SCHEMA, crate::serve::SERVEBENCH_SCHEMA];
+    let base_schema = baseline.get("schema")?.as_str()?.to_string();
+    anyhow::ensure!(
+        allowed.contains(&base_schema.as_str()),
+        "baseline schema {base_schema:?} is neither \
+         {BENCH_SCHEMA:?} nor {:?}",
+        crate::serve::SERVEBENCH_SCHEMA
+    );
+    let cur_schema = current.get("schema")?.as_str()?;
+    anyhow::ensure!(
+        cur_schema == base_schema,
+        "current schema {cur_schema:?} != baseline schema \
+         {base_schema:?}; compare like with like"
+    );
     // Case names embed the batch (`{model}_{sig}_n{batch}`), so runs
     // at different --batch values share no names; fail that up front
     // with the real cause instead of a misleading per-case
@@ -599,6 +609,19 @@ pub fn compare_report(
             "baseline was recorded at --batch {b} but the current \
              run used --batch {c}; rerun with a matching --batch or \
              refresh the baseline (docs/bench.md)"
+        );
+    }
+    // Same idea for loadgen documents: latency percentiles at
+    // different client counts are not comparable.
+    if let (Some(b), Some(c)) =
+        (baseline.opt("clients"), current.opt("clients"))
+    {
+        let (b, c) = (b.as_f64()?, c.as_f64()?);
+        anyhow::ensure!(
+            b == c,
+            "baseline was recorded at --clients {b} but the \
+             current run used --clients {c}; rerun with a matching \
+             --clients or refresh the baseline (docs/bench.md)"
         );
     }
     let mut base = std::collections::BTreeMap::new();
@@ -646,7 +669,7 @@ pub fn compare_report(
 /// sets it, else `git rev-parse`, else `"unknown"`. Always truncated
 /// to 12 hex chars so CI- and locally-produced baselines compare
 /// equal on this field.
-fn git_rev() -> String {
+pub(crate) fn git_rev() -> String {
     if let Ok(sha) = std::env::var("GITHUB_SHA") {
         let sha = sha.trim();
         if !sha.is_empty() {
@@ -903,6 +926,72 @@ mod tests {
         assert!(
             compare_baselines(&base, &Json::Obj(bad), 3.0).is_err()
         );
+    }
+
+    /// Rebrand a bench doc as a `backpack-servebench/v1` one.
+    fn as_servebench(v: Json) -> Json {
+        let Json::Obj(mut root) = v else { unreachable!() };
+        root.insert(
+            "schema".to_string(),
+            Json::Str(crate::serve::SERVEBENCH_SCHEMA.to_string()),
+        );
+        Json::Obj(root)
+    }
+
+    #[test]
+    fn compare_gates_servebench_documents_too() {
+        // Loadgen documents carry the same cases[] rows, so the
+        // gate applies unchanged: within-noise passes, a synthetic
+        // 10x latency regression trips it.
+        let base =
+            as_servebench(doc(&[("loadgen_logreg_e2e_p50", 0.002)]));
+        let ok =
+            as_servebench(doc(&[("loadgen_logreg_e2e_p50", 0.003)]));
+        compare_baselines(&base, &ok, 3.0).unwrap();
+        let slow =
+            as_servebench(doc(&[("loadgen_logreg_e2e_p50", 0.020)]));
+        let err = compare_baselines(&base, &slow, 3.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("regression gate failed"), "{err}");
+    }
+
+    #[test]
+    fn compare_rejects_mixed_bench_and_servebench_schemas() {
+        let bench = doc(&[("a_grad_n8", 0.010)]);
+        let serve = as_servebench(doc(&[("a_grad_n8", 0.010)]));
+        let err = compare_baselines(&bench, &serve, 3.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("like with like"), "{err}");
+    }
+
+    #[test]
+    fn compare_rejects_mismatched_client_counts_up_front() {
+        let with_clients = |n: f64| -> Json {
+            let Json::Obj(mut root) = as_servebench(doc(&[(
+                "loadgen_logreg_e2e_p50",
+                0.002,
+            )])) else {
+                unreachable!()
+            };
+            root.insert("clients".to_string(), Json::Num(n));
+            Json::Obj(root)
+        };
+        let err = compare_baselines(
+            &with_clients(8.0),
+            &with_clients(16.0),
+            3.0,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--clients"), "{err}");
+        compare_baselines(
+            &with_clients(8.0),
+            &with_clients(8.0),
+            3.0,
+        )
+        .unwrap();
     }
 
     #[test]

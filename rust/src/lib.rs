@@ -110,6 +110,11 @@ pub use bench::{
     Stats, BENCH_SCHEMA, COMPARE_SCHEMA,
 };
 pub use json::Json;
-pub use obs::{MetricsAgg, Trace, METRICS_SCHEMA, TRACE_SCHEMA};
+pub use obs::{
+    Histogram, MetricsAgg, Trace, METRICS_SCHEMA, TRACE_SCHEMA,
+};
 pub use runtime::{ArtifactSpec, Tensor, TensorSpec};
-pub use serve::{ServeConfig, Server, ServerHandle};
+pub use serve::{
+    LoadgenConfig, LoadgenReport, ServeConfig, Server, ServerHandle,
+    SERVEBENCH_SCHEMA,
+};

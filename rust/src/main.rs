@@ -19,7 +19,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use backpack_rs::cli::Args;
 use backpack_rs::coordinator::gridsearch::GridPreset;
@@ -37,7 +37,12 @@ usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N]
          [--damping 0.01] [--steps 200] [--seed 0] [--eval-every 25]
          [--inv-every 1] [--verbose]
   serve  [--addr 127.0.0.1:4417] [--stdio] [--queue-cap 64]
-         [--linger-ms 2] [--max-batch 1024]
+         [--linger-ms 2] [--max-batch 1024] [--max-conns N]
+         [--param-cache 16] [--access-log FILE]
+  loadgen [--addr HOST:PORT] [--clients 8] [--duration-s 5]
+         [--model logreg] [--sigs grad,diag_ggn] [--per 4]
+         [--seed 0] [--linger-ms 2] [--max-batch 1024]
+         [--out SERVEBENCH.json]
   bench  [--quick] [--batch 128] [--out BENCH_native.json]
          [--compare BASELINE.json [--current RUN.json]]
          [--compare-out COMPARE.json] [--max-regression 3.0]
@@ -67,9 +72,20 @@ TCP (or stdin/stdout with --stdio), coalescing compatible concurrent
 requests -- same model, signature, seed, key -- into one sharded
 extended-backward call, with a bounded request queue (--queue-cap)
 for backpressure and a `metrics` request serving live
-backpack-metrics/v1 aggregates. Port 0 binds an ephemeral port; the
-bound address is printed on the first stdout line. Stop it with a
-`shutdown` request or SIGTERM.
+backpack-metrics/v1 aggregates plus per-stage latency histograms
+(serve.latency). --max-conns caps concurrent connections (rejects
+get a server_busy error frame), --access-log appends one
+backpack-access/v1 JSON line per request (per-stage micros,
+outcome; never silenced by --quiet). Port 0 binds an ephemeral
+port; the bound address is printed on the first stdout line. Stop
+it with a `shutdown` request or SIGTERM.
+
+`loadgen` drives a daemon with N concurrent clients for a fixed
+duration and writes a backpack-servebench/v1 document (throughput,
+e2e + per-stage latency percentiles, coalescing stats; docs/bench.md).
+Without --addr it spawns its own daemon on an ephemeral port. The
+output gates under `bench --compare BASELINE.json --current RUN.json`
+exactly like single-run baselines.
 
 Observability (any subcommand; docs/observability.md):
   --trace FILE   record walk-level spans and write Chrome trace-event
@@ -229,6 +245,11 @@ fn dispatch(
                 // windows must not drain the global recorder.
                 retain_trace: args.flag("trace").is_some()
                     || args.has("metrics"),
+                max_conns: args.get_usize("max-conns", 0)?,
+                param_cache: args.get_usize("param-cache", 16)?,
+                access_log: args
+                    .flag("access-log")
+                    .map(std::path::PathBuf::from),
             };
             if args.has("stdio") {
                 backpack_rs::serve::run_stdio(cfg)?;
@@ -243,6 +264,41 @@ fn dispatch(
                 std::io::stdout().flush()?;
                 server.run()?;
             }
+        }
+        "loadgen" => {
+            // The self-spawned daemon (and the probe resolving the
+            // signature mix) are native-only, like serve.
+            anyhow::ensure!(
+                args.get_or("backend", "native") == "native",
+                "loadgen supports the native backend only"
+            );
+            let mut sigs = Vec::new();
+            for s in args.get_or("sigs", "grad,diag_ggn").split(',')
+            {
+                sigs.push(s.trim().parse().with_context(|| {
+                    format!("bad --sigs entry {s:?}")
+                })?);
+            }
+            let cfg = backpack_rs::serve::LoadgenConfig {
+                addr: args.flag("addr").map(str::to_string),
+                clients: args.get_usize("clients", 8)?,
+                duration_s: args.get_f32("duration-s", 5.0)? as f64,
+                model: args.get_or("model", "logreg").to_string(),
+                sigs,
+                per: args.get_usize("per", 4)?,
+                seed: args.get_u64("seed", 0)?,
+                threads,
+                linger_ms: args.get_u64("linger-ms", 2)?,
+                max_batch: args.get_usize("max-batch", 1024)?,
+            };
+            let report = backpack_rs::serve::loadgen::run(&cfg)?;
+            report.print_table();
+            let out = args.get_or("out", "SERVEBENCH.json");
+            std::fs::write(
+                out,
+                report.to_json().to_string_json() + "\n",
+            )?;
+            println!("wrote {out}");
         }
         "bench" => {
             let default_out = format!("BENCH_{}.json", be.name());

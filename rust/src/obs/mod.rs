@@ -44,7 +44,10 @@
 
 pub mod report;
 
-pub use report::{MetricsAgg, Trace, METRICS_SCHEMA, TRACE_SCHEMA};
+pub use report::{
+    Histogram, MetricsAgg, Trace, HIST_BUCKETS, METRICS_SCHEMA,
+    TRACE_SCHEMA,
+};
 
 use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

@@ -364,6 +364,260 @@ fn counters_json(counters: &[u64; COUNTER_COUNT]) -> Json {
     )
 }
 
+/// Number of fixed buckets in a [`Histogram`]: 8 exact unit buckets
+/// for values `0..8`, then 8 sub-buckets per power of two up to the
+/// full `u64` range (`(64 - 3) * 8`), so recording never saturates.
+pub const HIST_BUCKETS: usize = 8 + 61 * 8;
+
+/// Sub-bucket resolution: values `>= 8` land in buckets of relative
+/// width `1 / (8 + m) <= 12.5%`, which bounds the percentile error.
+const HIST_SUB_BITS: u32 = 3;
+
+/// A fixed-bucket log-scale histogram of `u64` values (the serve
+/// daemon records request-stage latencies in microseconds; the
+/// batch-size distribution reuses it with sample counts).
+///
+/// Design goals, in order:
+///
+/// * **exact counts** -- every recorded value increments exactly one
+///   bucket, plus exact `count`/`sum`/`min`/`max`, so merged and
+///   windowed histograms agree to the last event;
+/// * **mergeable** -- [`Histogram::merge`] adds bucket counts
+///   elementwise and widens the extrema, and is associative and
+///   commutative (all-integer state), so per-client histograms fold
+///   into fleet totals in any order;
+/// * **bounded error percentiles** -- buckets are log-spaced with
+///   [`HIST_SUB_BITS`] sub-buckets per octave (values below 8 are
+///   exact), so [`Histogram::percentile`] is within 12.5% relative
+///   error of the exact order statistic at any rank.
+///
+/// The rank convention matches
+/// [`crate::coordinator::metrics::percentile`]: the target rank is
+/// `q * (count - 1)` with linear interpolation, which the tests pin
+/// against exact sorts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Bucket index of a value: identity below 8, then
+/// `(octave, 3 mantissa bits)`.
+fn bucket_of(v: u64) -> usize {
+    if v < 1u64 << HIST_SUB_BITS {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros(); // 2^e <= v, e >= 3
+    let m = (v >> (e - HIST_SUB_BITS)) & 0x7;
+    ((e - HIST_SUB_BITS) as usize) * 8 + m as usize + 8
+}
+
+/// Half-open value range `[lo, hi)` of a bucket; the final bucket's
+/// upper bound saturates at `u64::MAX` (inclusive there).
+fn bucket_bounds(b: usize) -> (u64, u64) {
+    if b < 8 {
+        return (b as u64, b as u64 + 1);
+    }
+    let e = (b - 8) as u32 / 8 + HIST_SUB_BITS;
+    let m = (b - 8) as u64 % 8;
+    let lo = (8 + m) << (e - HIST_SUB_BITS);
+    (lo, lo.saturating_add(1u64 << (e - HIST_SUB_BITS)))
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one value.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// No values recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of recorded values (saturating on u64 overflow).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact smallest recorded value.
+    pub fn min(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    /// Exact largest recorded value.
+    pub fn max(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    /// Exact mean of recorded values.
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0)
+            .then(|| self.sum as f64 / self.count as f64)
+    }
+
+    /// Fold another histogram into this one: bucket counts add,
+    /// extrema widen. Associative and commutative.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Approximate percentile at quantile `q` in `[0, 1]`, following
+    /// the `coordinator::metrics::percentile` rank convention
+    /// (`rank = q * (count - 1)`, linear interpolation). The result
+    /// interpolates within the bucket holding the target rank and is
+    /// clamped to the exact recorded `[min, max]`, so it is within
+    /// one bucket width (<= 12.5% relative) of the exact order
+    /// statistic. `None` when empty.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = q.clamp(0.0, 1.0) * (self.count - 1) as f64;
+        // The extreme ranks are known exactly.
+        if rank <= 0.0 {
+            return Some(self.min as f64);
+        }
+        if rank >= (self.count - 1) as f64 {
+            return Some(self.max as f64);
+        }
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 > rank {
+                let (lo, hi) = bucket_bounds(b);
+                let frac = (rank - cum as f64) / c as f64;
+                let v = lo as f64 + (hi - lo) as f64 * frac;
+                return Some(
+                    v.clamp(self.min as f64, self.max as f64),
+                );
+            }
+            cum += c;
+        }
+        Some(self.max as f64)
+    }
+
+    /// JSON form: exact `count`/`sum`/`min`/`max`, sparse non-empty
+    /// `buckets` as `[index, count]` pairs (ascending), plus derived
+    /// `p50`/`p90`/`p95`/`p99` for direct consumption (ignored by
+    /// [`Histogram::from_json`], which recomputes them).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(b, c)| {
+                Json::Arr(vec![
+                    Json::Num(b as f64),
+                    Json::Num(*c as f64),
+                ])
+            })
+            .collect();
+        let opt_num = |v: Option<f64>| match v {
+            Some(x) => Json::Num(x),
+            None => Json::Null,
+        };
+        let mut o = BTreeMap::new();
+        o.insert("buckets".into(), Json::Arr(buckets));
+        o.insert("count".into(), Json::Num(self.count as f64));
+        o.insert("sum".into(), Json::Num(self.sum as f64));
+        o.insert(
+            "min".into(),
+            opt_num(self.min().map(|v| v as f64)),
+        );
+        o.insert(
+            "max".into(),
+            opt_num(self.max().map(|v| v as f64)),
+        );
+        o.insert("p50".into(), opt_num(self.percentile(0.50)));
+        o.insert("p90".into(), opt_num(self.percentile(0.90)));
+        o.insert("p95".into(), opt_num(self.percentile(0.95)));
+        o.insert("p99".into(), opt_num(self.percentile(0.99)));
+        Json::Obj(o)
+    }
+
+    /// Parse the [`Histogram::to_json`] form back; validates bucket
+    /// indices and that bucket counts sum to `count`.
+    pub fn from_json(v: &Json) -> anyhow::Result<Histogram> {
+        use anyhow::ensure;
+        let as_u64 = |x: &Json| -> anyhow::Result<u64> {
+            let x = x.as_f64()?;
+            ensure!(
+                x >= 0.0 && x.fract() == 0.0,
+                "not a non-negative integer: {x}"
+            );
+            Ok(x as u64)
+        };
+        let mut h = Histogram::new();
+        for pair in v.get("buckets")?.as_arr()? {
+            let pair = pair.as_arr()?;
+            ensure!(
+                pair.len() == 2,
+                "bucket entry must be [index, count]"
+            );
+            let b = pair[0].as_usize()?;
+            ensure!(
+                b < HIST_BUCKETS,
+                "bucket index {b} out of range"
+            );
+            h.counts[b] += as_u64(&pair[1])?;
+        }
+        h.count = as_u64(v.get("count")?)?;
+        ensure!(
+            h.counts.iter().sum::<u64>() == h.count,
+            "bucket counts do not sum to count"
+        );
+        h.sum = as_u64(v.get("sum")?)?;
+        h.min = match v.get("min")? {
+            Json::Null => u64::MAX,
+            m => as_u64(m)?,
+        };
+        h.max = match v.get("max")? {
+            Json::Null => 0,
+            m => as_u64(m)?,
+        };
+        Ok(h)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -580,5 +834,193 @@ mod tests {
             < 1e-15);
         assert_eq!(agg.shard_max_s, whole.shard_max_s);
         assert_eq!(agg.shard_min_s, whole.shard_min_s);
+    }
+
+    #[test]
+    fn histogram_buckets_bound_their_values() {
+        // Every probe value must land in a bucket whose [lo, hi)
+        // range contains it, and the bucket's own lower bound must
+        // map back to the same bucket.
+        let probes = [
+            0u64,
+            1,
+            7,
+            8,
+            9,
+            15,
+            16,
+            17,
+            255,
+            256,
+            1_000,
+            123_456,
+            u32::MAX as u64,
+            1u64 << 50,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        for &v in &probes {
+            let b = bucket_of(v);
+            assert!(b < HIST_BUCKETS, "{v} -> bucket {b}");
+            let (lo, hi) = bucket_bounds(b);
+            assert!(
+                lo <= v && (v < hi || hi == u64::MAX),
+                "{v} outside bucket {b} = [{lo}, {hi})"
+            );
+            assert_eq!(bucket_of(lo), b, "lo of bucket {b}");
+            // Relative bucket width stays under 12.5% above the
+            // exact region.
+            if v >= 8 && hi != u64::MAX {
+                assert!(
+                    (hi - lo) as f64 / lo as f64 <= 0.125 + 1e-12,
+                    "bucket {b} too wide: [{lo}, {hi})"
+                );
+            }
+        }
+        // Exact region + continuity: 0..16 are one-value buckets.
+        for v in 0..16u64 {
+            assert_eq!(bucket_bounds(bucket_of(v)), (v, v + 1));
+        }
+    }
+
+    /// Deterministic log-uniform-ish samples for the histogram
+    /// tests (SplitMix64, the repo's stateless PRNG substrate).
+    fn hist_samples(seed: u64, n: usize) -> Vec<u64> {
+        use crate::data::rng::splitmix64;
+        (0..n)
+            .map(|i| {
+                let r = splitmix64(seed ^ (i as u64).wrapping_mul(31));
+                // Spread over ~20 octaves: 1 .. 2^20.
+                let octave = r % 20;
+                1 + (splitmix64(r) & ((1u64 << octave) | 0xf))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_commutative() {
+        let parts: Vec<Histogram> = (0..3)
+            .map(|k| {
+                let mut h = Histogram::new();
+                for v in hist_samples(k, 257) {
+                    h.record(v);
+                }
+                h
+            })
+            .collect();
+        // (a + b) + c == a + (b + c), exactly (integer state).
+        let mut left = parts[0].clone();
+        left.merge(&parts[1]);
+        left.merge(&parts[2]);
+        let mut bc = parts[1].clone();
+        bc.merge(&parts[2]);
+        let mut right = parts[0].clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        // Commutative too.
+        let mut swapped = parts[2].clone();
+        swapped.merge(&parts[1]);
+        swapped.merge(&parts[0]);
+        assert_eq!(left, swapped);
+        assert_eq!(left.count(), 3 * 257);
+        // Merging an empty histogram is the identity.
+        let mut id = left.clone();
+        id.merge(&Histogram::new());
+        assert_eq!(id, left);
+    }
+
+    #[test]
+    fn histogram_percentiles_track_exact_sort() {
+        // The exact reference follows the
+        // coordinator::metrics::percentile convention: sort, rank
+        // q * (n - 1), linear interpolation between order stats.
+        let exact = |sorted: &[u64], q: f64| -> f64 {
+            let pos = q * (sorted.len() - 1) as f64;
+            let (lo, hi) =
+                (pos.floor() as usize, pos.ceil() as usize);
+            let (a, b) = (sorted[lo] as f64, sorted[hi] as f64);
+            a + (b - a) * (pos - lo as f64)
+        };
+        for seed in [1u64, 2, 3] {
+            let mut vs = hist_samples(seed, 1000);
+            let mut h = Histogram::new();
+            for &v in &vs {
+                h.record(v);
+            }
+            vs.sort_unstable();
+            for q in [0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let want = exact(&vs, q);
+                let got = h.percentile(q).unwrap();
+                // Bucket width bounds the error at 12.5%; allow a
+                // little extra for the cross-bucket interpolation
+                // of the exact reference.
+                assert!(
+                    (got - want).abs() <= 0.2 * want.max(1.0),
+                    "seed {seed} q {q}: got {got}, exact {want}"
+                );
+            }
+            assert_eq!(h.percentile(0.0).unwrap(), vs[0] as f64);
+            assert_eq!(
+                h.percentile(1.0).unwrap(),
+                vs[vs.len() - 1] as f64
+            );
+        }
+        // Values below 8 sit in unit buckets: percentiles match the
+        // exact convention to the decimal.
+        let mut h = Histogram::new();
+        for v in 0..8u64 {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.5).unwrap(), 3.5);
+        assert_eq!(h.percentile(1.0).unwrap(), 7.0);
+        // A constant distribution is exact at every quantile.
+        let mut c = Histogram::new();
+        for _ in 0..100 {
+            c.record(4096);
+        }
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(c.percentile(q).unwrap(), 4096.0);
+        }
+        assert!(Histogram::new().percentile(0.5).is_none());
+    }
+
+    #[test]
+    fn histogram_json_round_trips_through_the_parser() {
+        let mut h = Histogram::new();
+        for v in hist_samples(7, 500) {
+            h.record(v);
+        }
+        let text = h.to_json().to_string_json();
+        let back =
+            Histogram::from_json(&Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back, h);
+        // The serialized form carries usable derived percentiles.
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("count").unwrap().as_usize().unwrap(),
+            500
+        );
+        let p50 = v.get("p50").unwrap().as_f64().unwrap();
+        let p99 = v.get("p99").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99);
+        // Empty histogram: null extrema/percentiles, still
+        // round-trips.
+        let empty = Histogram::new();
+        let text = empty.to_json().to_string_json();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("min").unwrap(), &Json::Null);
+        assert_eq!(v.get("p50").unwrap(), &Json::Null);
+        assert_eq!(
+            Histogram::from_json(&v).unwrap(),
+            empty
+        );
+        // Corrupt documents are rejected.
+        let bad = Json::parse(
+            "{\"buckets\":[[0,2]],\"count\":1,\"sum\":0,\
+             \"min\":0,\"max\":0}",
+        )
+        .unwrap();
+        assert!(Histogram::from_json(&bad).is_err());
     }
 }

@@ -2,7 +2,7 @@
 //! sockets and stdin/stdout share one implementation.
 //!
 //! Each session runs a reader loop on the calling thread and a
-//! writer thread draining an `mpsc` channel of reply frames. The
+//! writer thread draining an `mpsc` channel of [`Reply`] frames. The
 //! channel sender is cloned into every queued request, so replies
 //! for in-flight extractions still reach the client after its read
 //! side hits EOF, and the writer thread only exits once every
@@ -10,16 +10,22 @@
 //! mid-batch disconnect just makes the scheduler's send fail, which
 //! is counted, tolerated, and does not disturb the rest of the
 //! batch).
+//!
+//! The writer thread is also where the request lifecycle ends: a
+//! reply carrying an [`Access`] record gets its `reply-written`
+//! stamp the moment the frame hits the transport, and the record is
+//! finished into the latency histograms and access log right there.
 
 use std::io::{Read, Write};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use super::protocol::{
     self, error_reply, pong_reply, shutdown_reply, Request,
 };
 use super::scheduler::Pending;
-use super::Shared;
+use super::{Access, Reply, Shared, Stamps};
 
 /// Serve one client session until EOF, a malformed frame, or
 /// shutdown.
@@ -28,17 +34,36 @@ where
     R: Read,
     W: Write + Send + 'static,
 {
-    let (tx, rx) = mpsc::channel::<String>();
+    let (tx, rx) = mpsc::channel::<Reply>();
+    let wr_shared = Arc::clone(&shared);
     let writer = std::thread::spawn(move || {
         let mut w = w;
-        for frame in rx {
-            if protocol::write_frame(&mut w, &frame).is_err() {
-                // Client gone; drain silently so senders never
-                // block (mpsc sends are non-blocking anyway).
-                break;
+        // Once a write fails the client is gone, but the channel
+        // must still drain so senders never see a full pipe and
+        // every in-flight access record is finished (as a
+        // `disconnect`) rather than lost.
+        let mut dead = false;
+        for reply in rx {
+            if !dead
+                && protocol::write_frame(&mut w, &reply.frame)
+                    .is_err()
+            {
+                dead = true;
+            }
+            let Some(mut a) = reply.access else { continue };
+            if dead {
+                wr_shared
+                    .stats
+                    .disconnects
+                    .fetch_add(1, Ordering::Relaxed);
+                a.outcome = "disconnect";
+                wr_shared.finish_request(a, None);
+            } else {
+                wr_shared.finish_request(a, Some(Instant::now()));
             }
         }
     });
+    let control = |frame: String| Reply { frame, access: None };
 
     loop {
         let frame = match protocol::read_frame(&mut r) {
@@ -49,7 +74,8 @@ where
                 // Framing is broken; report once and hang up (no id
                 // is recoverable from a bad frame).
                 shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(error_reply(0, &format!("{e:#}")));
+                let _ = tx
+                    .send(control(error_reply(0, &format!("{e:#}"))));
                 break;
             }
         };
@@ -57,31 +83,49 @@ where
         match Request::parse(&frame) {
             Err(e) => {
                 shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(error_reply(0, &format!("{e:#}")));
+                let _ = tx
+                    .send(control(error_reply(0, &format!("{e:#}"))));
             }
             Ok(Request::Ping { id }) => {
-                let _ = tx.send(pong_reply(id));
+                let _ = tx.send(control(pong_reply(id)));
             }
             Ok(Request::Metrics { id }) => {
-                let _ = tx.send(shared.metrics_reply(id));
+                let _ = tx.send(control(shared.metrics_reply(id)));
             }
             Ok(Request::Shutdown { id }) => {
-                let _ = tx.send(shutdown_reply(id));
+                let _ = tx.send(control(shutdown_reply(id)));
                 shared.begin_shutdown();
                 break;
             }
             Ok(Request::Extract(req)) => {
                 shared.stats.extracts.fetch_add(1, Ordering::Relaxed);
-                let pending = Pending { req, reply: tx.clone() };
-                // Blocking push: a full queue parks this thread,
-                // which stops frame reads -- backpressure reaches
-                // the client as TCP flow control.
+                // Stamp *before* the blocking push so time spent
+                // waiting on a full queue counts into the queue
+                // stage -- backpressure is latency the client feels.
+                let pending = Pending {
+                    req,
+                    reply: tx.clone(),
+                    stamps: Stamps::new(),
+                };
                 if let Err(p) = shared.queue.push(pending) {
                     shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-                    let _ = tx.send(error_reply(
-                        p.req.id,
-                        "server is shutting down",
-                    ));
+                    let access = Access {
+                        id: p.req.id,
+                        model: p.req.model.clone(),
+                        sig: p.req.sig.to_string(),
+                        n: p.req.y.len(),
+                        batch_n: 0,
+                        batch_requests: 0,
+                        outcome: "rejected",
+                        stamps: p.stamps,
+                    };
+                    let _ = tx.send(Reply {
+                        frame: error_reply(
+                            p.req.id,
+                            "server is shutting down",
+                        ),
+                        access: Some(access),
+                    });
                 }
             }
         }

@@ -1,0 +1,568 @@
+//! `backpack loadgen`: a load generator for the serve daemon.
+//!
+//! Spawns N concurrent in-process clients, each driving one TCP
+//! connection with a fixed extraction signature (clients are
+//! assigned signatures round-robin from the requested mix, so
+//! same-signature clients coalesce) for a fixed duration, then
+//! emits a `backpack-servebench/v1` document: throughput, client
+//! observed e2e latency percentiles (from a merged [`Histogram`]),
+//! and the daemon's own `serve.latency` section fetched over the
+//! `metrics` op. The document carries bench-style `cases[]` rows
+//! (`name` + `p50_s`), so `backpack bench --compare` gates serve
+//! latency regressions exactly like single-run p50s (see
+//! `docs/bench.md`).
+//!
+//! Without `--addr` a daemon is spawned in-process on an ephemeral
+//! port and shut down after the run, so one command is a complete
+//! self-contained serve benchmark; with `--addr` an external daemon
+//! is driven instead (its `serve.latency` section then spans that
+//! daemon's whole lifetime, not just this run).
+
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::api::{ArtifactId, Signature};
+use crate::backend::native::NativeBackend;
+use crate::backend::Backend;
+use crate::json::Json;
+use crate::obs::Histogram;
+
+use super::protocol::{
+    read_frame, write_frame, ExtractReply, ExtractRequest,
+};
+use super::{ServeConfig, Server};
+
+/// Schema identifier of the loadgen output document.
+pub const SERVEBENCH_SCHEMA: &str = "backpack-servebench/v1";
+
+/// Load-generator configuration; `Default` matches the CI smoke
+/// setup (8 clients, grad + diag_ggn mix, self-spawned daemon).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Target daemon address; `None` spawns one in-process on an
+    /// ephemeral port for the duration of the run.
+    pub addr: Option<String>,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// How long clients keep sending, in seconds.
+    pub duration_s: f64,
+    /// Model every request asks for.
+    pub model: String,
+    /// Signature mix; client `c` uses `sigs[c % sigs.len()]`.
+    pub sigs: Vec<Signature>,
+    /// Samples per request (each client's slice of the union
+    /// batch).
+    pub per: usize,
+    /// Parameter seed shared by every request (shared seed is what
+    /// makes requests coalescible).
+    pub seed: u64,
+    /// Engine threads for the self-spawned daemon (0 = all cores).
+    pub threads: usize,
+    /// Linger window of the self-spawned daemon.
+    pub linger_ms: u64,
+    /// Union-batch soft cap of the self-spawned daemon.
+    pub max_batch: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: None,
+            clients: 8,
+            duration_s: 5.0,
+            model: "logreg".to_string(),
+            sigs: vec![
+                Signature::grad(),
+                "diag_ggn".parse().unwrap(),
+            ],
+            per: 4,
+            seed: 0,
+            threads: 0,
+            linger_ms: 2,
+            max_batch: 1024,
+        }
+    }
+}
+
+/// What one loadgen run measured.
+pub struct LoadgenReport {
+    pub clients: usize,
+    /// Measured wall-clock of the client phase (not the requested
+    /// duration).
+    pub duration_s: f64,
+    pub model: String,
+    pub sigs: Vec<Signature>,
+    pub per: usize,
+    /// Successful extractions across all clients.
+    pub requests: u64,
+    /// Error replies and transport failures across all clients.
+    pub errors: u64,
+    pub throughput_rps: f64,
+    /// Client-observed e2e latency (request written -> reply read),
+    /// microseconds, merged over all clients.
+    pub e2e_us: Histogram,
+    /// The daemon's `serve` metrics section (counters + its own
+    /// per-stage `latency` histograms), when it could be fetched.
+    pub server: Option<Json>,
+}
+
+/// Per-signature request shape, resolved once before spawning.
+#[derive(Clone)]
+struct SigShape {
+    sig: Signature,
+    in_numel: usize,
+    num_classes: usize,
+    has_key: bool,
+}
+
+/// Run the load generator to completion.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    ensure!(cfg.clients > 0, "loadgen needs at least one client");
+    ensure!(cfg.per > 0, "loadgen needs --per >= 1");
+    ensure!(!cfg.sigs.is_empty(), "loadgen needs at least one sig");
+    ensure!(
+        cfg.duration_s > 0.0,
+        "loadgen needs a positive --duration-s"
+    );
+
+    // Resolve every signature against the backend up front, so a
+    // typo fails here with the typed API's suggestions instead of
+    // as N * duration streaming error replies.
+    let probe = NativeBackend::with_threads(1);
+    let mut shapes = Vec::with_capacity(cfg.sigs.len());
+    for sig in &cfg.sigs {
+        let id = ArtifactId::new(
+            cfg.model.clone(),
+            sig.clone(),
+            cfg.per,
+        )?;
+        let spec = probe.spec_id(&id)?;
+        shapes.push(SigShape {
+            sig: sig.clone(),
+            in_numel: spec.in_shape.iter().product(),
+            num_classes: spec.num_classes,
+            has_key: spec.has_key,
+        });
+    }
+
+    // Self-spawn a daemon unless an external one was named.
+    let (addr, spawned) = match &cfg.addr {
+        Some(a) => (a.clone(), None),
+        None => {
+            let server = Server::bind(ServeConfig {
+                threads: cfg.threads,
+                linger_ms: cfg.linger_ms,
+                max_batch: cfg.max_batch,
+                ..ServeConfig::default()
+            })?;
+            let addr = server.local_addr().to_string();
+            let handle = server.handle();
+            let join = std::thread::Builder::new()
+                .name("backpack-loadgen-srv".to_string())
+                .spawn(move || server.run())?;
+            (addr, Some((handle, join)))
+        }
+    };
+
+    // All clients connect first, then start together on a barrier
+    // so the measured window has full concurrency from its first
+    // request.
+    let barrier = Arc::new(Barrier::new(cfg.clients + 1));
+    let duration = Duration::from_secs_f64(cfg.duration_s);
+    let mut workers = Vec::with_capacity(cfg.clients);
+    for c in 0..cfg.clients {
+        let shape = shapes[c % shapes.len()].clone();
+        let stream = TcpStream::connect(&addr).with_context(|| {
+            format!("loadgen client {c} cannot connect {addr}")
+        })?;
+        let barrier = Arc::clone(&barrier);
+        let seed = cfg.seed;
+        let per = cfg.per;
+        let model = cfg.model.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("backpack-loadgen-{c}"))
+                .spawn(move || {
+                    barrier.wait();
+                    client_loop(
+                        stream, c, &model, &shape, per, seed,
+                        duration,
+                    )
+                })?,
+        );
+    }
+
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut e2e_us = Histogram::new();
+    let mut requests = 0u64;
+    let mut errors = 0u64;
+    for w in workers {
+        match w.join() {
+            Ok(r) => {
+                requests += r.requests;
+                errors += r.errors;
+                e2e_us.merge(&r.e2e_us);
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    let duration_s = t0.elapsed().as_secs_f64();
+
+    // The daemon's own view (counters + per-stage latency) rides
+    // along; a fetch failure degrades the report, not the run.
+    let server = fetch_serve(&addr).ok();
+
+    if let Some((handle, join)) = spawned {
+        handle.shutdown();
+        let _ = join.join();
+    }
+
+    Ok(LoadgenReport {
+        clients: cfg.clients,
+        duration_s,
+        model: cfg.model.clone(),
+        sigs: cfg.sigs.clone(),
+        per: cfg.per,
+        requests,
+        errors,
+        throughput_rps: requests as f64 / duration_s.max(1e-9),
+        e2e_us,
+        server,
+    })
+}
+
+/// What one client measured.
+struct ClientResult {
+    requests: u64,
+    errors: u64,
+    e2e_us: Histogram,
+}
+
+/// One client's send/receive loop: synchronous request-response
+/// until the deadline, timing each round-trip.
+fn client_loop(
+    mut stream: TcpStream,
+    c: usize,
+    model: &str,
+    shape: &SigShape,
+    per: usize,
+    seed: u64,
+    duration: Duration,
+) -> ClientResult {
+    let mut res = ClientResult {
+        requests: 0,
+        errors: 0,
+        e2e_us: Histogram::new(),
+    };
+    let deadline = Instant::now() + duration;
+    let mut j = 0u64;
+    while Instant::now() < deadline {
+        let req = request_for(c, j, model, shape, per, seed);
+        j += 1;
+        let t = Instant::now();
+        if write_frame(&mut stream, &req.to_json()).is_err() {
+            res.errors += 1;
+            break;
+        }
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            _ => {
+                res.errors += 1;
+                break;
+            }
+        };
+        match ExtractReply::parse(&frame) {
+            Ok(r) if r.ok => {
+                res.requests += 1;
+                res.e2e_us
+                    .record(t.elapsed().as_micros() as u64);
+            }
+            _ => res.errors += 1,
+        }
+    }
+    res
+}
+
+/// Deterministic request `j` of client `c`: synthetic data, shared
+/// seed/key so same-signature clients coalesce.
+fn request_for(
+    c: usize,
+    j: u64,
+    model: &str,
+    shape: &SigShape,
+    per: usize,
+    seed: u64,
+) -> ExtractRequest {
+    let mut x = Vec::with_capacity(per * shape.in_numel);
+    for k in 0..per * shape.in_numel {
+        let v = (c * 131 + j as usize * 7 + k * 13) % 97;
+        x.push(v as f32 / 97.0);
+    }
+    let y = (0..per)
+        .map(|i| ((c + i) % shape.num_classes) as i32)
+        .collect();
+    ExtractRequest {
+        id: c as u64 * 1_000_000 + j,
+        model: model.to_string(),
+        sig: shape.sig.clone(),
+        seed,
+        x,
+        y,
+        key: shape.has_key.then_some([seed as u32, 9]),
+        want_metrics: false,
+    }
+}
+
+/// Fetch the daemon's `serve` metrics section over one `metrics`
+/// round-trip.
+fn fetch_serve(addr: &str) -> Result<Json> {
+    let mut c = TcpStream::connect(addr)
+        .with_context(|| format!("cannot connect {addr}"))?;
+    write_frame(&mut c, "{\"op\":\"metrics\",\"id\":1}")?;
+    let Some(raw) = read_frame(&mut c)? else {
+        bail!("daemon closed during the metrics fetch")
+    };
+    Ok(Json::parse(&raw)?.get("serve")?.clone())
+}
+
+impl LoadgenReport {
+    /// A percentile of the merged client-observed e2e latency, in
+    /// seconds.
+    pub fn e2e_percentile_s(&self, q: f64) -> Option<f64> {
+        self.e2e_us.percentile(q).map(|us| us / 1e6)
+    }
+
+    /// The daemon-side p50 of one latency stage, in seconds.
+    fn stage_p50_s(&self, stage: &str) -> Option<f64> {
+        self.server
+            .as_ref()?
+            .opt("latency")?
+            .opt("stages")?
+            .opt(stage)?
+            .opt("p50")?
+            .as_f64()
+            .ok()
+            .map(|us| us / 1e6)
+    }
+
+    /// The `backpack-servebench/v1` document. `cases[]` rows carry
+    /// bench-style `name` + `p50_s` (seconds, smaller = better) so
+    /// `bench --compare` gates them; throughput is encoded as its
+    /// inverse for the same reason.
+    pub fn to_json(&self) -> Json {
+        let mut cases = Vec::new();
+        let mut case = |name: String, p50_s: f64| {
+            let mut c = std::collections::BTreeMap::new();
+            c.insert("name".to_string(), Json::Str(name));
+            c.insert("p50_s".to_string(), Json::Num(p50_s));
+            cases.push(Json::Obj(c));
+        };
+        let m = &self.model;
+        for (tag, q) in
+            [("p50", 0.50), ("p95", 0.95), ("p99", 0.99)]
+        {
+            if let Some(s) = self.e2e_percentile_s(q) {
+                case(format!("loadgen_{m}_e2e_{tag}"), s);
+            }
+        }
+        if self.throughput_rps > 0.0 {
+            case(
+                format!("loadgen_{m}_inv_throughput"),
+                1.0 / self.throughput_rps,
+            );
+        }
+        if let Some(s) = self.stage_p50_s("extract") {
+            case(format!("loadgen_{m}_stage_extract_p50"), s);
+        }
+
+        let mut root = std::collections::BTreeMap::new();
+        root.insert(
+            "schema".to_string(),
+            Json::Str(SERVEBENCH_SCHEMA.to_string()),
+        );
+        root.insert(
+            "rev".to_string(),
+            Json::Str(crate::bench::git_rev()),
+        );
+        root.insert(
+            "clients".to_string(),
+            Json::Num(self.clients as f64),
+        );
+        root.insert(
+            "duration_s".to_string(),
+            Json::Num(self.duration_s),
+        );
+        root.insert("model".to_string(), Json::Str(m.clone()));
+        root.insert(
+            "sigs".to_string(),
+            Json::Arr(
+                self.sigs
+                    .iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+            ),
+        );
+        root.insert("per".to_string(), Json::Num(self.per as f64));
+        root.insert(
+            "requests".to_string(),
+            Json::Num(self.requests as f64),
+        );
+        root.insert(
+            "errors".to_string(),
+            Json::Num(self.errors as f64),
+        );
+        root.insert(
+            "throughput_rps".to_string(),
+            Json::Num(self.throughput_rps),
+        );
+        root.insert("e2e_us".to_string(), self.e2e_us.to_json());
+        root.insert(
+            "server".to_string(),
+            self.server.clone().unwrap_or(Json::Null),
+        );
+        root.insert("cases".to_string(), Json::Arr(cases));
+        Json::Obj(root)
+    }
+
+    /// The human-readable run summary on stdout.
+    pub fn print_table(&self) {
+        let sigs: Vec<String> =
+            self.sigs.iter().map(|s| s.to_string()).collect();
+        println!(
+            "== loadgen: {} clients x {:.1}s against {} [{}] ==",
+            self.clients,
+            self.duration_s,
+            self.model,
+            sigs.join(", ")
+        );
+        println!(
+            "{:28} {} ok, {} errors ({:.0} req/s)",
+            "requests",
+            self.requests,
+            self.errors,
+            self.throughput_rps
+        );
+        let fmt = |q: f64| {
+            self.e2e_percentile_s(q)
+                .map(crate::bench::fmt_time)
+                .unwrap_or_else(|| "-".to_string())
+        };
+        println!(
+            "{:28} p50 {:>10}  p90 {:>10}  p95 {:>10}  p99 {:>10}",
+            "e2e latency",
+            fmt(0.50),
+            fmt(0.90),
+            fmt(0.95),
+            fmt(0.99)
+        );
+        let Some(server) = &self.server else { return };
+        for stage in ["queue", "linger", "extract", "reply"] {
+            if let Some(s) = self.stage_p50_s(stage) {
+                println!(
+                    "{:28} p50 {:>10}",
+                    format!("stage {stage} (server)"),
+                    crate::bench::fmt_time(s)
+                );
+            }
+        }
+        let rate = server
+            .opt("latency")
+            .and_then(|l| l.opt("coalescing"))
+            .and_then(|c| c.opt("rate"))
+            .and_then(|r| r.as_f64().ok());
+        if let Some(rate) = rate {
+            println!(
+                "{:28} {:.1}% of requests shared a call",
+                "coalescing", rate * 100.0
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end smoke against a self-spawned daemon: short run,
+    /// 8 clients, grad only. Pins the servebench schema, the
+    /// bench-compatible cases, and that traffic actually flowed.
+    #[test]
+    fn loadgen_self_spawn_produces_a_servebench_document() {
+        let report = run(&LoadgenConfig {
+            clients: 8,
+            duration_s: 0.3,
+            sigs: vec![Signature::grad()],
+            per: 2,
+            threads: 1,
+            linger_ms: 1,
+            ..LoadgenConfig::default()
+        })
+        .unwrap();
+        assert!(report.requests > 0, "no request succeeded");
+        assert_eq!(report.errors, 0);
+        assert_eq!(
+            report.requests,
+            report.e2e_us.count(),
+            "every ok request is one e2e sample"
+        );
+        let v = Json::parse(&report.to_json().to_string_json())
+            .unwrap();
+        assert_eq!(
+            v.get("schema").unwrap().as_str().unwrap(),
+            SERVEBENCH_SCHEMA
+        );
+        assert_eq!(
+            v.get("clients").unwrap().as_usize().unwrap(),
+            8
+        );
+        let names: Vec<String> = v
+            .get("cases")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| {
+                c.get("name").unwrap().as_str().unwrap().to_string()
+            })
+            .collect();
+        assert!(
+            names.contains(&"loadgen_logreg_e2e_p50".to_string()),
+            "{names:?}"
+        );
+        assert!(
+            names
+                .contains(&"loadgen_logreg_e2e_p99".to_string()),
+            "{names:?}"
+        );
+        assert!(
+            names.contains(
+                &"loadgen_logreg_inv_throughput".to_string()
+            ),
+            "{names:?}"
+        );
+        for c in v.get("cases").unwrap().as_arr().unwrap() {
+            assert!(
+                c.get("p50_s").unwrap().as_f64().unwrap() > 0.0
+            );
+        }
+        // The daemon's own latency section rode along and saw the
+        // same traffic.
+        let server = v.get("server").unwrap();
+        let extracts =
+            server.get("extracts").unwrap().as_f64().unwrap();
+        assert!(extracts >= report.requests as f64);
+        let e2e = server
+            .get("latency")
+            .unwrap()
+            .get("e2e")
+            .unwrap();
+        assert!(
+            e2e.get("count").unwrap().as_f64().unwrap() > 0.0
+        );
+        report.print_table();
+    }
+}

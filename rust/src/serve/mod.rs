@@ -15,7 +15,13 @@
 //! frames and clients feel TCP flow control, not server OOM.
 //!
 //! A `metrics` request returns live `backpack-metrics/v1` aggregates
-//! (accumulated per-batch via [`MetricsAgg`]) plus serve counters.
+//! (accumulated per-batch via [`MetricsAgg`]) plus serve counters
+//! and a `latency` section: per-stage [`Histogram`]s over the
+//! request lifecycle (accept -> queue-pop -> linger-close ->
+//! extract-done -> reply-written) and the batch-size distribution.
+//! With `--access-log FILE` every request additionally appends one
+//! `backpack-access/v1` JSON line ([`protocol::AccessRecord`]) --
+//! the machine-readable channel that `--quiet` never silences.
 //!
 //! See `docs/serve.md` for the byte-level frame layout, the batching
 //! and backpressure semantics, and an example session transcript.
@@ -30,28 +36,34 @@
 //! # Ok(()) }
 //! ```
 
+pub mod loadgen;
 pub mod protocol;
 pub mod queue;
 
 mod conn;
 mod scheduler;
 
+use std::fs::File;
+use std::io::{BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime};
 
 use anyhow::{Context, Result};
 
 use crate::json::Json;
-use crate::obs::MetricsAgg;
+use crate::obs;
+use crate::obs::{Histogram, MetricsAgg};
 
 use queue::BoundedQueue;
 use scheduler::Pending;
 
+pub use loadgen::{LoadgenConfig, LoadgenReport, SERVEBENCH_SCHEMA};
 pub use protocol::{
-    BatchMeta, ExtractReply, ExtractRequest, Request, MAX_FRAME,
-    PROTOCOL_SCHEMA,
+    AccessRecord, BatchMeta, ExtractReply, ExtractRequest, Request,
+    ACCESS_SCHEMA, MAX_FRAME, PROTOCOL_SCHEMA,
 };
 
 /// Daemon configuration; `Default` is a sensible local setup
@@ -76,6 +88,16 @@ pub struct ServeConfig {
     /// mark/since so the final trace survives. When false the
     /// scheduler runs its own start/stop window per batch.
     pub retain_trace: bool,
+    /// Concurrent-connection cap (0 = unlimited). Connections over
+    /// the cap get a `server_busy` error frame and are closed, so
+    /// one flood cannot exhaust threads.
+    pub max_conns: usize,
+    /// LRU capacity of the scheduler's `(model, seed)` parameter
+    /// cache; evictions count into `param_cache_evictions`.
+    pub param_cache: usize,
+    /// Append one `backpack-access/v1` JSON line per request to
+    /// this file (the `--quiet`-proof structured channel).
+    pub access_log: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -87,6 +109,9 @@ impl Default for ServeConfig {
             linger_ms: 2,
             max_batch: 1024,
             retain_trace: false,
+            max_conns: 0,
+            param_cache: 16,
+            access_log: None,
         }
     }
 }
@@ -107,6 +132,86 @@ pub(crate) struct Stats {
     pub errors: AtomicU64,
     /// Replies dropped because the client had disconnected.
     pub disconnects: AtomicU64,
+    /// Connections refused over the `--max-conns` cap.
+    pub conns_rejected: AtomicU64,
+    /// `(model, seed)` parameter sets evicted from the scheduler's
+    /// LRU cache.
+    pub param_cache_evictions: AtomicU64,
+    /// Extract requests that rode in some engine call (>= batches;
+    /// the surplus is the coalescing win).
+    pub batched_requests: AtomicU64,
+    /// Live connection gauge (incremented at accept, decremented at
+    /// session end); not monotone, feeds the `--max-conns` gate.
+    pub conns_active: AtomicU64,
+}
+
+/// Lifecycle timestamps for one request: stamped at accept, then at
+/// each stage boundary as the request moves through the daemon.
+/// `None` means the request never reached that stage.
+#[derive(Clone, Copy)]
+pub(crate) struct Stamps {
+    /// Frame fully read and parsed on the connection thread.
+    pub accepted: Instant,
+    /// Popped (or scavenged) from the queue by the scheduler.
+    pub popped: Option<Instant>,
+    /// Linger window closed; the union batch is final.
+    pub closed: Option<Instant>,
+    /// Engine call returned (ok or error).
+    pub done: Option<Instant>,
+}
+
+impl Stamps {
+    pub fn new() -> Stamps {
+        Stamps {
+            accepted: Instant::now(),
+            popped: None,
+            closed: None,
+            done: None,
+        }
+    }
+}
+
+/// Everything needed to finish one request's telemetry once its
+/// reply leaves (or fails to leave) the process: identity, batch
+/// shape, outcome, and the stage stamps.
+pub(crate) struct Access {
+    pub id: u64,
+    pub model: String,
+    pub sig: String,
+    pub n: usize,
+    pub batch_n: usize,
+    pub batch_requests: usize,
+    /// `ok` | `error` | `rejected` | `disconnect`.
+    pub outcome: &'static str,
+    pub stamps: Stamps,
+}
+
+/// One frame travelling to a connection's writer thread, plus the
+/// access record to close out once the write completes. Control
+/// replies (ping, metrics, ...) carry no access record.
+pub(crate) struct Reply {
+    pub frame: String,
+    pub access: Option<Access>,
+}
+
+/// Per-stage latency histograms (all in microseconds) plus batch
+/// shape distributions; one merged view over the daemon's lifetime.
+#[derive(Default)]
+struct Latency {
+    /// accept -> queue-pop (includes backpressure wait).
+    queue: Histogram,
+    /// queue-pop -> linger-close.
+    linger: Histogram,
+    /// linger-close -> extract-done.
+    extract: Histogram,
+    /// extract-done -> reply-written.
+    reply: Histogram,
+    /// accept -> last observed stage.
+    e2e: Histogram,
+    /// Union batch samples per engine call.
+    batch_size: Histogram,
+    /// Requests coalesced per engine call.
+    batch_requests: Histogram,
 }
 
 struct Totals {
@@ -126,12 +231,28 @@ pub(crate) struct Shared {
     /// accept loop.
     addr: Mutex<Option<SocketAddr>>,
     totals: Mutex<Totals>,
+    latency: Mutex<Latency>,
+    /// Open access-log sink, when configured. Line-buffered by
+    /// hand: each record is written and flushed whole.
+    access_log: Option<Mutex<BufWriter<File>>>,
 }
 
 impl Shared {
-    fn new(cfg: ServeConfig) -> Arc<Shared> {
+    fn new(cfg: ServeConfig) -> Result<Arc<Shared>> {
+        let access_log = match &cfg.access_log {
+            Some(path) => {
+                let f = File::create(path).with_context(|| {
+                    format!(
+                        "cannot open access log {}",
+                        path.display()
+                    )
+                })?;
+                Some(Mutex::new(BufWriter::new(f)))
+            }
+            None => None,
+        };
         let queue = BoundedQueue::new(cfg.queue_cap);
-        Arc::new(Shared {
+        Ok(Arc::new(Shared {
             cfg,
             queue,
             stats: Stats::default(),
@@ -142,7 +263,98 @@ impl Shared {
                 agg: MetricsAgg::default(),
                 wall_s: 0.0,
             }),
-        })
+            latency: Mutex::new(Latency::default()),
+            access_log,
+        }))
+    }
+
+    /// Close out one request's telemetry: fold its stage durations
+    /// into the latency histograms and append its access-log line.
+    /// `written` is the reply-write completion instant (None when
+    /// the reply never reached the wire).
+    pub(crate) fn finish_request(
+        &self,
+        a: Access,
+        written: Option<Instant>,
+    ) {
+        let s = &a.stamps;
+        let us = |from: Instant, to: Instant| {
+            to.saturating_duration_since(from).as_micros() as u64
+        };
+        let queue_us =
+            s.popped.map(|p| us(s.accepted, p));
+        let linger_us =
+            s.popped.zip(s.closed).map(|(p, c)| us(p, c));
+        let extract_us =
+            s.closed.zip(s.done).map(|(c, d)| us(c, d));
+        let reply_us =
+            s.done.zip(written).map(|(d, w)| us(d, w));
+        let last = written
+            .or(s.done)
+            .or(s.closed)
+            .or(s.popped);
+        let e2e_us = last.map(|t| us(s.accepted, t));
+        {
+            let mut l = self.latency.lock().unwrap();
+            let put = |h: &mut Histogram, v: Option<u64>| {
+                if let Some(v) = v {
+                    h.record(v);
+                }
+            };
+            put(&mut l.queue, queue_us);
+            put(&mut l.linger, linger_us);
+            put(&mut l.extract, extract_us);
+            put(&mut l.reply, reply_us);
+            put(&mut l.e2e, e2e_us);
+        }
+        let Some(log) = &self.access_log else { return };
+        let artifact = (a.batch_n > 0).then(|| {
+            format!("{}_{}_n{}", a.model, a.sig, a.batch_n)
+        });
+        let ts_ms = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let rec = AccessRecord {
+            id: a.id,
+            artifact,
+            model: a.model,
+            sig: a.sig,
+            n: a.n,
+            batch_n: a.batch_n,
+            batch_requests: a.batch_requests,
+            coalesced: a.batch_requests > 1,
+            outcome: a.outcome.to_string(),
+            queue_us,
+            linger_us,
+            extract_us,
+            reply_us,
+            e2e_us,
+            ts_ms,
+        };
+        let mut w = log.lock().unwrap();
+        let _ = writeln!(w, "{}", rec.to_json());
+        let _ = w.flush();
+    }
+
+    /// Record one engine call's batch shape (called by the
+    /// scheduler once per `run_batch`).
+    pub(crate) fn record_batch(
+        &self,
+        batch_n: usize,
+        requests: usize,
+    ) {
+        let r = Ordering::Relaxed;
+        self.stats.batches.fetch_add(1, r);
+        self.stats
+            .coalesced_max
+            .fetch_max(requests as u64, r);
+        self.stats
+            .batched_requests
+            .fetch_add(requests as u64, r);
+        let mut l = self.latency.lock().unwrap();
+        l.batch_size.record(batch_n as u64);
+        l.batch_requests.record(requests as u64);
     }
 
     /// Fold one batch's metrics window into the live aggregates.
@@ -192,6 +404,59 @@ impl Shared {
         );
         o.insert("errors".into(), num(s.errors.load(r)));
         o.insert("disconnects".into(), num(s.disconnects.load(r)));
+        o.insert(
+            "conns_active".into(),
+            num(s.conns_active.load(r)),
+        );
+        o.insert(
+            "conns_rejected".into(),
+            num(s.conns_rejected.load(r)),
+        );
+        o.insert(
+            "param_cache_evictions".into(),
+            num(s.param_cache_evictions.load(r)),
+        );
+        o.insert(
+            "batched_requests".into(),
+            num(s.batched_requests.load(r)),
+        );
+        o.insert("latency".into(), self.latency_json());
+        Json::Obj(o)
+    }
+
+    /// The `serve.latency` section: per-stage and e2e histograms,
+    /// batch shape distributions, and the coalescing rate (the
+    /// fraction of batched requests that shared an engine call).
+    fn latency_json(&self) -> Json {
+        let l = self.latency.lock().unwrap();
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("unit".into(), Json::Str("us".to_string()));
+        let mut stages = std::collections::BTreeMap::new();
+        stages.insert("queue".into(), l.queue.to_json());
+        stages.insert("linger".into(), l.linger.to_json());
+        stages.insert("extract".into(), l.extract.to_json());
+        stages.insert("reply".into(), l.reply.to_json());
+        o.insert("stages".into(), Json::Obj(stages));
+        o.insert("e2e".into(), l.e2e.to_json());
+        o.insert("batch_size".into(), l.batch_size.to_json());
+        o.insert(
+            "batch_requests".into(),
+            l.batch_requests.to_json(),
+        );
+        let batches = l.batch_requests.count();
+        let requests = l.batch_requests.sum();
+        let mut c = std::collections::BTreeMap::new();
+        c.insert("batches".into(), Json::Num(batches as f64));
+        c.insert("requests".into(), Json::Num(requests as f64));
+        c.insert(
+            "rate".into(),
+            if requests > 0 {
+                Json::Num(1.0 - batches as f64 / requests as f64)
+            } else {
+                Json::Null
+            },
+        );
+        o.insert("coalescing".into(), Json::Obj(c));
         Json::Obj(o)
     }
 
@@ -247,7 +512,7 @@ impl Server {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("cannot bind {}", cfg.addr))?;
         let addr = listener.local_addr()?;
-        let shared = Shared::new(cfg);
+        let shared = Shared::new(cfg)?;
         *shared.addr.lock().unwrap() = Some(addr);
         Ok(Server { listener, addr, shared })
     }
@@ -277,18 +542,57 @@ impl Server {
             if self.shared.shutdown.load(Ordering::SeqCst) {
                 break;
             }
-            let stream = match stream {
+            let mut stream = match stream {
                 Ok(s) => s,
-                Err(_) => continue,
+                Err(e) => {
+                    obs::progress(format_args!(
+                        "serve: accept failed: {e}"
+                    ));
+                    continue;
+                }
             };
             let _ = stream.set_nodelay(true);
             let shared = Arc::clone(&self.shared);
-            let _ = std::thread::Builder::new()
+            // `--max-conns` gate: over the cap the client gets one
+            // wire-level `server_busy` error frame and the socket
+            // closes, instead of a thread it could park forever.
+            let r = Ordering::Relaxed;
+            let max = shared.cfg.max_conns;
+            if max > 0
+                && shared.stats.conns_active.load(r) >= max as u64
+            {
+                shared.stats.conns_rejected.fetch_add(1, r);
+                obs::progress(format_args!(
+                    "serve: rejecting connection over \
+                     --max-conns {max}"
+                ));
+                let _ = protocol::write_frame(
+                    &mut stream,
+                    &protocol::busy_reply(max),
+                );
+                continue;
+            }
+            shared.stats.conns_active.fetch_add(1, r);
+            let spawned = std::thread::Builder::new()
                 .name("backpack-conn".to_string())
                 .spawn(move || {
-                    let Ok(r) = stream.try_clone() else { return };
-                    conn::serve_session(shared, r, stream);
+                    if let Ok(rd) = stream.try_clone() {
+                        conn::serve_session(
+                            Arc::clone(&shared),
+                            rd,
+                            stream,
+                        );
+                    }
+                    shared
+                        .stats
+                        .conns_active
+                        .fetch_sub(1, Ordering::Relaxed);
                 });
+            if spawned.is_err() {
+                // The gauge was optimistically incremented; undo it
+                // so a failed spawn cannot wedge the gate shut.
+                self.shared.stats.conns_active.fetch_sub(1, r);
+            }
         }
         self.shared.queue.close();
         let _ = scheduler.join();
@@ -299,7 +603,7 @@ impl Server {
 /// Serve a single session over stdin/stdout (the `--stdio` CLI
 /// mode): same protocol, same scheduler, no socket.
 pub fn run_stdio(cfg: ServeConfig) -> Result<()> {
-    let shared = Shared::new(cfg);
+    let shared = Shared::new(cfg)?;
     let sched_shared = Arc::clone(&shared);
     let scheduler = std::thread::Builder::new()
         .name("backpack-sched".to_string())

@@ -50,6 +50,11 @@ use crate::runtime::Tensor;
 /// `metrics` replies; bump on any breaking frame/layout change.
 pub const PROTOCOL_SCHEMA: &str = "backpack-serve/v1";
 
+/// Schema identifier of structured access-log records
+/// (`backpack serve --access-log FILE`, one JSONL line per extract
+/// request); bump on any breaking field change.
+pub const ACCESS_SCHEMA: &str = "backpack-access/v1";
+
 /// Maximum frame payload size (64 MiB): caps the allocation a length
 /// prefix can demand.
 pub const MAX_FRAME: usize = 1 << 26;
@@ -340,6 +345,21 @@ pub fn error_reply(id: u64, msg: &str) -> String {
     Json::Obj(o).to_string_json()
 }
 
+/// The wire-level rejection frame a connection over `--max-conns`
+/// receives before the socket is dropped: an ordinary error reply
+/// (id 0 -- no request was read) whose message starts with
+/// `server_busy`, so clients can distinguish load shedding from
+/// request errors and retry with backoff.
+pub fn busy_reply(max_conns: usize) -> String {
+    error_reply(
+        0,
+        &format!(
+            "server_busy: connection limit {max_conns} reached; \
+             retry later"
+        ),
+    )
+}
+
 /// `{"id", "ok": true, "pong": true}`.
 pub fn pong_reply(id: u64) -> String {
     let mut o = reply_base(id, true);
@@ -463,6 +483,132 @@ impl ExtractReply {
         };
         let metrics = v.opt("metrics").cloned();
         Ok(ExtractReply { id, ok, error, results, meta, metrics })
+    }
+}
+
+/// One structured access-log record ([`ACCESS_SCHEMA`]): the full
+/// lifecycle of one extract request, written as a single JSON line
+/// when the daemon runs with `--access-log FILE`.
+///
+/// Stage micros follow the request lifecycle
+/// `accept -> queue-pop -> linger-close -> extract-done ->
+/// reply-written`; a stage is `None` when the request never reached
+/// it (a rejected request has no `extract_us`, a disconnected client
+/// no `reply_us`). The access log is written regardless of
+/// `--quiet`: it is the machine-readable channel, `stderr` the
+/// human one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccessRecord {
+    /// Client correlation id.
+    pub id: u64,
+    /// Union artifact that ran (`{model}_{sig}_n{batch_n}`); `None`
+    /// when the request never reached an engine call.
+    pub artifact: Option<String>,
+    /// Requested model.
+    pub model: String,
+    /// Requested signature spelling.
+    pub sig: String,
+    /// This client's sample count.
+    pub n: usize,
+    /// Union batch size of the engine call (0 when none ran).
+    pub batch_n: usize,
+    /// Requests coalesced into the call (0 when none ran).
+    pub batch_requests: usize,
+    /// True when the request shared its engine call with others.
+    pub coalesced: bool,
+    /// `ok` | `error` | `rejected` | `disconnect`.
+    pub outcome: String,
+    /// accept -> queue-pop (includes any backpressure wait).
+    pub queue_us: Option<u64>,
+    /// queue-pop -> linger-close (batch gathering window).
+    pub linger_us: Option<u64>,
+    /// linger-close -> extract-done (the engine call).
+    pub extract_us: Option<u64>,
+    /// extract-done -> reply-written (serialize + socket write).
+    pub reply_us: Option<u64>,
+    /// accept -> last observed stage.
+    pub e2e_us: Option<u64>,
+    /// Unix epoch milliseconds when the record was written.
+    pub ts_ms: u64,
+}
+
+impl AccessRecord {
+    /// One JSON object (a single access-log line, sans newline).
+    pub fn to_json(&self) -> Json {
+        let opt_u64 = |v: Option<u64>| match v {
+            Some(x) => Json::Num(x as f64),
+            None => Json::Null,
+        };
+        let mut o = BTreeMap::new();
+        o.insert(
+            "schema".into(),
+            Json::Str(ACCESS_SCHEMA.to_string()),
+        );
+        o.insert("id".into(), Json::Num(self.id as f64));
+        o.insert(
+            "artifact".into(),
+            match &self.artifact {
+                Some(a) => Json::Str(a.clone()),
+                None => Json::Null,
+            },
+        );
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("sig".into(), Json::Str(self.sig.clone()));
+        o.insert("n".into(), Json::Num(self.n as f64));
+        o.insert("batch_n".into(), Json::Num(self.batch_n as f64));
+        o.insert(
+            "batch_requests".into(),
+            Json::Num(self.batch_requests as f64),
+        );
+        o.insert("coalesced".into(), Json::Bool(self.coalesced));
+        o.insert(
+            "outcome".into(),
+            Json::Str(self.outcome.clone()),
+        );
+        o.insert("queue_us".into(), opt_u64(self.queue_us));
+        o.insert("linger_us".into(), opt_u64(self.linger_us));
+        o.insert("extract_us".into(), opt_u64(self.extract_us));
+        o.insert("reply_us".into(), opt_u64(self.reply_us));
+        o.insert("e2e_us".into(), opt_u64(self.e2e_us));
+        o.insert("ts_ms".into(), Json::Num(self.ts_ms as f64));
+        Json::Obj(o)
+    }
+
+    /// Parse one access-log line (validates the schema field).
+    pub fn parse(text: &str) -> Result<AccessRecord> {
+        let v = Json::parse(text)
+            .context("access record is not JSON")?;
+        let schema = v.get("schema")?.as_str()?;
+        ensure!(
+            schema == ACCESS_SCHEMA,
+            "access record schema {schema:?} != {ACCESS_SCHEMA:?}"
+        );
+        let opt_u64 = |key: &str| -> Result<Option<u64>> {
+            match v.opt(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(_) => Ok(Some(get_u64(&v, key)?)),
+            }
+        };
+        Ok(AccessRecord {
+            id: get_u64(&v, "id")?,
+            artifact: match v.get("artifact")? {
+                Json::Null => None,
+                a => Some(a.as_str()?.to_string()),
+            },
+            model: v.get("model")?.as_str()?.to_string(),
+            sig: v.get("sig")?.as_str()?.to_string(),
+            n: v.get("n")?.as_usize()?,
+            batch_n: v.get("batch_n")?.as_usize()?,
+            batch_requests: v.get("batch_requests")?.as_usize()?,
+            coalesced: v.get("coalesced")?.as_bool()?,
+            outcome: v.get("outcome")?.as_str()?.to_string(),
+            queue_us: opt_u64("queue_us")?,
+            linger_us: opt_u64("linger_us")?,
+            extract_us: opt_u64("extract_us")?,
+            reply_us: opt_u64("reply_us")?,
+            e2e_us: opt_u64("e2e_us")?,
+            ts_ms: get_u64(&v, "ts_ms")?,
+        })
     }
 }
 
@@ -598,5 +744,60 @@ mod tests {
 
         let r = ExtractReply::parse(&pong_reply(1)).unwrap();
         assert!(r.ok && r.results.is_empty());
+    }
+
+    #[test]
+    fn busy_reply_is_a_parseable_error_frame() {
+        let r =
+            ExtractReply::parse(&busy_reply(4)).unwrap();
+        assert!(!r.ok);
+        assert_eq!(r.id, 0);
+        let msg = r.error.unwrap();
+        assert!(msg.contains("server_busy"), "{msg}");
+        assert!(msg.contains('4'), "{msg}");
+    }
+
+    #[test]
+    fn access_records_round_trip() {
+        let rec = AccessRecord {
+            id: 42,
+            artifact: Some("logreg_grad_n16".to_string()),
+            model: "logreg".to_string(),
+            sig: "grad".to_string(),
+            n: 4,
+            batch_n: 16,
+            batch_requests: 4,
+            coalesced: true,
+            outcome: "ok".to_string(),
+            queue_us: Some(120),
+            linger_us: Some(2000),
+            extract_us: Some(850),
+            reply_us: Some(40),
+            e2e_us: Some(3010),
+            ts_ms: 1_700_000_000_123,
+        };
+        let line = rec.to_json().to_string_json();
+        assert_eq!(AccessRecord::parse(&line).unwrap(), rec);
+
+        // A request that never ran: optional stages null out.
+        let rejected = AccessRecord {
+            artifact: None,
+            batch_n: 0,
+            batch_requests: 0,
+            coalesced: false,
+            outcome: "rejected".to_string(),
+            linger_us: None,
+            extract_us: None,
+            reply_us: None,
+            ..rec.clone()
+        };
+        let line = rejected.to_json().to_string_json();
+        assert!(line.contains("\"extract_us\":null"), "{line}");
+        assert_eq!(AccessRecord::parse(&line).unwrap(), rejected);
+
+        // Wrong schema is refused.
+        let other =
+            line.replace(ACCESS_SCHEMA, "backpack-access/v0");
+        assert!(AccessRecord::parse(&other).is_err());
     }
 }

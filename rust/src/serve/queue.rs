@@ -7,6 +7,11 @@
 //! blocks the connection thread -- which stops reading frames from
 //! its socket -- so backpressure propagates to clients as TCP flow
 //! control instead of unbounded server memory.
+//!
+//! Time spent in here belongs to the *queue* stage of the request
+//! lifecycle: requests are stamped before `push` and on `pop` /
+//! `take_where`, so a full queue's blocking wait shows up in the
+//! `serve.latency` queue histogram rather than disappearing.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

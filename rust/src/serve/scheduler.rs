@@ -21,7 +21,7 @@
 //! outright (compiled plans are `Rc`, deliberately not `Send`);
 //! replies travel back to connection threads over `mpsc` channels.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -39,17 +39,69 @@ use crate::runtime::Tensor;
 use super::protocol::{
     error_reply, extract_reply, BatchMeta, ExtractRequest,
 };
-use super::Shared;
+use super::{Access, Reply, Shared, Stamps};
 
 /// Soft cap on cached compiled plans; synthesis is cheap, so on
 /// overflow the cache is simply cleared.
 const PLAN_CACHE_CAP: usize = 64;
 
 /// One admitted extraction waiting for (or riding in) a batch. The
-/// sender is the owning connection's writer channel.
+/// sender is the owning connection's writer channel; `stamps`
+/// carries the request's lifecycle timestamps (stamped at accept by
+/// the connection thread, advanced here at queue-pop, linger-close
+/// and extract-done).
 pub(crate) struct Pending {
     pub req: ExtractRequest,
-    pub reply: mpsc::Sender<String>,
+    pub reply: mpsc::Sender<Reply>,
+    pub stamps: Stamps,
+}
+
+/// LRU-bounded `(model, seed) -> parameters` cache. Participants
+/// sharing a seed share parameters, so the scheduler keeps recent
+/// sets warm; past `cap` the least-recently-used set is evicted
+/// (counted in `param_cache_evictions`). A linear scan is fine:
+/// `cap` is small and each entry holds megabytes, not bytes.
+struct ParamCache {
+    cap: usize,
+    entries: VecDeque<((String, u64), Vec<NamedParam>)>,
+}
+
+impl ParamCache {
+    fn new(cap: usize) -> ParamCache {
+        ParamCache {
+            cap: cap.max(1),
+            entries: VecDeque::new(),
+        }
+    }
+
+    /// Fetch (moving the entry to most-recent) or initialize the
+    /// parameter set for `(model, seed)`.
+    fn get_or_init(
+        &mut self,
+        spec: &crate::runtime::ArtifactSpec,
+        model: &str,
+        seed: u64,
+        shared: &Shared,
+    ) -> &Vec<NamedParam> {
+        let key = (model.to_string(), seed);
+        if let Some(i) =
+            self.entries.iter().position(|(k, _)| *k == key)
+        {
+            let hit = self.entries.remove(i).unwrap();
+            self.entries.push_back(hit);
+        } else {
+            while self.entries.len() >= self.cap {
+                self.entries.pop_front();
+                shared
+                    .stats
+                    .param_cache_evictions
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            self.entries
+                .push_back((key, init_params(spec, seed)));
+        }
+        &self.entries.back().unwrap().1
+    }
 }
 
 /// Coalescing compatibility key: requests agreeing on all four
@@ -86,10 +138,10 @@ impl BatchKey {
 pub(crate) fn run(shared: Arc<Shared>) {
     let backend = NativeBackend::with_threads(shared.cfg.threads);
     let mut plans: BTreeMap<String, Rc<dyn Exec>> = BTreeMap::new();
-    let mut params: BTreeMap<(String, u64), Vec<NamedParam>> =
-        BTreeMap::new();
+    let mut params = ParamCache::new(shared.cfg.param_cache);
 
-    while let Some(first) = shared.queue.pop() {
+    while let Some(mut first) = shared.queue.pop() {
+        first.stamps.popped = Some(Instant::now());
         let Some(leader) = admit(&backend, first, &shared) else {
             continue;
         };
@@ -103,9 +155,10 @@ pub(crate) fn run(shared: Arc<Shared>) {
         let deadline = Instant::now()
             + Duration::from_millis(shared.cfg.linger_ms);
         loop {
-            for cand in
+            for mut cand in
                 shared.queue.take_where(|p| key.matches(&p.req))
             {
+                cand.stamps.popped = Some(Instant::now());
                 if let Some(p) = admit(&backend, cand, &shared) {
                     total += p.req.y.len();
                     batch.push(p);
@@ -117,6 +170,12 @@ pub(crate) fn run(shared: Arc<Shared>) {
                 break;
             }
         }
+        // The union batch is final: stamp linger-close on every
+        // participant with one shared instant.
+        let closed = Instant::now();
+        for p in &mut batch {
+            p.stamps.closed = Some(closed);
+        }
         run_batch(
             &backend,
             &mut plans,
@@ -125,6 +184,43 @@ pub(crate) fn run(shared: Arc<Shared>) {
             batch,
             total,
         );
+    }
+}
+
+/// Build the [`Access`] record for one batch participant.
+fn access_of(
+    p: &Pending,
+    outcome: &'static str,
+    batch_n: usize,
+    batch_requests: usize,
+) -> Access {
+    Access {
+        id: p.req.id,
+        model: p.req.model.clone(),
+        sig: p.req.sig.to_string(),
+        n: p.req.y.len(),
+        batch_n,
+        batch_requests,
+        outcome,
+        stamps: p.stamps,
+    }
+}
+
+/// Send one reply to its connection's writer thread. A failed send
+/// means the session ended and its writer is gone: the disconnect
+/// is counted here and the recovered access record finished
+/// directly (there is no writer left to do it).
+fn deliver(
+    shared: &Shared,
+    to: &mpsc::Sender<Reply>,
+    frame: String,
+    access: Access,
+) {
+    if let Err(e) = to.send(Reply { frame, access: Some(access) }) {
+        shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+        let mut a = e.0.access.unwrap();
+        a.outcome = "disconnect";
+        shared.finish_request(a, None);
     }
 }
 
@@ -141,15 +237,9 @@ fn admit(
         Ok(()) => Some(p),
         Err(e) => {
             shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-            if p.reply
-                .send(error_reply(p.req.id, &format!("{e:#}")))
-                .is_err()
-            {
-                shared
-                    .stats
-                    .disconnects
-                    .fetch_add(1, Ordering::Relaxed);
-            }
+            let frame = error_reply(p.req.id, &format!("{e:#}"));
+            let access = access_of(&p, "rejected", 0, 0);
+            deliver(shared, &p.reply, frame, access);
             None
         }
     }
@@ -197,50 +287,39 @@ fn check(
 fn run_batch(
     backend: &NativeBackend,
     plans: &mut BTreeMap<String, Rc<dyn Exec>>,
-    params: &mut BTreeMap<(String, u64), Vec<NamedParam>>,
+    params: &mut ParamCache,
     shared: &Shared,
-    batch: Vec<Pending>,
+    mut batch: Vec<Pending>,
     total: usize,
 ) {
-    let req0 = &batch[0].req;
     let coalesced = batch.len();
     let result = execute(
-        backend, plans, params, shared, &batch, total,
+        backend, plans, params, shared, &mut batch, total,
     );
-    shared.stats.batches.fetch_add(1, Ordering::Relaxed);
-    shared
-        .stats
-        .coalesced_max
-        .fetch_max(coalesced as u64, Ordering::Relaxed);
+    shared.record_batch(total, coalesced);
     match result {
         Ok(replies) => {
             for (p, reply) in batch.iter().zip(replies) {
-                if p.reply.send(reply).is_err() {
-                    shared
-                        .stats
-                        .disconnects
-                        .fetch_add(1, Ordering::Relaxed);
-                }
+                let access =
+                    access_of(p, "ok", total, coalesced);
+                deliver(shared, &p.reply, reply, access);
             }
         }
         Err(e) => {
             // A whole-batch failure (it passed admission, so this
             // is unexpected) errors every participant.
+            let req0 = &batch[0].req;
             let msg = format!(
                 "batch {}_{}_n{total} failed: {e:#}",
                 req0.model, req0.sig
             );
+            obs::progress(format_args!("serve: {msg}"));
             shared.stats.errors.fetch_add(1, Ordering::Relaxed);
             for p in &batch {
-                if p.reply
-                    .send(error_reply(p.req.id, &msg))
-                    .is_err()
-                {
-                    shared
-                        .stats
-                        .disconnects
-                        .fetch_add(1, Ordering::Relaxed);
-                }
+                let frame = error_reply(p.req.id, &msg);
+                let access =
+                    access_of(p, "error", total, coalesced);
+                deliver(shared, &p.reply, frame, access);
             }
         }
     }
@@ -249,9 +328,9 @@ fn run_batch(
 fn execute(
     backend: &NativeBackend,
     plans: &mut BTreeMap<String, Rc<dyn Exec>>,
-    params: &mut BTreeMap<(String, u64), Vec<NamedParam>>,
+    params: &mut ParamCache,
     shared: &Shared,
-    batch: &[Pending],
+    batch: &mut [Pending],
     total: usize,
 ) -> anyhow::Result<Vec<String>> {
     let req0 = &batch[0].req;
@@ -277,16 +356,15 @@ fn execute(
     };
     let spec = exe.spec().clone();
 
-    // Participants sharing a seed share parameters.
-    let ps = params
-        .entry((req0.model.clone(), req0.seed))
-        .or_insert_with(|| init_params(&spec, req0.seed));
+    // Participants sharing a seed share parameters (LRU-bounded).
+    let ps =
+        params.get_or_init(&spec, &req0.model, req0.seed, shared);
 
     // Union batch, concatenated in arrival order.
     let in_numel: usize = spec.in_shape.iter().product();
     let mut xs = Vec::with_capacity(total * in_numel);
     let mut ys = Vec::with_capacity(total);
-    for p in batch {
+    for p in batch.iter() {
         xs.extend_from_slice(&p.req.x);
         ys.extend_from_slice(&p.req.y);
     }
@@ -317,6 +395,12 @@ fn execute(
         Some(m) => obs::since(m),
         None => obs::stop(),
     };
+    // Stamp extract-done before unwrapping, so a failed engine call
+    // still times its extract stage.
+    let done = Instant::now();
+    for p in batch.iter_mut() {
+        p.stamps.done = Some(done);
+    }
     let out = out?;
 
     let agg = MetricsAgg::from_trace(&trace);
@@ -328,7 +412,7 @@ fn execute(
     let exts = backend.extensions();
     let mut replies = Vec::with_capacity(batch.len());
     let mut off = 0usize;
-    for p in batch {
+    for p in batch.iter() {
         let n = p.req.y.len();
         let mut results = BTreeMap::new();
         for key in out.names() {

@@ -19,7 +19,9 @@ use backpack_rs::runtime::Tensor;
 use backpack_rs::serve::protocol::{
     read_frame, write_frame, ExtractReply, ExtractRequest,
 };
-use backpack_rs::serve::{ServeConfig, Server, ServerHandle};
+use backpack_rs::serve::{
+    AccessRecord, ServeConfig, Server, ServerHandle,
+};
 use backpack_rs::{
     ArtifactId, Backend, Exec, ExtensionSet, Json, NativeBackend,
     Reduce, METRICS_SCHEMA,
@@ -483,6 +485,246 @@ fn metrics_are_schema_valid_per_request_and_aggregate() {
     );
     assert!(s.get("batches").unwrap().as_usize().unwrap() >= 1);
     assert!(s.get("extracts").unwrap().as_usize().unwrap() >= 1);
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn metrics_expose_the_per_stage_latency_section() {
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        linger_ms: 1,
+        ..ServeConfig::default()
+    });
+    let mut c = TcpStream::connect(addr).unwrap();
+    for i in 0..3 {
+        let r = roundtrip(&mut c, &request(i, "grad", 0).to_json());
+        assert!(r.ok, "{:?}", r.error);
+    }
+    write_frame(&mut c, "{\"op\":\"metrics\",\"id\":1}").unwrap();
+    let v =
+        Json::parse(&read_frame(&mut c).unwrap().unwrap()).unwrap();
+    let s = v.get("serve").unwrap();
+    // New counters ride next to the existing ones.
+    assert!(
+        s.get("batched_requests").unwrap().as_usize().unwrap() >= 3
+    );
+    assert_eq!(
+        s.get("conns_rejected").unwrap().as_usize().unwrap(),
+        0
+    );
+    let lat = s.get("latency").unwrap();
+    assert_eq!(lat.get("unit").unwrap().as_str().unwrap(), "us");
+    // Every stage histogram saw traffic (replies are written, and
+    // their records finished, before the next request is sent; the
+    // in-flight third reply makes these >= rather than ==).
+    for stage in ["queue", "linger", "extract", "reply"] {
+        let h = lat.get("stages").unwrap().get(stage).unwrap();
+        assert!(
+            h.get("count").unwrap().as_usize().unwrap() >= 1,
+            "stage {stage} saw no samples"
+        );
+    }
+    let e2e = lat.get("e2e").unwrap();
+    assert!(e2e.get("count").unwrap().as_usize().unwrap() >= 1);
+    // Percentiles are present and ordered on a non-empty histogram.
+    let p50 = e2e.get("p50").unwrap().as_f64().unwrap();
+    let p99 = e2e.get("p99").unwrap().as_f64().unwrap();
+    assert!(p50 <= p99, "{p50} > {p99}");
+    // Three sequential solo requests: three engine calls of 4
+    // samples each, no coalescing.
+    let bs = lat.get("batch_size").unwrap();
+    assert!(bs.get("count").unwrap().as_usize().unwrap() >= 3);
+    assert_eq!(bs.get("min").unwrap().as_usize().unwrap(), PER);
+    let co = lat.get("coalescing").unwrap();
+    assert!(co.get("batches").unwrap().as_usize().unwrap() >= 3);
+    assert_eq!(
+        co.get("rate").unwrap().as_f64().unwrap(),
+        0.0,
+        "solo requests must not count as coalesced"
+    );
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn access_log_records_every_request_outcome() {
+    let dir = std::env::temp_dir().join("backpack_serve_access");
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join(format!("access_{}.jsonl", std::process::id()));
+    const CLIENTS: usize = 4;
+    let total = CLIENTS * PER;
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        linger_ms: 2_000,
+        max_batch: total,
+        access_log: Some(log.clone()),
+        ..ServeConfig::default()
+    });
+    // One coalesced batch of 4, then one admission-rejected request.
+    let replies = fan_out(
+        addr,
+        (0..CLIENTS).map(|i| request(i, "grad", 3)).collect(),
+    );
+    for (i, r) in &replies {
+        assert!(r.ok, "client {i}: {:?}", r.error);
+    }
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut bad = request(0, "grad", 3);
+    bad.model = "logrge".into();
+    bad.id = 99;
+    assert!(!roundtrip(&mut c, &bad.to_json()).ok);
+
+    // Records are finished on writer threads just after the reply
+    // bytes land, so poll briefly for the expected line count.
+    let want = CLIENTS + 1;
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(10);
+    let text = loop {
+        let text =
+            std::fs::read_to_string(&log).unwrap_or_default();
+        if text.lines().count() >= want {
+            break text;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "access log never reached {want} lines: {text:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+
+    let records: Vec<AccessRecord> = text
+        .lines()
+        .map(|l| AccessRecord::parse(l).unwrap())
+        .collect();
+    assert_eq!(records.len(), want);
+    let oks: Vec<&AccessRecord> = records
+        .iter()
+        .filter(|r| r.outcome == "ok")
+        .collect();
+    assert_eq!(oks.len(), CLIENTS);
+    for r in &oks {
+        assert_eq!(r.model, "logreg");
+        assert_eq!(r.sig, "grad");
+        assert_eq!(r.n, PER);
+        assert_eq!(r.batch_n, total);
+        assert_eq!(r.batch_requests, CLIENTS);
+        assert!(r.coalesced);
+        assert_eq!(
+            r.artifact.as_deref(),
+            Some("logreg_grad_n16")
+        );
+        // Every stage of a served request is timed.
+        assert!(r.queue_us.is_some());
+        assert!(r.linger_us.is_some());
+        assert!(r.extract_us.is_some());
+        assert!(r.reply_us.is_some());
+        let e2e = r.e2e_us.unwrap();
+        assert!(
+            e2e >= r.extract_us.unwrap(),
+            "e2e {e2e} < extract alone"
+        );
+    }
+    let rej = records
+        .iter()
+        .find(|r| r.outcome == "rejected")
+        .expect("no rejected record");
+    assert_eq!(rej.id, 99);
+    assert_eq!(rej.artifact, None);
+    assert_eq!(rej.batch_n, 0);
+    assert!(!rej.coalesced);
+    assert!(rej.extract_us.is_none());
+
+    handle.shutdown();
+    join.join().unwrap();
+    let _ = std::fs::remove_file(&log);
+}
+
+#[test]
+fn max_conns_rejects_overflow_with_a_server_busy_frame() {
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        linger_ms: 1,
+        max_conns: 1,
+        ..ServeConfig::default()
+    });
+    // First connection occupies the single slot (the ping
+    // round-trip guarantees its session is registered).
+    let mut a = TcpStream::connect(addr).unwrap();
+    let r = roundtrip(&mut a, "{\"op\":\"ping\",\"id\":1}");
+    assert!(r.ok);
+
+    // Second connection: one server_busy error frame, then EOF.
+    let mut b = TcpStream::connect(addr).unwrap();
+    let frame = read_frame(&mut b).unwrap().unwrap();
+    let r = ExtractReply::parse(&frame).unwrap();
+    assert!(!r.ok);
+    let msg = r.error.unwrap();
+    assert!(msg.contains("server_busy"), "{msg}");
+    assert!(read_frame(&mut b).unwrap().is_none(), "expected EOF");
+    drop(b);
+
+    // Freeing the slot readmits new connections (the gauge drops
+    // asynchronously when the session thread exits, so retry).
+    drop(a);
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(10);
+    let mut c = loop {
+        // While the slot is still taken this connection is rejected
+        // (busy frame, or a reset once the ping hits the closed
+        // socket) -- tolerate both and retry.
+        let mut c = TcpStream::connect(addr).unwrap();
+        let pong = write_frame(&mut c, "{\"op\":\"ping\",\"id\":2}")
+            .and_then(|()| read_frame(&mut c));
+        if let Ok(Some(f)) = pong {
+            if ExtractReply::parse(&f).is_ok_and(|r| r.ok) {
+                break c;
+            }
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "slot never freed"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+    write_frame(&mut c, "{\"op\":\"metrics\",\"id\":3}").unwrap();
+    let v =
+        Json::parse(&read_frame(&mut c).unwrap().unwrap()).unwrap();
+    let s = v.get("serve").unwrap();
+    assert!(
+        s.get("conns_rejected").unwrap().as_usize().unwrap() >= 1
+    );
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn param_cache_evictions_are_counted() {
+    // A cache of one entry with alternating seeds evicts on every
+    // seed change: 0 -> 1 -> 0 is two evictions.
+    let (addr, handle, join) = start(ServeConfig {
+        threads: 1,
+        linger_ms: 1,
+        param_cache: 1,
+        ..ServeConfig::default()
+    });
+    let mut c = TcpStream::connect(addr).unwrap();
+    for seed in [0u64, 1, 0] {
+        let r =
+            roundtrip(&mut c, &request(0, "grad", seed).to_json());
+        assert!(r.ok, "seed {seed}: {:?}", r.error);
+    }
+    write_frame(&mut c, "{\"op\":\"metrics\",\"id\":1}").unwrap();
+    let v =
+        Json::parse(&read_frame(&mut c).unwrap().unwrap()).unwrap();
+    let s = v.get("serve").unwrap();
+    assert_eq!(
+        s.get("param_cache_evictions")
+            .unwrap()
+            .as_usize()
+            .unwrap(),
+        2
+    );
     handle.shutdown();
     join.join().unwrap();
 }

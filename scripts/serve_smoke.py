@@ -11,11 +11,13 @@ Usage: python3 scripts/serve_smoke.py [path/to/backpack]
 """
 
 import json
+import os
 import signal
 import socket
 import struct
 import subprocess
 import sys
+import tempfile
 import threading
 
 CLIENTS = 8
@@ -76,9 +78,12 @@ def client(addr, i, barrier, results):
 def main():
     binary = sys.argv[1] if len(sys.argv) > 1 else \
         "rust/target/release/backpack"
+    access_log = tempfile.mktemp(
+        prefix="backpack_access_", suffix=".jsonl")
     proc = subprocess.Popen(
         [binary, "serve", "--addr", "127.0.0.1:0",
-         "--linger-ms", "300", "--max-batch", str(CLIENTS * PER)],
+         "--linger-ms", "300", "--max-batch", str(CLIENTS * PER),
+         "--access-log", access_log],
         stdout=subprocess.PIPE, text=True,
     )
     try:
@@ -144,18 +149,48 @@ def main():
         assert serve["coalesced_max"] >= 2, \
             f"no dynamic batching observed: {serve}"
         assert serve["errors"] == 0, serve
-        print("serve counters:", json.dumps(serve))
+
+        # Per-stage latency section (serve.latency): every stage of
+        # the 8 served requests was timed.
+        lat = serve["latency"]
+        assert lat["unit"] == "us", lat
+        for stage in ("queue", "linger", "extract", "reply"):
+            assert lat["stages"][stage]["count"] >= 1, (stage, lat)
+        assert lat["e2e"]["count"] >= 1, lat
+        assert lat["e2e"]["p50"] is not None, lat
+        assert lat["coalescing"]["requests"] == CLIENTS, lat
+        print("serve counters:", json.dumps(
+            {k: v for k, v in serve.items() if k != "latency"}))
 
         # Clean SIGTERM shutdown.
         proc.send_signal(signal.SIGTERM)
         proc.wait(timeout=30)
+
+        # The access log has one backpack-access/v1 line per served
+        # request, with the full stage timing.
+        with open(access_log) as f:
+            records = [json.loads(line) for line in f]
+        oks = [r for r in records if r["outcome"] == "ok"]
+        assert len(oks) == CLIENTS, [r["outcome"] for r in records]
+        for r in oks:
+            assert r["schema"] == "backpack-access/v1", r
+            assert r["model"] == "logreg" and r["n"] == PER, r
+            assert r["artifact"].startswith("logreg_"), r
+            assert r["batch_requests"] >= 1, r
+            assert r["coalesced"] == (r["batch_requests"] > 1), r
+            for stage in ("queue_us", "linger_us", "extract_us",
+                          "reply_us", "e2e_us"):
+                assert isinstance(r[stage], int), (stage, r)
         print("serve smoke OK "
               f"(coalesced_max={serve['coalesced_max']}, "
-              f"batches={serve['batches']})")
+              f"batches={serve['batches']}, "
+              f"access_records={len(records)})")
     finally:
         if proc.poll() is None:
             proc.kill()
             proc.wait()
+        if os.path.exists(access_log):
+            os.unlink(access_log)
 
 
 if __name__ == "__main__":

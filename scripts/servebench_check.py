@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""CI validator for `backpack loadgen` output (backpack-servebench/v1).
+
+Pure stdlib. Checks the document written by the CI loadgen smoke
+step: schema, client/traffic floors, a self-consistent e2e latency
+histogram, bench-compatible cases[] rows (name + p50_s), the
+daemon-side serve.latency section, and that coalescing actually
+happened (the smoke runs >= 8 same-signature clients through a
+generous linger window, so zero coalescing means batching broke).
+
+Usage: python3 scripts/servebench_check.py SERVEBENCH.json
+"""
+
+import json
+import sys
+
+
+def check_histogram(h, label):
+    assert h["count"] >= 1, (label, h)
+    assert h["min"] is not None and h["max"] is not None, (label, h)
+    assert h["min"] <= h["max"], (label, h)
+    # Bucket counts sum to the total count.
+    assert sum(c for _, c in h["buckets"]) == h["count"], (label, h)
+    p50, p95, p99 = h["p50"], h["p95"], h["p99"]
+    assert p50 is not None, (label, h)
+    assert p50 <= p95 <= p99, (label, p50, p95, p99)
+    assert h["min"] <= p50 and p99 <= h["max"], (label, h)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "SERVEBENCH.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    assert doc["schema"] == "backpack-servebench/v1", doc["schema"]
+    assert doc["clients"] >= 8, doc["clients"]
+    assert doc["requests"] > 0, "no request succeeded"
+    assert doc["errors"] == 0, f"{doc['errors']} errors"
+    assert doc["throughput_rps"] > 0, doc["throughput_rps"]
+    assert doc["duration_s"] > 0, doc["duration_s"]
+
+    # Client-observed e2e latency histogram: one sample per request.
+    e2e = doc["e2e_us"]
+    check_histogram(e2e, "e2e_us")
+    assert e2e["count"] == doc["requests"], (e2e["count"],
+                                             doc["requests"])
+
+    # Bench-compatible cases: the rows `bench --compare` gates on.
+    cases = {c["name"]: c["p50_s"] for c in doc["cases"]}
+    model = doc["model"]
+    for want in (f"loadgen_{model}_e2e_p50",
+                 f"loadgen_{model}_e2e_p95",
+                 f"loadgen_{model}_e2e_p99",
+                 f"loadgen_{model}_inv_throughput",
+                 f"loadgen_{model}_stage_extract_p50"):
+        assert want in cases, (want, sorted(cases))
+    for name, p50_s in cases.items():
+        assert p50_s > 0, (name, p50_s)
+    assert cases[f"loadgen_{model}_e2e_p50"] <= \
+        cases[f"loadgen_{model}_e2e_p99"], cases
+
+    # The daemon's own view rode along: per-stage latency and real
+    # coalescing under the concurrent-client load.
+    server = doc["server"]
+    assert server is not None, "no server metrics captured"
+    lat = server["latency"]
+    for stage in ("queue", "linger", "extract", "reply"):
+        assert lat["stages"][stage]["count"] >= 1, (stage, lat)
+    assert lat["coalescing"]["rate"] is not None, lat
+    assert lat["coalescing"]["rate"] > 0, \
+        f"no coalescing under load: {lat['coalescing']}"
+    assert server["coalesced_max"] >= 2, server["coalesced_max"]
+
+    print(f"servebench OK: {doc['clients']} clients, "
+          f"{doc['requests']} requests "
+          f"({doc['throughput_rps']:.0f} req/s), "
+          f"e2e p50 {e2e['p50']:.0f}us p99 {e2e['p99']:.0f}us, "
+          f"coalescing rate "
+          f"{lat['coalescing']['rate'] * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()
