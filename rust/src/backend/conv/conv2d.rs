@@ -26,18 +26,53 @@
 //!                    & Martens (2016) KFC convention, which reduces
 //!                    exactly to the `Linear` factors at `P = 1`.
 //!
-//! Each phase re-unfolds its layer input instead of sharing a cached
-//! `⟦x⟧` across the forward / first-order / second-order walks: the
-//! unfold is `O(J·P)` data movement against the phase's `O(J·P·c)`
-//! matmul (`c >= 32` on every registry model, so ≤ ~3% of the work),
-//! and keeping the phases independent keeps shard-local memory flat
-//! at one unfolded matrix per sample.
+//! ## Fused unfold (DESIGN.md §14)
+//!
+//! No phase materializes the full `⟦x⟧ [J, P]` anymore: every driver
+//! below streams [`COL_TILE`]-wide *position tiles* through
+//! `ConvGeom::im2col_range` into one reusable `[J, COL_TILE]` buffer
+//! and feeds each tile straight to the matmul microkernel
+//! (`matmul_into` / `matmul_tn_into` / `matmul_nt_acc`). Because the
+//! contraction axis is never tiled — only output positions are — the
+//! forward and VJP *products* are bit-identical to the materialized
+//! path (`COL_TILE` is a multiple of the 8-lane SIMD width, so the
+//! vector-body/scalar-tail split also lines up), while accumulating
+//! reductions (grad, diag, Kron `A`, the col2im scatter) re-associate
+//! the position sum across tiles and agree to f32 round-off
+//! (`tests/conv_native.rs` pins both). Shard-local unfold memory
+//! drops from one `[J, P]` matrix per sample to one `[J, COL_TILE]`
+//! tile per driver call, which is also what the `Im2colBytes` counter
+//! now reports (bytes charged at tile-buffer allocation; the
+//! materialized `ConvGeom::im2col` reference still charges its full
+//! buffer).
 
-use crate::linalg::{matmul, matmul_nt, matmul_tn};
+use crate::linalg::{
+    matmul_into, matmul_nt, matmul_nt_acc, matmul_tn_into,
+};
 
 use super::im2col::ConvGeom;
 
-/// Forward over a shard: `z = W ⟦x⟧ + b 1ᵀ` per sample.
+/// Positions per streamed column tile. A multiple of the 8-lane SIMD
+/// width (so per-column vector/tail classification matches the
+/// full-width kernels, keeping forward/VJP bitwise) and small enough
+/// that the `[J, COL_TILE]` tile plus the weight panel stay
+/// cache-resident at the registry shapes (J ≤ 1728 ⇒ ≤ 864 KiB).
+pub const COL_TILE: usize = 128;
+
+/// Allocate the reusable `[j, tile]` unfold buffer for one driver
+/// call and charge its bytes to the `Im2colBytes` counter — the
+/// fused path's entire unfold footprint, reused across tiles and
+/// samples.
+fn alloc_tile(j: usize, tile: usize) -> Vec<f32> {
+    crate::obs::add(
+        crate::obs::Counter::Im2colBytes,
+        (j * tile * std::mem::size_of::<f32>()) as u64,
+    );
+    vec![0.0f32; j * tile]
+}
+
+/// Forward over a shard: `z = W ⟦x⟧ + b 1ᵀ` per sample, streaming
+/// position tiles (bit-identical to the materialized product).
 pub fn forward(
     geom: &ConvGeom,
     w: &[f32],
@@ -48,12 +83,23 @@ pub fn forward(
     let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
     let (j, p) = (geom.patch_len(), geom.positions());
     let c_out = geom.out_shape.c;
+    let tile = COL_TILE.min(p);
+    let mut u = alloc_tile(j, tile);
+    let mut zt = vec![0.0f32; c_out * tile];
     let mut z = vec![0.0f32; ns * fout];
-    for s in 0..ns {
-        let u = geom.im2col(&inp[s * fin..(s + 1) * fin]);
-        let zs = matmul(w, &u, c_out, j, p);
-        let dst = &mut z[s * fout..(s + 1) * fout];
-        dst.copy_from_slice(&zs);
+    for smp in 0..ns {
+        let xs = &inp[smp * fin..(smp + 1) * fin];
+        let dst = &mut z[smp * fout..(smp + 1) * fout];
+        for q0 in (0..p).step_by(tile) {
+            let q1 = (q0 + tile).min(p);
+            let tw = q1 - q0;
+            geom.im2col_range(xs, q0, q1, &mut u[..j * tw]);
+            matmul_into(w, &u[..j * tw], c_out, j, tw, &mut zt[..c_out * tw]);
+            for o in 0..c_out {
+                dst[o * p + q0..o * p + q1]
+                    .copy_from_slice(&zt[o * tw..(o + 1) * tw]);
+            }
+        }
         for o in 0..c_out {
             for q in 0..p {
                 dst[o * p + q] += b[o];
@@ -74,8 +120,10 @@ pub fn vjp_input(
 }
 
 /// Square-root-GGN VJP: `S [ns, c_out·P, cols] -> [ns, c_in·h·w,
-/// cols]` — `Wᵀ S` as one matmul per sample (positions and columns
-/// share the minor axis), then the col2im scatter.
+/// cols]` — `Wᵀ S` one position tile at a time (positions and columns
+/// share the minor axis), each tile scattered through the range
+/// col2im before the next is computed, so the full `[J, P·cols]`
+/// cotangent is never held.
 pub fn mat_vjp_input(
     geom: &ConvGeom,
     w: &[f32],
@@ -87,25 +135,45 @@ pub fn mat_vjp_input(
     let (j, p) = (geom.patch_len(), geom.positions());
     let c_out = geom.out_shape.c;
     debug_assert_eq!(s.len(), ns * fout * cols);
+    let tile = COL_TILE.min(p);
+    // S tile gather [c_out, tw·cols] + cotangent tile [J, tw·cols].
+    let mut sb = vec![0.0f32; c_out * tile * cols];
+    let mut t = vec![0.0f32; j * tile * cols];
     let mut out = vec![0.0f32; ns * fin * cols];
     for smp in 0..ns {
         let blk = &s[smp * fout * cols..(smp + 1) * fout * cols];
-        // [c_out, P·cols] -> [J, P·cols]
-        let t = matmul_tn(w, blk, c_out, j, p * cols);
-        geom.col2im_acc(
-            &t,
-            cols,
-            &mut out[smp * fin * cols..(smp + 1) * fin * cols],
-        );
+        let dst = &mut out[smp * fin * cols..(smp + 1) * fin * cols];
+        for q0 in (0..p).step_by(tile) {
+            let q1 = (q0 + tile).min(p);
+            let tw = q1 - q0;
+            for o in 0..c_out {
+                sb[o * tw * cols..(o + 1) * tw * cols].copy_from_slice(
+                    &blk[o * p * cols + q0 * cols
+                        ..o * p * cols + q1 * cols],
+                );
+            }
+            // [c_out, tw·cols] -> [J, tw·cols]
+            matmul_tn_into(
+                w,
+                &sb[..c_out * tw * cols],
+                c_out,
+                j,
+                tw * cols,
+                &mut t[..j * tw * cols],
+            );
+            geom.col2im_range_acc(&t[..j * tw * cols], cols, q0, q1, dst);
+        }
     }
     out
 }
 
 /// Norm-averaged gradient of one conv layer over a shard, streaming:
-/// one per-sample `G_n U_nᵀ` product (`matmul_nt`), accumulated in
-/// sample order without materializing the per-sample gradients. This
-/// is the plain-`grad` path; when first-order extensions are active
-/// the engine shares one materialized [`per_sample_grads`] instead.
+/// per sample and position tile, one `G_tile U_tileᵀ` product
+/// accumulated straight into the shared `[c_out, J]` gradient
+/// (`matmul_nt_acc`) — neither the per-sample gradients nor the full
+/// unfold are materialized. This is the plain-`grad` path; when
+/// first-order extensions are active the engine shares one
+/// materialized [`per_sample_grads`] instead.
 pub fn grad(
     geom: &ConvGeom,
     inp: &[f32],
@@ -116,15 +184,31 @@ pub fn grad(
     let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
     let (j, p) = (geom.patch_len(), geom.positions());
     let c_out = geom.out_shape.c;
+    let tile = COL_TILE.min(p);
+    let mut u = alloc_tile(j, tile);
+    let mut gt = vec![0.0f32; c_out * tile];
     let mut gw = vec![0.0f32; c_out * j];
     let mut gb = vec![0.0f32; c_out];
     for smp in 0..ns {
-        let u = geom.im2col(&inp[smp * fin..(smp + 1) * fin]);
+        let xs = &inp[smp * fin..(smp + 1) * fin];
         let gs = &g[smp * fout..(smp + 1) * fout];
-        // Per-sample weight gradient G_n U_nᵀ [c_out, J].
-        let pg = matmul_nt(gs, &u, c_out, p, j);
-        for (acc, v) in gw.iter_mut().zip(&pg) {
-            *acc += v;
+        for q0 in (0..p).step_by(tile) {
+            let q1 = (q0 + tile).min(p);
+            let tw = q1 - q0;
+            geom.im2col_range(xs, q0, q1, &mut u[..j * tw]);
+            for o in 0..c_out {
+                gt[o * tw..(o + 1) * tw]
+                    .copy_from_slice(&gs[o * p + q0..o * p + q1]);
+            }
+            // gw += G_tile U_tileᵀ [c_out, J]
+            matmul_nt_acc(
+                &gt[..c_out * tw],
+                &u[..j * tw],
+                c_out,
+                tw,
+                j,
+                &mut gw,
+            );
         }
         // Per-sample bias gradient: position sums of G_n.
         for o in 0..c_out {
@@ -143,7 +227,8 @@ pub fn grad(
 /// intermediate of the first-order extension rules — unlike `Linear`,
 /// the conv per-sample gradient is not rank-1 (spatial positions sum
 /// into it), so `batch_l2`/`sq_moment` consume this materialized
-/// product instead of a factored shortcut.
+/// product instead of a factored shortcut. Position tiles stream into
+/// each sample's block; only the output itself is materialized.
 pub fn per_sample_grads(
     geom: &ConvGeom,
     inp: &[f32],
@@ -153,12 +238,32 @@ pub fn per_sample_grads(
     let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
     let (j, p) = (geom.patch_len(), geom.positions());
     let c_out = geom.out_shape.c;
-    let mut w = Vec::with_capacity(ns * c_out * j);
+    let tile = COL_TILE.min(p);
+    let mut u = alloc_tile(j, tile);
+    let mut gt = vec![0.0f32; c_out * tile];
+    let mut w = vec![0.0f32; ns * c_out * j];
     let mut b = Vec::with_capacity(ns * c_out);
     for smp in 0..ns {
-        let u = geom.im2col(&inp[smp * fin..(smp + 1) * fin]);
+        let xs = &inp[smp * fin..(smp + 1) * fin];
         let gs = &g[smp * fout..(smp + 1) * fout];
-        w.extend(matmul_nt(gs, &u, c_out, p, j));
+        let ws = &mut w[smp * c_out * j..(smp + 1) * c_out * j];
+        for q0 in (0..p).step_by(tile) {
+            let q1 = (q0 + tile).min(p);
+            let tw = q1 - q0;
+            geom.im2col_range(xs, q0, q1, &mut u[..j * tw]);
+            for o in 0..c_out {
+                gt[o * tw..(o + 1) * tw]
+                    .copy_from_slice(&gs[o * p + q0..o * p + q1]);
+            }
+            matmul_nt_acc(
+                &gt[..c_out * tw],
+                &u[..j * tw],
+                c_out,
+                tw,
+                j,
+                ws,
+            );
+        }
         for o in 0..c_out {
             b.push(gs[o * p..(o + 1) * p].iter().sum::<f32>());
         }
@@ -187,6 +292,11 @@ pub fn diag_sqrt(
 /// `signs[smp·cols + c] · (Jᵀ S)²`; `None` weights every column `+1`
 /// (the PSD square-root-GGN case). The signed sum can be negative:
 /// the full Hessian is indefinite.
+///
+/// The position contraction `V[(o,c), j] = Σ_p S[(o,p),c] U[j,p]`
+/// accumulates tile by tile into one `[c_out·cols, J]` buffer; the
+/// squaring happens only once `V` is complete (squares do not
+/// distribute over the tile sum).
 pub fn diag_sqrt_signed(
     geom: &ConvGeom,
     inp: &[f32],
@@ -203,23 +313,40 @@ pub fn diag_sqrt_signed(
     if let Some(sg) = signs {
         debug_assert_eq!(sg.len(), ns * cols);
     }
+    let tile = COL_TILE.min(p);
+    let mut u = alloc_tile(j, tile);
+    let mut st = vec![0.0f32; c_out * cols * tile];
+    let mut v = vec![0.0f32; c_out * cols * j];
     let mut dw = vec![0.0f32; c_out * j];
     let mut db = vec![0.0f32; c_out];
-    let mut st = vec![0.0f32; c_out * cols * p];
     for smp in 0..ns {
-        let u = geom.im2col(&inp[smp * fin..(smp + 1) * fin]);
+        let xs = &inp[smp * fin..(smp + 1) * fin];
         let blk = &s[smp * fout * cols..(smp + 1) * fout * cols];
-        // S [(o,p), c] -> St [(o,c), p]
-        for o in 0..c_out {
-            for q in 0..p {
-                let src = (o * p + q) * cols;
-                for cc in 0..cols {
-                    st[(o * cols + cc) * p + q] = blk[src + cc];
+        v.fill(0.0);
+        for q0 in (0..p).step_by(tile) {
+            let q1 = (q0 + tile).min(p);
+            let tw = q1 - q0;
+            geom.im2col_range(xs, q0, q1, &mut u[..j * tw]);
+            // S [(o,p), c] -> St tile [(o,c), tw]
+            for o in 0..c_out {
+                for q in q0..q1 {
+                    let src = (o * p + q) * cols;
+                    for cc in 0..cols {
+                        st[(o * cols + cc) * tw + (q - q0)] =
+                            blk[src + cc];
+                    }
                 }
             }
+            // V[(o,c), j] += Σ_{p ∈ tile} S[(o,p),c] U[j,p]
+            matmul_nt_acc(
+                &st[..c_out * cols * tw],
+                &u[..j * tw],
+                c_out * cols,
+                tw,
+                j,
+                &mut v,
+            );
         }
-        // V[(o,c), j] = Σ_p S[(o,p),c] U[j,p]
-        let v = matmul_nt(&st, &u, c_out * cols, p, j);
         for o in 0..c_out {
             for cc in 0..cols {
                 let w = signs
@@ -231,7 +358,7 @@ pub fn diag_sqrt_signed(
                 }
                 // Bias Jacobian sums S over positions.
                 let sbar: f32 = (0..p)
-                    .map(|q| st[(o * cols + cc) * p + q])
+                    .map(|q| blk[(o * p + q) * cols + cc])
                     .sum();
                 db[o] += w * sbar * sbar;
             }
@@ -245,7 +372,9 @@ pub fn diag_sqrt_signed(
 
 /// KFAC/KFLR Kronecker factors of one conv layer over a shard:
 /// `(A [J,J], B [c_out,c_out], bias_ggn [c_out,c_out])`, normalized so
-/// shard outputs sum-reduce.
+/// shard outputs sum-reduce. `A` streams position tiles
+/// (`A += U_tile U_tileᵀ` per tile); `B` and the bias GGN contract the
+/// `S` block directly and never touch the unfold.
 pub fn kron_factors(
     geom: &ConvGeom,
     inp: &[f32],
@@ -258,16 +387,21 @@ pub fn kron_factors(
     let (j, p) = (geom.patch_len(), geom.positions());
     let c_out = geom.out_shape.c;
     debug_assert_eq!(s.len(), ns * fout * cols);
+    let tile = COL_TILE.min(p);
+    let mut u = alloc_tile(j, tile);
     let mut a = vec![0.0f32; j * j];
     let mut bf = vec![0.0f32; c_out * c_out];
     let mut bias = vec![0.0f32; c_out * c_out];
     let mut srow = vec![0.0f32; c_out * cols];
     for smp in 0..ns {
-        let u = geom.im2col(&inp[smp * fin..(smp + 1) * fin]);
-        // A += U Uᵀ (spatial positions folded into the contraction).
-        let uu = matmul_nt(&u, &u, j, p, j);
-        for (acc, v) in a.iter_mut().zip(&uu) {
-            *acc += v;
+        let xs = &inp[smp * fin..(smp + 1) * fin];
+        // A += U Uᵀ (spatial positions folded into the contraction,
+        // accumulated tile by tile).
+        for q0 in (0..p).step_by(tile) {
+            let q1 = (q0 + tile).min(p);
+            let tw = q1 - q0;
+            geom.im2col_range(xs, q0, q1, &mut u[..j * tw]);
+            matmul_nt_acc(&u[..j * tw], &u[..j * tw], j, tw, j, &mut a);
         }
         // B += S Sᵀ, contracting positions AND columns (rows of the
         // sample block are [P·cols] long).

@@ -8,6 +8,17 @@
 //! cotangent back onto the input grid — the pair satisfies
 //! `⟨im2col(x), T⟩ = ⟨x, col2im(T)⟩`, which is what makes the
 //! conv backward pass a matmul + scatter.
+//!
+//! Both operations also come in *position-range* form
+//! ([`ConvGeom::im2col_range`], [`ConvGeom::col2im_range_acc`])
+//! covering columns `[q0, q1)` only: the fused conv path
+//! (`conv2d`, DESIGN.md §14) streams fixed-width column tiles through
+//! these into the matmul microkernels instead of materializing the
+//! full `[J, P]` unfold. The full-width functions delegate to the
+//! range forms with `[0, P)`, so there is exactly one indexing
+//! implementation to get right. Only `im2col` (the full materialized
+//! unfold) charges the `Im2colBytes` counter; tile-streaming callers
+//! charge their (much smaller) reusable buffer at allocation.
 
 use anyhow::{ensure, Result};
 
@@ -81,24 +92,49 @@ impl ConvGeom {
         ]
     }
 
-    /// Unfold one sample `x [c_in·h·w]` into `⟦x⟧ [J, P]`.
+    /// Unfold one sample `x [c_in·h·w]` into `⟦x⟧ [J, P]` — the fully
+    /// materialized reference unfold (charges `Im2colBytes` for the
+    /// whole buffer).
     pub fn im2col(&self, x: &[f32]) -> Vec<f32> {
-        let Shape { c, h, w } = self.in_shape;
-        debug_assert_eq!(x.len(), self.in_shape.flat());
-        let (oh, ow) = (self.out_shape.h, self.out_shape.w);
-        let p = oh * ow;
-        let k = self.kernel;
+        let p = self.positions();
         crate::obs::add(
             crate::obs::Counter::Im2colBytes,
             (self.patch_len() * p * std::mem::size_of::<f32>()) as u64,
         );
         let mut u = vec![0.0f32; self.patch_len() * p];
+        self.im2col_range(x, 0, p, &mut u);
+        u
+    }
+
+    /// Unfold the position columns `[q0, q1)` of `⟦x⟧` into
+    /// `u [J, q1-q0]` (overwritten, padding taps zeroed). Tiling the
+    /// position axis leaves each column untouched, so the values are
+    /// identical to the corresponding columns of the full unfold.
+    pub fn im2col_range(
+        &self,
+        x: &[f32],
+        q0: usize,
+        q1: usize,
+        u: &mut [f32],
+    ) {
+        let Shape { c, h, w } = self.in_shape;
+        debug_assert_eq!(x.len(), self.in_shape.flat());
+        debug_assert!(q0 <= q1 && q1 <= self.positions());
+        let ow = self.out_shape.w;
+        let tw = q1 - q0;
+        let k = self.kernel;
+        debug_assert_eq!(u.len(), self.patch_len() * tw);
+        u.fill(0.0);
+        if tw == 0 {
+            return;
+        }
+        let (oy0, oy1) = (q0 / ow, (q1 - 1) / ow);
         for ci in 0..c {
             for ki in 0..k {
                 for kj in 0..k {
                     let j = (ci * k + ki) * k + kj;
-                    let row = &mut u[j * p..(j + 1) * p];
-                    for oy in 0..oh {
+                    let row = &mut u[j * tw..(j + 1) * tw];
+                    for oy in oy0..=oy1 {
                         let Some(iy) = (oy * self.stride + ki)
                             .checked_sub(self.pad)
                             .filter(|&iy| iy < h)
@@ -106,20 +142,22 @@ impl ConvGeom {
                             continue;
                         };
                         let src = (ci * h + iy) * w;
-                        for ox in 0..ow {
+                        // Clip the first/last output row to the tile.
+                        let x0 = if oy == oy0 { q0 - oy0 * ow } else { 0 };
+                        let x1 = if oy == oy1 { q1 - oy1 * ow } else { ow };
+                        for ox in x0..x1 {
                             let Some(ix) = (ox * self.stride + kj)
                                 .checked_sub(self.pad)
                                 .filter(|&ix| ix < w)
                             else {
                                 continue;
                             };
-                            row[oy * ow + ox] = x[src + ix];
+                            row[oy * ow + ox - q0] = x[src + ix];
                         }
                     }
                 }
             }
         }
-        u
     }
 
     /// Adjoint scatter: accumulate `t [J, P·cols]` (a `[J, P]`
@@ -128,25 +166,51 @@ impl ConvGeom {
     /// `out [c_in·h·w · cols]`. `cols = 1` is the plain first-order
     /// col2im.
     pub fn col2im_acc(&self, t: &[f32], cols: usize, out: &mut [f32]) {
+        self.col2im_range_acc(t, cols, 0, self.positions(), out);
+    }
+
+    /// Adjoint scatter of the position columns `[q0, q1)` only:
+    /// `t [J, (q1-q0)·cols]` is a tile of the full cotangent, and its
+    /// contributions accumulate onto the (full-sized) `out`. Scattering
+    /// a partition of `[0, P)` tile by tile computes the same sum as
+    /// the full scatter, re-associated per input pixel (positions from
+    /// different tiles land in tile order instead of interleaved), so
+    /// the fused path agrees with the materialized one to f32
+    /// round-off — and exactly when a single tile covers all of `P`.
+    pub fn col2im_range_acc(
+        &self,
+        t: &[f32],
+        cols: usize,
+        q0: usize,
+        q1: usize,
+        out: &mut [f32],
+    ) {
         let Shape { c, h, w } = self.in_shape;
-        let (oh, ow) = (self.out_shape.h, self.out_shape.w);
-        let p = oh * ow;
+        debug_assert!(q0 <= q1 && q1 <= self.positions());
+        let ow = self.out_shape.w;
+        let tw = q1 - q0;
         let k = self.kernel;
-        debug_assert_eq!(t.len(), self.patch_len() * p * cols);
+        debug_assert_eq!(t.len(), self.patch_len() * tw * cols);
         debug_assert_eq!(out.len(), self.in_shape.flat() * cols);
+        if tw == 0 {
+            return;
+        }
+        let (oy0, oy1) = (q0 / ow, (q1 - 1) / ow);
         for ci in 0..c {
             for ki in 0..k {
                 for kj in 0..k {
                     let j = (ci * k + ki) * k + kj;
-                    let row = &t[j * p * cols..(j + 1) * p * cols];
-                    for oy in 0..oh {
+                    let row = &t[j * tw * cols..(j + 1) * tw * cols];
+                    for oy in oy0..=oy1 {
                         let Some(iy) = (oy * self.stride + ki)
                             .checked_sub(self.pad)
                             .filter(|&iy| iy < h)
                         else {
                             continue;
                         };
-                        for ox in 0..ow {
+                        let x0 = if oy == oy0 { q0 - oy0 * ow } else { 0 };
+                        let x1 = if oy == oy1 { q1 - oy1 * ow } else { ow };
+                        for ox in x0..x1 {
                             let Some(ix) = (ox * self.stride + kj)
                                 .checked_sub(self.pad)
                                 .filter(|&ix| ix < w)
@@ -154,7 +218,7 @@ impl ConvGeom {
                                 continue;
                             };
                             let dst = ((ci * h + iy) * w + ix) * cols;
-                            let src = (oy * ow + ox) * cols;
+                            let src = (oy * ow + ox - q0) * cols;
                             for cc in 0..cols {
                                 out[dst + cc] += row[src + cc];
                             }
@@ -247,6 +311,81 @@ mod tests {
             assert!(
                 (fwd - adj).abs() < 1e-3 * (1.0 + fwd.abs()),
                 "adjoint mismatch k={k} s={s} p={p}: {fwd} vs {adj}"
+            );
+        }
+    }
+
+    #[test]
+    fn range_unfold_tiles_reassemble_the_full_unfold() {
+        // Any partition of [0, P) into ranges reproduces the full
+        // unfold column-for-column — including tiles that split an
+        // output row mid-way (the x0/x1 clipping).
+        let mut rng = Rng::new(21);
+        for (c, h, w, k, s, p) in [
+            (2usize, 5usize, 5usize, 3usize, 1usize, 1usize),
+            (3, 6, 4, 3, 2, 1),
+            (1, 7, 7, 5, 1, 0),
+            (2, 4, 4, 1, 1, 0),
+        ] {
+            let g =
+                ConvGeom::new(Shape::new(c, h, w), 2, k, s, p).unwrap();
+            let x: Vec<f32> =
+                (0..c * h * w).map(|_| rng.normal()).collect();
+            let full = g.im2col(&x);
+            let (jn, pn) = (g.patch_len(), g.positions());
+            for tile in [1usize, 3, 7, pn] {
+                let mut q0 = 0;
+                while q0 < pn {
+                    let q1 = (q0 + tile).min(pn);
+                    let tw = q1 - q0;
+                    let mut u = vec![9.9f32; jn * tw]; // stale garbage
+                    g.im2col_range(&x, q0, q1, &mut u);
+                    for j in 0..jn {
+                        for q in q0..q1 {
+                            assert_eq!(
+                                u[j * tw + (q - q0)],
+                                full[j * pn + q],
+                                "j={j} q={q} tile={tile} k={k}"
+                            );
+                        }
+                    }
+                    q0 = q1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn range_scatter_tiles_sum_to_the_full_scatter() {
+        let mut rng = Rng::new(23);
+        let g = ConvGeom::new(Shape::new(2, 5, 4), 2, 3, 1, 1).unwrap();
+        let (jn, pn) = (g.patch_len(), g.positions());
+        let cols = 2;
+        let t: Vec<f32> =
+            (0..jn * pn * cols).map(|_| rng.normal()).collect();
+        let mut full = vec![0.0f32; g.in_shape.flat() * cols];
+        g.col2im_acc(&t, cols, &mut full);
+        let mut tiled = vec![0.0f32; g.in_shape.flat() * cols];
+        let tile = 7; // does not divide P, splits output rows
+        let mut q0 = 0;
+        while q0 < pn {
+            let q1 = (q0 + tile).min(pn);
+            let tw = q1 - q0;
+            // Gather the [J, tw·cols] tile of t.
+            let mut tt = vec![0.0f32; jn * tw * cols];
+            for j in 0..jn {
+                tt[j * tw * cols..(j + 1) * tw * cols].copy_from_slice(
+                    &t[j * pn * cols + q0 * cols
+                        ..j * pn * cols + q1 * cols],
+                );
+            }
+            g.col2im_range_acc(&tt, cols, q0, q1, &mut tiled);
+            q0 = q1;
+        }
+        for (a, b) in tiled.iter().zip(&full) {
+            assert!(
+                (a - b).abs() < 1e-5 * (1.0 + b.abs()),
+                "{a} vs {b}"
             );
         }
     }

@@ -169,6 +169,41 @@ pub fn phase_breakdown<F: FnMut()>(
 /// breaking change to the layout below.
 pub const BENCH_SCHEMA: &str = "backpack-bench/v1";
 
+/// Measure the machine-speed calibration constant recorded into every
+/// baseline document (`calib_s`): the p50 seconds of one fixed
+/// workload -- a naive 96x96x96 [`crate::linalg::reference::matmul`],
+/// which never changes with the crate's optimization work (the
+/// reference kernels exist precisely to stay frozen). When both sides
+/// of a comparison carry `calib_s`, [`compare_report`] divides it out,
+/// so a uniformly slower machine does not read as a code regression
+/// and the gate can afford to be tight (1.5x) instead of generous
+/// (3x). See `docs/bench.md`.
+pub fn measure_calibration() -> f64 {
+    const N: usize = 96;
+    let a: Vec<f32> = (0..N * N)
+        .map(|i| (i % 17) as f32 * 0.25 - 2.0)
+        .collect();
+    let b: Vec<f32> = (0..N * N)
+        .map(|i| (i % 13) as f32 * 0.5 - 3.0)
+        .collect();
+    let mut samples = Vec::new();
+    let mut sink = 0.0f32;
+    // 2 unmeasured warmup runs, then 9 samples; the workload is
+    // ~1.8 MFLOP so the whole probe stays well under 50ms.
+    for it in 0..11 {
+        let t = Instant::now();
+        let c = crate::linalg::reference::matmul(&a, &b, N, N, N);
+        let dt = t.elapsed().as_secs_f64();
+        sink += c[N * N - 1];
+        if it >= 2 {
+            samples.push(dt);
+        }
+    }
+    std::hint::black_box(sink);
+    samples.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    samples[samples.len() / 2]
+}
+
 /// One perf-baseline case: model x extension signature, bound to the
 /// dataset whose sample dim the model consumes. `batch_div` scales
 /// the requested batch down for the expensive conv graphs (min 4) so
@@ -233,6 +268,7 @@ pub fn baseline_cases() -> Vec<BaselineCase> {
 ///
 /// Schema (`backpack-bench/v1`): top-level `schema`, `backend`,
 /// `threads`, `git_rev`, `quick`, `batch`, `unit` ("seconds"),
+/// `calib_s` (machine-speed probe, [`measure_calibration`]),
 /// `total_wall_s`, and `cases[]` with `name`, `model`, `signature`,
 /// `batch`, `samples`, `mean_s`, `p50_s`, `p95_s`, `min_s`, `std_s`,
 /// `total_s`, and `phases` (per-phase p50 seconds from a traced
@@ -258,10 +294,12 @@ pub fn perf_baseline_with(
     out: &Path,
 ) -> Result<()> {
     let (iters, budget_s) = if quick { (5, 0.5) } else { (30, 3.0) };
+    let calib_s = measure_calibration();
     println!(
         "== perf baseline: backend={} threads={threads} batch={batch} \
-         iters<={iters} ==",
-        be.name()
+         iters<={iters} calib={} ==",
+        be.name(),
+        fmt_time(calib_s)
     );
     let start = Instant::now();
     let mut cases = Vec::new();
@@ -335,6 +373,7 @@ pub fn perf_baseline_with(
         "unit".to_string(),
         Json::Str("seconds".to_string()),
     );
+    root.insert("calib_s".to_string(), Json::Num(calib_s));
     root.insert(
         "total_wall_s".to_string(),
         Json::Num(start.elapsed().as_secs_f64()),
@@ -382,6 +421,15 @@ pub struct CompareCase {
 #[derive(Debug, Clone)]
 pub struct CompareReport {
     pub max_ratio: f64,
+    /// Machine-speed normalization applied to every ratio:
+    /// `baseline.calib_s / current.calib_s`, present only when both
+    /// documents carry a positive `calib_s`
+    /// ([`measure_calibration`]). A uniformly 2x-slower machine has
+    /// `calib_scale = 0.5`, cancelling the raw 2x per-case slowdown;
+    /// a genuine code regression leaves `calib_s` unchanged and is
+    /// not forgiven. `None` means raw ratios were gated (pre-calib
+    /// baselines).
+    pub calib_scale: Option<f64>,
     /// Every case of the current run, sorted by ratio descending
     /// (worst regression first); new cases without a baseline sort
     /// after all matched ones.
@@ -400,6 +448,16 @@ impl CompareReport {
 
     /// The sorted per-case ratio table on stdout (worst first).
     pub fn print_table(&self) {
+        match self.calib_scale {
+            Some(s) => println!(
+                "machine calibration: ratios scaled by {s:.3} \
+                 (baseline calib / current calib)"
+            ),
+            None => println!(
+                "machine calibration: absent on one side; gating raw \
+                 ratios"
+            ),
+        }
         for c in &self.cases {
             match (c.base_p50_s, c.ratio) {
                 (Some(b), Some(ratio)) => {
@@ -425,7 +483,8 @@ impl CompareReport {
     }
 
     /// Machine-readable result ([`COMPARE_SCHEMA`]): `schema`,
-    /// `max_ratio`, `passed`, `missing[]`, and `cases[]` rows with
+    /// `max_ratio`, `calib_scale` (null when either side lacks a
+    /// `calib_s`), `passed`, `missing[]`, and `cases[]` rows with
     /// `name` / `base_p50_s` / `current_p50_s` / `ratio` (null for
     /// new cases) / `regressed`, in table order (worst first).
     pub fn to_json(&self) -> Json {
@@ -456,6 +515,10 @@ impl CompareReport {
             Json::Str(COMPARE_SCHEMA.to_string()),
         );
         root.insert("max_ratio".to_string(), Json::Num(self.max_ratio));
+        root.insert(
+            "calib_scale".to_string(),
+            self.calib_scale.map_or(Json::Null, Json::Num),
+        );
         root.insert("passed".to_string(), Json::Bool(self.passed()));
         root.insert(
             "missing".to_string(),
@@ -544,11 +607,14 @@ pub fn compare_files(
 }
 
 /// The perf regression gate: for every case of `baseline` (matched to
-/// `current` by `name`), fail when `current_p50 / baseline_p50 >
-/// max_ratio`. The factor is deliberately generous (CI default 3x):
-/// shared runners are noisy and the committed baseline is a coarse
-/// envelope, so the gate exists to catch order-of-magnitude
-/// regressions, not percent-level drift. Cases only present in
+/// `current` by `name`), fail when the calibration-normalized
+/// `current_p50 / baseline_p50` exceeds `max_ratio`. With the
+/// machine-speed probe (`calib_s`, [`measure_calibration`]) on both
+/// sides, host-speed differences divide out and the gate can sit at
+/// the CI default of 1.5x -- tight enough to catch a lost SIMD
+/// dispatch or a de-fused conv path, while a uniformly slower runner
+/// still passes. Pre-calibration baselines degrade to raw ratios
+/// (pick a generous factor by hand for those). Cases only present in
 /// `current` are reported but never fail (the grid may grow ahead of
 /// a baseline refresh); cases missing *from* `current` fail, so grid
 /// shrinkage needs an explicit baseline update.
@@ -624,6 +690,22 @@ pub fn compare_report(
              --clients or refresh the baseline (docs/bench.md)"
         );
     }
+    // Machine-speed normalization: when both documents carry the
+    // calibration probe ([`measure_calibration`]), divide it out so
+    // the gate measures *code* slowdown, not *machine* slowdown.
+    //   effective = (cur_p50 / cur_calib) / (base_p50 / base_calib)
+    //             = raw_ratio * (base_calib / cur_calib)
+    // Either side missing (or non-positive) degrades to raw ratios.
+    let calib = |d: &Json| -> Option<f64> {
+        d.opt("calib_s")
+            .and_then(|v| v.as_f64().ok())
+            .filter(|s| *s > 0.0)
+    };
+    let calib_scale = match (calib(baseline), calib(current)) {
+        (Some(b), Some(c)) => Some(b / c),
+        _ => None,
+    };
+    let scale = calib_scale.unwrap_or(1.0);
     let mut base = std::collections::BTreeMap::new();
     for c in baseline.get("cases")?.as_arr()? {
         base.insert(
@@ -638,7 +720,7 @@ pub fn compare_report(
         let p50 = c.get("p50_s")?.as_f64()?;
         seen.insert(name.clone());
         let base_p50 = base.get(&name).copied();
-        let ratio = base_p50.map(|b| p50 / b.max(1e-12));
+        let ratio = base_p50.map(|b| p50 / b.max(1e-12) * scale);
         cases.push(CompareCase {
             name,
             base_p50_s: base_p50,
@@ -662,7 +744,185 @@ pub fn compare_report(
         .filter(|k| !seen.contains(*k))
         .cloned()
         .collect();
-    Ok(CompareReport { max_ratio, cases, missing })
+    Ok(CompareReport { max_ratio, calib_scale, cases, missing })
+}
+
+/// Schema identifier of the kernel microbench document
+/// ([`kernel_microbench`] -> `KERNELBENCH.json`, a CI artifact next
+/// to `BENCH_native.json`); bump on any breaking layout change.
+pub const KERNELBENCH_SCHEMA: &str = "backpack-kernelbench/v1";
+
+/// One kernel-microbench row: dispatched vs scalar p50 of one matmul
+/// variant at one shape.
+fn kernel_case(
+    kernel: &str,
+    n: usize,
+    p: usize,
+    q: usize,
+    dispatched: &Stats,
+    scalar: &Stats,
+) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert(
+        "name".to_string(),
+        Json::Str(format!("{kernel}_{n}x{p}x{q}")),
+    );
+    o.insert("kernel".to_string(), Json::Str(kernel.to_string()));
+    o.insert("n".to_string(), Json::Num(n as f64));
+    o.insert("p".to_string(), Json::Num(p as f64));
+    o.insert("q".to_string(), Json::Num(q as f64));
+    o.insert("p50_s".to_string(), Json::Num(dispatched.p50));
+    o.insert("scalar_p50_s".to_string(), Json::Num(scalar.p50));
+    o.insert(
+        "speedup".to_string(),
+        Json::Num(scalar.p50 / dispatched.p50.max(1e-12)),
+    );
+    o.insert(
+        "samples".to_string(),
+        Json::Num(dispatched.samples.len() as f64),
+    );
+    Json::Obj(o)
+}
+
+/// Time the dispatched inner kernels (SIMD where the host supports
+/// it, [`crate::linalg::simd_active`]) against their retained scalar
+/// twins over a few shapes that exercise both the 8-lane vector body
+/// and the remainder tails, and write the machine-readable summary
+/// ([`KERNELBENCH_SCHEMA`]). On a scalar-fallback host the speedups
+/// hover around 1.0 -- the document records `simd: false` so the CI
+/// artifact stays interpretable; there is deliberately no gate on the
+/// speedup (microbench noise on shared runners is not a correctness
+/// signal -- the property suite owns correctness, `bench --compare`
+/// owns end-to-end perf).
+pub fn kernel_microbench(out: &Path) -> Result<()> {
+    let simd = crate::linalg::simd_active();
+    println!(
+        "== kernel microbench: dispatched ({}) vs scalar ==",
+        if simd { "simd" } else { "scalar fallback" }
+    );
+    let start = Instant::now();
+    let budget = Duration::from_millis(250);
+    // Shapes: one cache-resident cube, one past the 64-wide tile with
+    // odd remainders on every axis, one wide-output case stressing
+    // the axpy row kernel.
+    let shapes = [(64usize, 64usize, 64usize), (96, 83, 70), (40, 33, 200)];
+    let fill = |len: usize, m: usize| -> Vec<f32> {
+        (0..len).map(|i| (i % m) as f32 * 0.03 - 1.0).collect()
+    };
+    let mut cases = Vec::new();
+    for (n, p, q) in shapes {
+        {
+            let a = fill(n * p, 17);
+            let b = fill(n * q, 13);
+            let d = bench(
+                &format!("matmul_tn_{n}x{p}x{q}"),
+                2,
+                200,
+                budget,
+                || {
+                    std::hint::black_box(crate::linalg::matmul_tn(
+                        &a, &b, n, p, q,
+                    ));
+                },
+            );
+            let s = bench(
+                &format!("matmul_tn_{n}x{p}x{q}_scalar"),
+                2,
+                200,
+                budget,
+                || {
+                    std::hint::black_box(
+                        crate::linalg::matmul_tn_scalar(&a, &b, n, p, q),
+                    );
+                },
+            );
+            cases.push(kernel_case("matmul_tn", n, p, q, &d, &s));
+        }
+        {
+            let a = fill(p * n, 17);
+            let b = fill(q * n, 13);
+            let d = bench(
+                &format!("matmul_nt_{n}x{p}x{q}"),
+                2,
+                200,
+                budget,
+                || {
+                    std::hint::black_box(crate::linalg::matmul_nt(
+                        &a, &b, p, n, q,
+                    ));
+                },
+            );
+            let s = bench(
+                &format!("matmul_nt_{n}x{p}x{q}_scalar"),
+                2,
+                200,
+                budget,
+                || {
+                    std::hint::black_box(
+                        crate::linalg::matmul_nt_scalar(&a, &b, p, n, q),
+                    );
+                },
+            );
+            cases.push(kernel_case("matmul_nt", n, p, q, &d, &s));
+        }
+        {
+            let a = fill(n * p, 17);
+            let b = fill(p * q, 13);
+            let d = bench(
+                &format!("matmul_{n}x{p}x{q}"),
+                2,
+                200,
+                budget,
+                || {
+                    std::hint::black_box(crate::linalg::matmul(
+                        &a, &b, n, p, q,
+                    ));
+                },
+            );
+            let s = bench(
+                &format!("matmul_{n}x{p}x{q}_scalar"),
+                2,
+                200,
+                budget,
+                || {
+                    std::hint::black_box(crate::linalg::matmul_scalar(
+                        &a, &b, n, p, q,
+                    ));
+                },
+            );
+            cases.push(kernel_case("matmul", n, p, q, &d, &s));
+        }
+    }
+    let n_cases = cases.len();
+    let mut root = std::collections::BTreeMap::new();
+    root.insert(
+        "schema".to_string(),
+        Json::Str(KERNELBENCH_SCHEMA.to_string()),
+    );
+    root.insert("simd".to_string(), Json::Bool(simd));
+    root.insert("git_rev".to_string(), Json::Str(git_rev()));
+    root.insert(
+        "unit".to_string(),
+        Json::Str("seconds".to_string()),
+    );
+    root.insert("calib_s".to_string(), Json::Num(measure_calibration()));
+    root.insert(
+        "total_wall_s".to_string(),
+        Json::Num(start.elapsed().as_secs_f64()),
+    );
+    root.insert("cases".to_string(), Json::Arr(cases));
+    if let Some(dir) = out.parent().filter(|d| !d.as_os_str().is_empty())
+    {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(out, Json::Obj(root).to_string_json() + "\n")
+        .with_context(|| format!("write {}", out.display()))?;
+    println!(
+        "wrote {} ({n_cases} cases, {:.1}s)",
+        out.display(),
+        start.elapsed().as_secs_f64()
+    );
+    Ok(())
 }
 
 /// Git revision for the baseline provenance: `GITHUB_SHA` when CI
@@ -805,6 +1065,7 @@ mod tests {
         assert_eq!(v.get("backend").unwrap().as_str().unwrap(),
                    "native");
         assert_eq!(v.get("threads").unwrap().as_usize().unwrap(), 2);
+        assert!(v.get("calib_s").unwrap().as_f64().unwrap() > 0.0);
         let cases = v.get("cases").unwrap().as_arr().unwrap();
         assert_eq!(cases.len(), grid.len());
         for c in cases {
@@ -1135,6 +1396,118 @@ mod tests {
         // (No stronger shape assertion: other tests in this binary
         // may trace engine runs concurrently through the same global
         // recorder, adding phases of their own to the window.)
+    }
+
+    /// Attach a `calib_s` machine-speed probe to a bench document.
+    fn with_calib(v: Json, calib: f64) -> Json {
+        let Json::Obj(mut root) = v else { unreachable!() };
+        root.insert("calib_s".to_string(), Json::Num(calib));
+        Json::Obj(root)
+    }
+
+    #[test]
+    fn calibration_probe_is_positive_and_quick() {
+        let t = Instant::now();
+        let c = measure_calibration();
+        assert!(c > 0.0, "{c}");
+        // 11 naive 96^3 matmuls; generous ceiling even for debug
+        // builds on a loaded runner.
+        assert!(t.elapsed().as_secs_f64() < 30.0);
+    }
+
+    #[test]
+    fn compare_divides_out_a_uniform_machine_slowdown() {
+        // Everything doubled -- the per-case p50s AND the calibration
+        // probe. That is a slower machine, not slower code; the tight
+        // 1.5x gate must pass and the report must say how.
+        let base =
+            with_calib(doc(&[("a_grad_n8", 0.010)]), 0.001);
+        let cur =
+            with_calib(doc(&[("a_grad_n8", 0.020)]), 0.002);
+        let r = compare_report(&base, &cur, 1.5).unwrap();
+        assert_eq!(r.calib_scale, Some(0.5));
+        assert!((r.cases[0].ratio.unwrap() - 1.0).abs() < 1e-9);
+        assert!(r.passed());
+        compare_baselines(&base, &cur, 1.5).unwrap();
+    }
+
+    #[test]
+    fn calibration_does_not_forgive_code_regressions() {
+        // The acceptance self-test scenario with calib on both
+        // sides: the p50s scale 10x but the probe does not (same
+        // machine, slower code) -- the gate must still trip.
+        let base =
+            with_calib(doc(&[("a_grad_n8", 0.010)]), 0.001);
+        let slow =
+            with_calib(doc(&[("a_grad_n8", 0.100)]), 0.001);
+        let r = compare_report(&base, &slow, 1.5).unwrap();
+        assert_eq!(r.calib_scale, Some(1.0));
+        assert!(!r.passed());
+        assert!(compare_baselines(&base, &slow, 3.0).is_err());
+    }
+
+    #[test]
+    fn compare_without_calibration_gates_raw_ratios() {
+        // A pre-calibration baseline (or a hand-built document)
+        // degrades to raw ratios instead of erroring out.
+        let base = doc(&[("a_grad_n8", 0.010)]);
+        let cur = with_calib(doc(&[("a_grad_n8", 0.020)]), 0.002);
+        let r = compare_report(&base, &cur, 1.5).unwrap();
+        assert_eq!(r.calib_scale, None);
+        assert!(!r.passed(), "raw 2x must trip a 1.5x gate");
+        let v = Json::parse(&r.to_json().to_string_json()).unwrap();
+        assert!(matches!(
+            v.get("calib_scale").unwrap(),
+            Json::Null
+        ));
+    }
+
+    #[test]
+    fn compare_report_json_carries_the_calib_scale() {
+        let base =
+            with_calib(doc(&[("a_grad_n8", 0.010)]), 0.002);
+        let cur =
+            with_calib(doc(&[("a_grad_n8", 0.010)]), 0.001);
+        let r = compare_report(&base, &cur, 1.5).unwrap();
+        let v = Json::parse(&r.to_json().to_string_json()).unwrap();
+        assert!(
+            (v.get("calib_scale").unwrap().as_f64().unwrap() - 2.0)
+                .abs()
+                < 1e-9
+        );
+        // Current machine is 2x faster; raw 1.0x becomes 2.0x and
+        // trips the gate -- calibration cuts both ways, which is what
+        // keeps a fast dev box from laundering a regression into a
+        // baseline refresh.
+        assert!(!r.passed());
+    }
+
+    #[test]
+    fn kernel_microbench_writes_parseable_json() {
+        let path = std::env::temp_dir()
+            .join("backpack_kernelbench_test")
+            .join("KERNELBENCH_test.json");
+        kernel_microbench(&path).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(
+            v.get("schema").unwrap().as_str().unwrap(),
+            KERNELBENCH_SCHEMA
+        );
+        // simd is an honest bool either way; the artifact stays
+        // interpretable on scalar-fallback hosts.
+        let _ = v.get("simd").unwrap().as_bool().unwrap();
+        assert!(v.get("calib_s").unwrap().as_f64().unwrap() > 0.0);
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 9, "3 kernels x 3 shapes");
+        for c in cases {
+            assert!(c.get("p50_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(
+                c.get("scalar_p50_s").unwrap().as_f64().unwrap() > 0.0
+            );
+            assert!(c.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -9,8 +9,10 @@ use anyhow::{bail, Result};
 
 /// Flags that never take a value (needed to disambiguate
 /// `--verbose positional` without clap-style per-command schemas).
-const BOOL_SWITCHES: &[&str] =
-    &["verbose", "help", "force", "quiet", "quick", "metrics", "stdio"];
+const BOOL_SWITCHES: &[&str] = &[
+    "verbose", "help", "force", "quiet", "quick", "metrics", "stdio",
+    "kernels",
+];
 
 #[derive(Debug, Default)]
 pub struct Args {

@@ -6,11 +6,23 @@
 //! dimensions (≤ ~1.7k for All-CNN-C), where a cache-blocked scalar
 //! Cholesky is adequate. The dense `matmul*` kernels below dominate
 //! the native backend's hot call sites; they are cache-blocked
-//! (`BLOCK`) and have `*_par` row-split variants (see
-//! `crate::parallel`) that are bit-for-bit equal to the serial
-//! kernels for any thread count.
+//! (`BLOCK`) with an explicit 8-lane SIMD inner microkernel on
+//! x86_64 (AVX2 + FMA, selected once at runtime with a scalar
+//! fallback — see [`simd_active`]) and have `*_par` row-split
+//! variants (see `crate::parallel`) that are bit-for-bit equal to the
+//! serial kernels for any thread count.
+//!
+//! Numerical contract of the SIMD path (DESIGN.md §14): the axpy-form
+//! kernels (`matmul`, `matmul_tn`) keep the per-element accumulation
+//! *order* of the scalar kernels and differ only by FMA's single
+//! rounding, and the dot-form kernel (`matmul_nt`) reduces in 8
+//! interleaved lanes; both are within ~1e-5 relative of the retained
+//! scalar reference (`matmul_scalar` & friends, pinned by
+//! `tests/proptests.rs`), and every kernel is deterministic: the same
+//! inputs give bit-identical outputs on every call.
 
 use anyhow::{bail, Result};
+use std::ops::Range;
 
 /// Row-major square matrix view helpers.
 #[derive(Debug, Clone)]
@@ -171,13 +183,14 @@ impl Cholesky {
 /// keep an output tile plus an operand panel L1/L2-resident at the
 /// native backend's hot shapes (din up to 784, dout up to 128, batch
 /// shards up to 128). Blocks are visited in index order, so per-element
-/// accumulation order -- and therefore the f32 result -- is identical
-/// to the unblocked kernels.
+/// accumulation order -- and therefore the f32 result up to FMA
+/// contraction on the SIMD path -- is identical to the unblocked
+/// kernels.
 const BLOCK: usize = 64;
 
 /// Work threshold (multiply-adds) below which the `*_par` kernels stay
-/// serial: under ~1 Mflop the scoped-thread fork/join overhead beats
-/// the speedup.
+/// serial: under ~1 Mflop handing shards to the worker pool costs more
+/// than the speedup.
 const PAR_MIN_MACS: usize = 1 << 20;
 
 /// Credit one dense contraction (`macs` multiply-adds = 2x FLOPs) to
@@ -190,32 +203,290 @@ fn count_macs(macs: usize) {
     crate::obs::add(crate::obs::Counter::MatmulFlops, 2 * macs as u64);
 }
 
+/// True when the runtime-dispatched matmul kernels run the AVX2+FMA
+/// 8-lane microkernels; false on non-x86_64 targets, on CPUs without
+/// AVX2/FMA, and when the `BACKPACK_SIMD=0` environment override is
+/// set. Decided once on first use and cached for the process (the
+/// override is read at that moment, not per call), so serial and
+/// pooled callers always agree on the kernel — which is what keeps
+/// the `*_par` variants bit-for-bit equal to serial.
+pub fn simd_active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::OnceLock;
+        static ACTIVE: OnceLock<bool> = OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            let off = std::env::var("BACKPACK_SIMD")
+                .map(|v| v.trim() == "0")
+                .unwrap_or(false);
+            !off && is_x86_feature_detected!("avx2")
+                && is_x86_feature_detected!("fma")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// AVX2 + FMA microkernels (x86_64 only). Each `*_rows` kernel below
+/// mirrors its scalar twin's blocked loop nest exactly; only the
+/// innermost contraction is replaced by an 8-lane body with a scalar
+/// remainder tail. Everything is `#[target_feature]`-gated and only
+/// reached through the [`simd_active`] runtime check.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::BLOCK;
+    use std::arch::x86_64::*;
+    use std::ops::Range;
+
+    /// `c[0..len] += av * b[0..len]`: the axpy microkernel shared by
+    /// the NN and TN kernels. FMA fuses the multiply-add per element;
+    /// accumulation order per output element is unchanged.
+    ///
+    /// # Safety
+    /// `b` and `c` must be valid for `len` reads/writes; caller must
+    /// have verified AVX2+FMA support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[inline]
+    unsafe fn axpy(av: f32, b: *const f32, c: *mut f32, len: usize) {
+        let va = _mm256_set1_ps(av);
+        let mut j = 0;
+        while j + 8 <= len {
+            let vb = _mm256_loadu_ps(b.add(j));
+            let vc = _mm256_loadu_ps(c.add(j));
+            _mm256_storeu_ps(c.add(j), _mm256_fmadd_ps(va, vb, vc));
+            j += 8;
+        }
+        while j < len {
+            *c.add(j) += av * *b.add(j);
+            j += 1;
+        }
+    }
+
+    /// 8-lane FMA dot product with a horizontal sum at the end (this
+    /// *does* re-associate the reduction relative to the scalar zip
+    /// sum — hence the 1e-5 property-test tolerance on `matmul_nt`).
+    ///
+    /// # Safety
+    /// `a` and `b` must be valid for `len` reads; caller must have
+    /// verified AVX2+FMA support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[inline]
+    unsafe fn dot(a: *const f32, b: *const f32, len: usize) -> f32 {
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= len {
+            let va = _mm256_loadu_ps(a.add(j));
+            let vb = _mm256_loadu_ps(b.add(j));
+            acc = _mm256_fmadd_ps(va, vb, acc);
+            j += 8;
+        }
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps(acc, 1);
+        let s4 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 1));
+        let mut s = _mm_cvtss_f32(s1);
+        while j < len {
+            s += *a.add(j) * *b.add(j);
+            j += 1;
+        }
+        s
+    }
+
+    /// SIMD twin of `matmul_tn_rows_scalar`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support and the slice-shape
+    /// invariants of the dispatching wrapper.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_tn_rows(
+        a: &[f32],
+        b: &[f32],
+        n: usize,
+        p: usize,
+        q: usize,
+        rows: Range<usize>,
+        c: &mut [f32],
+    ) {
+        let i_off = rows.start;
+        for s0 in (0..n).step_by(BLOCK) {
+            let s1 = (s0 + BLOCK).min(n);
+            for i0 in (rows.start..rows.end).step_by(BLOCK) {
+                let i1 = (i0 + BLOCK).min(rows.end);
+                for j0 in (0..q).step_by(BLOCK) {
+                    let j1 = (j0 + BLOCK).min(q);
+                    for s in s0..s1 {
+                        let (ra, rb) = (s * p, s * q);
+                        for i in i0..i1 {
+                            let av = a[ra + i];
+                            if av != 0.0 {
+                                let rc = (i - i_off) * q;
+                                axpy(
+                                    av,
+                                    b.as_ptr().add(rb + j0),
+                                    c.as_mut_ptr().add(rc + j0),
+                                    j1 - j0,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// SIMD twin of `matmul_nt_rows_scalar` (`acc` selects `+=` over
+    /// `=` for the output element, exactly as in the scalar twin).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support and the slice-shape
+    /// invariants of the dispatching wrapper.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_nt_rows(
+        a: &[f32],
+        b: &[f32],
+        n: usize,
+        q: usize,
+        rows: Range<usize>,
+        c: &mut [f32],
+        acc: bool,
+    ) {
+        let i_off = rows.start;
+        for i0 in (rows.start..rows.end).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(rows.end);
+            for j0 in (0..q).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(q);
+                for i in i0..i1 {
+                    let ra = i * n;
+                    let rc = (i - i_off) * q;
+                    for j in j0..j1 {
+                        let rb = j * n;
+                        let s =
+                            dot(a.as_ptr().add(ra), b.as_ptr().add(rb), n);
+                        if acc {
+                            c[rc + j] += s;
+                        } else {
+                            c[rc + j] = s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// SIMD twin of `matmul_rows_scalar`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support and the slice-shape
+    /// invariants of the dispatching wrapper.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_rows(
+        a: &[f32],
+        b: &[f32],
+        q: usize,
+        r: usize,
+        rows: Range<usize>,
+        c: &mut [f32],
+    ) {
+        let i_off = rows.start;
+        for i0 in (rows.start..rows.end).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(rows.end);
+            for k0 in (0..q).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(q);
+                for i in i0..i1 {
+                    let crow = (i - i_off) * r;
+                    for k in k0..k1 {
+                        let aik = a[i * q + k];
+                        if aik != 0.0 {
+                            let brow = k * r;
+                            axpy(
+                                aik,
+                                b.as_ptr().add(brow),
+                                c.as_mut_ptr().add(crow),
+                                r,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Dense `C = Aᵀ B` with a shared leading (batch) axis: A is [n, p],
 /// B is [n, q], C is [p, q] -- the contraction the native backend's
 /// gradient/factor extractions reduce to (mirror of the Python
 /// `ops.matmul_tn` kernel). Cache-blocked over all three axes; inner
-/// loops stream rows of B and C.
+/// loops stream rows of B and C through the dispatched microkernel.
 pub fn matmul_tn(
+    a: &[f32], b: &[f32], n: usize, p: usize, q: usize,
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; p * q];
+    matmul_tn_into(a, b, n, p, q, &mut c);
+    c
+}
+
+/// [`matmul_tn`] writing into a caller-provided buffer (overwritten),
+/// so tile-streaming callers (the fused conv path) can reuse one
+/// allocation across tiles.
+pub fn matmul_tn_into(
+    a: &[f32], b: &[f32], n: usize, p: usize, q: usize, c: &mut [f32],
+) {
+    assert_eq!(a.len(), n * p);
+    assert_eq!(b.len(), n * q);
+    count_macs(n * p * q);
+    c.fill(0.0);
+    matmul_tn_rows(a, b, n, p, q, 0..p, c);
+}
+
+/// [`matmul_tn`] forced onto the blocked *scalar* inner loops,
+/// bypassing runtime SIMD dispatch. This is the retained reference
+/// the property suite and the kernel microbench compare against.
+pub fn matmul_tn_scalar(
     a: &[f32], b: &[f32], n: usize, p: usize, q: usize,
 ) -> Vec<f32> {
     assert_eq!(a.len(), n * p);
     assert_eq!(b.len(), n * q);
     count_macs(n * p * q);
     let mut c = vec![0.0f32; p * q];
-    matmul_tn_rows(a, b, n, p, q, 0..p, &mut c);
+    matmul_tn_rows_scalar(a, b, n, p, q, 0..p, &mut c);
     c
 }
 
 /// Row slab `C[rows, :] = (Aᵀ B)[rows, :]` of [`matmul_tn`], written
 /// into `c` (len `rows.len() * q`). The shared building block of the
-/// serial and parallel drivers.
+/// serial and parallel drivers; picks the SIMD or scalar inner kernel
+/// once per slab.
 fn matmul_tn_rows(
     a: &[f32],
     b: &[f32],
     n: usize,
     p: usize,
     q: usize,
-    rows: std::ops::Range<usize>,
+    rows: Range<usize>,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), rows.len() * q);
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2+FMA presence checked by `simd_active`; shapes
+        // checked by the assert above and the public entry points.
+        unsafe { x86::matmul_tn_rows(a, b, n, p, q, rows, c) };
+        return;
+    }
+    matmul_tn_rows_scalar(a, b, n, p, q, rows, c);
+}
+
+/// Scalar inner loops of [`matmul_tn_rows`].
+fn matmul_tn_rows_scalar(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    p: usize,
+    q: usize,
+    rows: Range<usize>,
     c: &mut [f32],
 ) {
     assert_eq!(c.len(), rows.len() * q);
@@ -244,12 +515,14 @@ fn matmul_tn_rows(
 }
 
 /// Shared driver of the `*_par` kernels: split the `p` output rows
-/// into per-thread slabs, run `kernel` on each slab's sub-buffer, and
-/// concatenate in slab order. Each thread owns a disjoint row slab,
-/// so the result is bit-for-bit identical to the serial kernel.
+/// into per-shard slabs, run `kernel` on each slab's sub-buffer on the
+/// persistent worker pool, and concatenate in slab order. Each shard
+/// owns a disjoint row slab and both sides of the pool run the same
+/// dispatched microkernel, so the result is bit-for-bit identical to
+/// the serial kernel.
 fn par_rows<K>(p: usize, q: usize, threads: usize, kernel: K) -> Vec<f32>
 where
-    K: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+    K: Fn(Range<usize>, &mut [f32]) + Sync,
 {
     let slabs = crate::parallel::shards(p, threads);
     let parts = crate::parallel::par_map(&slabs, |rows| {
@@ -264,9 +537,8 @@ where
     c
 }
 
-/// [`matmul_tn`] with the output rows split across `threads` scoped
-/// threads (bit-for-bit identical to serial; serial below
-/// `PAR_MIN_MACS`).
+/// [`matmul_tn`] with the output rows split across the worker pool
+/// (bit-for-bit identical to serial; serial below `PAR_MIN_MACS`).
 pub fn matmul_tn_par(
     a: &[f32], b: &[f32], n: usize, p: usize, q: usize, threads: usize,
 ) -> Vec<f32> {
@@ -291,18 +563,68 @@ pub fn matmul_nt(
     assert_eq!(b.len(), q * n);
     count_macs(p * n * q);
     let mut c = vec![0.0f32; p * q];
-    matmul_nt_rows(a, b, n, q, 0..p, &mut c);
+    matmul_nt_rows(a, b, n, q, 0..p, &mut c, false);
     c
 }
 
-/// Row slab `C[rows, :] = (A Bᵀ)[rows, :]` of [`matmul_nt`].
+/// `C += A Bᵀ` accumulated into a caller-provided [p, q] buffer — the
+/// contraction shape of the fused conv path, which sums one `A Bᵀ`
+/// product per streamed column tile into a single accumulator.
+pub fn matmul_nt_acc(
+    a: &[f32], b: &[f32], p: usize, n: usize, q: usize, c: &mut [f32],
+) {
+    assert_eq!(a.len(), p * n);
+    assert_eq!(b.len(), q * n);
+    assert_eq!(c.len(), p * q);
+    count_macs(p * n * q);
+    matmul_nt_rows(a, b, n, q, 0..p, c, true);
+}
+
+/// [`matmul_nt`] forced onto the blocked *scalar* inner loops,
+/// bypassing runtime SIMD dispatch (reference for tests/microbench).
+pub fn matmul_nt_scalar(
+    a: &[f32], b: &[f32], p: usize, n: usize, q: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), p * n);
+    assert_eq!(b.len(), q * n);
+    count_macs(p * n * q);
+    let mut c = vec![0.0f32; p * q];
+    matmul_nt_rows_scalar(a, b, n, q, 0..p, &mut c, false);
+    c
+}
+
+/// Row slab `C[rows, :] = (A Bᵀ)[rows, :]` of [`matmul_nt`] (`acc`
+/// accumulates instead of overwriting); picks the SIMD or scalar
+/// inner kernel once per slab.
 fn matmul_nt_rows(
     a: &[f32],
     b: &[f32],
     n: usize,
     q: usize,
-    rows: std::ops::Range<usize>,
+    rows: Range<usize>,
     c: &mut [f32],
+    acc: bool,
+) {
+    assert_eq!(c.len(), rows.len() * q);
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2+FMA presence checked by `simd_active`; shapes
+        // checked by the assert above and the public entry points.
+        unsafe { x86::matmul_nt_rows(a, b, n, q, rows, c, acc) };
+        return;
+    }
+    matmul_nt_rows_scalar(a, b, n, q, rows, c, acc);
+}
+
+/// Scalar inner loops of [`matmul_nt_rows`].
+fn matmul_nt_rows_scalar(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    q: usize,
+    rows: Range<usize>,
+    c: &mut [f32],
+    acc: bool,
 ) {
     assert_eq!(c.len(), rows.len() * q);
     let i_off = rows.start;
@@ -320,14 +642,18 @@ fn matmul_nt_rows(
                         .zip(&b[rb..rb + n])
                         .map(|(x, y)| x * y)
                         .sum();
-                    c[rc + j] = s;
+                    if acc {
+                        c[rc + j] += s;
+                    } else {
+                        c[rc + j] = s;
+                    }
                 }
             }
         }
     }
 }
 
-/// [`matmul_nt`] with the output rows split across scoped threads
+/// [`matmul_nt`] with the output rows split across the worker pool
 /// (bit-for-bit identical to serial; serial below `PAR_MIN_MACS`).
 pub fn matmul_nt_par(
     a: &[f32], b: &[f32], p: usize, n: usize, q: usize, threads: usize,
@@ -339,28 +665,71 @@ pub fn matmul_nt_par(
     assert_eq!(b.len(), q * n);
     count_macs(p * n * q);
     par_rows(p, q, threads, |rows, c| {
-        matmul_nt_rows(a, b, n, q, rows, c)
+        matmul_nt_rows(a, b, n, q, rows, c, false)
     })
 }
 
 /// Dense `C = A B` (row-major, [p,q]x[q,r]), tiled so a panel of B
 /// rows is reused across the A rows of a block.
 pub fn matmul(a: &[f32], b: &[f32], p: usize, q: usize, r: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; p * r];
+    matmul_into(a, b, p, q, r, &mut c);
+    c
+}
+
+/// [`matmul`] writing into a caller-provided buffer (overwritten), so
+/// tile-streaming callers can reuse one allocation across tiles.
+pub fn matmul_into(
+    a: &[f32], b: &[f32], p: usize, q: usize, r: usize, c: &mut [f32],
+) {
+    assert_eq!(a.len(), p * q);
+    assert_eq!(b.len(), q * r);
+    count_macs(p * q * r);
+    c.fill(0.0);
+    matmul_rows(a, b, q, r, 0..p, c);
+}
+
+/// [`matmul`] forced onto the blocked *scalar* inner loops, bypassing
+/// runtime SIMD dispatch (reference for tests/microbench).
+pub fn matmul_scalar(
+    a: &[f32], b: &[f32], p: usize, q: usize, r: usize,
+) -> Vec<f32> {
     assert_eq!(a.len(), p * q);
     assert_eq!(b.len(), q * r);
     count_macs(p * q * r);
     let mut c = vec![0.0f32; p * r];
-    matmul_rows(a, b, q, r, 0..p, &mut c);
+    matmul_rows_scalar(a, b, q, r, 0..p, &mut c);
     c
 }
 
-/// Row slab `C[rows, :] = (A B)[rows, :]` of [`matmul`].
+/// Row slab `C[rows, :] = (A B)[rows, :]` of [`matmul`]; picks the
+/// SIMD or scalar inner kernel once per slab.
 fn matmul_rows(
     a: &[f32],
     b: &[f32],
     q: usize,
     r: usize,
-    rows: std::ops::Range<usize>,
+    rows: Range<usize>,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), rows.len() * r);
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: AVX2+FMA presence checked by `simd_active`; shapes
+        // checked by the assert above and the public entry points.
+        unsafe { x86::matmul_rows(a, b, q, r, rows, c) };
+        return;
+    }
+    matmul_rows_scalar(a, b, q, r, rows, c);
+}
+
+/// Scalar inner loops of [`matmul_rows`].
+fn matmul_rows_scalar(
+    a: &[f32],
+    b: &[f32],
+    q: usize,
+    r: usize,
+    rows: Range<usize>,
     c: &mut [f32],
 ) {
     assert_eq!(c.len(), rows.len() * r);
@@ -385,7 +754,7 @@ fn matmul_rows(
     }
 }
 
-/// [`matmul`] with the output rows split across scoped threads
+/// [`matmul`] with the output rows split across the worker pool
 /// (bit-for-bit identical to serial; serial below `PAR_MIN_MACS`).
 pub fn matmul_par(
     a: &[f32], b: &[f32], p: usize, q: usize, r: usize, threads: usize,
@@ -399,6 +768,58 @@ pub fn matmul_par(
     par_rows(p, r, threads, |rows, c| {
         matmul_rows(a, b, q, r, rows, c)
     })
+}
+
+/// Unblocked, unvectorized triple-loop kernels: the ground-truth
+/// oracles the property suite (`tests/proptests.rs`) and the unit
+/// tests below compare every production kernel against. Deliberately
+/// naive — no tiling, no zero-skip, no SIMD, no obs counting — so a
+/// bug in the fast paths cannot be mirrored here.
+pub mod reference {
+    /// `C = A B`, A [p,q] x B [q,r].
+    pub fn matmul(
+        a: &[f32], b: &[f32], p: usize, q: usize, r: usize,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; p * r];
+        for i in 0..p {
+            for k in 0..q {
+                for j in 0..r {
+                    c[i * r + j] += a[i * q + k] * b[k * r + j];
+                }
+            }
+        }
+        c
+    }
+
+    /// `C = Aᵀ B`, A [n,p] x B [n,q] sharing the leading axis.
+    pub fn matmul_tn(
+        a: &[f32], b: &[f32], n: usize, p: usize, q: usize,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; p * q];
+        for s in 0..n {
+            for i in 0..p {
+                for j in 0..q {
+                    c[i * q + j] += a[s * p + i] * b[s * q + j];
+                }
+            }
+        }
+        c
+    }
+
+    /// `C = A Bᵀ`, A [p,n] x B [q,n] contracting the trailing axis.
+    pub fn matmul_nt(
+        a: &[f32], b: &[f32], p: usize, n: usize, q: usize,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; p * q];
+        for i in 0..p {
+            for j in 0..q {
+                for s in 0..n {
+                    c[i * q + j] += a[i * n + s] * b[j * n + s];
+                }
+            }
+        }
+        c
+    }
 }
 
 #[cfg(test)]
@@ -526,36 +947,6 @@ mod tests {
         }
     }
 
-    /// Unblocked reference kernels: the shapes in
-    /// `blocked_kernels_match_reference` cross the 64-wide BLOCK edge,
-    /// so any tiling mistake (wrong offset, dropped remainder tile)
-    /// shows up against these.
-    fn ref_tn(a: &[f32], b: &[f32], n: usize, p: usize, q: usize)
-        -> Vec<f32> {
-        let mut c = vec![0.0f32; p * q];
-        for s in 0..n {
-            for i in 0..p {
-                for j in 0..q {
-                    c[i * q + j] += a[s * p + i] * b[s * q + j];
-                }
-            }
-        }
-        c
-    }
-
-    fn ref_nn(a: &[f32], b: &[f32], p: usize, q: usize, r: usize)
-        -> Vec<f32> {
-        let mut c = vec![0.0f32; p * r];
-        for i in 0..p {
-            for j in 0..r {
-                for k in 0..q {
-                    c[i * r + j] += a[i * q + k] * b[k * r + j];
-                }
-            }
-        }
-        c
-    }
-
     #[test]
     fn blocked_kernels_match_reference_across_block_edges() {
         let mut rng = Rng::new(11);
@@ -563,13 +954,13 @@ mod tests {
         let (n, p, q) = (67, 65, 130);
         let a: Vec<f32> = (0..n * p).map(|_| rng.normal()).collect();
         let b: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
-        let want = ref_tn(&a, &b, n, p, q);
+        let want = reference::matmul_tn(&a, &b, n, p, q);
         for (u, v) in matmul_tn(&a, &b, n, p, q).iter().zip(&want) {
             assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()));
         }
         let c: Vec<f32> = (0..p * n).map(|_| rng.normal()).collect();
         let d: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
-        let want = ref_nn(&c, &d, p, n, q);
+        let want = reference::matmul(&c, &d, p, n, q);
         for (u, v) in matmul(&c, &d, p, n, q).iter().zip(&want) {
             assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()));
         }
@@ -581,7 +972,7 @@ mod tests {
                 et[s * q + j] = e[j * n + s];
             }
         }
-        let want = ref_nn(&c, &et, p, n, q);
+        let want = reference::matmul(&c, &et, p, n, q);
         for (u, v) in matmul_nt(&c, &e, p, n, q).iter().zip(&want) {
             assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()));
         }
@@ -612,6 +1003,66 @@ mod tests {
             matmul_par(&c, &e, p, n, q, 3),
             matmul(&c, &e, p, n, q)
         );
+    }
+
+    #[test]
+    fn into_and_acc_variants_match_allocating_kernels() {
+        let mut rng = Rng::new(17);
+        let (n, p, q) = (23, 9, 11);
+        let a: Vec<f32> = (0..n * p).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
+        let mut c = vec![7.0f32; p * q]; // stale garbage: must be overwritten
+        matmul_tn_into(&a, &b, n, p, q, &mut c);
+        assert_eq!(c, matmul_tn(&a, &b, n, p, q));
+
+        let e: Vec<f32> = (0..p * n).map(|_| rng.normal()).collect();
+        let f: Vec<f32> = (0..q * n).map(|_| rng.normal()).collect();
+        // Two accumulations = 2x the plain product.
+        let mut acc = vec![0.0f32; p * q];
+        matmul_nt_acc(&e, &f, p, n, q, &mut acc);
+        matmul_nt_acc(&e, &f, p, n, q, &mut acc);
+        let once = matmul_nt(&e, &f, p, n, q);
+        for (u, v) in acc.iter().zip(&once) {
+            assert!((u - 2.0 * v).abs() < 1e-5 * (1.0 + v.abs()));
+        }
+
+        let g: Vec<f32> = (0..p * q).map(|_| rng.normal()).collect();
+        let h: Vec<f32> = (0..q * n).map(|_| rng.normal()).collect();
+        let mut c2 = vec![3.0f32; p * n];
+        matmul_into(&g, &h, p, q, n, &mut c2);
+        assert_eq!(c2, matmul(&g, &h, p, q, n));
+    }
+
+    #[test]
+    fn scalar_kernels_match_dispatched_kernels() {
+        // Shapes straddle both the 8-lane SIMD width and the 64-wide
+        // cache block; 1e-5 covers FMA/reassociation differences when
+        // the dispatched path is vectorized.
+        let mut rng = Rng::new(19);
+        let (n, p, q) = (67, 17, 70);
+        let a: Vec<f32> = (0..n * p).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
+        for (got, want) in matmul_tn(&a, &b, n, p, q)
+            .iter()
+            .zip(&matmul_tn_scalar(&a, &b, n, p, q))
+        {
+            assert!((got - want).abs() < 1e-5 * (1.0 + want.abs()));
+        }
+        let c: Vec<f32> = (0..p * n).map(|_| rng.normal()).collect();
+        let d: Vec<f32> = (0..q * n).map(|_| rng.normal()).collect();
+        for (got, want) in matmul_nt(&c, &d, p, n, q)
+            .iter()
+            .zip(&matmul_nt_scalar(&c, &d, p, n, q))
+        {
+            assert!((got - want).abs() < 1e-5 * (1.0 + want.abs()));
+        }
+        let e: Vec<f32> = (0..n * q).map(|_| rng.normal()).collect();
+        for (got, want) in matmul(&c, &e, p, n, q)
+            .iter()
+            .zip(&matmul_scalar(&c, &e, p, n, q))
+        {
+            assert!((got - want).abs() < 1e-5 * (1.0 + want.abs()));
+        }
     }
 
     #[test]

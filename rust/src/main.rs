@@ -45,7 +45,8 @@ usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N]
          [--out SERVEBENCH.json]
   bench  [--quick] [--batch 128] [--out BENCH_native.json]
          [--compare BASELINE.json [--current RUN.json]]
-         [--compare-out COMPARE.json] [--max-regression 3.0]
+         [--compare-out COMPARE.json] [--max-regression 1.5]
+         [--kernels [--out KERNELBENCH.json]]
   fig3 | fig6 | fig8 | fig9      [--iters 10]
   fig7a | fig7b | fig10 | fig11  [--grid small|paper]
          [--search-steps N] [--steps N] [--seeds K] [--verbose]
@@ -60,11 +61,15 @@ external dependencies; it runs batch-parallel on all cores
 (`--threads N` or BACKPACK_THREADS=N override; `--threads 1` is the
 serial reference). `bench` writes the machine-readable perf baseline
 CI uploads on every push; `bench --compare BASELINE.json` gates the
-fresh run against a committed baseline (fail when any case's p50
-regresses past --max-regression, default 3x), adding
-`--current RUN.json` compares two existing files without re-running,
-and `--compare-out COMPARE.json` writes the machine-readable
-compare result (written even when the gate fails).
+fresh run against a committed baseline (fail when any case's
+machine-calibrated p50 ratio passes --max-regression, default 1.5x;
+both documents carry a `calib_s` probe so host-speed differences
+divide out -- docs/bench.md), adding `--current RUN.json` compares
+two existing files without re-running, and `--compare-out
+COMPARE.json` writes the machine-readable compare result (written
+even when the gate fails). `bench --kernels` times the dispatched
+SIMD inner kernels against their retained scalar twins and writes
+KERNELBENCH.json (no gate; CI artifact).
 
 `serve` runs the batching extraction daemon (protocol
 backpack-serve/v1; docs/serve.md): length-prefixed JSON frames over
@@ -301,10 +306,19 @@ fn dispatch(
             println!("wrote {out}");
         }
         "bench" => {
+            if args.has("kernels") {
+                // Kernel microbench: dispatched (SIMD) vs scalar
+                // inner kernels; no gate, artifact only.
+                let out = args.get_or("out", "KERNELBENCH.json");
+                backpack_rs::bench::kernel_microbench(
+                    Path::new(out),
+                )?;
+                return Ok(());
+            }
             let default_out = format!("BENCH_{}.json", be.name());
             let out = args.get_or("out", &default_out);
             let max_ratio =
-                args.get_f32("max-regression", 3.0)? as f64;
+                args.get_f32("max-regression", 1.5)? as f64;
             let compare_out =
                 args.flag("compare-out").map(Path::new);
             if let Some(current) = args.flag("current") {

@@ -91,7 +91,12 @@ pub enum Counter {
     /// Floating-point operations issued by the `linalg` matmul
     /// kernels (2 x multiply-adds).
     MatmulFlops = 0,
-    /// Bytes materialized by `im2col` patch extraction.
+    /// Bytes of unfolded-patch buffer materialized for conv lowering:
+    /// the full `[J, P]` matrix for each `im2col` call, or — on the
+    /// fused tile-streaming path (DESIGN.md §14), which is what the
+    /// conv drivers use — one reusable `[J, COL_TILE]` tile per
+    /// driver call, charged at allocation. Fusion therefore shows up
+    /// as a large *drop* in this counter for the same workload.
     Im2colBytes = 1,
     /// Summed `par_map` worker wall-clock, nanoseconds.
     ShardNs = 2,

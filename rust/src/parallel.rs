@@ -1,22 +1,55 @@
-//! Batch-parallel fork/join substrate (zero dependencies).
+//! Batch-parallel substrate on a persistent worker pool (zero
+//! dependencies).
 //!
 //! The native backend's hot loops are all "per-sample work, then a
 //! reduction" (paper Table 1: every BackPACK quantity is a sum or a
 //! concatenation over the batch axis). This module provides the two
-//! pieces needed to exploit that with `std::thread::scope` alone:
+//! pieces needed to exploit that:
 //!
 //! * [`shards`] -- split `0..n` into at most `t` contiguous,
 //!   nearly-equal ranges, deterministically;
-//! * [`par_map`] -- run one closure per shard on scoped threads
-//!   (shard 0 runs on the calling thread) and return the results *in
-//!   shard order*, so reductions are deterministic for a fixed thread
-//!   count regardless of OS scheduling.
+//! * [`par_map`] -- run one closure per shard on the process-wide
+//!   worker pool and return the results *in shard order*, so
+//!   reductions are deterministic for a fixed thread count regardless
+//!   of OS scheduling.
+//!
+//! ## Pool lifecycle (DESIGN.md §14)
+//!
+//! Workers are spawned lazily on the first `par_map` that needs them
+//! and then live for the rest of the process, parked on a condvar —
+//! the per-call `thread::scope` fork/join this module used through
+//! PR 8 paid a spawn+join for every `par_map`, which dominated small
+//! extractions. A call publishes one *ticket* per non-caller shard
+//! into a shared injector queue; the caller and any woken workers
+//! then claim shard indices from a single atomic counter on the job
+//! (work stealing at shard granularity: whoever is free takes the
+//! next undone shard), so an OS-preempted worker never strands work.
+//! The caller participates too and blocks only until every claimed
+//! shard has completed, which also makes nested `par_map` calls safe:
+//! a worker that re-enters `par_map` drains its own inner job instead
+//! of waiting on a queue.
+//!
+//! Shard `i` always runs under `obs::shard_scope(i, ..)` regardless
+//! of which pool thread executes it, so `shard/{i}` trace lanes stay
+//! keyed by shard index exactly as with scoped threads (shard 0 is no
+//! longer guaranteed to run on the calling thread — lanes never
+//! depended on that). Single-shard work runs inline on the caller
+//! with no pool round-trip and no shard span (the serial guard).
+//!
+//! A panicking shard closure does not poison the pool: the panic is
+//! caught on the worker, carried back, and resumed on the caller with
+//! its original payload once the remaining shards finish; workers
+//! stay parked for the next job.
 //!
 //! Thread-count resolution ([`resolve_threads`]): an explicit request
 //! wins, then the `BACKPACK_THREADS` environment variable, then
 //! `std::thread::available_parallelism()`.
 
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
 use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Environment variable overriding the auto-detected thread count.
 pub const THREADS_ENV: &str = "BACKPACK_THREADS";
@@ -82,11 +115,185 @@ pub fn shards(n: usize, threads: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// Fork/join map: run `f` once per shard, spawning scoped threads for
-/// shards `1..` while the calling thread computes shard `0`. Results
-/// come back in shard order, so downstream reductions see a fixed
-/// order for a fixed shard layout (bit-for-bit deterministic per
-/// thread count). Panics in workers propagate to the caller.
+/// One job submitted to the pool: a type-erased view of the caller's
+/// stack frame (closure, shard table, result slots) plus the claim /
+/// completion state. Workers reach the frame only through `run`, and
+/// only for a successfully claimed shard index, which is what makes
+/// the raw pointer sound — see the safety argument on [`par_map`].
+struct JobCore {
+    /// Type-erased `&Payload<T, F>` on the calling thread's stack.
+    data: *const (),
+    /// Monomorphized shard runner for that payload type.
+    run: unsafe fn(*const (), usize),
+    /// Next shard index to claim; claims at or past `shards` are
+    /// no-ops, so stale tickets are harmless.
+    next: AtomicUsize,
+    shards: usize,
+    /// Shards not yet completed; guarded decrement + condvar is what
+    /// the caller blocks on. User code never runs under this lock, so
+    /// it cannot be poisoned.
+    pending: Mutex<usize>,
+    done: Condvar,
+}
+
+// SAFETY: `data` is only dereferenced via `run` between a successful
+// shard claim and the matching `pending` decrement; the caller keeps
+// the referent alive until `pending == 0` (see `par_map`).
+unsafe impl Send for JobCore {}
+unsafe impl Sync for JobCore {}
+
+impl JobCore {
+    /// Claim-and-run loop shared by the caller and pool workers:
+    /// every participant pulls the next undone shard until none are
+    /// left. Completion of each shard is published under `pending`.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.shards {
+                return;
+            }
+            // SAFETY: shard `i` was claimed exactly once, and the
+            // caller cannot return (freeing the payload) while this
+            // shard's `pending` contribution is outstanding.
+            unsafe { (self.run)(self.data, i) };
+            let mut pending = self.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+}
+
+/// "Come help with this job" marker in the injector queue.
+struct Ticket {
+    job: Arc<JobCore>,
+}
+
+/// Result slot for one shard, written by its claimant, read by the
+/// caller after the job completes.
+struct Slot<T>(UnsafeCell<Option<std::thread::Result<T>>>);
+
+// SAFETY: exactly one claimant writes each slot (the claim counter
+// hands out each index once), and the caller reads only after the
+// `pending`-mutex handshake has ordered every write before the read.
+unsafe impl<T: Send> Sync for Slot<T> {}
+
+/// Typed view of one `par_map` activation, borrowed from the caller's
+/// stack for the duration of the job.
+struct Payload<'a, T, F> {
+    f: &'a F,
+    work: &'a [Range<usize>],
+    slots: &'a [Slot<T>],
+}
+
+/// Run shard `i` of the payload behind `data`: shard-scoped for obs
+/// lane accounting, panic-caught so a worker survives a panicking
+/// closure (the caught payload is resumed on the caller). The catch
+/// sits *inside* `shard_scope` so lane restore + local-buffer flush
+/// run even for a panicked shard.
+unsafe fn run_shard<T, F>(data: *const (), i: usize)
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    let p = &*(data as *const Payload<'_, T, F>);
+    let r = p.work[i].clone();
+    let result = crate::obs::shard_scope(i, || {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (p.f)(r)
+        }))
+    });
+    *p.slots[i].0.get() = Some(result);
+}
+
+/// The process-wide pool: an injector queue of tickets plus the
+/// worker park/wake condvar. Workers never hold the queue lock while
+/// running user code.
+struct PoolShared {
+    inject: Mutex<VecDeque<Ticket>>,
+    available: Condvar,
+    spawned: Mutex<usize>,
+}
+
+impl PoolShared {
+    /// Lazily grow the pool to at least `want` workers (detached,
+    /// process-lived). Spawn failure degrades gracefully: the caller
+    /// of `par_map` always self-drains its job, so fewer workers only
+    /// costs parallelism, never correctness.
+    fn ensure_workers(&self, want: usize) {
+        let mut n = self.spawned.lock().unwrap();
+        while *n < want {
+            let name = format!("backpack-pool-{}", *n);
+            match std::thread::Builder::new().name(name).spawn(worker_loop)
+            {
+                Ok(_) => *n += 1,
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+fn pool() -> &'static PoolShared {
+    static POOL: OnceLock<PoolShared> = OnceLock::new();
+    POOL.get_or_init(|| PoolShared {
+        inject: Mutex::new(VecDeque::new()),
+        available: Condvar::new(),
+        spawned: Mutex::new(0),
+    })
+}
+
+/// Pool worker body: park on the condvar until a ticket arrives, then
+/// help the ticket's job until its shards are exhausted. A ticket
+/// whose job already finished (the caller and friends drained it) is
+/// simply dropped — the claim counter makes over-delivery harmless.
+fn worker_loop() {
+    let pool = pool();
+    let mut q = pool.inject.lock().unwrap();
+    loop {
+        match q.pop_front() {
+            Some(t) => {
+                drop(q);
+                t.job.work();
+                drop(t);
+                q = pool.inject.lock().unwrap();
+            }
+            None => q = pool.available.wait(q).unwrap(),
+        }
+    }
+}
+
+/// Pre-spawn pool workers for `threads`-way parallelism so the first
+/// real extraction doesn't pay thread-spawn latency. The serve daemon
+/// calls this at bind time; it is idempotent and never shrinks the
+/// pool.
+pub fn warm(threads: usize) {
+    pool().ensure_workers(threads.saturating_sub(1));
+}
+
+/// Number of pool workers spawned so far (diagnostic; the pool only
+/// grows).
+pub fn pool_workers() -> usize {
+    *pool().spawned.lock().unwrap()
+}
+
+/// Pool-backed map: run `f` once per shard across the persistent
+/// worker pool (the caller participates) and return the results in
+/// shard order, so downstream reductions see a fixed order for a
+/// fixed shard layout (bit-for-bit deterministic per thread count).
+/// A panic in any shard closure is re-raised on the caller with its
+/// original payload after the remaining shards finish; the pool
+/// itself survives. Single-shard work runs inline (serial guard).
+///
+/// # Safety argument
+///
+/// The job hands workers a raw pointer to this activation's stack
+/// frame (`Payload`). That is sound because (a) a shard claim past
+/// `work.len()` never touches the pointer, so stale tickets are inert;
+/// (b) each successful claim holds up one unit of `pending`, and this
+/// function does not return before `pending == 0`, so every
+/// dereference happens while the frame is live; (c) the `pending`
+/// mutex orders all slot writes before the caller's reads.
 pub fn par_map<T, F>(work: &[Range<usize>], f: F) -> Vec<T>
 where
     T: Send,
@@ -95,26 +302,49 @@ where
     if work.len() <= 1 {
         return work.iter().cloned().map(f).collect();
     }
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = work[1..]
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                let (f, r) = (&f, r.clone());
-                scope.spawn(move || {
-                    crate::obs::shard_scope(i + 1, || f(r))
-                })
-            })
-            .collect();
-        let mut out = Vec::with_capacity(work.len());
-        out.push(crate::obs::shard_scope(0, || f(work[0].clone())));
-        out.extend(
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("parallel worker panicked")),
-        );
-        out
-    })
+    let pool = pool();
+    pool.ensure_workers(work.len() - 1);
+    let slots: Vec<Slot<T>> =
+        (0..work.len()).map(|_| Slot(UnsafeCell::new(None))).collect();
+    let payload = Payload { f: &f, work, slots: &slots };
+    let job = Arc::new(JobCore {
+        data: &payload as *const Payload<'_, T, F> as *const (),
+        run: run_shard::<T, F>,
+        next: AtomicUsize::new(0),
+        shards: work.len(),
+        pending: Mutex::new(work.len()),
+        done: Condvar::new(),
+    });
+    {
+        let mut q = pool.inject.lock().unwrap();
+        for _ in 1..work.len() {
+            q.push_back(Ticket { job: Arc::clone(&job) });
+        }
+        pool.available.notify_all();
+    }
+    // The caller steals shards like any worker, then waits out the
+    // stragglers other threads claimed.
+    job.work();
+    {
+        let mut pending = job.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = job.done.wait(pending).unwrap();
+        }
+    }
+    // Sweep tickets nobody consumed (the job drained before every
+    // ticket was popped) so the queue doesn't accumulate dead entries.
+    {
+        let mut q = pool.inject.lock().unwrap();
+        q.retain(|t| !Arc::ptr_eq(&t.job, &job));
+    }
+    let mut out = Vec::with_capacity(work.len());
+    for slot in slots {
+        match slot.0.into_inner().expect("pool shard never ran") {
+            Ok(v) => out.push(v),
+            Err(e) => std::panic::resume_unwind(e),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -164,6 +394,34 @@ mod tests {
             let total: f64 = partial.iter().sum();
             assert!((total - serial).abs() < 1e-9, "t={t}");
         }
+    }
+
+    #[test]
+    fn pool_is_reused_across_calls() {
+        let sh = shards(64, 4);
+        let _ = par_map(&sh, |r| r.len());
+        let after_first = pool_workers();
+        assert!(after_first >= 3, "4-shard job wants >= 3 workers");
+        for i in 0..20 {
+            let got: usize =
+                par_map(&sh, |r| r.len()).into_iter().sum();
+            assert_eq!(got, 64, "call {i}");
+        }
+        // The pool only ever grows on demand; repeating the same
+        // shard count adds nothing (other tests may grow it further
+        // concurrently, hence >= on the floor rather than equality).
+        assert!(pool_workers() >= after_first);
+    }
+
+    #[test]
+    fn nested_par_map_completes() {
+        let outer = shards(8, 4);
+        let got = par_map(&outer, |r| {
+            let inner = shards(r.len() * 10, 3);
+            par_map(&inner, |ir| ir.len()).into_iter().sum::<usize>()
+        });
+        let want: Vec<usize> = outer.iter().map(|r| r.len() * 10).collect();
+        assert_eq!(got, want);
     }
 
     #[test]

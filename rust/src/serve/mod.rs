@@ -507,11 +507,17 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `cfg.addr`.
+    /// Bind `cfg.addr`. Also warms the worker pool to the configured
+    /// extraction width: the scheduler's coalesced `extended_backward`
+    /// calls inherit the persistent pool (`crate::parallel`), so the
+    /// first request shouldn't pay thread-spawn latency.
     pub fn bind(cfg: ServeConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("cannot bind {}", cfg.addr))?;
         let addr = listener.local_addr()?;
+        crate::parallel::warm(crate::parallel::resolve_threads(
+            cfg.threads,
+        ));
         let shared = Shared::new(cfg)?;
         *shared.addr.lock().unwrap() = Some(addr);
         Ok(Server { listener, addr, shared })
@@ -601,8 +607,12 @@ impl Server {
 }
 
 /// Serve a single session over stdin/stdout (the `--stdio` CLI
-/// mode): same protocol, same scheduler, no socket.
+/// mode): same protocol, same scheduler, no socket. Warms the worker
+/// pool like [`Server::bind`].
 pub fn run_stdio(cfg: ServeConfig) -> Result<()> {
+    crate::parallel::warm(crate::parallel::resolve_threads(
+        cfg.threads,
+    ));
     let shared = Shared::new(cfg)?;
     let sched_shared = Arc::clone(&shared);
     let scheduler = std::thread::Builder::new()

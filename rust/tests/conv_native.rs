@@ -813,3 +813,370 @@ fn conv_training_reduces_loss_and_eval_runs() {
     let acc = out.get("accuracy").unwrap().item_f32().unwrap();
     assert!((0.0..=1.0).contains(&acc));
 }
+
+// ---- fused unfold vs materialized im2col (DESIGN.md §14) -----------
+//
+// The conv drivers stream COL_TILE-wide position tiles through
+// `im2col_range` instead of materializing the full unfolded input.
+// These tests pin the fusion contract against hand-built materialized
+// oracles (public `ConvGeom::im2col` + the linalg matmuls):
+//
+// * products whose contraction axis is untouched by tiling (forward,
+//   the VJP's WᵀS product) are exact -- asserted bitwise (±0 folded);
+// * accumulating reductions (grad, per-sample grads, diag, Kron A,
+//   the col2im scatter) re-associate the position sum across tiles,
+//   so multi-tile geometries agree to f32 round-off and single-tile
+//   geometries (P <= COL_TILE) stay exact, because one tile IS the
+//   materialized computation.
+
+use backpack_rs::backend::conv::conv2d;
+use backpack_rs::backend::conv::conv2d::COL_TILE;
+use backpack_rs::backend::conv::ConvGeom;
+use backpack_rs::linalg::{matmul, matmul_nt, matmul_tn};
+
+struct ConvCase {
+    geom: ConvGeom,
+    w: Vec<f32>,
+    b: Vec<f32>,
+    x: Vec<f32>,
+    g: Vec<f32>,
+    s: Vec<f32>,
+    signs: Vec<f32>,
+    ns: usize,
+    cols: usize,
+}
+
+fn conv_case(geom: ConvGeom, ns: usize, cols: usize, rng: &mut Rng)
+    -> ConvCase {
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let j = geom.patch_len();
+    let c_out = geom.out_shape.c;
+    let mut r = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.normal()).collect()
+    };
+    let (w, b) = (r(c_out * j), r(c_out));
+    let (x, g, s) = (r(ns * fin), r(ns * fout), r(ns * fout * cols));
+    let signs: Vec<f32> = (0..ns * cols)
+        .map(|i| if i % 3 == 0 { -1.0 } else { 1.0 })
+        .collect();
+    ConvCase { geom, w, b, x, g, s, signs, ns, cols }
+}
+
+/// Random geometry over stride/pad/kernel variety, 1x1 conv included;
+/// the sampled dims keep P <= COL_TILE, so these are single-tile.
+fn rand_geom(rng: &mut Rng) -> ConvGeom {
+    let c_in = 1 + rng.below(3);
+    let h = 3 + rng.below(8);
+    let w = 3 + rng.below(8);
+    let k = 1 + rng.below(3);
+    let stride = 1 + rng.below(2);
+    let pad = rng.below(k);
+    let c_out = 1 + rng.below(3);
+    ConvGeom::new(Shape::new(c_in, h, w), c_out, k, stride, pad)
+        .unwrap()
+}
+
+/// Bitwise equality with ±0 folded together (an accumulate-into-zero
+/// and a plain store differ only on the sign of an exact zero).
+fn assert_same(label: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits() || x == y,
+            "{label}[{i}]: {x:?} vs {y:?}"
+        );
+    }
+}
+
+fn assert_close_abs_rel(label: &str, got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{label}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+fn mat_forward(c: &ConvCase) -> Vec<f32> {
+    let geom = &c.geom;
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let co = geom.out_shape.c;
+    let mut z = vec![0.0f32; c.ns * fout];
+    for smp in 0..c.ns {
+        let u = geom.im2col(&c.x[smp * fin..(smp + 1) * fin]);
+        let zs = matmul(&c.w, &u, co, j, p);
+        let dst = &mut z[smp * fout..(smp + 1) * fout];
+        for o in 0..co {
+            for q in 0..p {
+                dst[o * p + q] = zs[o * p + q] + c.b[o];
+            }
+        }
+    }
+    z
+}
+
+fn mat_vjp(c: &ConvCase) -> Vec<f32> {
+    let geom = &c.geom;
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let co = geom.out_shape.c;
+    let cols = c.cols;
+    let mut out = vec![0.0f32; c.ns * fin * cols];
+    for smp in 0..c.ns {
+        let blk = &c.s[smp * fout * cols..(smp + 1) * fout * cols];
+        let t = matmul_tn(&c.w, blk, co, j, p * cols);
+        geom.col2im_acc(
+            &t,
+            cols,
+            &mut out[smp * fin * cols..(smp + 1) * fin * cols],
+        );
+    }
+    out
+}
+
+fn mat_grad(c: &ConvCase, norm: f32) -> (Vec<f32>, Vec<f32>) {
+    let geom = &c.geom;
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let co = geom.out_shape.c;
+    let mut gw = vec![0.0f32; co * j];
+    let mut gb = vec![0.0f32; co];
+    for smp in 0..c.ns {
+        let u = geom.im2col(&c.x[smp * fin..(smp + 1) * fin]);
+        let gs = &c.g[smp * fout..(smp + 1) * fout];
+        let gwi = matmul_nt(gs, &u, co, p, j);
+        for (acc, v) in gw.iter_mut().zip(&gwi) {
+            *acc += v;
+        }
+        for o in 0..co {
+            gb[o] += gs[o * p..(o + 1) * p].iter().sum::<f32>();
+        }
+    }
+    for v in gw.iter_mut().chain(gb.iter_mut()) {
+        *v /= norm;
+    }
+    (gw, gb)
+}
+
+fn mat_psg(c: &ConvCase) -> (Vec<f32>, Vec<f32>) {
+    let geom = &c.geom;
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let co = geom.out_shape.c;
+    let mut w = vec![0.0f32; c.ns * co * j];
+    let mut b = Vec::with_capacity(c.ns * co);
+    for smp in 0..c.ns {
+        let u = geom.im2col(&c.x[smp * fin..(smp + 1) * fin]);
+        let gs = &c.g[smp * fout..(smp + 1) * fout];
+        let ws = matmul_nt(gs, &u, co, p, j);
+        w[smp * co * j..(smp + 1) * co * j].copy_from_slice(&ws);
+        for o in 0..co {
+            b.push(gs[o * p..(o + 1) * p].iter().sum::<f32>());
+        }
+    }
+    (w, b)
+}
+
+fn mat_diag(
+    c: &ConvCase,
+    norm: f32,
+    signed: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let geom = &c.geom;
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let co = geom.out_shape.c;
+    let cols = c.cols;
+    let mut dw = vec![0.0f32; co * j];
+    let mut db = vec![0.0f32; co];
+    for smp in 0..c.ns {
+        let u = geom.im2col(&c.x[smp * fin..(smp + 1) * fin]);
+        let blk = &c.s[smp * fout * cols..(smp + 1) * fout * cols];
+        let mut st = vec![0.0f32; co * cols * p];
+        for o in 0..co {
+            for q in 0..p {
+                for cc in 0..cols {
+                    st[(o * cols + cc) * p + q] =
+                        blk[(o * p + q) * cols + cc];
+                }
+            }
+        }
+        let v = matmul_nt(&st, &u, co * cols, p, j);
+        for o in 0..co {
+            for cc in 0..cols {
+                let wgt = if signed {
+                    c.signs[smp * cols + cc]
+                } else {
+                    1.0
+                };
+                let row = &v[(o * cols + cc) * j..(o * cols + cc + 1) * j];
+                let dst = &mut dw[o * j..(o + 1) * j];
+                for (acc, x) in dst.iter_mut().zip(row) {
+                    *acc += wgt * x * x;
+                }
+                let sbar: f32 = (0..p)
+                    .map(|q| blk[(o * p + q) * cols + cc])
+                    .sum();
+                db[o] += wgt * sbar * sbar;
+            }
+        }
+    }
+    for v in dw.iter_mut().chain(db.iter_mut()) {
+        *v /= norm;
+    }
+    (dw, db)
+}
+
+fn mat_kron(c: &ConvCase, norm: f32) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let geom = &c.geom;
+    let (fin, fout) = (geom.in_shape.flat(), geom.out_shape.flat());
+    let (j, p) = (geom.patch_len(), geom.positions());
+    let co = geom.out_shape.c;
+    let cols = c.cols;
+    let mut a = vec![0.0f32; j * j];
+    let mut bf = vec![0.0f32; co * co];
+    let mut bias = vec![0.0f32; co * co];
+    for smp in 0..c.ns {
+        let u = geom.im2col(&c.x[smp * fin..(smp + 1) * fin]);
+        let uut = matmul_nt(&u, &u, j, p, j);
+        for (acc, v) in a.iter_mut().zip(&uut) {
+            *acc += v;
+        }
+        let blk = &c.s[smp * fout * cols..(smp + 1) * fout * cols];
+        let ss = matmul_nt(blk, blk, co, p * cols, co);
+        for (acc, v) in bf.iter_mut().zip(&ss) {
+            *acc += v;
+        }
+        let mut srow = vec![0.0f32; co * cols];
+        for o in 0..co {
+            for cc in 0..cols {
+                srow[o * cols + cc] = (0..p)
+                    .map(|q| blk[(o * p + q) * cols + cc])
+                    .sum();
+            }
+        }
+        let bb = matmul_nt(&srow, &srow, co, cols, co);
+        for (acc, v) in bias.iter_mut().zip(&bb) {
+            *acc += v;
+        }
+    }
+    for v in a.iter_mut() {
+        *v /= norm;
+    }
+    let pf = norm * p as f32;
+    for v in bf.iter_mut() {
+        *v /= pf;
+    }
+    for v in bias.iter_mut() {
+        *v /= norm;
+    }
+    (a, bf, bias)
+}
+
+/// Single-tile geometries (P <= COL_TILE): the fused drivers ARE the
+/// materialized computation (one tile spans every position), so all
+/// six agree exactly with the hand-built oracles -- across randomized
+/// stride/pad/kernel combinations, 1x1 convs included.
+#[test]
+fn fused_drivers_match_materialized_exactly_at_single_tile() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(0xF05E ^ seed);
+        let geom = rand_geom(&mut rng);
+        assert!(geom.positions() <= COL_TILE, "{geom:?}");
+        let ns = 1 + rng.below(3);
+        let cols = 1 + rng.below(2);
+        let norm = 2.0 + seed as f32;
+        let c = conv_case(geom, ns, cols, &mut rng);
+        let label = |d: &str| format!("seed {seed} {d} {:?}", c.geom);
+
+        let z = conv2d::forward(&c.geom, &c.w, &c.b, &c.x, ns);
+        assert_same(&label("forward"), &z, &mat_forward(&c));
+
+        let dx = conv2d::mat_vjp_input(&c.geom, &c.w, &c.s, ns, cols);
+        assert_same(&label("mat_vjp_input"), &dx, &mat_vjp(&c));
+
+        let (gw, gb) = conv2d::grad(&c.geom, &c.x, &c.g, ns, norm);
+        let (ow, ob) = mat_grad(&c, norm);
+        assert_same(&label("grad/w"), &gw, &ow);
+        assert_same(&label("grad/b"), &gb, &ob);
+
+        let (pw, pb) = conv2d::per_sample_grads(&c.geom, &c.x, &c.g, ns);
+        let (qw, qb) = mat_psg(&c);
+        assert_same(&label("psg/w"), &pw, &qw);
+        assert_same(&label("psg/b"), &pb, &qb);
+
+        let (dw, db) =
+            conv2d::diag_sqrt(&c.geom, &c.x, &c.s, ns, cols, norm);
+        let (ew, eb) = mat_diag(&c, norm, false);
+        assert_same(&label("diag/w"), &dw, &ew);
+        assert_same(&label("diag/b"), &db, &eb);
+
+        let (sw, sb) = conv2d::diag_sqrt_signed(
+            &c.geom, &c.x, &c.s, ns, cols, norm, Some(&c.signs),
+        );
+        let (tw, tb) = mat_diag(&c, norm, true);
+        assert_same(&label("diag_signed/w"), &sw, &tw);
+        assert_same(&label("diag_signed/b"), &sb, &tb);
+
+        let (a, bf, bias) =
+            conv2d::kron_factors(&c.geom, &c.x, &c.s, ns, cols, norm);
+        let (oa, obf, obias) = mat_kron(&c, norm);
+        assert_same(&label("kron/A"), &a, &oa);
+        assert_same(&label("kron/B"), &bf, &obf);
+        assert_same(&label("kron/bias"), &bias, &obias);
+    }
+}
+
+/// Multi-tile geometry (P = 484 > COL_TILE, so the position axis is
+/// genuinely tiled): the forward product stays bitwise (its
+/// contraction axis is never split, and COL_TILE is a multiple of
+/// the 64-column cache block, so every column sees the same
+/// vector-body/tail split as in the full-width call); the
+/// accumulating reductions re-associate the position sum across
+/// tiles and agree to f32 round-off.
+#[test]
+fn fused_drivers_match_materialized_across_tiles() {
+    let geom =
+        ConvGeom::new(Shape::new(2, 22, 22), 3, 3, 1, 1).unwrap();
+    assert!(
+        geom.positions() > COL_TILE,
+        "geometry must span several tiles, got P = {}",
+        geom.positions()
+    );
+    let mut rng = Rng::new(0x71);
+    let (ns, cols, norm) = (2, 2, 3.0);
+    let c = conv_case(geom, ns, cols, &mut rng);
+
+    let z = conv2d::forward(&c.geom, &c.w, &c.b, &c.x, ns);
+    assert_same("tiled forward", &z, &mat_forward(&c));
+
+    let dx = conv2d::mat_vjp_input(&c.geom, &c.w, &c.s, ns, cols);
+    assert_close_abs_rel("tiled mat_vjp_input", &dx, &mat_vjp(&c), 1e-5);
+
+    let (gw, gb) = conv2d::grad(&c.geom, &c.x, &c.g, ns, norm);
+    let (ow, ob) = mat_grad(&c, norm);
+    assert_close_abs_rel("tiled grad/w", &gw, &ow, 1e-4);
+    assert_same("tiled grad/b", &gb, &ob);
+
+    let (pw, pb) = conv2d::per_sample_grads(&c.geom, &c.x, &c.g, ns);
+    let (qw, qb) = mat_psg(&c);
+    assert_close_abs_rel("tiled psg/w", &pw, &qw, 1e-4);
+    assert_same("tiled psg/b", &pb, &qb);
+
+    let (dw, db) =
+        conv2d::diag_sqrt(&c.geom, &c.x, &c.s, ns, cols, norm);
+    let (ew, eb) = mat_diag(&c, norm, false);
+    assert_close_abs_rel("tiled diag/w", &dw, &ew, 1e-3);
+    assert_close_abs_rel("tiled diag/b", &db, &eb, 1e-3);
+
+    let (a, bf, bias) =
+        conv2d::kron_factors(&c.geom, &c.x, &c.s, ns, cols, norm);
+    let (oa, obf, obias) = mat_kron(&c, norm);
+    assert_close_abs_rel("tiled kron/A", &a, &oa, 1e-3);
+    // B and the bias GGN never touch the unfold: identical code on
+    // both sides, so they stay exact even across tiles.
+    assert_same("tiled kron/B", &bf, &obf);
+    assert_same("tiled kron/bias", &bias, &obias);
+}

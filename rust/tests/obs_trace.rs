@@ -324,3 +324,40 @@ fn conv_run_moves_kernel_counters() {
         "no diag_ggn hook spans in {quantities:?}"
     );
 }
+
+/// Shard lanes stay disjoint on the persistent worker pool
+/// (DESIGN.md §14): lanes are keyed by *shard index*, not by worker
+/// thread, so two traced runs back-to-back on the same warm pool --
+/// where any worker may pick up any shard, in any order -- both
+/// attribute work to exactly lanes {0..threads-1} with identical
+/// per-lane span multisets. A leak of worker identity into lane
+/// assignment (or a stale lane left by a previous job) shows up here
+/// as an extra lane or a diverging multiset.
+#[test]
+fn persistent_pool_keeps_shard_lanes_disjoint_across_runs() {
+    let _g = lock();
+    backpack_rs::parallel::warm(3); // the pool outlives each call
+    let m = Model::mlp();
+    let (params, x, y) = problem(&m, 10, 7);
+    let exts = vec!["variance".to_string(), "diag_ggn".to_string()];
+    let run = || {
+        obs::start();
+        m.extended_backward_threads(&params, &x, &y, &exts, None, 3)
+            .unwrap();
+        obs::stop()
+    };
+    let first = work_multisets(&run());
+    let second = work_multisets(&run());
+    for (label, lanes) in [("first", &first), ("second", &second)] {
+        let got: Vec<usize> = lanes.keys().copied().collect();
+        assert_eq!(
+            got,
+            vec![0, 1, 2],
+            "{label} run: work landed outside the shard lanes"
+        );
+    }
+    assert_eq!(
+        first, second,
+        "a warm pool changed the traced structure between runs"
+    );
+}

@@ -326,6 +326,57 @@ fn batch_grad_sample_order_is_preserved() {
     });
 }
 
+/// Persistent-pool sweep (DESIGN.md §14): thread counts that leave
+/// remainders against the batch (3, 5), reuse pool workers across
+/// counts, and overshoot the shard supply entirely (13 > n) must all
+/// agree with serial ≤ 1e-5. Before the pool, each count got a fresh
+/// set of scoped threads; now the same lazily-grown workers serve
+/// every count, so this sweep pins that shard layout -- not worker
+/// identity -- determines the numbers.
+#[test]
+fn pool_reuse_across_thread_counts_matches_serial() {
+    let m = Model::mlp();
+    check("pool_sweep", 2, |rng, seed| {
+        let n = 9 + rng.below(4); // 9..=12, all below 13 threads
+        let (params, x, y) = problem(&m, n, rng);
+        let key = Some([seed as u32, 0xBEEF]);
+        let exts: Vec<String> =
+            ["batch_grad", "variance", "diag_ggn"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let serial = m
+            .extended_backward_threads(&params, &x, &y, &exts, key, 1)
+            .map_err(|e| e.to_string())?;
+        for threads in [2usize, 3, 5, 13] {
+            let par = m
+                .extended_backward_threads(
+                    &params, &x, &y, &exts, key, threads,
+                )
+                .map_err(|e| e.to_string())?;
+            if serial.len() != par.len() {
+                return Err(format!(
+                    "threads={threads}: {} vs {} outputs",
+                    serial.len(),
+                    par.len()
+                ));
+            }
+            for (k, want) in &serial {
+                let got = par.get(k).ok_or_else(|| {
+                    format!("threads={threads}: missing {k}")
+                })?;
+                assert_close(
+                    &format!("{k} threads={threads}"),
+                    want,
+                    got,
+                    1e-5,
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Fixed thread count => bit-for-bit identical outputs (shard
 /// reduction order is deterministic, never scheduler-dependent).
 #[test]

@@ -1,0 +1,186 @@
+//! Stress tests for the persistent worker pool behind
+//! [`backpack_rs::parallel::par_map`] (DESIGN.md §14).
+//!
+//! The pool is a process-global: these tests deliberately hammer it
+//! from many OS threads at once, panic inside shard closures, and
+//! interleave nested calls, because any poisoning or lost wakeup
+//! shows up here as a hang or a wrong sum. No test assumes it is the
+//! pool's only client -- the unit tests in `src/parallel.rs` and the
+//! engine suites share the same workers when the harness runs files
+//! in parallel.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use backpack_rs::parallel::{par_map, pool_workers, shards, warm};
+
+/// Reference sum for `0..n` shard ranges.
+fn range_sum(n: usize) -> usize {
+    n * n.saturating_sub(1) / 2
+}
+
+#[test]
+fn many_concurrent_par_map_calls_all_complete() {
+    // 8 caller threads x 40 calls each, every call sharded 4 ways.
+    // Callers participate in their own jobs, so this also exercises
+    // the steal path where a worker drains one caller's shards while
+    // that caller drains another's.
+    let callers = 8;
+    let rounds = 40;
+    let handles: Vec<_> = (0..callers)
+        .map(|c| {
+            std::thread::spawn(move || {
+                for r in 0..rounds {
+                    let n = 64 + (c * rounds + r) % 32;
+                    let work = shards(n, 4);
+                    let partial =
+                        par_map(&work, |rg: Range<usize>| {
+                            rg.sum::<usize>()
+                        });
+                    let total: usize = partial.iter().sum();
+                    assert_eq!(total, range_sum(n), "caller {c} round {r}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn results_come_back_in_shard_order() {
+    let work = shards(100, 5);
+    assert_eq!(work.len(), 5);
+    let starts = par_map(&work, |rg: Range<usize>| rg.start);
+    let expected: Vec<usize> =
+        work.iter().map(|rg| rg.start).collect();
+    assert_eq!(starts, expected);
+}
+
+#[test]
+fn panic_in_a_shard_propagates_with_its_payload() {
+    let work = shards(40, 4);
+    let caught = std::panic::catch_unwind(|| {
+        par_map(&work, |rg: Range<usize>| {
+            if rg.contains(&25) {
+                panic!("boom-25");
+            }
+            rg.len()
+        })
+    })
+    .expect_err("shard panic must re-raise on the caller");
+    let msg = caught
+        .downcast_ref::<&str>()
+        .copied()
+        .map(str::to_string)
+        .or_else(|| caught.downcast_ref::<String>().cloned())
+        .unwrap_or_default();
+    assert!(msg.contains("boom-25"), "original payload lost: {msg:?}");
+}
+
+#[test]
+fn pool_survives_shard_panics() {
+    // A panicking job must not poison the pool: the workers run user
+    // code outside every pool lock, so later calls keep completing.
+    for round in 0..10 {
+        let work = shards(32, 4);
+        let r = std::panic::catch_unwind(|| {
+            par_map(&work, |rg: Range<usize>| {
+                if rg.start == 0 {
+                    panic!("round {round}");
+                }
+                rg.sum::<usize>()
+            })
+        });
+        assert!(r.is_err());
+        // Immediately after the panic, a clean call works.
+        let ok = par_map(&work, |rg: Range<usize>| rg.sum::<usize>());
+        assert_eq!(ok.iter().sum::<usize>(), range_sum(32));
+    }
+}
+
+#[test]
+fn all_panics_surface_even_with_multiple_failing_shards() {
+    // Every shard runs to completion (the job is only released when
+    // pending hits zero), and the first failing shard's payload is
+    // the one re-raised.
+    let work = shards(40, 4);
+    let ran = Arc::new(AtomicUsize::new(0));
+    let ran2 = Arc::clone(&ran);
+    let r = std::panic::catch_unwind(move || {
+        par_map(&work, move |rg: Range<usize>| -> usize {
+            ran2.fetch_add(1, Ordering::SeqCst);
+            panic!("shard {} failed", rg.start);
+        })
+    });
+    assert!(r.is_err());
+    assert_eq!(
+        ran.load(Ordering::SeqCst),
+        4,
+        "remaining shards must still run after one panics"
+    );
+}
+
+#[test]
+fn serial_guard_runs_single_shard_work_inline() {
+    // One shard (or none) never touches the pool: the closure runs on
+    // the calling thread, so thread-local state is visible.
+    let caller = std::thread::current().id();
+    let ids = par_map(&shards(5, 1), |_rg: Range<usize>| {
+        std::thread::current().id()
+    });
+    assert_eq!(ids, vec![caller]);
+    let empty: Vec<std::thread::ThreadId> =
+        par_map(&[], |_rg: Range<usize>| std::thread::current().id());
+    assert!(empty.is_empty());
+}
+
+#[test]
+fn nested_par_map_does_not_deadlock() {
+    // An inner par_map issued from inside a shard closure must make
+    // progress even when every worker is busy: the inner caller
+    // participates in its own job, so the pool never self-starves.
+    let outer = shards(4 * 50, 4);
+    let totals = par_map(&outer, |rg: Range<usize>| {
+        let inner = shards(rg.len(), 3);
+        let offset = rg.start;
+        par_map(&inner, |ir: Range<usize>| {
+            ir.map(|i| i + offset).sum::<usize>()
+        })
+        .iter()
+        .sum::<usize>()
+    });
+    assert_eq!(totals.iter().sum::<usize>(), range_sum(200));
+}
+
+#[test]
+fn explicit_thread_counts_one_two_five_agree() {
+    // The acceptance sweep: identical reductions at threads {1,2,5}.
+    // Shard layout determines the split; the pool only supplies
+    // hands.
+    let n = 173; // prime-ish: every count leaves a remainder shard
+    let expect = range_sum(n);
+    for threads in [1usize, 2, 5] {
+        let work = shards(n, threads);
+        assert!(work.len() <= threads);
+        let total: usize =
+            par_map(&work, |rg: Range<usize>| rg.sum::<usize>())
+                .iter()
+                .sum();
+        assert_eq!(total, expect, "threads={threads}");
+    }
+}
+
+#[test]
+fn warm_grows_the_pool_and_is_idempotent() {
+    warm(3);
+    let after = pool_workers();
+    // warm(t) guarantees t-1 workers exist (the caller is the t-th
+    // hand). Other tests share the pool, so >= not ==.
+    assert!(after >= 2, "warm(3) left only {after} workers");
+    warm(3);
+    warm(1); // never shrinks, never blocks
+    assert!(pool_workers() >= after);
+}

@@ -8,7 +8,11 @@
 use backpack_rs::coordinator::metrics::{aggregate, percentile, RunLog};
 use backpack_rs::data::{Batcher, DatasetSpec, Rng, Synthetic};
 use backpack_rs::json::Json;
-use backpack_rs::linalg::{matmul, Cholesky, SymMat};
+use backpack_rs::linalg::{
+    matmul, matmul_nt, matmul_nt_par, matmul_nt_scalar, matmul_par,
+    matmul_scalar, matmul_tn, matmul_tn_par, matmul_tn_scalar,
+    reference, Cholesky, SymMat,
+};
 
 /// Run `prop` for `cases` seeded cases; panic with the seed on failure.
 fn check<F: Fn(&mut Rng) -> Result<(), String>>(
@@ -213,4 +217,154 @@ fn prop_rng_uniform_in_bounds() {
         }
         Ok(())
     });
+}
+
+// ---- kernel property suite (DESIGN.md §14) --------------------------
+//
+// The SIMD microkernels' numerical contract: the dispatched kernels
+// (AVX2+FMA where the host has it, scalar elsewhere) agree with the
+// retained scalar twins to 1e-5 relative error -- the only permitted
+// divergence is FMA's single rounding per multiply-add -- and every
+// kernel is deterministic across repeated calls. Shapes are drawn
+// from an edge-stressing set (0, 1, and dims straddling the 8-wide
+// SIMD lane and the 64-wide cache block) so both the vector body and
+// the remainder tails are exercised.
+
+/// Dims stressing lane (8) and tile (64) remainders, plus degenerate
+/// 0/1 axes.
+fn kdim(rng: &mut Rng) -> usize {
+    const DIMS: [usize; 15] =
+        [0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 63, 65];
+    DIMS[rng.below(DIMS.len())]
+}
+
+fn kmat(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal()).collect()
+}
+
+/// 1e-5-relative agreement, elementwise.
+fn close(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: len {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > 1e-5 * (1.0 + y.abs()) {
+            return Err(format!("{what}[{i}]: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_matmul_dispatched_matches_scalar_and_reference() {
+    check("matmul_kernel", 120, |rng| {
+        let (p, q, r) = (kdim(rng), kdim(rng), kdim(rng));
+        let a = kmat(rng, p * q);
+        let b = kmat(rng, q * r);
+        let got = matmul(&a, &b, p, q, r);
+        close(&got, &matmul_scalar(&a, &b, p, q, r), "vs scalar")?;
+        close(&got, &reference::matmul(&a, &b, p, q, r), "vs naive")
+    });
+}
+
+#[test]
+fn prop_matmul_tn_dispatched_matches_scalar_and_reference() {
+    check("matmul_tn_kernel", 120, |rng| {
+        let (n, p, q) = (kdim(rng), kdim(rng), kdim(rng));
+        let a = kmat(rng, n * p);
+        let b = kmat(rng, n * q);
+        let got = matmul_tn(&a, &b, n, p, q);
+        close(&got, &matmul_tn_scalar(&a, &b, n, p, q), "vs scalar")?;
+        close(&got, &reference::matmul_tn(&a, &b, n, p, q), "vs naive")
+    });
+}
+
+#[test]
+fn prop_matmul_nt_dispatched_matches_scalar_and_reference() {
+    check("matmul_nt_kernel", 120, |rng| {
+        let (p, n, q) = (kdim(rng), kdim(rng), kdim(rng));
+        let a = kmat(rng, p * n);
+        let b = kmat(rng, q * n);
+        let got = matmul_nt(&a, &b, p, n, q);
+        close(&got, &matmul_nt_scalar(&a, &b, p, n, q), "vs scalar")?;
+        close(&got, &reference::matmul_nt(&a, &b, p, n, q), "vs naive")
+    });
+}
+
+#[test]
+fn prop_kernels_deterministic_across_repeated_calls() {
+    // Bitwise, not approximate: runtime dispatch must pick the same
+    // code path every call, and the persistent pool must not leak
+    // nondeterminism into the serial kernels.
+    check("kernel_determinism", 60, |rng| {
+        let (n, p, q) = (kdim(rng), kdim(rng), kdim(rng));
+        let a = kmat(rng, n * p);
+        let b = kmat(rng, n * q);
+        let once = matmul_tn(&a, &b, n, p, q);
+        let twice = matmul_tn(&a, &b, n, p, q);
+        for (i, (x, y)) in once.iter().zip(&twice).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("tn[{i}]: {x} vs {y}"));
+            }
+        }
+        let a2 = kmat(rng, p * q);
+        let b2 = kmat(rng, q * n.max(1));
+        let once = matmul(&a2, &b2, p, q, n.max(1));
+        let twice = matmul(&a2, &b2, p, q, n.max(1));
+        for (i, (x, y)) in once.iter().zip(&twice).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("nn[{i}]: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_kernels_bitwise_match_serial() {
+    // Both paths run the same dispatched microkernel on the same row
+    // ranges, so par-vs-serial is exact equality, not tolerance.
+    check("kernel_par_equiv", 40, |rng| {
+        let (n, p, q) = (kdim(rng), kdim(rng), kdim(rng));
+        let threads = 1 + rng.below(5);
+        let a = kmat(rng, n * p);
+        let b = kmat(rng, n * q);
+        let ser = matmul_tn(&a, &b, n, p, q);
+        let par = matmul_tn_par(&a, &b, n, p, q, threads);
+        for (i, (x, y)) in par.iter().zip(&ser).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("tn[{i}]: {x} vs {y}"));
+            }
+        }
+        let an = kmat(rng, p * n);
+        let bn = kmat(rng, q * n);
+        let ser = matmul_nt(&an, &bn, p, n, q);
+        let par = matmul_nt_par(&an, &bn, p, n, q, threads);
+        for (i, (x, y)) in par.iter().zip(&ser).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("nt[{i}]: {x} vs {y}"));
+            }
+        }
+        let am = kmat(rng, p * q);
+        let bm = kmat(rng, q * n);
+        let ser = matmul(&am, &bm, p, q, n);
+        let par = matmul_par(&am, &bm, p, q, n, threads);
+        for (i, (x, y)) in par.iter().zip(&ser).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("nn[{i}]: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_dispatch_is_stable() {
+    // The runtime dispatch decision is cached: whatever the first
+    // call decided, later calls agree (flipping mid-process would
+    // break the determinism contract above).
+    let first = backpack_rs::linalg::simd_active();
+    for _ in 0..100 {
+        assert_eq!(backpack_rs::linalg::simd_active(), first);
+    }
 }
