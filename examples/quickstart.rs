@@ -75,6 +75,36 @@ fn main() -> Result<()> {
 
     // Sanity: variance must be non-negative.
     assert!(var.iter().all(|v| *v >= -1e-6));
+
+    // The same extraction through the engine API, with an explicit
+    // execution topology. `Topology::local(N)` shards the batch over
+    // N in-process threads; swapping in `Topology::workers(N)` (or
+    // `Topology::Workers { n, addrs }` for pre-started workers) fans
+    // the same call out to `backpack worker` processes over
+    // backpack-shard/v1, merged by the same ReducePlan contract —
+    // docs/distributed.md.
+    let m = backpack_rs::Model::logreg();
+    let tensors: Vec<Tensor> =
+        params.iter().map(|p| p.tensor.clone()).collect();
+    let (xv, yv) = ds.batch(0, &idx);
+    let opts = backpack_rs::ExtractOptions {
+        topology: backpack_rs::Topology::local(2),
+        ..backpack_rs::ExtractOptions::default()
+    };
+    let eng = m.extended_backward(
+        &tensors,
+        &Tensor::from_f32(&[64, 784], xv),
+        &Tensor::from_i32(&[64], yv),
+        &["variance".to_string()],
+        &opts,
+    )?;
+    println!(
+        "\nengine API, Topology::local(2): loss = {:.4}, \
+         {} quantities",
+        eng["loss"].f32s()?[0],
+        eng.len()
+    );
+
     println!("\nquickstart OK");
     Ok(())
 }

@@ -25,8 +25,9 @@
 //!   batch sizes — plus the incoming walk quantity;
 //! * a shard-reduction rule ([`Extension::reduce`]) telling the
 //!   batch-parallel engine (DESIGN.md §9) how its output keys merge
-//!   across shards: [`Reduce::Sum`] for averaged quantities,
-//!   [`Reduce::Concat`] for per-sample ones;
+//!   across shards: [`ReduceRule::Sum`] for averaged quantities,
+//!   [`ReduceRule::Concat`] for per-sample ones — applied by the
+//!   crate-wide merge authority, [`ReducePlan`];
 //! * an optional post-merge [`Extension::finish`] hook for quantities
 //!   that are nonlinear in the merged averages (variance, KFRA's `Ḡ`
 //!   recursion).
@@ -63,7 +64,9 @@
 //! use backpack_rs::backend::extensions::{
 //!     Extension, ExtensionSet, LayerCtx, Quantities, Reduce, Walk,
 //! };
-//! use backpack_rs::backend::model::{ExtractOptions, Model};
+//! use backpack_rs::backend::model::{
+//!     ExtractOptions, Model, Topology,
+//! };
 //! use backpack_rs::runtime::Tensor;
 //!
 //! /// `‖(1/N) ∇_b ℓ_n‖²` per sample — a quantity the engine has
@@ -126,7 +129,8 @@
 //!         &["bias_l2".to_string()],
 //!         &ExtractOptions {
 //!             registry: Some(set.clone()),
-//!             threads: 2, // sharded: Reduce::Concat applies
+//!             // sharded: Reduce::Concat applies
+//!             topology: Topology::local(2),
 //!             ..ExtractOptions::default()
 //!         },
 //!     )
@@ -142,11 +146,11 @@ use std::cell::{Ref, RefCell};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::conv::{conv2d, ConvGeom};
 use super::model::Model;
-use crate::runtime::{Tensor, TensorSpec};
+use crate::runtime::{Tensor, TensorData, TensorSpec};
 
 pub mod diag_ggn;
 pub mod diag_h;
@@ -192,9 +196,16 @@ pub enum Walk {
     Shard,
 }
 
-/// How one output key merges across batch shards (DESIGN.md §9).
+/// How one output key merges across batch shards (DESIGN.md §9) —
+/// the rule half of the crate's public reduce contract.
+///
+/// Every consumer of shard outputs — the thread-shard merge in
+/// [`Model::extended_backward`], the serve scheduler's per-client
+/// slicing, and the process-parallel coordinator in [`crate::dist`] —
+/// derives its behavior from this rule via [`ReducePlan`]; there is
+/// deliberately no other reduce authority in the crate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Reduce {
+pub enum ReduceRule {
     /// Elementwise sum — correct for every quantity already
     /// normalized by the global batch size.
     Sum,
@@ -202,6 +213,11 @@ pub enum Reduce {
     /// order — for per-sample quantities.
     Concat,
 }
+
+/// Back-compat alias for [`ReduceRule`] (the pre-distributed name).
+/// Enum variants resolve through the alias, so existing
+/// `Reduce::Sum` / `Reduce::Concat` spellings keep compiling.
+pub type Reduce = ReduceRule;
 
 /// Operator view of one parameterized layer, bound from the input
 /// parameter tensors for the duration of one engine call.
@@ -510,7 +526,7 @@ pub trait Extension: Send + Sync {
     /// Shard-reduction rule for one output key this extension emitted
     /// (the PR-2 parallel semantics, DESIGN.md §9). Return `None` for
     /// keys this extension does not own; unclaimed keys sum-reduce.
-    /// The default claims `{name}/…` as [`Reduce::Sum`].
+    /// The default claims `{name}/…` as [`ReduceRule::Sum`].
     fn reduce(&self, key: &str) -> Option<Reduce> {
         key.strip_prefix(self.name())
             .is_some_and(|rest| rest.starts_with('/'))
@@ -676,6 +692,174 @@ impl std::fmt::Debug for ExtensionSet {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_tuple("ExtensionSet").field(&self.names()).finish()
     }
+}
+
+/// The crate's single shard-merge authority: per-key [`ReduceRule`]
+/// lookup plus the merge primitives every consumer of shard outputs
+/// shares — the thread-shard merge in
+/// [`Model::extended_backward`](crate::backend::model::Model::extended_backward),
+/// the serve scheduler's per-client Concat slicing, and the
+/// process-parallel coordinator in [`crate::dist`].
+///
+/// A plan is built from an [`ExtensionSet`]; the rule for a key is
+/// whatever the first registered extension claiming it declares
+/// through [`Extension::reduce`], with unclaimed keys (`loss`,
+/// `grad/*`, internal partials like `__kfra/*`) defaulting to
+/// [`ReduceRule::Sum`]. Cloning is cheap (the underlying modules are
+/// `Arc`-shared).
+///
+/// Shard parts handed to [`ReducePlan::merge`] must arrive in global
+/// sample order — Concat keys gather by simple append, which is what
+/// makes thread-shard, serve-client, and worker-process merges
+/// bitwise identical for per-sample quantities.
+///
+/// A user-defined extension opts into the contract by declaring its
+/// rule; the plan then merges its keys with no engine changes:
+///
+/// ```
+/// use backpack_rs::backend::extensions::{
+///     Extension, ExtensionSet, Quantities, ReducePlan, ReduceRule,
+///     Walk,
+/// };
+/// use backpack_rs::runtime::Tensor;
+///
+/// struct RowStat;
+/// impl Extension for RowStat {
+///     fn name(&self) -> &str {
+///         "row_stat"
+///     }
+///     fn walk(&self) -> Walk {
+///         Walk::Grad
+///     }
+///     /// Per-sample rows concatenate across shards.
+///     fn reduce(&self, key: &str) -> Option<ReduceRule> {
+///         key.starts_with("row_stat/")
+///             .then_some(ReduceRule::Concat)
+///     }
+/// }
+///
+/// let mut set = ExtensionSet::builtin();
+/// set.register(RowStat);
+/// let plan = ReducePlan::of(&set);
+/// assert_eq!(plan.rule("row_stat/0/w"), ReduceRule::Concat);
+/// assert_eq!(plan.rule("grad/0/w"), ReduceRule::Sum);
+///
+/// // Two shards in sample order: Concat keys gather, Sum keys add.
+/// let shard = |lo: f32| {
+///     let mut q = Quantities::new();
+///     q.insert(
+///         "row_stat/0/w".to_string(),
+///         Tensor::from_f32(&[2], vec![lo, lo + 1.0]),
+///     );
+///     q.insert(
+///         "grad/0/w".to_string(),
+///         Tensor::from_f32(&[2], vec![0.5, 0.25]),
+///     );
+///     q
+/// };
+/// let merged = plan.merge(vec![shard(0.0), shard(2.0)]).unwrap();
+/// assert_eq!(
+///     merged["row_stat/0/w"].f32s().unwrap(),
+///     &[0.0, 1.0, 2.0, 3.0]
+/// );
+/// assert_eq!(merged["grad/0/w"].f32s().unwrap(), &[1.0, 0.5]);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ReducePlan {
+    set: ExtensionSet,
+}
+
+impl ReducePlan {
+    /// Build the plan for a registry (cheap: shares the modules).
+    pub fn of(set: &ExtensionSet) -> ReducePlan {
+        ReducePlan { set: set.clone() }
+    }
+
+    /// The merge rule for one output key (see [`ExtensionSet::reduce`]).
+    pub fn rule(&self, key: &str) -> ReduceRule {
+        self.set.reduce(key)
+    }
+
+    /// True when `key` carries per-sample rows (a [`ReduceRule::Concat`]
+    /// key) — the predicate behind per-client slicing in the serve
+    /// scheduler and per-worker gathering in the coordinator.
+    pub fn is_concat(&self, key: &str) -> bool {
+        self.rule(key) == ReduceRule::Concat
+    }
+
+    /// Fold one shard's output into the accumulator. `part` must come
+    /// from the sample range immediately following everything already
+    /// merged into `acc` (Concat keys append in order). The key sets
+    /// must match exactly — a drift between shard outputs is a bug,
+    /// not a mergeable state.
+    pub fn merge_into(
+        &self,
+        acc: &mut Quantities,
+        part: Quantities,
+    ) -> Result<()> {
+        ensure!(
+            part.len() == acc.len(),
+            "shard output key sets differ"
+        );
+        for (k, v) in part {
+            let Some(slot) = acc.get_mut(&k) else {
+                bail!("shard output key mismatch: {k:?}")
+            };
+            match self.rule(&k) {
+                ReduceRule::Concat => append_rows(slot, v)?,
+                ReduceRule::Sum => add_into(slot, &v)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge shard outputs arriving in global sample order:
+    /// [`ReduceRule::Concat`] keys concatenate along the batch axis,
+    /// [`ReduceRule::Sum`] keys — already normalized by the global
+    /// batch size — sum elementwise.
+    pub fn merge(&self, parts: Vec<Quantities>) -> Result<Quantities> {
+        let mut it = parts.into_iter();
+        let Some(mut out) = it.next() else {
+            bail!("merge of zero shard outputs")
+        };
+        for part in it {
+            self.merge_into(&mut out, part)?;
+        }
+        Ok(out)
+    }
+}
+
+/// Concatenate `more` onto `acc` along the leading (batch) axis.
+fn append_rows(acc: &mut Tensor, more: Tensor) -> Result<()> {
+    ensure!(
+        acc.shape.len() == more.shape.len()
+            && acc.shape[1..] == more.shape[1..],
+        "batch concat shape mismatch: {:?} vs {:?}",
+        acc.shape,
+        more.shape
+    );
+    let add = more.shape.first().copied().unwrap_or(0);
+    match (&mut acc.data, more.data) {
+        (TensorData::F32(a), TensorData::F32(b)) => a.extend(b),
+        _ => bail!("batch concat expects f32 tensors"),
+    }
+    acc.shape[0] += add;
+    Ok(())
+}
+
+/// Elementwise `acc += more` (same shape).
+fn add_into(acc: &mut Tensor, more: &Tensor) -> Result<()> {
+    ensure!(
+        acc.shape == more.shape,
+        "sum-reduce shape mismatch: {:?} vs {:?}",
+        acc.shape,
+        more.shape
+    );
+    let b = more.f32s()?;
+    for (x, y) in acc.f32s_mut()?.iter_mut().zip(b) {
+        *x += *y;
+    }
+    Ok(())
 }
 
 #[cfg(test)]

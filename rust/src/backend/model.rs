@@ -68,14 +68,14 @@ use anyhow::{bail, ensure, Result};
 use super::conv::{conv2d, pool, ConvGeom, PoolGeom, Shape};
 use super::extensions::{
     self as extensions_mod, Extension, ExtensionSet, FinishCtx,
-    LayerCtx, LayerOp, Quantities, Reduce, ShardCtx, Walk,
+    LayerCtx, LayerOp, Quantities, ReducePlan, ShardCtx, Walk,
 };
 use super::layers::Layer;
 use super::loss::CrossEntropy;
 use crate::linalg::{matmul, matmul_nt, matmul_tn};
 use crate::obs;
 use crate::parallel;
-use crate::runtime::{Init, Tensor, TensorData, TensorSpec};
+use crate::runtime::{Init, Tensor, TensorSpec};
 
 /// Monte-Carlo rank of the DiagGGN-MC / KFAC factorization (paper: 1).
 pub const MC_SAMPLES: usize = 1;
@@ -123,16 +123,82 @@ pub struct ParamBlock {
     pub dout: usize,
 }
 
+/// Where one engine call executes: in-process batch-parallel threads
+/// or a fleet of `backpack worker` processes.
+///
+/// The reduce contract ([`crate::backend::extensions::ReducePlan`])
+/// makes the two indistinguishable in results: shard layout is
+/// invariant, so `Local { threads: 4 }` and `Workers { n: 4, .. }`
+/// agree to f32 summation-reordering error (bitwise for per-sample
+/// Concat quantities).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// In-process batch parallelism over scoped threads; `0` and `1`
+    /// both mean the serial reference path. (Resolve "all cores" with
+    /// [`crate::parallel::resolve_threads`] before constructing the
+    /// options -- the engine does not consult the environment.)
+    Local {
+        /// Batch-parallel worker-thread count.
+        threads: usize,
+    },
+    /// Process-parallel extraction: the call is delegated to the
+    /// [`crate::dist`] coordinator, which partitions the batch into
+    /// `n` contiguous global-index slices, one per worker process,
+    /// and merges per-key via the shared reduce contract. Requires
+    /// the built-in registry (worker processes cannot reconstruct
+    /// user-defined extension objects).
+    Workers {
+        /// Worker-process count (each runs one contiguous slice).
+        n: usize,
+        /// `host:port` addresses of already-running `backpack worker`
+        /// processes to connect to. Empty = spawn `n` workers from
+        /// the current executable and reap them on completion. When
+        /// non-empty, `len()` must equal `n`.
+        addrs: Vec<String>,
+    },
+}
+
+impl Default for Topology {
+    /// The serial reference configuration (`Local { threads: 0 }`).
+    fn default() -> Topology {
+        Topology::Local { threads: 0 }
+    }
+}
+
+impl Topology {
+    /// In-process topology with `threads` workers.
+    pub fn local(threads: usize) -> Topology {
+        Topology::Local { threads }
+    }
+
+    /// Process topology spawning `n` workers from the current
+    /// executable.
+    pub fn workers(n: usize) -> Topology {
+        Topology::Workers { n, addrs: Vec::new() }
+    }
+
+    /// Thread count of the in-process engine path, resolved (`>= 1`).
+    /// For [`Topology::Workers`] this is 1: the coordinator process
+    /// does no walking of its own.
+    pub fn threads(&self) -> usize {
+        match self {
+            Topology::Local { threads } => (*threads).max(1),
+            Topology::Workers { .. } => 1,
+        }
+    }
+}
+
 /// Options for one [`Model::extended_backward`] engine call. The
 /// defaults are the serial reference configuration: built-in
-/// registry, one thread, no PRNG key, no engine span. Construct with
-/// struct-update syntax over [`ExtractOptions::default`]:
+/// registry, local single-thread topology, no PRNG key, no engine
+/// span. Construct with struct-update syntax over
+/// [`ExtractOptions::default`]:
 ///
 /// ```
-/// use backpack_rs::ExtractOptions;
+/// use backpack_rs::{ExtractOptions, Topology};
 ///
 /// let opts = ExtractOptions {
-///     threads: 4,
+///     topology: Topology::local(4),
 ///     key: Some([7, 9]),
 ///     ..ExtractOptions::default()
 /// };
@@ -146,19 +212,33 @@ pub struct ExtractOptions {
     /// rejects every extension name -- always spell "the default
     /// modules" as `None`.
     pub registry: Option<ExtensionSet>,
-    /// Batch-parallel worker count; `0` and `1` both mean the serial
-    /// reference path. (Resolve "all cores" with
-    /// [`crate::parallel::resolve_threads`] before constructing the
-    /// options -- the engine does not consult the environment.)
-    pub threads: usize,
+    /// Execution topology: in-process threads ([`Topology::Local`],
+    /// the default) or worker processes ([`Topology::Workers`]).
+    pub topology: Topology,
     /// PRNG key for Monte-Carlo extensions (`diag_ggn_mc`, `kfac`);
     /// draws are keyed by global sample index, so results are
-    /// invariant to `threads`.
+    /// invariant to the topology.
     pub key: Option<[u32; 2]>,
     /// When set, the whole engine call is wrapped in a named
     /// `engine`-category span -- how the serve daemon attributes
     /// batches in `--trace` output.
     pub trace_label: Option<String>,
+}
+
+impl ExtractOptions {
+    /// Pre-topology shim: options with a bare thread count. Kept so
+    /// callers written against the old `threads: usize` field have a
+    /// one-line migration; new code should spell the topology out.
+    #[deprecated(
+        note = "use `ExtractOptions { topology: Topology::local(threads), \
+                ..ExtractOptions::default() }`"
+    )]
+    pub fn with_threads(threads: usize) -> ExtractOptions {
+        ExtractOptions {
+            topology: Topology::local(threads),
+            ..ExtractOptions::default()
+        }
+    }
 }
 
 /// Per-layer spatial geometry, resolved once per engine call.
@@ -723,7 +803,7 @@ impl Model {
     /// // Sharded with an MC key:
     /// model.extended_backward(&params, &x, &y, &exts,
     ///     &ExtractOptions {
-    ///         threads: 8,
+    ///         topology: Topology::local(8),
     ///         key: Some([7, 9]),
     ///         ..ExtractOptions::default()
     ///     })?;
@@ -736,6 +816,11 @@ impl Model {
         extensions: &[String],
         opts: &ExtractOptions,
     ) -> Result<Quantities> {
+        if let Topology::Workers { .. } = opts.topology {
+            return crate::dist::coordinate(
+                self, params, x, y, extensions, opts,
+            );
+        }
         let builtin;
         let set = match &opts.registry {
             Some(set) => set,
@@ -745,7 +830,7 @@ impl Model {
             }
         };
         let key = opts.key;
-        let threads = opts.threads.max(1);
+        let threads = opts.topology.threads();
         let _engine: Option<obs::Span> =
             opts.trace_label.as_ref().map(|label| {
                 let label = label.clone();
@@ -753,18 +838,7 @@ impl Model {
             });
         let setup = obs::span(obs::CAT_PHASE, "setup");
         let active = set.select(extensions)?;
-        for e in &active {
-            ensure!(
-                !e.fully_connected_only() || self.is_fully_connected(),
-                "{} is restricted to fully-connected models (paper \
-                 footnote 5); model {:?} contains conv/pool layers",
-                e.name(),
-                self.name
-            );
-        }
-        if active.iter().any(|e| e.needs_key()) && key.is_none() {
-            bail!("MC extensions require a PRNG key input");
-        }
+        self.check_active(&active, key)?;
 
         let n = self.check_x(x)?;
         ensure!(n > 0, "empty batch");
@@ -776,26 +850,10 @@ impl Model {
         let dims = self.dims();
         drop(setup);
 
-        let work = parallel::shards(n, threads);
-        let mut out = if work.len() <= 1 {
-            self.backward_range(
-                &ops, &geoms, &dims, xs, ys, 0..n, n, &active, key,
-            )?
-        } else {
-            let fork = obs::span(obs::CAT_ENGINE, "fork_join");
-            let parts = parallel::par_map(&work, |r| {
-                self.backward_range(
-                    &ops, &geoms, &dims, xs, ys, r, n, &active, key,
-                )
-            });
-            drop(fork);
-            let mut done = Vec::with_capacity(parts.len());
-            for p in parts {
-                done.push(p?);
-            }
-            let _reduce = obs::span(obs::CAT_PHASE, "reduce");
-            merge_shard_outputs(done, set)?
-        };
+        let mut out = self.prefinish(
+            set, &ops, &geoms, &dims, xs, ys, n, threads, &active,
+            key, 0, n,
+        )?;
         let _finish = obs::span(obs::CAT_PHASE, "finish");
         let fctx = FinishCtx {
             model: self,
@@ -809,6 +867,185 @@ impl Model {
             e.finish(&fctx, &mut out)?;
         }
         Ok(out)
+    }
+
+    /// Validate the active extension selection against this model and
+    /// the PRNG key (shared by every engine entry point).
+    fn check_active(
+        &self,
+        active: &[&dyn Extension],
+        key: Option<[u32; 2]>,
+    ) -> Result<()> {
+        for e in active {
+            ensure!(
+                !e.fully_connected_only() || self.is_fully_connected(),
+                "{} is restricted to fully-connected models (paper \
+                 footnote 5); model {:?} contains conv/pool layers",
+                e.name(),
+                self.name
+            );
+        }
+        if active.iter().any(|e| e.needs_key()) && key.is_none() {
+            bail!("MC extensions require a PRNG key input");
+        }
+        Ok(())
+    }
+
+    /// Run the pre-finish engine over one in-process slice: shard
+    /// `[0, n)` across `threads`, walk each shard with global
+    /// normalization (`global_n`) and global MC keying
+    /// (`global_base + shard offset`), and merge shard outputs by the
+    /// reduce contract.
+    #[allow(clippy::too_many_arguments)]
+    fn prefinish(
+        &self,
+        set: &ExtensionSet,
+        ops: &[Option<LayerOp>],
+        geoms: &[Geom],
+        dims: &[usize],
+        xs: &[f32],
+        ys: &[i32],
+        n: usize,
+        threads: usize,
+        active: &[&dyn Extension],
+        key: Option<[u32; 2]>,
+        global_base: usize,
+        global_n: usize,
+    ) -> Result<Quantities> {
+        let work = parallel::shards(n, threads);
+        if work.len() <= 1 {
+            return self.backward_range(
+                ops, geoms, dims, xs, ys, 0..n, global_n,
+                global_base, active, key,
+            );
+        }
+        let fork = obs::span(obs::CAT_ENGINE, "fork_join");
+        let parts = parallel::par_map(&work, |r| {
+            self.backward_range(
+                ops, geoms, dims, xs, ys, r, global_n, global_base,
+                active, key,
+            )
+        });
+        drop(fork);
+        let mut done = Vec::with_capacity(parts.len());
+        for p in parts {
+            done.push(p?);
+        }
+        let _reduce = obs::span(obs::CAT_PHASE, "reduce");
+        ReducePlan::of(set).merge(done)
+    }
+
+    /// The worker half of process-parallel extraction: run the full
+    /// pre-finish engine on one contiguous slice of a larger global
+    /// batch. `x`/`y` hold only this slice's rows; `global_offset`
+    /// is the slice's first global sample index and `global_n` the
+    /// global batch size. Averaged quantities normalize by
+    /// `global_n` and MC draws are keyed by global sample index, so
+    /// slice outputs merge across processes exactly as thread shards
+    /// merge ([`ReducePlan::merge`], in slice order).
+    ///
+    /// The post-merge [`Extension::finish`] hooks do NOT run here:
+    /// they are nonlinear in the merged averages (variance from
+    /// moments, KFRA's Ḡ recursion) and must run exactly once, after
+    /// all slices merged. Internal pre-finish keys (`sq_moment/*`,
+    /// `__kfra/*`) are therefore present in the output — feed the
+    /// merged result through [`Model::finish_merged`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn extended_backward_slice(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        extensions: &[String],
+        opts: &ExtractOptions,
+        global_offset: usize,
+        global_n: usize,
+    ) -> Result<Quantities> {
+        ensure!(
+            matches!(opts.topology, Topology::Local { .. }),
+            "extended_backward_slice shards in-process only; a \
+             Workers topology cannot nest"
+        );
+        let builtin;
+        let set = match &opts.registry {
+            Some(set) => set,
+            None => {
+                builtin = ExtensionSet::builtin();
+                &builtin
+            }
+        };
+        let key = opts.key;
+        let threads = opts.topology.threads();
+        let _engine: Option<obs::Span> =
+            opts.trace_label.as_ref().map(|label| {
+                let label = label.clone();
+                obs::span_with(obs::CAT_ENGINE, move || label)
+            });
+        let setup = obs::span(obs::CAT_PHASE, "setup");
+        let active = set.select(extensions)?;
+        self.check_active(&active, key)?;
+
+        let n = self.check_x(x)?;
+        ensure!(n > 0, "empty slice");
+        ensure!(y.shape == [n], "y shape {:?} != [{n}]", y.shape);
+        ensure!(
+            global_offset + n <= global_n,
+            "slice [{global_offset}, {}) exceeds the global batch \
+             size {global_n}",
+            global_offset + n
+        );
+        let ys = y.i32s()?;
+        let xs = x.f32s()?;
+        let geoms = self.geoms();
+        let ops = self.bind(params, &geoms)?;
+        let dims = self.dims();
+        drop(setup);
+
+        self.prefinish(
+            set, &ops, &geoms, &dims, xs, ys, n, threads, &active,
+            key, global_offset, global_n,
+        )
+    }
+
+    /// The coordinator half of process-parallel extraction: run the
+    /// post-merge [`Extension::finish`] hooks once over merged slice
+    /// outputs, with the layer operators re-bound from `params`.
+    /// This is the exact finish stage [`Model::extended_backward`]
+    /// runs after its thread-shard merge — variance materializes
+    /// from the merged moments, KFRA's Ḡ recursion runs, and
+    /// intermediates that were not explicitly requested are dropped.
+    pub fn finish_merged(
+        &self,
+        params: &[Tensor],
+        extensions: &[String],
+        opts: &ExtractOptions,
+        out: &mut Quantities,
+    ) -> Result<()> {
+        let builtin;
+        let set = match &opts.registry {
+            Some(set) => set,
+            None => {
+                builtin = ExtensionSet::builtin();
+                &builtin
+            }
+        };
+        let active = set.select(extensions)?;
+        let geoms = self.geoms();
+        let ops = self.bind(params, &geoms)?;
+        let dims = self.dims();
+        let _finish = obs::span(obs::CAT_PHASE, "finish");
+        let fctx = FinishCtx {
+            model: self,
+            ops: &ops,
+            dims: &dims,
+            threads: opts.topology.threads(),
+            extensions,
+        };
+        for e in &active {
+            let _hook = extensions_mod::hook_span(*e, "finish");
+            e.finish(&fctx, out)?;
+        }
+        Ok(())
     }
 
     /// Soft-deprecated positional-argument shim over
@@ -828,7 +1065,11 @@ impl Model {
             x,
             y,
             extensions,
-            &ExtractOptions { threads, key, ..ExtractOptions::default() },
+            &ExtractOptions {
+                topology: Topology::local(threads),
+                key,
+                ..ExtractOptions::default()
+            },
         )
     }
 
@@ -857,7 +1098,7 @@ impl Model {
             extensions,
             &ExtractOptions {
                 registry: Some(set.clone()),
-                threads,
+                topology: Topology::local(threads),
                 key,
                 trace_label: None,
             },
@@ -868,9 +1109,13 @@ impl Model {
     /// averaged quantity normalized by the **global** batch size
     /// `total_n` (so shard outputs sum-reduce exactly) and per-sample
     /// quantities covering only the range (so shard outputs
-    /// concatenate). The full-range call `backward_range(.., 0..n, n,
-    /// ..)` is the serial engine. Extraction dispatches to the active
-    /// extensions' hooks, one walk per propagated quantity.
+    /// concatenate). `global_base` is the global sample index of
+    /// `xs[0]` — nonzero when `xs` itself is a slice of a larger
+    /// batch (process-parallel workers) — and offsets the MC-draw
+    /// keying so draws stay tied to global sample indices. The
+    /// full-range call `backward_range(.., 0..n, n, 0, ..)` is the
+    /// serial engine. Extraction dispatches to the active extensions'
+    /// hooks, one walk per propagated quantity.
     #[allow(clippy::too_many_arguments)]
     fn backward_range(
         &self,
@@ -881,6 +1126,7 @@ impl Model {
         ys: &[i32],
         range: Range<usize>,
         total_n: usize,
+        global_base: usize,
         active: &[&dyn Extension],
         key: Option<[u32; 2]>,
     ) -> Result<Quantities> {
@@ -975,8 +1221,9 @@ impl Model {
                 if exact { "sqrt_exact_walk" } else { "sqrt_mc_walk" },
             );
             let mut extras: Vec<ResidualFactor> = Vec::new();
-            let (mut s, cols) =
-                self.init_sqrt(&ce, logits, ns, exact, key, range.start);
+            let (mut s, cols) = self.init_sqrt(
+                &ce, logits, ns, exact, key, global_base + range.start,
+            );
             for li in (0..self.layers.len()).rev() {
                 if let Some(op) = &ops[li] {
                     let ctx =
@@ -1275,67 +1522,6 @@ impl ResidualFactor {
         }
         ResidualFactor { s, cols: f, signs }
     }
-}
-
-/// Reduce shard outputs (shards arrive in sample order) by each key's
-/// [`Extension::reduce`] rule: [`Reduce::Concat`] keys concatenate
-/// along the batch axis; everything else -- already normalized by the
-/// global batch size -- sums elementwise.
-fn merge_shard_outputs(
-    parts: Vec<Quantities>,
-    set: &ExtensionSet,
-) -> Result<Quantities> {
-    let mut it = parts.into_iter();
-    let mut out = it.next().expect("at least one shard");
-    for part in it {
-        ensure!(
-            part.len() == out.len(),
-            "shard output key sets differ"
-        );
-        for (k, v) in part {
-            let Some(acc) = out.get_mut(&k) else {
-                bail!("shard output key mismatch: {k:?}")
-            };
-            match set.reduce(&k) {
-                Reduce::Concat => append_rows(acc, v)?,
-                Reduce::Sum => add_into(acc, &v)?,
-            }
-        }
-    }
-    Ok(out)
-}
-
-/// Concatenate `more` onto `acc` along the leading (batch) axis.
-fn append_rows(acc: &mut Tensor, more: Tensor) -> Result<()> {
-    ensure!(
-        acc.shape.len() == more.shape.len()
-            && acc.shape[1..] == more.shape[1..],
-        "batch concat shape mismatch: {:?} vs {:?}",
-        acc.shape,
-        more.shape
-    );
-    let add = more.shape.first().copied().unwrap_or(0);
-    match (&mut acc.data, more.data) {
-        (TensorData::F32(a), TensorData::F32(b)) => a.extend(b),
-        _ => bail!("batch concat expects f32 tensors"),
-    }
-    acc.shape[0] += add;
-    Ok(())
-}
-
-/// Elementwise `acc += more` (same shape).
-fn add_into(acc: &mut Tensor, more: &Tensor) -> Result<()> {
-    ensure!(
-        acc.shape == more.shape,
-        "sum-reduce shape mismatch: {:?} vs {:?}",
-        acc.shape,
-        more.shape
-    );
-    let b = more.f32s()?;
-    for (x, y) in acc.f32s_mut()?.iter_mut().zip(b) {
-        *x += *y;
-    }
-    Ok(())
 }
 
 #[cfg(test)]

@@ -36,7 +36,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::api::{did_you_mean, suggest, ArtifactId, Signature};
 use super::extensions::{f32_spec, Extension, ExtensionSet};
-use super::model::{ExtractOptions, Model};
+use super::model::{ExtractOptions, Model, Topology};
 use super::{Backend, Exec, Outputs};
 use crate::runtime::{ArtifactSpec, Tensor, TensorSpec};
 
@@ -114,6 +114,18 @@ impl NativeBackend {
     /// The extension registry this backend serves.
     pub fn extensions(&self) -> &ExtensionSet {
         &self.extensions
+    }
+
+    /// Look up one registered model by name (how `backpack worker`
+    /// resolves the model a coordinator's shard plan names).
+    pub fn model(&self, name: &str) -> Result<&Model> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model {name:?} is not in the native registry {:?}{}",
+                self.model_names(),
+                did_you_mean(&suggest(name, self.model_names()))
+            )
+        })
     }
 
     fn model_names(&self) -> Vec<&str> {
@@ -515,7 +527,7 @@ impl Exec for NativeExec {
                 &self.spec.extensions,
                 &ExtractOptions {
                     registry: Some(self.extensions.clone()),
-                    threads,
+                    topology: Topology::local(threads),
                     key,
                     trace_label: None,
                 },

@@ -267,20 +267,39 @@ pub fn baseline_cases() -> Vec<BaselineCase> {
 /// machine-readable summary (`BENCH_native.json` by default).
 ///
 /// Schema (`backpack-bench/v1`): top-level `schema`, `backend`,
-/// `threads`, `git_rev`, `quick`, `batch`, `unit` ("seconds"),
-/// `calib_s` (machine-speed probe, [`measure_calibration`]),
-/// `total_wall_s`, and `cases[]` with `name`, `model`, `signature`,
-/// `batch`, `samples`, `mean_s`, `p50_s`, `p95_s`, `min_s`, `std_s`,
-/// `total_s`, and `phases` (per-phase p50 seconds from a traced
-/// side-measurement; additive -- the headline numbers stay untraced).
+/// `threads`, `workers`, `git_rev`, `quick`, `batch`, `unit`
+/// ("seconds"), `calib_s` (machine-speed probe,
+/// [`measure_calibration`]), `total_wall_s`, and `cases[]` with
+/// `name`, `model`, `signature`, `batch`, `samples`, `mean_s`,
+/// `p50_s`, `p95_s`, `min_s`, `std_s`, `total_s`, and `phases`
+/// (per-phase p50 seconds from a traced side-measurement; additive
+/// -- the headline numbers stay untraced).
+///
+/// `workers > 0` benches the process-parallel path instead: the
+/// cases run through [`crate::dist::coordinate`] against `workers`
+/// shard workers served on in-process threads (same wire protocol
+/// and merge as real `backpack worker` processes, minus the spawn
+/// cost -- steady-state shard overhead is what the dimension
+/// records; the workers share this process's thread pool). Models
+/// whose parameter set exceeds the shard frame cap (2c2d) are
+/// skipped with a printed note rather than failing the grid.
 pub fn perf_baseline(
     be: &dyn Backend,
     threads: usize,
+    workers: usize,
     quick: bool,
     batch: usize,
     out: &Path,
 ) -> Result<()> {
-    perf_baseline_with(be, threads, quick, batch, &baseline_cases(), out)
+    perf_baseline_with(
+        be,
+        threads,
+        workers,
+        quick,
+        batch,
+        &baseline_cases(),
+        out,
+    )
 }
 
 /// [`perf_baseline`] over an explicit case list (tests use a reduced
@@ -288,6 +307,7 @@ pub fn perf_baseline(
 pub fn perf_baseline_with(
     be: &dyn Backend,
     threads: usize,
+    workers: usize,
     quick: bool,
     batch: usize,
     grid: &[BaselineCase],
@@ -296,11 +316,36 @@ pub fn perf_baseline_with(
     let (iters, budget_s) = if quick { (5, 0.5) } else { (30, 3.0) };
     let calib_s = measure_calibration();
     println!(
-        "== perf baseline: backend={} threads={threads} batch={batch} \
-         iters<={iters} calib={} ==",
+        "== perf baseline: backend={} threads={threads} \
+         workers={workers} batch={batch} iters<={iters} calib={} ==",
         be.name(),
         fmt_time(calib_s)
     );
+    // The --workers dimension: stand up the shard workers once (they
+    // are stateless between sessions, so every case reuses them) and
+    // route each case through the coordinator instead of a direct
+    // artifact run.
+    let nb = (workers > 0)
+        .then(crate::backend::native::NativeBackend::new);
+    let dist_addrs: Vec<String> = if workers > 0 {
+        anyhow::ensure!(
+            be.name() == "native",
+            "--workers benches the native shard path; backend {:?} \
+             has no workers",
+            be.name()
+        );
+        let mut addrs = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let w = crate::dist::Worker::bind("127.0.0.1:0", threads)?;
+            addrs.push(w.local_addr().to_string());
+            std::thread::spawn(move || {
+                let _ = w.run();
+            });
+        }
+        addrs
+    } else {
+        Vec::new()
+    };
     let start = Instant::now();
     let mut cases = Vec::new();
     for case in grid.iter().copied() {
@@ -313,15 +358,47 @@ pub fn perf_baseline_with(
         };
         // Typed construction validates the case grid (model grammar,
         // signature spelling) before any timing runs.
-        let name = crate::backend::api::ArtifactId::new(
+        let id = crate::backend::api::ArtifactId::new(
             case.model,
             case.signature.parse()?,
             case_batch,
-        )?
-        .to_string();
-        let stats = crate::figures::timing::time_artifact(
-            be, &name, case.dataset, iters, budget_s,
-        )
+        )?;
+        let name = id.to_string();
+        if let Some(nb) = &nb {
+            // backpack-shard/v1 moves the full parameter set in one
+            // frame (~21 JSON bytes per f32), so models over the
+            // 64 MiB cap (2c2d) sit out the --workers dimension
+            // instead of erroring mid-grid — docs/distributed.md.
+            let numel: usize = nb
+                .spec_id(&id)?
+                .param_inputs()
+                .iter()
+                .map(|t| t.shape.iter().product::<usize>())
+                .sum();
+            if numel.saturating_mul(21) > crate::wire::MAX_FRAME {
+                println!(
+                    "  skip {name}: {numel} params exceed the \
+                     shard frame cap"
+                );
+                continue;
+            }
+        }
+        let stats = if let Some(nb) = &nb {
+            crate::figures::timing::time_dist_artifact(
+                nb,
+                case.model,
+                case.signature,
+                case_batch,
+                case.dataset,
+                &dist_addrs,
+                iters,
+                budget_s,
+            )
+        } else {
+            crate::figures::timing::time_artifact(
+                be, &name, case.dataset, iters, budget_s,
+            )
+        }
         .with_context(|| format!("bench case {name}"))?;
         let mut obj = std::collections::BTreeMap::new();
         obj.insert("name".to_string(), Json::Str(name));
@@ -366,6 +443,7 @@ pub fn perf_baseline_with(
         Json::Str(be.name().to_string()),
     );
     root.insert("threads".to_string(), Json::Num(threads as f64));
+    root.insert("workers".to_string(), Json::Num(workers as f64));
     root.insert("git_rev".to_string(), Json::Str(git_rev()));
     root.insert("quick".to_string(), Json::Bool(quick));
     root.insert("batch".to_string(), Json::Num(batch as f64));
@@ -386,6 +464,18 @@ pub fn perf_baseline_with(
     }
     std::fs::write(out, text + "\n")
         .with_context(|| format!("write {}", out.display()))?;
+    // Workers are external to the coordinator (connected by address,
+    // not spawned), so sessions never stop them -- send each the
+    // protocol's shutdown so the serving threads exit cleanly.
+    for addr in &dist_addrs {
+        if let Ok(mut s) = std::net::TcpStream::connect(addr) {
+            let _ = crate::wire::write_frame(
+                &mut s,
+                &crate::dist::protocol::shutdown(),
+            );
+            let _ = crate::wire::read_frame(&mut s);
+        }
+    }
     println!(
         "wrote {} ({} cases, {:.1}s)",
         out.display(),
@@ -1057,7 +1147,7 @@ mod tests {
                 batch_div: 8,
             },
         ];
-        perf_baseline_with(&be, 2, true, 8, &grid, &path).unwrap();
+        perf_baseline_with(&be, 2, 0, true, 8, &grid, &path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let v = Json::parse(&text).unwrap();
         assert_eq!(v.get("schema").unwrap().as_str().unwrap(),
@@ -1065,6 +1155,7 @@ mod tests {
         assert_eq!(v.get("backend").unwrap().as_str().unwrap(),
                    "native");
         assert_eq!(v.get("threads").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.get("workers").unwrap().as_usize().unwrap(), 0);
         assert!(v.get("calib_s").unwrap().as_f64().unwrap() > 0.0);
         let cases = v.get("cases").unwrap().as_arr().unwrap();
         assert_eq!(cases.len(), grid.len());
@@ -1085,6 +1176,30 @@ mod tests {
             })
             .unwrap();
         assert_eq!(conv.get("batch").unwrap().as_usize().unwrap(), 4);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn perf_baseline_workers_dimension_runs_the_shard_path() {
+        let be = crate::backend::native::NativeBackend::with_threads(1);
+        let path = std::env::temp_dir()
+            .join("backpack_bench_test")
+            .join("BENCH_dist_test.json");
+        let grid = [BaselineCase {
+            model: "logreg",
+            dataset: "mnist",
+            signature: "batch_grad",
+            batch_div: 1,
+        }];
+        perf_baseline_with(&be, 1, 2, true, 8, &grid, &path).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(v.get("workers").unwrap().as_usize().unwrap(), 2);
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert!(
+            cases[0].get("mean_s").unwrap().as_f64().unwrap() > 0.0
+        );
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,325 @@
+//! The coordinator side: partition, fan out, all-reduce, finish.
+//!
+//! [`coordinate`] is reached through
+//! [`Model::extended_backward`](crate::backend::model::Model::extended_backward)
+//! when the options carry a
+//! [`Topology::Workers`](crate::backend::model::Topology::Workers):
+//! with an empty address list it spawns `n` `backpack worker`
+//! child processes from the current executable (parsing each
+//! worker's `backpack-shard/v1 listening on ADDR` banner); with
+//! addresses it connects to externally-managed workers, one per
+//! address. Either way the flow is
+//!
+//! 1. partition `[0, N)` into contiguous slices with
+//!    [`crate::parallel::shards`] — the *same* splitter the
+//!    in-process engine uses, so worker slice boundaries are the
+//!    thread shard boundaries of a hypothetical `n`-thread run;
+//! 2. pipeline `handshake` + `plan` + `extract_slice` writes to
+//!    every worker, then collect replies in worker-index order
+//!    (order-preserving for `Concat` rows);
+//! 3. merge the pre-finish parts with
+//!    [`ReducePlan`](crate::backend::extensions::ReducePlan) and run
+//!    the `finish` hooks once, locally
+//!    ([`Model::finish_merged`](crate::backend::model::Model::finish_merged)).
+//!
+//! Failure propagation: every reply read sits under [`OP_TIMEOUT`];
+//! a worker that dies shows up as a named coordinator error (its
+//! index and address), never a hang. Spawned children are killed
+//! when their link drops, so an error path cannot leak worker
+//! processes.
+
+use std::io::{BufRead, BufReader};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::extensions::{
+    ExtensionSet, Quantities, ReducePlan,
+};
+use crate::backend::model::{ExtractOptions, Model, Topology};
+use crate::json::Json;
+use crate::obs;
+use crate::parallel;
+use crate::runtime::Tensor;
+use crate::wire::{read_frame, write_frame};
+
+use super::protocol::{self, SHARD_SCHEMA};
+
+/// Per-reply deadline on every worker read. Generous — a slice of a
+/// debug-sized extraction finishes in milliseconds, an exact-GGN
+/// sweep in minutes is out of scope for the shard channel's
+/// defaults — but finite, so a wedged worker surfaces as an error
+/// naming it instead of a silent hang.
+pub const OP_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Deadline for the initial TCP connect to each worker.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One live worker connection; spawned children die with the link.
+struct Link {
+    index: usize,
+    addr: String,
+    stream: TcpStream,
+    child: Option<Child>,
+}
+
+impl Drop for Link {
+    fn drop(&mut self) {
+        if let Some(child) = &mut self.child {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+impl Link {
+    fn send(&mut self, frame: &str) -> Result<()> {
+        write_frame(&mut self.stream, frame).with_context(|| {
+            format!(
+                "sending to shard worker {} ({})",
+                self.index, self.addr
+            )
+        })
+    }
+
+    /// Read one reply under [`OP_TIMEOUT`] and unwrap its `ok`. A
+    /// clean between-frames EOF is a protocol violation here — the
+    /// worker owed a reply — and is reported as a death, which is
+    /// exactly what it usually is.
+    fn recv(&mut self) -> Result<Json> {
+        match read_frame(&mut self.stream) {
+            Ok(Some(frame)) => {
+                protocol::expect_ok(&frame).with_context(|| {
+                    format!(
+                        "shard worker {} ({}) rejected the request",
+                        self.index, self.addr
+                    )
+                })
+            }
+            Ok(None) => bail!(
+                "shard worker {} ({}) closed the connection while a \
+                 reply was owed (worker process died?)",
+                self.index,
+                self.addr
+            ),
+            Err(e) => Err(e).with_context(|| {
+                format!(
+                    "reading from shard worker {} ({})",
+                    self.index, self.addr
+                )
+            }),
+        }
+    }
+}
+
+/// Spawn one `backpack worker` child from the current executable and
+/// parse its banner for the ephemeral address it bound.
+fn spawn_worker(index: usize) -> Result<(Child, String)> {
+    let exe = std::env::current_exe().context(
+        "cannot locate the running binary to spawn workers from; \
+         use Topology::Workers { addrs } with pre-started workers",
+    )?;
+    let mut child = Command::new(&exe)
+        .args(["worker", "--addr", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .with_context(|| {
+            format!(
+                "spawning shard worker {index} from {}",
+                exe.display()
+            )
+        })?;
+    let stdout = child
+        .stdout
+        .take()
+        .context("no stdout pipe on spawned worker")?;
+    let mut lines = BufReader::new(stdout);
+    let mut banner = String::new();
+    loop {
+        banner.clear();
+        let got = lines.read_line(&mut banner).with_context(|| {
+            format!("reading shard worker {index}'s banner")
+        })?;
+        if got == 0 {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!(
+                "shard worker {index} exited before announcing its \
+                 address (is {:?} a backpack binary?)",
+                exe.display()
+            );
+        }
+        if banner.starts_with(SHARD_SCHEMA) {
+            break;
+        }
+    }
+    let addr = banner
+        .trim()
+        .rsplit(' ')
+        .next()
+        .unwrap_or("")
+        .to_string();
+    if !addr.contains(':') {
+        let _ = child.kill();
+        let _ = child.wait();
+        bail!("malformed worker banner {banner:?}");
+    }
+    Ok((child, addr))
+}
+
+/// Run one extraction across worker processes. Called by
+/// `Model::extended_backward` on a `Workers` topology; see the
+/// module docs for the flow and docs/distributed.md for the wire
+/// contract.
+pub fn coordinate(
+    model: &Model,
+    params: &[Tensor],
+    x: &Tensor,
+    y: &Tensor,
+    extensions: &[String],
+    opts: &ExtractOptions,
+) -> Result<Quantities> {
+    let Topology::Workers { n, addrs } = &opts.topology else {
+        bail!("dist::coordinate requires a Workers topology")
+    };
+    ensure!(*n >= 1, "a Workers topology needs at least one worker");
+    ensure!(
+        opts.registry.is_none(),
+        "a custom extension registry cannot cross the process \
+         boundary: workers rebuild the builtin registry from \
+         extension names alone. Run user-defined extensions with \
+         Topology::Local"
+    );
+    if !addrs.is_empty() {
+        ensure!(
+            addrs.len() == *n,
+            "Workers {{ n: {n} }} with {} addresses; supply one \
+             address per worker (or none, to spawn them)",
+            addrs.len()
+        );
+    }
+    // Validate the signature before any process is spawned, with
+    // the registry's nearest-match suggestions.
+    let set = ExtensionSet::builtin();
+    set.select(extensions)?;
+
+    let ys = y.i32s()?;
+    let total = ys.len();
+    ensure!(total > 0, "empty batch");
+    ensure!(
+        x.shape.first() == Some(&total),
+        "x has {:?} rows but y has {total} labels",
+        x.shape.first()
+    );
+    let xs = x.f32s()?;
+    let row: usize = x.shape[1..].iter().product();
+
+    let _engine: Option<obs::Span> =
+        opts.trace_label.as_ref().map(|label| {
+            let label = label.clone();
+            obs::span_with(obs::CAT_ENGINE, move || label)
+        });
+
+    // Contiguous, nearly-equal slices in global index order — the
+    // same split `threads = n` would produce in-process. Never more
+    // links than slices: a 3-sample batch on 5 workers runs on 3.
+    let slices = parallel::shards(total, *n);
+
+    let connect = obs::span(obs::CAT_PHASE, "dist_connect");
+    let mut links = Vec::with_capacity(slices.len());
+    for i in 0..slices.len() {
+        let (child, addr) = if addrs.is_empty() {
+            let (c, a) = spawn_worker(i)?;
+            (Some(c), a)
+        } else {
+            (None, addrs[i].clone())
+        };
+        let sa = addr
+            .to_socket_addrs()
+            .with_context(|| format!("bad worker address {addr:?}"))?
+            .next()
+            .with_context(|| {
+                format!("worker address {addr:?} resolves to nothing")
+            })?;
+        let stream = TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT)
+            .with_context(|| {
+                format!("connecting to shard worker {i} at {addr}")
+            })?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(OP_TIMEOUT))?;
+        links.push(Link { index: i, addr, stream, child });
+    }
+    drop(connect);
+
+    // Handshake + plan, pipelined: write both frames to every
+    // worker, then collect both acks per worker in order.
+    let plan_span = obs::span(obs::CAT_PHASE, "dist_plan");
+    let hs = protocol::handshake();
+    let plan_frame = protocol::plan(
+        &model.name,
+        extensions,
+        total,
+        opts.key,
+        params,
+    );
+    for link in &mut links {
+        link.send(&hs)?;
+        link.send(&plan_frame)?;
+    }
+    for link in &mut links {
+        let ack = link.recv()?;
+        let schema = ack.get("schema")?.as_str()?;
+        ensure!(
+            schema == SHARD_SCHEMA,
+            "worker {} speaks {schema:?}, not {SHARD_SCHEMA:?}",
+            link.index
+        );
+        link.recv()?; // plan ack
+    }
+    drop(plan_span);
+
+    // Fan the slices out (writes first, so every worker computes
+    // concurrently), then gather replies in worker-index order.
+    let extract = obs::span(obs::CAT_PHASE, "dist_extract");
+    for (link, r) in links.iter_mut().zip(&slices) {
+        let mut shape = x.shape.clone();
+        shape[0] = r.len();
+        let xi = Tensor::from_f32(
+            &shape,
+            xs[r.start * row..r.end * row].to_vec(),
+        );
+        link.send(&protocol::extract_slice(
+            r.start,
+            &xi,
+            &ys[r.clone()],
+        ))?;
+    }
+    let mut parts = Vec::with_capacity(links.len());
+    for link in &mut links {
+        let reply = link.recv()?;
+        parts.push(protocol::quantities_from_json(
+            reply.get("quantities")?,
+        )?);
+    }
+    drop(extract);
+
+    // All-reduce by the public contract — Sum accumulate, Concat
+    // gather in slice order — then finish once, locally.
+    let reduce = obs::span(obs::CAT_PHASE, "dist_reduce");
+    let mut out = ReducePlan::of(&set).merge(parts)?;
+    drop(reduce);
+    model.finish_merged(params, extensions, opts, &mut out)?;
+
+    // Spawned children get a clean shutdown (Drop would kill them
+    // regardless); external workers outlive the session and accept
+    // the next coordinator when the stream drops.
+    for link in &mut links {
+        if link.child.is_some() {
+            let _ = link.send(&protocol::shutdown());
+            let _ = link.recv();
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,60 @@
+//! Process-parallel extraction: `backpack worker` processes driven
+//! by an in-process coordinator (DESIGN.md §15, docs/distributed.md).
+//!
+//! The native engine already shards one `extended_backward` call
+//! across threads and merges per-key by the public reduce contract
+//! ([`ReducePlan`](crate::backend::extensions::ReducePlan): `Sum`
+//! accumulate, order-preserving `Concat` gather). This module lifts
+//! the *same* contract one level up, across process boundaries:
+//!
+//! * a [`Worker`] serves `backpack-shard/v1` ([`protocol`]) over the
+//!   shared length-prefix codec ([`crate::wire`]), running the
+//!   pre-finish engine ([`Model::extended_backward_slice`]) on a
+//!   contiguous slice of the global batch;
+//! * the [`coordinate`] function — reached through
+//!   [`Model::extended_backward`] when [`ExtractOptions`] carries a
+//!   [`Topology::Workers`] — partitions `[0, N)` into contiguous
+//!   slices ([`crate::parallel::shards`], the same splitter threads
+//!   use), fans the slices out, merges the per-worker pre-finish
+//!   outputs in worker-index order with `ReducePlan`, and runs the
+//!   `finish` hooks **once** on the merged result
+//!   ([`Model::finish_merged`]).
+//!
+//! # Why this is exact
+//!
+//! Worker slices carry their **global** sample offset: averaged
+//! quantities are normalized by the global batch size inside each
+//! worker (so `Sum` parts add to exactly the single-process value up
+//! to f32 summation reordering, ≤ 1e-5), Monte-Carlo draws are keyed
+//! by global sample index (so MC quantities are *bitwise* independent
+//! of the worker count), and `Concat` rows are gathered in slice
+//! order (so row `s` of a per-sample quantity is sample `s`,
+//! bitwise, for any worker count). `finish` runs on the coordinator
+//! only because it is the one non-linear step — variance from
+//! moments, KFRA's backward Ḡ recursion — and running it per worker
+//! then averaging would compute a different (wrong) quantity.
+//!
+//! # Failure semantics
+//!
+//! Every reply read carries a per-worker deadline
+//! ([`OP_TIMEOUT`]); a worker that dies mid-extract surfaces as a
+//! coordinator error naming the worker index (a closed socket is
+//! *never* silent, because EOF between frames mid-protocol is a
+//! protocol violation here even though the codec itself calls it
+//! clean). Spawned workers are killed on coordinator drop; external
+//! workers (connected by address) survive the session and accept the
+//! next coordinator.
+//!
+//! [`Model::extended_backward`]: crate::backend::model::Model::extended_backward
+//! [`Model::extended_backward_slice`]: crate::backend::model::Model::extended_backward_slice
+//! [`Model::finish_merged`]: crate::backend::model::Model::finish_merged
+//! [`ExtractOptions`]: crate::backend::model::ExtractOptions
+//! [`Topology::Workers`]: crate::backend::model::Topology::Workers
+
+pub mod protocol;
+
+mod coordinator;
+mod worker;
+
+pub use coordinator::{coordinate, OP_TIMEOUT};
+pub use worker::Worker;

@@ -1,0 +1,300 @@
+//! `backpack-shard/v1`: the coordinator ↔ worker op set.
+//!
+//! Every message is one frame of the shared codec ([`crate::wire`]:
+//! u32 big-endian length prefix, UTF-8 JSON payload, 64 MiB cap) and
+//! every request object carries an `"op"` discriminator:
+//!
+//! | op              | direction     | payload                                                 | reply                          |
+//! |-----------------|---------------|---------------------------------------------------------|--------------------------------|
+//! | `handshake`     | coord → worker| `schema`                                                | `ok`, `schema`, `threads`      |
+//! | `plan`          | coord → worker| `model`, `extensions`, `global_n`, `key`, `params`      | `ok`                           |
+//! | `extract_slice` | coord → worker| `offset`, `x` (tensor), `y` (labels)                    | `ok`, `quantities`             |
+//! | `merge`         | coord → worker| `parts` (list of quantity maps)                         | `ok`, `quantities`             |
+//! | `shutdown`      | coord → worker| —                                                       | `ok`, then the worker exits    |
+//!
+//! Error replies are `{"ok": false, "error": "..."}`; the session
+//! survives them (a rejected op does not poison the connection).
+//!
+//! Tensors cross as `{"shape": [...], "data": [...]}`
+//! ([`crate::wire::tensor_to_json`]) — finite f32 values round-trip
+//! bitwise, which is what lets the equivalence suite demand bitwise
+//! `Concat` rows across process boundaries. `params` ships the full
+//! parameter set explicitly (workers never re-derive parameters from
+//! a seed), so coordinator and workers agree by construction.
+//!
+//! `merge` is the hierarchical-reduction hook: it applies the same
+//! [`ReducePlan`](crate::backend::extensions::ReducePlan) merge the
+//! coordinator runs, letting a tree of workers fold partial results
+//! before they reach the root. The flat coordinator in this crate
+//! does not use it, but it is part of the versioned surface.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::extensions::Quantities;
+use crate::json::Json;
+use crate::runtime::Tensor;
+use crate::wire::{tensor_from_json, tensor_to_json};
+
+/// Version-tagged schema name, announced in the worker banner and
+/// checked by the handshake on both sides.
+pub const SHARD_SCHEMA: &str = "backpack-shard/v1";
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+    )
+}
+
+/// `handshake` request: schema negotiation, no state.
+pub fn handshake() -> String {
+    obj(vec![
+        ("op", Json::Str("handshake".into())),
+        ("schema", Json::Str(SHARD_SCHEMA.into())),
+    ])
+    .to_string_json()
+}
+
+/// `plan` request: everything slice-independent about the extraction
+/// — model name, extension names, global batch size, MC key, and the
+/// full parameter set.
+pub fn plan(
+    model: &str,
+    extensions: &[String],
+    global_n: usize,
+    key: Option<[u32; 2]>,
+    params: &[Tensor],
+) -> String {
+    let key_json = match key {
+        Some([a, b]) => Json::Arr(vec![
+            Json::Num(a as f64),
+            Json::Num(b as f64),
+        ]),
+        None => Json::Null,
+    };
+    obj(vec![
+        ("op", Json::Str("plan".into())),
+        ("model", Json::Str(model.to_string())),
+        (
+            "extensions",
+            Json::Arr(
+                extensions
+                    .iter()
+                    .map(|e| Json::Str(e.clone()))
+                    .collect(),
+            ),
+        ),
+        ("global_n", Json::Num(global_n as f64)),
+        ("key", key_json),
+        (
+            "params",
+            Json::Arr(params.iter().map(tensor_to_json).collect()),
+        ),
+    ])
+    .to_string_json()
+}
+
+/// `extract_slice` request: one contiguous slice, addressed by its
+/// **global** sample offset (the invariant every worker-count
+/// equivalence rests on).
+pub fn extract_slice(offset: usize, x: &Tensor, y: &[i32]) -> String {
+    obj(vec![
+        ("op", Json::Str("extract_slice".into())),
+        ("offset", Json::Num(offset as f64)),
+        ("x", tensor_to_json(x)),
+        (
+            "y",
+            Json::Arr(
+                y.iter().map(|l| Json::Num(*l as f64)).collect(),
+            ),
+        ),
+    ])
+    .to_string_json()
+}
+
+/// `merge` request: fold pre-finish quantity maps by the reduce
+/// contract, worker-side.
+pub fn merge(parts: &[Quantities]) -> String {
+    obj(vec![
+        ("op", Json::Str("merge".into())),
+        (
+            "parts",
+            Json::Arr(parts.iter().map(quantities_to_json).collect()),
+        ),
+    ])
+    .to_string_json()
+}
+
+/// `shutdown` request: ack, then exit the worker process.
+pub fn shutdown() -> String {
+    obj(vec![("op", Json::Str("shutdown".into()))]).to_string_json()
+}
+
+/// Bare success reply.
+pub fn ok_reply() -> String {
+    ok_reply_with(Vec::new())
+}
+
+/// Success reply with extra fields.
+pub fn ok_reply_with(fields: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("ok", Json::Bool(true))];
+    all.extend(fields);
+    obj(all).to_string_json()
+}
+
+/// Error reply; the session continues after it.
+pub fn error_reply(msg: &str) -> String {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .to_string_json()
+}
+
+/// Quantity map → JSON object of wire tensors.
+pub fn quantities_to_json(q: &Quantities) -> Json {
+    Json::Obj(
+        q.iter()
+            .map(|(k, t)| (k.clone(), tensor_to_json(t)))
+            .collect(),
+    )
+}
+
+/// JSON object of wire tensors → quantity map.
+pub fn quantities_from_json(v: &Json) -> Result<Quantities> {
+    let mut out: Quantities = BTreeMap::new();
+    for (k, t) in v.as_obj()? {
+        out.insert(
+            k.clone(),
+            tensor_from_json(t)
+                .with_context(|| format!("quantity {k:?}"))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Parse an optional `[a, b]` Monte-Carlo key.
+pub fn parse_key(v: &Json) -> Result<Option<[u32; 2]>> {
+    match v {
+        Json::Null => Ok(None),
+        other => {
+            let a = other.as_arr()?;
+            ensure!(a.len() == 2, "key must be [a, b]");
+            Ok(Some([
+                u32::try_from(a[0].as_usize()?)
+                    .context("key word out of u32 range")?,
+                u32::try_from(a[1].as_usize()?)
+                    .context("key word out of u32 range")?,
+            ]))
+        }
+    }
+}
+
+/// Parse one reply frame: the parsed object on `"ok": true`, the
+/// worker's own error message surfaced as the failure otherwise.
+pub fn expect_ok(frame: &str) -> Result<Json> {
+    let v = Json::parse(frame).context("malformed shard reply")?;
+    if v.get("ok")?.as_bool()? {
+        return Ok(v);
+    }
+    let msg = v
+        .opt("error")
+        .and_then(|e| e.as_str().ok().map(str::to_string))
+        .unwrap_or_else(|| "unspecified worker error".to_string());
+    bail!("{msg}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_round_trips_all_fields() {
+        let params = vec![Tensor::from_f32(&[2, 2], vec![
+            1.0, -2.5, 3.0, 4.25,
+        ])];
+        let frame = plan(
+            "logreg",
+            &["batch_grad".to_string(), "variance".to_string()],
+            32,
+            Some([7, 9]),
+            &params,
+        );
+        let v = Json::parse(&frame).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "plan");
+        assert_eq!(
+            v.get("model").unwrap().as_str().unwrap(),
+            "logreg"
+        );
+        assert_eq!(
+            v.get("global_n").unwrap().as_usize().unwrap(),
+            32
+        );
+        assert_eq!(
+            parse_key(v.get("key").unwrap()).unwrap(),
+            Some([7, 9])
+        );
+        let back = tensor_from_json(
+            &v.get("params").unwrap().as_arr().unwrap()[0],
+        )
+        .unwrap();
+        assert_eq!(back.shape, vec![2, 2]);
+        assert_eq!(back.f32s().unwrap(), params[0].f32s().unwrap());
+        // No key is null, round-trips to None.
+        let frame = plan("mlp", &[], 4, None, &[]);
+        let v = Json::parse(&frame).unwrap();
+        assert_eq!(parse_key(v.get("key").unwrap()).unwrap(), None);
+    }
+
+    #[test]
+    fn extract_slice_addresses_by_global_offset() {
+        let x = Tensor::from_f32(&[2, 3], vec![0.; 6]);
+        let frame = extract_slice(11, &x, &[1, 0]);
+        let v = Json::parse(&frame).unwrap();
+        assert_eq!(
+            v.get("offset").unwrap().as_usize().unwrap(),
+            11
+        );
+        let y: Vec<usize> = v
+            .get("y")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.as_usize().unwrap())
+            .collect();
+        assert_eq!(y, vec![1, 0]);
+    }
+
+    #[test]
+    fn quantities_round_trip() {
+        let mut q: Quantities = BTreeMap::new();
+        q.insert(
+            "grad/0/w".to_string(),
+            Tensor::from_f32(&[2], vec![1.5, -2.0]),
+        );
+        q.insert(
+            "loss".to_string(),
+            Tensor::from_f32(&[], vec![0.75]),
+        );
+        let back = quantities_from_json(&quantities_to_json(&q))
+            .unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(
+            back["grad/0/w"].f32s().unwrap(),
+            q["grad/0/w"].f32s().unwrap()
+        );
+        assert_eq!(back["loss"].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn expect_ok_surfaces_the_worker_error() {
+        assert!(expect_ok(&ok_reply()).is_ok());
+        let err = expect_ok(&error_reply("no such model"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no such model"), "{err}");
+        assert!(expect_ok("not json").is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! The `backpack worker` loop: serve `backpack-shard/v1` sessions
+//! until a coordinator says `shutdown`.
+//!
+//! A worker is deliberately stateless between sessions: all
+//! extraction state (model, extensions, parameters, global batch
+//! size, MC key) arrives in the session's `plan` op, so any worker
+//! can serve any coordinator and a worker restarted mid-campaign
+//! needs no warm-up protocol. Sessions are served one at a time —
+//! the engine already saturates the cores via the in-process pool,
+//! so concurrent coordinators would only fight over them.
+//!
+//! The [`Worker::bind`] / [`Worker::local_addr`] / [`Worker::run`]
+//! split mirrors [`crate::serve::Server`]: tests run workers on
+//! in-process threads and hand their ephemeral addresses to a
+//! [`Topology::Workers`](crate::backend::model::Topology::Workers)
+//! coordinator, while the CLI binds, prints the
+//! `backpack-shard/v1 listening on ADDR` banner (which the spawning
+//! coordinator parses), and blocks in `run`.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::extensions::{ExtensionSet, ReducePlan};
+use crate::backend::model::{ExtractOptions, Topology};
+use crate::backend::native::NativeBackend;
+use crate::json::Json;
+use crate::obs;
+use crate::runtime::Tensor;
+use crate::wire::{read_frame, tensor_from_json, write_frame};
+
+use super::protocol::{self, SHARD_SCHEMA};
+
+/// A bound-but-not-yet-running shard worker.
+pub struct Worker {
+    listener: TcpListener,
+    addr: SocketAddr,
+    threads: usize,
+    backend: NativeBackend,
+}
+
+impl Worker {
+    /// Bind `addr` (port 0 binds an ephemeral port; read it back
+    /// from [`Worker::local_addr`]) and warm the in-process pool to
+    /// `threads` (0 = auto).
+    pub fn bind(addr: &str, threads: usize) -> Result<Worker> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("cannot bind {addr}"))?;
+        let addr = listener.local_addr()?;
+        crate::parallel::warm(crate::parallel::resolve_threads(
+            threads,
+        ));
+        Ok(Worker {
+            listener,
+            addr,
+            threads,
+            backend: NativeBackend::new(),
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve coordinator sessions, one at a time, until one sends
+    /// `shutdown`. A session that ends in a transport error (a
+    /// half-written frame, a vanished coordinator) is logged and the
+    /// worker accepts the next session — only `shutdown` is final.
+    pub fn run(self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    obs::progress(format_args!(
+                        "worker: accept failed: {e}"
+                    ));
+                    continue;
+                }
+            };
+            let _ = stream.set_nodelay(true);
+            match serve_session(&self.backend, self.threads, stream)
+            {
+                Ok(true) => return Ok(()),
+                Ok(false) => {}
+                Err(e) => obs::progress(format_args!(
+                    "worker: session ended: {e:#}"
+                )),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Slice-independent extraction state, set by the session's `plan`
+/// op and consumed by every subsequent `extract_slice`.
+struct Plan {
+    model: String,
+    extensions: Vec<String>,
+    global_n: usize,
+    key: Option<[u32; 2]>,
+    params: Vec<Tensor>,
+}
+
+/// One coordinator session: frames in, replies out, until EOF or
+/// `shutdown` (returns `true` for shutdown). Op-level failures
+/// become error replies and the session continues; only transport
+/// failures propagate.
+fn serve_session(
+    backend: &NativeBackend,
+    threads: usize,
+    stream: TcpStream,
+) -> Result<bool> {
+    let mut rd = BufReader::new(stream.try_clone()?);
+    let mut wr = stream;
+    let mut plan: Option<Plan> = None;
+    while let Some(frame) = read_frame(&mut rd)? {
+        let (reply, shutdown) =
+            match handle(backend, threads, &mut plan, &frame) {
+                Ok(r) => r,
+                Err(e) => {
+                    (protocol::error_reply(&format!("{e:#}")), false)
+                }
+            };
+        write_frame(&mut wr, &reply)?;
+        if shutdown {
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// Dispatch one request frame; returns the reply frame plus the
+/// shutdown flag.
+fn handle(
+    backend: &NativeBackend,
+    threads: usize,
+    plan: &mut Option<Plan>,
+    frame: &str,
+) -> Result<(String, bool)> {
+    let msg = Json::parse(frame).context("malformed shard frame")?;
+    let op = msg.get("op")?.as_str()?;
+    match op {
+        "handshake" => {
+            let schema = msg.get("schema")?.as_str()?;
+            ensure!(
+                schema == SHARD_SCHEMA,
+                "schema mismatch: coordinator speaks {schema:?}, \
+                 this worker speaks {SHARD_SCHEMA:?}"
+            );
+            Ok((
+                protocol::ok_reply_with(vec![
+                    ("schema", Json::Str(SHARD_SCHEMA.into())),
+                    (
+                        "threads",
+                        Json::Num(crate::parallel::resolve_threads(
+                            threads,
+                        )
+                            as f64),
+                    ),
+                ]),
+                false,
+            ))
+        }
+        "plan" => {
+            let model = msg.get("model")?.as_str()?.to_string();
+            // Resolve the model and the extension names now, so an
+            // unknown name fails loudly at plan time (with the
+            // registry's nearest-match suggestions), not on the
+            // first slice.
+            backend.model(&model)?;
+            let extensions = msg
+                .get("extensions")?
+                .as_arr()?
+                .iter()
+                .map(|e| Ok(e.as_str()?.to_string()))
+                .collect::<Result<Vec<String>>>()?;
+            ExtensionSet::builtin().select(&extensions)?;
+            let global_n = msg.get("global_n")?.as_usize()?;
+            let key = protocol::parse_key(msg.get("key")?)?;
+            let params = msg
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(tensor_from_json)
+                .collect::<Result<Vec<Tensor>>>()?;
+            *plan = Some(Plan {
+                model,
+                extensions,
+                global_n,
+                key,
+                params,
+            });
+            Ok((protocol::ok_reply(), false))
+        }
+        "extract_slice" => {
+            let p = plan.as_ref().context(
+                "extract_slice before plan: send a plan op first",
+            )?;
+            let model = backend.model(&p.model)?;
+            let offset = msg.get("offset")?.as_usize()?;
+            let x = tensor_from_json(msg.get("x")?)?;
+            let y = msg
+                .get("y")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(i32::try_from(e.as_usize()?)
+                        .context("label out of i32 range")?)
+                })
+                .collect::<Result<Vec<i32>>>()?;
+            let n = y.len();
+            ensure!(
+                x.shape.first() == Some(&n),
+                "x has {:?} rows but the slice has {n} labels",
+                x.shape.first()
+            );
+            let y = Tensor::from_i32(&[n], y);
+            let opts = ExtractOptions {
+                registry: None,
+                topology: Topology::local(threads),
+                key: p.key,
+                trace_label: None,
+            };
+            let out = model.extended_backward_slice(
+                &p.params,
+                &x,
+                &y,
+                &p.extensions,
+                &opts,
+                offset,
+                p.global_n,
+            )?;
+            Ok((
+                protocol::ok_reply_with(vec![(
+                    "quantities",
+                    protocol::quantities_to_json(&out),
+                )]),
+                false,
+            ))
+        }
+        "merge" => {
+            let parts = msg
+                .get("parts")?
+                .as_arr()?
+                .iter()
+                .map(protocol::quantities_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let merged = ReducePlan::of(&ExtensionSet::builtin())
+                .merge(parts)?;
+            Ok((
+                protocol::ok_reply_with(vec![(
+                    "quantities",
+                    protocol::quantities_to_json(&merged),
+                )]),
+                false,
+            ))
+        }
+        "shutdown" => Ok((protocol::ok_reply(), true)),
+        other => bail!("unknown shard op {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn be() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    #[test]
+    fn handshake_checks_the_schema() {
+        let mut plan = None;
+        let (reply, down) = handle(
+            &be(),
+            1,
+            &mut plan,
+            &protocol::handshake(),
+        )
+        .unwrap();
+        assert!(!down);
+        let v = protocol::expect_ok(&reply).unwrap();
+        assert_eq!(
+            v.get("schema").unwrap().as_str().unwrap(),
+            SHARD_SCHEMA
+        );
+        assert!(
+            v.get("threads").unwrap().as_usize().unwrap() >= 1
+        );
+        let err = handle(
+            &be(),
+            1,
+            &mut plan,
+            "{\"op\":\"handshake\",\"schema\":\"bogus/v9\"}",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("schema mismatch"), "{err}");
+    }
+
+    #[test]
+    fn extract_before_plan_and_unknown_ops_are_rejected() {
+        let mut plan = None;
+        let err = handle(
+            &be(),
+            1,
+            &mut plan,
+            "{\"op\":\"extract_slice\",\"offset\":0,\
+             \"x\":{\"shape\":[1,1],\"data\":[0]},\"y\":[0]}",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("before plan"), "{err}");
+        assert!(handle(&be(), 1, &mut plan, "{\"op\":\"warp\"}")
+            .is_err());
+        // Op-level failures become error replies at the session
+        // layer; shutdown is the only op that ends the loop.
+        let (_, down) = handle(
+            &be(),
+            1,
+            &mut plan,
+            &protocol::shutdown(),
+        )
+        .unwrap();
+        assert!(down);
+    }
+
+    #[test]
+    fn plan_rejects_unknown_models_and_extensions() {
+        let backend = be();
+        let mut plan = None;
+        let err = handle(
+            &backend,
+            1,
+            &mut plan,
+            &protocol::plan("logrej", &[], 4, None, &[]),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("logrej"), "{err}");
+        let err = handle(
+            &backend,
+            1,
+            &mut plan,
+            &protocol::plan(
+                "logreg",
+                &["batch_gradd".to_string()],
+                4,
+                None,
+                &[],
+            ),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("batch_gradd"), "{err}");
+        assert!(plan.is_none());
+    }
+}

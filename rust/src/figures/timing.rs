@@ -74,6 +74,83 @@ pub fn time_artifact(
     Ok(stats)
 }
 
+/// [`time_artifact`]'s process-parallel twin: time the same fixed
+/// batch through [`crate::dist::coordinate`] against already-running
+/// shard workers at `addrs` (the bench `--workers` dimension). The
+/// phase breakdown picks up the coordinator's `dist_*` spans, so the
+/// exported numbers split wire + merge overhead from compute.
+pub fn time_dist_artifact(
+    nb: &crate::backend::native::NativeBackend,
+    model: &str,
+    signature: &str,
+    batch: usize,
+    dataset: &str,
+    addrs: &[String],
+    iters: usize,
+    budget_s: f64,
+) -> Result<Stats> {
+    use crate::backend::api::{ArtifactId, Signature};
+    use crate::backend::model::{ExtractOptions, Topology};
+
+    let sig: Signature = signature.parse()?;
+    let Signature::Extract(extensions) = sig.clone() else {
+        anyhow::bail!("the shard path extracts; {signature:?} is eval")
+    };
+    let id = ArtifactId::new(model, sig, batch)?;
+    let name = id.to_string();
+    let spec = nb.spec_id(&id)?;
+    let n = spec.batch_size;
+    let ds = Synthetic::new(
+        DatasetSpec::by_name(dataset)
+            .ok_or_else(|| anyhow::anyhow!("dataset {dataset}"))?,
+        7,
+    );
+    let idx: Vec<usize> = (0..n).collect();
+    let (xv, yv) = ds.batch(0, &idx);
+    let x_shape: Vec<usize> = spec
+        .inputs
+        .iter()
+        .find(|t| t.name == "x")
+        .unwrap()
+        .shape
+        .clone();
+    let x = Tensor::from_f32(&x_shape, xv);
+    let y = Tensor::from_i32(&[n], yv);
+    let params: Vec<Tensor> = init_params(&spec, 0)
+        .into_iter()
+        .map(|p| p.tensor)
+        .collect();
+    let opts = ExtractOptions {
+        topology: Topology::Workers {
+            n: addrs.len(),
+            addrs: addrs.to_vec(),
+        },
+        key: spec.has_key.then_some([1u32, 2u32]),
+        ..ExtractOptions::default()
+    };
+    let m = nb.model(model)?;
+    // First run outside the measurement (pool warm-up worker-side).
+    m.extended_backward(&params, &x, &y, &extensions, &opts)?;
+    let mut stats = bench(
+        &name,
+        1,
+        iters,
+        Duration::from_secs_f64(budget_s),
+        || {
+            m.extended_backward(&params, &x, &y, &extensions, &opts)
+                .expect("shard extract");
+        },
+    );
+    stats.phase_p50_s = crate::bench::phase_breakdown(
+        || {
+            m.extended_backward(&params, &x, &y, &extensions, &opts)
+                .expect("shard extract");
+        },
+        (iters / 2).clamp(1, 3),
+    );
+    Ok(stats)
+}
+
 /// Fig. 3: computing individual gradients -- for-loop (N separate
 /// batch-1 passes) vs vectorized BatchGrad vs plain gradient.
 pub fn fig3(be: &dyn Backend, iters: usize, out_dir: &Path) -> Result<()> {

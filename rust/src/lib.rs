@@ -74,15 +74,56 @@
 //! [`NativeBackend::register_extension`] (served as artifact names) —
 //! see [`backend::extensions`] for a complete user-defined extension.
 //!
+//! Direct engine calls take [`ExtractOptions`] with an explicit
+//! execution [`Topology`]: [`Topology::local`] shards the batch over
+//! in-process threads, [`Topology::Workers`] fans it out to
+//! `backpack worker` processes — same quantities, same
+//! [`ReducePlan`] merge, different parallelism substrate:
+//!
+//! ```
+//! use backpack_rs::{ExtractOptions, Model, Topology};
+//! use backpack_rs::runtime::Tensor;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let m = Model::logreg();
+//! let params: Vec<Tensor> = m
+//!     .param_specs()
+//!     .iter()
+//!     .map(|t| {
+//!         let k: usize = t.shape.iter().product();
+//!         Tensor::from_f32(&t.shape, vec![0.01; k])
+//!     })
+//!     .collect();
+//! let x = Tensor::from_f32(&[4, 784], vec![0.5; 4 * 784]);
+//! let y = Tensor::from_i32(&[4], vec![0, 1, 2, 3]);
+//! let opts = ExtractOptions {
+//!     topology: Topology::local(2), // Topology::workers(2) for processes
+//!     ..ExtractOptions::default()
+//! };
+//! let out = m.extended_backward(
+//!     &params, &x, &y, &["variance".to_string()], &opts)?;
+//! assert_eq!(out["variance/0/w"].shape, vec![10, 784]);
+//! # Ok(()) }
+//! ```
+//!
 //! For extraction as a *service* — many clients, one engine — the
 //! [`serve`] module runs the same typed API behind a batching daemon
 //! (`backpack serve`, protocol `backpack-serve/v1`, docs/serve.md).
+//!
+//! For extraction across *processes* — N `backpack worker` processes
+//! each walking a contiguous slice of the batch, merged by a
+//! coordinator exactly as thread shards merge ([`ReducePlan`]) — the
+//! [`dist`] module speaks `backpack-shard/v1` over the shared
+//! [`wire`] codec; select it with [`Topology::Workers`] in
+//! [`ExtractOptions`] or `backpack extract --workers N`
+//! (docs/distributed.md).
 
 pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod figures;
 pub mod json;
 pub mod linalg;
@@ -91,15 +132,17 @@ pub mod optim;
 pub mod parallel;
 pub mod runtime;
 pub mod serve;
+pub mod wire;
 
 pub use backend::api::{suggest, ArtifactId, Signature};
 pub use backend::extensions::{
     Extension, ExtensionSet, FinishCtx, LayerCtx, LayerOp,
-    PerSampleGrads, Quantities, Reduce, ShardCtx, Walk,
+    PerSampleGrads, Quantities, Reduce, ReducePlan, ReduceRule,
+    ShardCtx, Walk,
 };
 pub use backend::layers::Layer;
 pub use backend::model::{
-    ExtractOptions, Model, ParamBlock, NATIVE_EXTENSIONS,
+    ExtractOptions, Model, ParamBlock, Topology, NATIVE_EXTENSIONS,
 };
 pub use backend::native::NativeBackend;
 pub use backend::{

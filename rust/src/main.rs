@@ -4,6 +4,8 @@
 //!   list                         show artifacts the backend serves
 //!   train    --problem P --opt O train one configuration
 //!   serve    [--addr A] [--stdio] batching extraction daemon
+//!   worker   [--addr A]          backpack-shard/v1 extraction worker
+//!   extract  --problem P [--workers N] one extraction, any topology
 //!   bench    [--quick]           machine-readable perf baseline
 //!   fig3|fig6|fig8|fig9          timing figure regenerators
 //!   fig7a|fig7b|fig10|fig11      optimizer-comparison figures
@@ -39,11 +41,16 @@ usage: backpack SUBCOMMAND [--backend native|pjrt] [--threads N]
   serve  [--addr 127.0.0.1:4417] [--stdio] [--queue-cap 64]
          [--linger-ms 2] [--max-batch 1024] [--max-conns N]
          [--param-cache 16] [--access-log FILE]
+  worker [--addr 127.0.0.1:0]
+  extract [--problem mnist_logreg] [--extensions grad|a+b+c]
+         [--n 32] [--seed 0] [--key A,B] [--workers N]
+         [--addrs HOST:PORT,...] [--out EXTRACT.json]
   loadgen [--addr HOST:PORT] [--clients 8] [--duration-s 5]
          [--model logreg] [--sigs grad,diag_ggn] [--per 4]
          [--seed 0] [--linger-ms 2] [--max-batch 1024]
          [--out SERVEBENCH.json]
-  bench  [--quick] [--batch 128] [--out BENCH_native.json]
+  bench  [--quick] [--batch 128] [--workers 0]
+         [--out BENCH_native.json]
          [--compare BASELINE.json [--current RUN.json]]
          [--compare-out COMPARE.json] [--max-regression 1.5]
          [--kernels [--out KERNELBENCH.json]]
@@ -67,7 +74,10 @@ both documents carry a `calib_s` probe so host-speed differences
 divide out -- docs/bench.md), adding `--current RUN.json` compares
 two existing files without re-running, and `--compare-out
 COMPARE.json` writes the machine-readable compare result (written
-even when the gate fails). `bench --kernels` times the dispatched
+even when the gate fails). `bench --workers N` routes the cases
+through the shard coordinator against N in-process workers, so the
+baseline document records the process-parallel overhead trajectory
+too. `bench --kernels` times the dispatched
 SIMD inner kernels against their retained scalar twins and writes
 KERNELBENCH.json (no gate; CI artifact).
 
@@ -84,6 +94,19 @@ backpack-access/v1 JSON line per request (per-stage micros,
 outcome; never silenced by --quiet). Port 0 binds an ephemeral
 port; the bound address is printed on the first stdout line. Stop
 it with a `shutdown` request or SIGTERM.
+
+`worker` + `extract --workers N` run one extraction data-parallel
+across processes (protocol backpack-shard/v1; docs/distributed.md):
+the coordinator slices the batch contiguously, each worker runs the
+pre-finish engine on its slice, and per-key results merge by the
+public reduce contract (Sum accumulate, order-preserving Concat
+gather) before `finish` runs once on the coordinator. Without
+--addrs the coordinator spawns its workers from this binary and
+shuts them down afterwards; with --addrs it drives pre-started
+`backpack worker` processes (each prints `backpack-shard/v1
+listening on ADDR` on its first stdout line) and leaves them
+running. `extract` without --workers runs the same extraction
+in-process on --threads.
 
 `loadgen` drives a daemon with N concurrent clients for a fixed
 duration and writes a backpack-servebench/v1 document (throughput,
@@ -270,6 +293,173 @@ fn dispatch(
                 server.run()?;
             }
         }
+        "worker" => {
+            anyhow::ensure!(
+                args.get_or("backend", "native") == "native",
+                "worker supports the native backend only"
+            );
+            let w = backpack_rs::dist::Worker::bind(
+                args.get_or("addr", "127.0.0.1:0"),
+                threads,
+            )?;
+            // The banner is the spawn contract: a coordinator
+            // spawning this process parses the address off this
+            // line (dist::coordinator).
+            println!(
+                "{} listening on {}",
+                backpack_rs::dist::protocol::SHARD_SCHEMA,
+                w.local_addr()
+            );
+            use std::io::Write as _;
+            std::io::stdout().flush()?;
+            w.run()?;
+        }
+        "extract" => {
+            anyhow::ensure!(
+                args.get_or("backend", "native") == "native",
+                "extract supports the native backend only"
+            );
+            let problem = problems::by_name(
+                args.get_or("problem", "mnist_logreg"))?;
+            let sig: backpack_rs::Signature =
+                args.get_or("extensions", "grad").parse()?;
+            let backpack_rs::Signature::Extract(extensions) =
+                sig.clone()
+            else {
+                anyhow::bail!(
+                    "--extensions takes extraction quantities \
+                     (e.g. batch_grad+variance), not eval"
+                );
+            };
+            let n = args.get_usize("n", 32)?;
+            let seed = args.get_u64("seed", 0)?;
+            let key = match args.flag("key") {
+                Some(v) => {
+                    let (a, b) =
+                        v.split_once(',').ok_or_else(|| {
+                            anyhow::anyhow!("--key takes A,B")
+                        })?;
+                    Some([a.trim().parse()?, b.trim().parse()?])
+                }
+                None => None,
+            };
+            let addrs: Vec<String> = args
+                .flag("addrs")
+                .map(|s| {
+                    s.split(',')
+                        .map(|a| a.trim().to_string())
+                        .filter(|a| !a.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default();
+            let mut workers = args.get_usize("workers", 0)?;
+            if workers == 0 && !addrs.is_empty() {
+                workers = addrs.len();
+            }
+            let topology = if workers > 0 {
+                backpack_rs::Topology::Workers {
+                    n: workers,
+                    addrs,
+                }
+            } else {
+                backpack_rs::Topology::local(threads)
+            };
+
+            // Spec-derived parameters and a synthetic batch: the
+            // same initialization serve and the test suites use, so
+            // extractions are comparable across entry points.
+            let nb =
+                backpack_rs::NativeBackend::with_threads(threads);
+            let id = backpack_rs::ArtifactId::new(
+                problem.model,
+                sig,
+                n,
+            )?;
+            let spec = nb.spec_id(&id)?;
+            let params: Vec<backpack_rs::Tensor> =
+                train::init_params(&spec, seed)
+                    .into_iter()
+                    .map(|p| p.tensor)
+                    .collect();
+            let ds = problem.make_dataset(seed)?;
+            let idx: Vec<usize> = (0..n).collect();
+            let (xv, yv) = ds.batch(0, &idx);
+            let mut x_shape = vec![n];
+            x_shape.extend_from_slice(&spec.in_shape);
+            let x = backpack_rs::Tensor::from_f32(&x_shape, xv);
+            let y = backpack_rs::Tensor::from_i32(&[n], yv);
+
+            let model = nb.model(problem.model)?;
+            let opts = backpack_rs::ExtractOptions {
+                topology,
+                key,
+                ..backpack_rs::ExtractOptions::default()
+            };
+            let t0 = Instant::now();
+            let out = model.extended_backward(
+                &params, &x, &y, &extensions, &opts,
+            )?;
+            let wall_s = t0.elapsed().as_secs_f64();
+            let loss = out
+                .get("loss")
+                .and_then(|t| t.f32s().ok())
+                .and_then(|v| v.first().copied())
+                .unwrap_or(f32::NAN);
+            println!(
+                "{id}: loss {loss:.4}, {} quantities in {:.1} ms \
+                 ({})",
+                out.len(),
+                wall_s * 1e3,
+                if workers > 0 {
+                    format!("{workers} worker processes")
+                } else {
+                    format!("{threads} threads")
+                },
+            );
+            if let Some(path) = args.flag("out") {
+                let mut doc = std::collections::BTreeMap::new();
+                let s = |v: &str| {
+                    backpack_rs::Json::Str(v.to_string())
+                };
+                doc.insert(
+                    "schema".to_string(),
+                    s("backpack-extract/v1"),
+                );
+                doc.insert(
+                    "problem".to_string(),
+                    s(problem.codename),
+                );
+                doc.insert("model".to_string(), s(problem.model));
+                doc.insert(
+                    "artifact".to_string(),
+                    s(&id.to_string()),
+                );
+                doc.insert(
+                    "n".to_string(),
+                    backpack_rs::Json::Num(n as f64),
+                );
+                doc.insert(
+                    "workers".to_string(),
+                    backpack_rs::Json::Num(workers as f64),
+                );
+                doc.insert(
+                    "wall_s".to_string(),
+                    backpack_rs::Json::Num(wall_s),
+                );
+                doc.insert(
+                    "quantities".to_string(),
+                    backpack_rs::dist::protocol::quantities_to_json(
+                        &out,
+                    ),
+                );
+                std::fs::write(
+                    path,
+                    backpack_rs::Json::Obj(doc).to_string_json()
+                        + "\n",
+                )?;
+                println!("wrote {path}");
+            }
+        }
         "loadgen" => {
             // The self-spawned daemon (and the probe resolving the
             // signature mix) are native-only, like serve.
@@ -338,6 +528,7 @@ fn dispatch(
                 backpack_rs::bench::perf_baseline(
                     be,
                     threads,
+                    args.get_usize("workers", 0)?,
                     args.has("quick"),
                     args.get_usize("batch", 128)?,
                     Path::new(out),

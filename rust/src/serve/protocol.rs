@@ -3,18 +3,11 @@
 //!
 //! # Frame layout
 //!
-//! Every message -- both directions -- is one frame:
-//!
-//! ```text
-//! +----+----+----+----+----------------------+
-//! | length (u32, big-endian)  | payload      |
-//! +----+----+----+----+----------------------+
-//!   4 bytes                     `length` bytes, UTF-8 JSON
-//! ```
-//!
-//! Frames larger than [`MAX_FRAME`] are rejected (a malformed length
-//! prefix must not make the server allocate gigabytes). A clean EOF
-//! *between* frames ends the session; EOF inside a frame is an error.
+//! The frame codec is the crate-wide shared one in [`crate::wire`]
+//! (length prefix + UTF-8 JSON payload, [`MAX_FRAME`] cap, clean-EOF
+//! vs mid-frame-EOF contract) — re-exported here so protocol users
+//! keep a single import path. See the [`crate::wire`] module docs
+//! for the byte layout.
 //!
 //! # Requests
 //!
@@ -38,13 +31,18 @@
 //! docs/serve.md documents the protocol with an example session.
 
 use std::collections::BTreeMap;
-use std::io::{ErrorKind, Read, Write};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::backend::api::Signature;
 use crate::json::Json;
 use crate::runtime::Tensor;
+use crate::wire::num_or_null;
+
+pub use crate::wire::{
+    read_frame, tensor_from_json, tensor_to_json, write_frame,
+    MAX_FRAME,
+};
 
 /// Protocol identifier, echoed on the startup banner and in
 /// `metrics` replies; bump on any breaking frame/layout change.
@@ -54,48 +52,6 @@ pub const PROTOCOL_SCHEMA: &str = "backpack-serve/v1";
 /// (`backpack serve --access-log FILE`, one JSONL line per extract
 /// request); bump on any breaking field change.
 pub const ACCESS_SCHEMA: &str = "backpack-access/v1";
-
-/// Maximum frame payload size (64 MiB): caps the allocation a length
-/// prefix can demand.
-pub const MAX_FRAME: usize = 1 << 26;
-
-/// Read one frame. `Ok(None)` is a clean EOF before any length byte
-/// (the peer closed between frames); EOF inside a frame errors.
-pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<String>> {
-    let mut len = [0u8; 4];
-    let mut got = 0usize;
-    while got < len.len() {
-        match r.read(&mut len[got..]) {
-            Ok(0) if got == 0 => return Ok(None),
-            Ok(0) => bail!("EOF inside a frame length prefix"),
-            Ok(k) => got += k,
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => return Err(e.into()),
-        }
-    }
-    let n = u32::from_be_bytes(len) as usize;
-    ensure!(
-        n <= MAX_FRAME,
-        "frame of {n} bytes exceeds the {MAX_FRAME}-byte limit"
-    );
-    let mut payload = vec![0u8; n];
-    r.read_exact(&mut payload)
-        .context("EOF inside a frame payload")?;
-    Ok(Some(String::from_utf8(payload).context("frame is not UTF-8")?))
-}
-
-/// Write one frame (length prefix + payload) and flush.
-pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> Result<()> {
-    ensure!(
-        payload.len() <= MAX_FRAME,
-        "frame of {} bytes exceeds the {MAX_FRAME}-byte limit",
-        payload.len()
-    );
-    w.write_all(&(payload.len() as u32).to_be_bytes())?;
-    w.write_all(payload.as_bytes())?;
-    w.flush()?;
-    Ok(())
-}
 
 /// One extraction request: which graph to run and this client's
 /// slice of data. Requests with the same `(model, sig, seed, key)`
@@ -267,68 +223,6 @@ impl Request {
             ),
         }
     }
-}
-
-/// f64 -> JSON number, with non-finite values as `null` (decoded
-/// back to NaN). f32 payloads survive the f32 -> f64 -> shortest
-/// decimal -> f64 -> f32 round trip bitwise (the widening is exact
-/// and Rust prints shortest-round-trip decimals).
-fn num_or_null(x: f64) -> Json {
-    if x.is_finite() {
-        Json::Num(x)
-    } else {
-        Json::Null
-    }
-}
-
-/// `{"shape": [...], "data": [...]}` for an output tensor.
-pub fn tensor_to_json(t: &Tensor) -> Json {
-    let mut o = BTreeMap::new();
-    o.insert(
-        "shape".into(),
-        Json::Arr(
-            t.shape.iter().map(|d| Json::Num(*d as f64)).collect(),
-        ),
-    );
-    let data: Vec<Json> = if let Ok(f) = t.f32s() {
-        f.iter().map(|v| num_or_null(*v as f64)).collect()
-    } else if let Ok(i) = t.i32s() {
-        i.iter().map(|v| Json::Num(*v as f64)).collect()
-    } else {
-        t.u32s()
-            .expect("f32|i32|u32 tensor")
-            .iter()
-            .map(|v| Json::Num(*v as f64))
-            .collect()
-    };
-    o.insert("data".into(), Json::Arr(data));
-    Json::Obj(o)
-}
-
-/// Parse a `{"shape": [...], "data": [...]}` tensor (always f32 on
-/// the way back in; every served output is f32).
-pub fn tensor_from_json(v: &Json) -> Result<Tensor> {
-    let shape: Vec<usize> = v
-        .get("shape")?
-        .as_arr()?
-        .iter()
-        .map(|d| d.as_usize())
-        .collect::<Result<_>>()?;
-    let data: Vec<f32> = v
-        .get("data")?
-        .as_arr()?
-        .iter()
-        .map(|e| match e {
-            Json::Null => Ok(f32::NAN),
-            other => Ok(other.as_f64()? as f32),
-        })
-        .collect::<Result<_>>()?;
-    ensure!(
-        shape.iter().product::<usize>() == data.len(),
-        "tensor data length {} does not match shape {shape:?}",
-        data.len()
-    );
-    Ok(Tensor::from_f32(&shape, data))
 }
 
 fn reply_base(id: u64, ok: bool) -> BTreeMap<String, Json> {

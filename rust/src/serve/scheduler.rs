@@ -408,8 +408,11 @@ fn execute(
     let window = agg.to_json(wall);
 
     // Split per client: Concat-reduced keys by sample rows,
-    // everything else broadcast.
-    let exts = backend.extensions();
+    // everything else broadcast. The rule per key comes from the
+    // same [`ReducePlan`] that merges thread shards and worker
+    // shards, so serve slicing can never disagree with the engine.
+    let plan =
+        crate::backend::extensions::ReducePlan::of(backend.extensions());
     let mut replies = Vec::with_capacity(batch.len());
     let mut off = 0usize;
     for p in batch.iter() {
@@ -417,10 +420,8 @@ fn execute(
         let mut results = BTreeMap::new();
         for key in out.names() {
             let t = out.get(key)?;
-            let per_sample = matches!(
-                exts.reduce(key),
-                crate::backend::extensions::Reduce::Concat
-            ) && t.shape.first() == Some(&total);
+            let per_sample = plan.is_concat(key)
+                && t.shape.first() == Some(&total);
             let sliced = if per_sample {
                 let rows = t.numel() / total;
                 let data = t.f32s()?;

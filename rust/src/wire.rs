@@ -1,0 +1,223 @@
+//! Shared length-prefix frame codec — the one wire substrate every
+//! channel in this crate speaks.
+//!
+//! Three protocols ride this codec today, each with its own
+//! version-tagged schema name announced in its startup banner /
+//! record header:
+//!
+//! * `backpack-serve/v1` — the extraction daemon
+//!   ([`crate::serve::protocol`]);
+//! * `backpack-access/v1` — its structured access log (JSONL, no
+//!   frames, but the same tensor encoding);
+//! * `backpack-shard/v1` — the process-parallel shard channel between
+//!   the distributed coordinator and `backpack worker` processes
+//!   ([`crate::dist::protocol`]).
+//!
+//! Keeping the codec here means serve and the shard protocol cannot
+//! drift: one frame layout, one size cap, one EOF contract.
+//!
+//! # Frame layout
+//!
+//! Every message — both directions — is one frame:
+//!
+//! ```text
+//! +----+----+----+----+----------------------+
+//! | length (u32, big-endian)  | payload      |
+//! +----+----+----+----+----------------------+
+//!   4 bytes                     `length` bytes, UTF-8 JSON
+//! ```
+//!
+//! Frames larger than [`MAX_FRAME`] are rejected **before** the
+//! payload allocation (a malformed length prefix must not make a
+//! server allocate gigabytes). A clean EOF *between* frames — zero
+//! bytes read before any length byte — is `Ok(None)`: the peer closed
+//! the session. EOF *inside* a frame (mid-prefix or mid-payload) is
+//! always an error; a half-written frame is corruption, not a close.
+//!
+//! # Tensor encoding
+//!
+//! Tensors cross every channel as `{"shape": [...], "data": [...]}`
+//! with non-finite values encoded as `null` (JSON has no NaN) and
+//! decoded back to NaN. Finite `f32` payloads survive the
+//! f32 → f64 → shortest-decimal → f64 → f32 round trip bitwise (the
+//! widening is exact and Rust prints shortest-round-trip decimals) —
+//! which is what lets the distributed equivalence suite demand
+//! bitwise Concat rows across process boundaries.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::json::Json;
+use crate::runtime::Tensor;
+
+/// Maximum frame payload size (64 MiB): caps the allocation a length
+/// prefix can demand.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// Read one frame. `Ok(None)` is a clean EOF before any length byte
+/// (the peer closed between frames); EOF inside a frame errors.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<String>> {
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < len.len() {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("EOF inside a frame length prefix"),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let n = u32::from_be_bytes(len) as usize;
+    ensure!(
+        n <= MAX_FRAME,
+        "frame of {n} bytes exceeds the {MAX_FRAME}-byte limit"
+    );
+    let mut payload = vec![0u8; n];
+    r.read_exact(&mut payload)
+        .context("EOF inside a frame payload")?;
+    Ok(Some(String::from_utf8(payload).context("frame is not UTF-8")?))
+}
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME,
+        "frame of {} bytes exceeds the {MAX_FRAME}-byte limit",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// f64 -> JSON number, with non-finite values as `null` (decoded
+/// back to NaN). f32 payloads survive the f32 -> f64 -> shortest
+/// decimal -> f64 -> f32 round trip bitwise (the widening is exact
+/// and Rust prints shortest-round-trip decimals).
+pub fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// `{"shape": [...], "data": [...]}` for an output tensor.
+pub fn tensor_to_json(t: &Tensor) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "shape".into(),
+        Json::Arr(
+            t.shape.iter().map(|d| Json::Num(*d as f64)).collect(),
+        ),
+    );
+    let data: Vec<Json> = if let Ok(f) = t.f32s() {
+        f.iter().map(|v| num_or_null(*v as f64)).collect()
+    } else if let Ok(i) = t.i32s() {
+        i.iter().map(|v| Json::Num(*v as f64)).collect()
+    } else {
+        t.u32s()
+            .expect("f32|i32|u32 tensor")
+            .iter()
+            .map(|v| Json::Num(*v as f64))
+            .collect()
+    };
+    o.insert("data".into(), Json::Arr(data));
+    Json::Obj(o)
+}
+
+/// Parse a `{"shape": [...], "data": [...]}` tensor (always f32 on
+/// the way back in; every wire-crossing output is f32).
+pub fn tensor_from_json(v: &Json) -> Result<Tensor> {
+    let shape: Vec<usize> = v
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<_>>()?;
+    let data: Vec<f32> = v
+        .get("data")?
+        .as_arr()?
+        .iter()
+        .map(|e| match e {
+            Json::Null => Ok(f32::NAN),
+            other => Ok(other.as_f64()? as f32),
+        })
+        .collect::<Result<_>>()?;
+    ensure!(
+        shape.iter().product::<usize>() == data.len(),
+        "tensor data length {} does not match shape {shape:?}",
+        data.len()
+    );
+    Ok(Tensor::from_f32(&shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_and_preserve_eof_contract() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "{\"op\":\"handshake\"}").unwrap();
+        write_frame(&mut buf, "x").unwrap();
+        assert_eq!(&buf[..4], &[0, 0, 0, 18]);
+        let mut r = &buf[..];
+        assert_eq!(
+            read_frame(&mut r).unwrap().unwrap(),
+            "{\"op\":\"handshake\"}"
+        );
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), "x");
+        // Clean EOF between frames is None, not an error.
+        assert!(read_frame(&mut r).unwrap().is_none());
+        // EOF inside the payload errors.
+        let mut r = &buf[..9];
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("payload"), "{err}");
+        // EOF inside the length prefix errors.
+        let mut r = &buf[..3];
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("length prefix"), "{err}");
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_on_both_sides() {
+        // A hostile length prefix is refused before allocating.
+        let huge = (MAX_FRAME as u32 + 1).to_be_bytes();
+        let mut r = &huge[..];
+        assert!(read_frame(&mut r).is_err());
+        // An exactly-at-cap prefix passes the cap check (then fails
+        // only because the payload is absent).
+        let atcap = (MAX_FRAME as u32).to_be_bytes();
+        let mut r = &atcap[..];
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("payload"), "{err}");
+    }
+
+    #[test]
+    fn tensors_round_trip_bitwise_through_json() {
+        let t = Tensor::from_f32(
+            &[5],
+            vec![1.5, -3.25e-8, f32::NAN, f32::NEG_INFINITY, 0.0],
+        );
+        let back = tensor_from_json(&tensor_to_json(&t)).unwrap();
+        assert_eq!(back.shape, vec![5]);
+        for (u, v) in
+            t.f32s().unwrap().iter().zip(back.f32s().unwrap())
+        {
+            if u.is_finite() {
+                assert_eq!(u.to_bits(), v.to_bits());
+            } else {
+                assert!(v.is_nan());
+            }
+        }
+        assert!(tensor_from_json(
+            &Json::parse("{\"shape\":[2],\"data\":[1]}").unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,163 @@
+#!/usr/bin/env python3
+"""CI smoke test for process-parallel extraction (backpack-shard/v1).
+
+Pure stdlib. Three scenarios against the release binary:
+
+1. `backpack extract --workers 3` (three spawned worker processes)
+   vs the same extraction on one local thread: identical key sets,
+   Sum-reduced keys within 1e-5 relative, per-sample (Concat) keys
+   **bitwise** identical — the equivalence docs/distributed.md
+   promises.
+2. The same extraction against an externally started
+   `backpack worker` (banner-parsed address, --addrs), which must
+   also match and must leave the worker alive afterwards
+   (external workers are never shut down by a coordinator).
+3. The failure path: a fake "worker" that accepts and immediately
+   drops the connection must surface as a nonzero exit naming the
+   shard worker — an error, not a hang.
+
+Usage: python3 scripts/dist_smoke.py [path/to/backpack]
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import threading
+
+PROBLEM = "mnist_logreg"
+EXTENSIONS = "batch_grad+variance+diag_ggn"
+N = 32
+TIMEOUT_S = 120
+
+CONCAT_PREFIXES = ("batch_grad/", "batch_l2/")
+
+
+def run_extract(binary, extra, out):
+    env = dict(os.environ, BACKPACK_THREADS="1")
+    subprocess.run(
+        [binary, "extract", "--problem", PROBLEM,
+         "--extensions", EXTENSIONS, "--n", str(N), "--seed", "0",
+         "--out", out, *extra],
+        check=True, timeout=TIMEOUT_S, env=env,
+    )
+    with open(out) as f:
+        doc = json.load(f)
+    assert doc["schema"] == "backpack-extract/v1", doc["schema"]
+    assert doc["n"] == N, doc["n"]
+    return doc
+
+
+def assert_equivalent(dist, local, label):
+    dq, lq = dist["quantities"], local["quantities"]
+    assert sorted(dq) == sorted(lq), (
+        label, sorted(set(dq) ^ set(lq)))
+    bitwise = close = 0
+    for key in lq:
+        a, b = dq[key], lq[key]
+        assert a["shape"] == b["shape"], (label, key)
+        assert len(a["data"]) == len(b["data"]), (label, key)
+        if key.startswith(CONCAT_PREFIXES):
+            # Per-sample rows: computed row-independently and
+            # round-tripped bitwise by the wire codec.
+            assert a["data"] == b["data"], (
+                f"{label}: Concat key {key} not bitwise")
+            bitwise += 1
+        else:
+            for u, v in zip(a["data"], b["data"]):
+                assert u is not None and v is not None, (label, key)
+                assert abs(u - v) <= 1e-5 * (1.0 + abs(v)), (
+                    f"{label}: {key}: {u} vs {v}")
+            close += 1
+    assert bitwise >= 1, f"{label}: no Concat keys compared"
+    assert close >= 3, f"{label}: too few Sum keys compared"
+    print(f"{label}: {bitwise} keys bitwise, {close} keys <=1e-5 "
+          f"({len(lq)} total), wall {dist['wall_s'] * 1e3:.1f} ms")
+
+
+def main():
+    binary = sys.argv[1] if len(sys.argv) > 1 else \
+        "rust/target/release/backpack"
+    tmp = tempfile.mkdtemp(prefix="backpack_dist_")
+    a, b, c = (os.path.join(tmp, f) for f in
+               ("workers.json", "local.json", "external.json"))
+
+    # Reference: one process, one thread.
+    local = run_extract(binary, ["--threads", "1"], b)
+    assert local["workers"] == 0, local["workers"]
+
+    # 1. Coordinator-spawned worker processes.
+    dist = run_extract(binary, ["--workers", "3"], a)
+    assert dist["workers"] == 3, dist["workers"]
+    assert_equivalent(dist, local, "spawned workers=3 vs local")
+
+    # 2. Externally started worker, address parsed off the banner.
+    worker = subprocess.Popen(
+        [binary, "worker", "--addr", "127.0.0.1:0",
+         "--threads", "1"],
+        stdout=subprocess.PIPE, text=True,
+    )
+    try:
+        banner = worker.stdout.readline().strip()
+        print(banner)
+        assert banner.startswith(
+            "backpack-shard/v1 listening on "), banner
+        addr = banner.rsplit(" ", 1)[1]
+        ext = run_extract(binary, ["--addrs", addr], c)
+        assert ext["workers"] == 1, ext["workers"]
+        assert_equivalent(ext, local, "external worker vs local")
+        # External workers outlive the coordinator session.
+        assert worker.poll() is None, \
+            "coordinator shut down an external worker"
+    finally:
+        worker.kill()
+        worker.wait()
+
+    # 3. A dead "worker" is a named error, not a hang: accept and
+    # immediately drop every connection.
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(4)
+    dead_addr = "127.0.0.1:%d" % lst.getsockname()[1]
+    stop = threading.Event()
+
+    def reaper():
+        lst.settimeout(0.2)
+        while not stop.is_set():
+            try:
+                conn, _ = lst.accept()
+                conn.close()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+
+    t = threading.Thread(target=reaper)
+    t.start()
+    try:
+        r = subprocess.run(
+            [binary, "extract", "--problem", PROBLEM,
+             "--extensions", "grad", "--n", "4",
+             "--addrs", dead_addr],
+            capture_output=True, text=True, timeout=TIMEOUT_S,
+        )
+        assert r.returncode != 0, \
+            "extract succeeded against a dead worker"
+        err = r.stderr
+        assert "shard worker 0" in err, err
+        assert "closed the connection" in err or \
+            "sending to" in err, err
+        print("dead-worker failure path OK: "
+              + err.strip().splitlines()[0])
+    finally:
+        stop.set()
+        t.join()
+        lst.close()
+
+    print("dist smoke OK")
+
+
+if __name__ == "__main__":
+    main()
